@@ -1,0 +1,37 @@
+//! Explore the task-granularity / worker-count trade-off (Fig 7b/12a).
+//!
+//!     cargo run --release --example granularity_explorer [--mb] [tasks]
+//!
+//! Prints the speedup surface for a single scheduler and marks the
+//! optimal worker count per task size, which the paper approximates as
+//! `task_size / intrinsic_spawn_overhead` (1M / 16.2K ~= 64 workers on
+//! the heterogeneous platform).
+
+use myrmics::experiments::fig7::{granularity, optimal_workers, print_granularity};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let hetero = !args.iter().any(|a| a == "--mb");
+    let n_tasks: usize = args
+        .iter()
+        .find(|a| !a.starts_with("--"))
+        .and_then(|a| a.parse().ok())
+        .unwrap_or(256);
+    let workers = [1usize, 8, 16, 32, 64, 128, 256];
+    let sizes = [100_000u64, 400_000, 1_000_000, 4_000_000];
+    let pts = granularity(n_tasks, &workers, &sizes, hetero);
+    let label = if hetero {
+        "granularity (A9 scheduler, cf. Fig 7b)"
+    } else {
+        "granularity (MicroBlaze scheduler, cf. Fig 12a)"
+    };
+    print_granularity(&pts, label);
+    let spawn = if hetero { 16_200.0 } else { 37_400.0 };
+    for s in sizes {
+        let opt = optimal_workers(&pts, s);
+        println!(
+            "task {s:>9}: optimal {opt:>4} workers (paper predicts ~{:.0})",
+            s as f64 / spawn
+        );
+    }
+}

@@ -1,0 +1,71 @@
+"""AOT lowering: JAX (L2) + Pallas (L1) -> HLO text artifacts for the rust
+coordinator.
+
+HLO *text* (not a serialized HloModuleProto) is the interchange format:
+jax >= 0.5 emits protos with 64-bit instruction ids which the pinned
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids, so text round-trips cleanly. Lowered with
+``return_tuple=True`` — the rust side unwraps with ``to_tuple``.
+
+Usage: ``python -m compile.aot --out-dir ../artifacts`` (from python/).
+Shapes must match ``rust/src/runtime/shapes.rs``.
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+# Fixed AOT shapes — keep in sync with rust/src/runtime/shapes.rs.
+JACOBI_IN = (10, 32)  # (rows + 2, n)
+JACOBI_X2_IN = (12, 32)  # (rows + 4, n)
+MATMUL_TILE = (16, 16, 16)
+KMEANS_POINTS = 256
+KMEANS_K = 4
+
+F32 = jnp.float32
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(*shape):
+    return jax.ShapeDtypeStruct(shape, F32)
+
+
+def kernels():
+    """(name, jitted fn, example args) for every artifact."""
+    m, k, n = MATMUL_TILE
+    return [
+        ("jacobi_band", model.jacobi_band, (spec(*JACOBI_IN),)),
+        ("jacobi_band_x2", model.jacobi_band_x2, (spec(*JACOBI_X2_IN),)),
+        ("matmul_tile", model.matmul_tile, (spec(m, k), spec(k, n), spec(m, n))),
+        ("kmeans_assign", model.kmeans_assign, (spec(KMEANS_POINTS, 3), spec(KMEANS_K, 3))),
+    ]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    for name, fn, specs in kernels():
+        lowered = fn.lower(*specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {name}: {len(text)} chars -> {path}")
+
+
+if __name__ == "__main__":
+    main()

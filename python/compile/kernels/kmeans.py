@@ -1,0 +1,41 @@
+"""Layer-1 Pallas kernel: k-means assignment + partial reduction.
+
+One task's points block (P, 3) against the K centroids, producing the
+(K, 4) partial [sum_xyz, count] buffer that the hierarchical reduction
+tasks combine (paper VI-B: "K-Means Clustering features parallel
+reductions and broadcasts"). TPU mapping: distance matrix (P, K) via
+broadcast-subtract on the VPU, the one-hot partial reduction as an MXU
+matmul (K x P @ P x 3). `interpret=True` for the CPU PJRT plugin.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _assign_kernel(pts_ref, cents_ref, o_ref):
+    pts = pts_ref[...]
+    cents = cents_ref[...]
+    d2 = ((pts[:, None, :] - cents[None, :, :]) ** 2).sum(-1)
+    best = jnp.argmin(d2, axis=1)
+    k = cents.shape[0]
+    onehot = (best[:, None] == jnp.arange(k)[None, :]).astype(pts.dtype)
+    sums = jnp.dot(onehot.T, pts, preferred_element_type=jnp.float32)
+    counts = onehot.sum(axis=0)[:, None]
+    o_ref[...] = jnp.concatenate([sums, counts], axis=1)
+
+
+@jax.jit
+def kmeans_assign(pts, cents):
+    """pts: (P, 3) f32, cents: (K, 3) f32 -> (K, 4) partial sums."""
+    k = cents.shape[0]
+    return pl.pallas_call(
+        _assign_kernel,
+        out_shape=jax.ShapeDtypeStruct((k, 4), pts.dtype),
+        interpret=True,
+    )(pts, cents)
+
+
+def vmem_bytes(p: int, k: int, itemsize: int = 4) -> int:
+    # points + centroids + distance matrix + one-hot + output.
+    return (p * 3 + k * 3 + p * k * 2 + k * 4) * itemsize

@@ -1,0 +1,38 @@
+"""Layer-1 Pallas kernel: tile matmul-accumulate.
+
+The benchmark's hottest kernel: C_tile += A_tile @ B_tile. TPU mapping:
+the (s, s) tiles target the MXU systolic array (s a multiple of the
+128-lane tiling on real hardware; 16 here to keep the AOT artifact small);
+all three tiles live in VMEM for the whole block. `interpret=True` for the
+CPU PJRT plugin.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _mm_kernel(a_ref, b_ref, c_ref, o_ref):
+    o_ref[...] = c_ref[...] + jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@jax.jit
+def matmul_tile(a, b, c):
+    """a: (m, k), b: (k, n), c: (m, n) f32 -> c + a @ b."""
+    return pl.pallas_call(
+        _mm_kernel,
+        out_shape=jax.ShapeDtypeStruct(c.shape, c.dtype),
+        interpret=True,
+    )(a, b, c)
+
+
+def mxu_utilization(m: int, k: int, n: int, mxu: int = 128) -> float:
+    """Estimated MXU lane utilization for an (m,k,n) tile on a real TPU:
+    fraction of the 128x128 systolic array the tile fills per pass."""
+    return min(1.0, m / mxu) * min(1.0, n / mxu)
+
+
+def vmem_bytes(m: int, k: int, n: int, itemsize: int = 4) -> int:
+    return (m * k + k * n + 2 * m * n) * itemsize

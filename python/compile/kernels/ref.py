@@ -1,0 +1,60 @@
+"""Pure-jnp correctness oracles for the Pallas kernels (Layer 1).
+
+Every kernel in this package is checked against these references by
+``python/tests/test_kernels.py`` (exact shapes + hypothesis sweeps). The
+semantics deliberately match the rust fallback implementations in
+``rust/src/apps/*.rs`` so that kernel-path and fallback-path runs of the
+simulator produce identical numerics.
+"""
+
+import jax.numpy as jnp
+
+
+def jacobi_band(x):
+    """One Jacobi sweep over a band with halo.
+
+    x: (rows + 2, n) f32 — band rows plus one halo row above and below.
+    Returns (rows, n): for each interior output cell the 4-neighbour mean;
+    the j-edges use clamped indexing (they are overwritten by the caller's
+    fixed-border logic, but must match the rust fallback bit-for-bit).
+    """
+    up = x[:-2, :]
+    down = x[2:, :]
+    mid = x[1:-1, :]
+    left = jnp.concatenate([mid[:, :1], mid[:, :-1]], axis=1)
+    right = jnp.concatenate([mid[:, 1:], mid[:, -1:]], axis=1)
+    return 0.25 * (up + down + left + right)
+
+
+def matmul_tile(a, b, c):
+    """Tile accumulate: c + a @ b (all (s, s) f32)."""
+    return c + a @ b
+
+
+def kmeans_assign(pts, cents):
+    """Nearest-centroid partial sums.
+
+    pts: (P, 3) f32; cents: (K, 3) f32.
+    Returns (K, 4): per-cluster [sum_x, sum_y, sum_z, count].
+    """
+    d2 = ((pts[:, None, :] - cents[None, :, :]) ** 2).sum(-1)  # (P, K)
+    best = jnp.argmin(d2, axis=1)  # (P,)
+    k = cents.shape[0]
+    onehot = (best[:, None] == jnp.arange(k)[None, :]).astype(pts.dtype)  # (P, K)
+    sums = onehot.T @ pts  # (K, 3)
+    counts = onehot.sum(axis=0)[:, None]  # (K, 1)
+    return jnp.concatenate([sums, counts], axis=1)
+
+
+def bitonic_merge(a, b, asc):
+    """Merge-split of two sorted runs (each (m,) f32).
+
+    Returns (low, high) halves of the merged sequence; `asc` selects which
+    buffer keeps the low half (static python bool).
+    """
+    both = jnp.sort(jnp.concatenate([a, b]))
+    m = a.shape[0]
+    lo, hi = both[:m], both[m:]
+    if asc:
+        return lo, hi
+    return hi, lo

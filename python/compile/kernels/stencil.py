@@ -1,0 +1,42 @@
+"""Layer-1 Pallas kernel: Jacobi band sweep.
+
+TPU mapping (DESIGN.md Hardware-Adaptation): the band (rows+2, n) block is
+one VMEM-resident tile; the sweep is pure VPU elementwise work (shifted
+adds), so the BlockSpec keeps the whole halo'd band in one block and the
+grid iterates over bands. `interpret=True` is mandatory on the CPU PJRT
+plugin — real-TPU lowering emits a Mosaic custom call the CPU client
+cannot execute (see /opt/xla-example/README.md).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _jacobi_kernel(x_ref, o_ref):
+    x = x_ref[...]
+    up = x[:-2, :]
+    down = x[2:, :]
+    mid = x[1:-1, :]
+    left = jnp.concatenate([mid[:, :1], mid[:, :-1]], axis=1)
+    right = jnp.concatenate([mid[:, 1:], mid[:, -1:]], axis=1)
+    o_ref[...] = 0.25 * (up + down + left + right)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def jacobi_band(x):
+    """x: (rows + 2, n) f32 -> (rows, n) f32."""
+    rows = x.shape[0] - 2
+    n = x.shape[1]
+    return pl.pallas_call(
+        _jacobi_kernel,
+        out_shape=jax.ShapeDtypeStruct((rows, n), x.dtype),
+        interpret=True,
+    )(x)
+
+
+def vmem_bytes(rows: int, n: int, itemsize: int = 4) -> int:
+    """VMEM footprint estimate: input block + output block."""
+    return (rows + 2) * n * itemsize + rows * n * itemsize

@@ -1,0 +1,170 @@
+"""Kernel-vs-oracle correctness: the core L1 signal.
+
+Fixed-shape checks at the exact AOT shapes, plus hypothesis sweeps over
+shapes and value ranges (the Pallas kernels are shape-polymorphic under
+interpret=True even though the AOT artifacts freeze one shape).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import aot
+from compile.kernels import kmeans as kmeans_k
+from compile.kernels import matmul as matmul_k
+from compile.kernels import ref
+from compile.kernels import stencil
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(shape, seed, lo=-1.0, hi=1.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.uniform(lo, hi, shape).astype(np.float32))
+
+
+# ------------------------------------------------------------- fixed shapes
+
+
+def test_jacobi_fixed_shape_matches_ref():
+    x = rand(aot.JACOBI_IN, 1)
+    got = stencil.jacobi_band(x)
+    want = ref.jacobi_band(x)
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+    assert got.shape == (aot.JACOBI_IN[0] - 2, aot.JACOBI_IN[1])
+
+
+def test_matmul_fixed_shape_matches_ref():
+    m, k, n = aot.MATMUL_TILE
+    a, b, c = rand((m, k), 2), rand((k, n), 3), rand((m, n), 4)
+    np.testing.assert_allclose(
+        matmul_k.matmul_tile(a, b, c), ref.matmul_tile(a, b, c), rtol=1e-5, atol=1e-5
+    )
+
+
+def test_kmeans_fixed_shape_matches_ref():
+    pts = rand((aot.KMEANS_POINTS, 3), 5, 0.0, 10.0)
+    cents = rand((aot.KMEANS_K, 3), 6, 0.0, 10.0)
+    got = kmeans_k.kmeans_assign(pts, cents)
+    want = ref.kmeans_assign(pts, cents)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+    # Counts sum to P.
+    assert float(got[:, 3].sum()) == aot.KMEANS_POINTS
+
+
+# --------------------------------------------------------- hypothesis sweeps
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    rows=st.integers(min_value=1, max_value=24),
+    n=st.integers(min_value=2, max_value=96),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_jacobi_shape_sweep(rows, n, seed):
+    x = rand((rows + 2, n), seed, -100.0, 100.0)
+    np.testing.assert_allclose(stencil.jacobi_band(x), ref.jacobi_band(x), rtol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(min_value=1, max_value=32),
+    k=st.integers(min_value=1, max_value=32),
+    n=st.integers(min_value=1, max_value=32),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_matmul_shape_sweep(m, k, n, seed):
+    a, b, c = rand((m, k), seed), rand((k, n), seed + 1), rand((m, n), seed + 2)
+    np.testing.assert_allclose(
+        matmul_k.matmul_tile(a, b, c), ref.matmul_tile(a, b, c), rtol=1e-4, atol=1e-5
+    )
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    p=st.integers(min_value=1, max_value=200),
+    k=st.integers(min_value=1, max_value=8),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_kmeans_shape_sweep(p, k, seed):
+    pts = rand((p, 3), seed, 0.0, 50.0)
+    cents = rand((k, 3), seed + 1, 0.0, 50.0)
+    got = kmeans_k.kmeans_assign(pts, cents)
+    want = ref.kmeans_assign(pts, cents)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+# ----------------------------------------------------------- L2 composition
+
+
+def test_fused_x2_equals_two_single_sweeps():
+    from compile import model
+
+    x = rand(aot.JACOBI_X2_IN, 9)
+    (fused,) = model.jacobi_band_x2(x)
+    step1 = ref.jacobi_band(x)
+    step2 = ref.jacobi_band(step1)
+    np.testing.assert_allclose(fused, step2, rtol=1e-6)
+
+
+def test_kmeans_partials_reduce_to_global():
+    # Partial buffers from two bands sum to the whole-set partials —
+    # the invariant the hierarchical reduction relies on.
+    pts = rand((128, 3), 11, 0.0, 10.0)
+    cents = rand((4, 3), 12, 0.0, 10.0)
+    whole = ref.kmeans_assign(pts, cents)
+    p1 = kmeans_k.kmeans_assign(pts[:64], cents)
+    p2 = kmeans_k.kmeans_assign(pts[64:], cents)
+    np.testing.assert_allclose(p1 + p2, whole, rtol=1e-4, atol=1e-4)
+
+
+# ------------------------------------------------------------- bitonic ref
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.integers(min_value=1, max_value=64),
+    seed=st.integers(min_value=0, max_value=2**31),
+    asc=st.booleans(),
+)
+def test_bitonic_merge_partitions(m, seed, asc):
+    rng = np.random.default_rng(seed)
+    a = jnp.sort(jnp.asarray(rng.uniform(0, 1, m).astype(np.float32)))
+    b = jnp.sort(jnp.asarray(rng.uniform(0, 1, m).astype(np.float32)))
+    lo_or_hi, other = ref.bitonic_merge(a, b, asc)
+    merged = np.sort(np.concatenate([a, b]))
+    if asc:
+        np.testing.assert_array_equal(lo_or_hi, merged[:m])
+        np.testing.assert_array_equal(other, merged[m:])
+    else:
+        np.testing.assert_array_equal(lo_or_hi, merged[m:])
+        np.testing.assert_array_equal(other, merged[:m])
+
+
+# --------------------------------------------------------------- AOT plumbing
+
+
+def test_hlo_text_generation():
+    # Every artifact lowers to parseable, non-trivial HLO text.
+    for name, fn, specs in aot.kernels():
+        lowered = fn.lower(*specs)
+        text = aot.to_hlo_text(lowered)
+        assert "HloModule" in text, name
+        assert len(text) > 200, name
+
+
+@pytest.mark.parametrize("name", ["jacobi_band", "matmul_tile", "kmeans_assign"])
+def test_aot_shapes_match_rust_constants(name):
+    # Guard against shape drift between aot.py and rust/src/runtime/shapes.rs.
+    rust = open("../rust/src/runtime/shapes.rs").read()
+    if name == "jacobi_band":
+        rows, n = aot.JACOBI_IN
+        assert f"JACOBI_IN: (usize, usize) = ({rows}, {n})" in rust
+    elif name == "matmul_tile":
+        m, k, n = aot.MATMUL_TILE
+        assert f"MATMUL_TILE: (usize, usize, usize) = ({m}, {k}, {n})" in rust
+    else:
+        assert f"KMEANS_POINTS: usize = {aot.KMEANS_POINTS}" in rust
+        assert f"KMEANS_K: usize = {aot.KMEANS_K}" in rust

@@ -1,0 +1,11 @@
+//! Regenerate every table and figure of the paper's evaluation (VI).
+//!
+//! Run everything:   `cargo bench --bench figures`
+//! One experiment:   `cargo bench --bench figures -- fig8-strong`
+//! Reduced sweep:    `cargo bench --bench figures -- --quick`
+
+fn main() {
+    let args: Vec<String> =
+        std::env::args().skip(1).filter(|a| !a.starts_with("--bench")).collect();
+    myrmics::experiments::cli::run(&args);
+}

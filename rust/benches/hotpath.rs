@@ -1,0 +1,127 @@
+//! L3 hot-path microbenchmarks (wallclock) backing EXPERIMENTS.md Perf.
+//!
+//! Hand-rolled harness (criterion is not vendored): each case runs for a
+//! fixed wall budget and reports ns/op plus, for whole-simulation cases,
+//! simulated events per host second — the simulator's throughput metric.
+
+use std::time::Instant;
+
+use myrmics::apps::synthetic::{independent, SynthParams};
+use myrmics::config::PlatformConfig;
+use myrmics::dep::node::DepNode;
+use myrmics::experiments::bench::{run_myrmics, BenchKind, Scaling};
+use myrmics::ids::{NodeId, RegionId, TaskId};
+use myrmics::memory::trie::Trie;
+use myrmics::platform::Platform;
+use myrmics::task::descriptor::Access;
+
+fn time<F: FnMut() -> u64>(label: &str, mut f: F) {
+    // Warm up once, then measure.
+    let _ = f();
+    let start = Instant::now();
+    let mut iters = 0u64;
+    let mut work = 0u64;
+    while start.elapsed().as_millis() < 600 {
+        work += f();
+        iters += 1;
+    }
+    let elapsed = start.elapsed();
+    let ns_per = elapsed.as_nanos() as f64 / work.max(1) as f64;
+    println!(
+        "{label:<44} {:>10.1} ns/op  ({iters} runs, {work} ops, {:.2?})",
+        ns_per, elapsed
+    );
+}
+
+fn main() {
+    println!("== L3 hot paths ==");
+
+    time("trie insert+get+remove (512 keys)", || {
+        let mut t = Trie::new();
+        for k in 0..512u64 {
+            t.insert(k * 7919 % 4096, k);
+        }
+        let mut acc = 0u64;
+        for k in 0..512u64 {
+            acc += t.get(k * 7919 % 4096).copied().unwrap_or(0);
+        }
+        for k in 0..512u64 {
+            t.remove(k * 7919 % 4096);
+        }
+        std::hint::black_box(acc);
+        1536
+    });
+
+    time("dep queue enqueue/grant/pop (64 entries)", || {
+        let anc = |_a: TaskId, _t: TaskId| false;
+        let mut n = DepNode::new(NodeId::Region(RegionId(1)), None, 0);
+        for i in 0..64 {
+            n.enqueue(TaskId(i), 0, Access::Write, n.id, &anc);
+        }
+        let mut ops = 64;
+        while !n.queue.is_empty() {
+            let acts = n.collect_ready(&anc);
+            ops += acts.len() as u64;
+            let t = n.queue.front().unwrap().task;
+            n.pop_task(t, 0);
+            ops += 1;
+        }
+        ops
+    });
+
+    time("slab alloc/free cycle (256 objs)", || {
+        use myrmics::memory::addr::{GlobalPages, PagePool};
+        use myrmics::memory::slab::SlabPool;
+        let mut s = SlabPool::new();
+        let mut p = PagePool::default();
+        let mut g = GlobalPages::new();
+        let mut addrs = Vec::with_capacity(256);
+        for i in 0..256u64 {
+            addrs.push(s.alloc(64 + (i % 7) * 64, &mut p, &mut g));
+        }
+        for a in addrs {
+            s.free(a, &mut p);
+        }
+        512
+    });
+
+    println!("\n== whole-simulation throughput (events / host second) ==");
+    for (label, workers, tasks) in
+        [("independent 64w x 512 tasks", 64usize, 512usize), ("independent 256w x 1024", 256, 1024)]
+    {
+        let start = Instant::now();
+        let mut events = 0u64;
+        let mut runs = 0u32;
+        while start.elapsed().as_millis() < 1500 {
+            let (reg, main) = independent();
+            let mut plat =
+                Platform::build_with(PlatformConfig::hierarchical(workers), reg, main, |w| {
+                    w.app = Some(Box::new(SynthParams {
+                        n_tasks: tasks,
+                        task_cycles: 1_000_000,
+                        ..Default::default()
+                    }));
+                });
+            plat.run(Some(1 << 46));
+            events += plat.world().gstats.events_processed;
+            runs += 1;
+        }
+        let eps = events as f64 / start.elapsed().as_secs_f64();
+        println!("{label:<44} {eps:>12.0} events/s ({runs} runs)");
+    }
+
+    println!("\n== end-to-end benchmark sims (host wall time) ==");
+    for (bench, w) in [(BenchKind::Jacobi, 128), (BenchKind::Bitonic, 128), (BenchKind::Kmeans, 128)]
+    {
+        let start = Instant::now();
+        let (t, eng) = run_myrmics(bench, w, Scaling::Strong, true, None);
+        let wall = start.elapsed();
+        println!(
+            "{:<20} {w:>4} workers: sim {:>12} cycles, {:>8} events, host {:.2?}",
+            bench.name(),
+            t,
+            eng.world.gstats.events_processed,
+            wall
+        );
+    }
+}

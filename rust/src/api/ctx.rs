@@ -1,0 +1,287 @@
+//! The Myrmics application API (paper Fig 4) as seen by task bodies.
+//!
+//! # Execution model: eager functional, replayed timing
+//!
+//! A task body is plain Rust. When a worker starts a task, the body runs
+//! *eagerly* against the shared [`World`] — allocations return real ids,
+//! data reads see what producers wrote (dependency grants guarantee the
+//! producers completed earlier in virtual time). While running, the body
+//! records an **op list**: compute charges, memory-API round trips, spawns
+//! and waits. The worker then *replays* the ops in virtual time — each RPC
+//! becomes a real worker->scheduler(s) message chain that charges the
+//! schedulers on the route and suspends the replay until the reply — so
+//! contention, saturation and message traffic are all modeled faithfully
+//! while application code stays straight-line.
+//!
+//! `sys_wait` splits a body into phases: the body is re-invoked with
+//! `phase() + 1` once the waited subtrees quiesce, so code after a wait
+//! sees data its children produced.
+
+use crate::ids::{Cycles, NodeId, ObjectId, RegionId, TaskId};
+use crate::noc::msg::MemOpKind;
+use crate::platform::World;
+use crate::task::descriptor::{Access, TaskArg, TaskDesc};
+
+/// One step of a task's timing replay.
+#[derive(Clone, Debug)]
+pub enum TaskOp {
+    /// Busy compute for this many (MicroBlaze) cycles.
+    Compute(Cycles),
+    /// Memory-API round trip to the owner scheduler (functional result
+    /// already applied; this replays the message chain + service costs).
+    Rpc { owner: usize, op: MemOpKind },
+    /// Spawn a child task (synchronous: replay waits for the ack).
+    Spawn(TaskDesc),
+    /// `sys_wait` on the given nodes; replay resumes at the next phase.
+    Wait(Vec<(NodeId, Access)>),
+}
+
+/// Handle given to task bodies.
+pub struct TaskCtx<'w> {
+    pub world: &'w mut World,
+    pub task: TaskId,
+    pub worker: crate::ids::CoreId,
+    phase: u32,
+    args: Vec<TaskArg>,
+    ops: Vec<TaskOp>,
+}
+
+impl<'w> TaskCtx<'w> {
+    pub fn new(
+        world: &'w mut World,
+        task: TaskId,
+        worker: crate::ids::CoreId,
+        phase: u32,
+        args: Vec<TaskArg>,
+    ) -> Self {
+        TaskCtx { world, task, worker, phase, args, ops: Vec::new() }
+    }
+
+    pub fn into_ops(self) -> Vec<TaskOp> {
+        self.ops
+    }
+
+    /// Which `sys_wait` phase this invocation is (0 = first).
+    pub fn phase(&self) -> u32 {
+        self.phase
+    }
+
+    // ------------------------------------------------------------ arguments
+
+    pub fn n_args(&self) -> usize {
+        self.args.len()
+    }
+
+    pub fn arg(&self, i: usize) -> &TaskArg {
+        &self.args[i]
+    }
+
+    /// Value of a SAFE by-value argument.
+    pub fn val_arg(&self, i: usize) -> u64 {
+        self.args[i].value
+    }
+
+    pub fn region_arg(&self, i: usize) -> RegionId {
+        debug_assert!(self.args[i].is_region(), "arg {i} is not a region");
+        RegionId(self.args[i].value)
+    }
+
+    pub fn obj_arg(&self, i: usize) -> ObjectId {
+        debug_assert!(
+            !self.args[i].is_region() && self.args[i].node.is_some(),
+            "arg {i} is not an object"
+        );
+        ObjectId(self.args[i].value)
+    }
+
+    // ---------------------------------------------------- memory management
+
+    /// `sys_ralloc(parent, lvl)`.
+    pub fn ralloc(&mut self, parent: RegionId, lvl: i32) -> RegionId {
+        let w = &mut *self.world;
+        let owner = w.mem.owner(NodeId::Region(parent));
+        let r = w.mem.ralloc(parent, lvl, &w.hier);
+        self.world.gstats.regions_created += 1;
+        self.ops.push(TaskOp::Rpc { owner, op: MemOpKind::Ralloc });
+        r
+    }
+
+    /// `sys_rfree(r)`: recursively destroy a region.
+    pub fn rfree(&mut self, r: RegionId) {
+        let owner = self.world.mem.owner(NodeId::Region(r));
+        let destroyed = self.world.mem.rfree(r);
+        for n in &destroyed {
+            self.world.dep.retire(*n);
+            if let NodeId::Object(o) = n {
+                self.world.store.remove(*o);
+            }
+        }
+        self.ops.push(TaskOp::Rpc { owner, op: MemOpKind::Rfree { nodes: destroyed.len() as u32 } });
+    }
+
+    /// `sys_alloc(size, r)`.
+    pub fn alloc(&mut self, size: u64, r: RegionId) -> ObjectId {
+        let owner = self.world.mem.owner(NodeId::Region(r));
+        let o = self.world.mem.alloc(size, r);
+        self.world.gstats.objects_created += 1;
+        self.ops.push(TaskOp::Rpc { owner, op: MemOpKind::Alloc });
+        o
+    }
+
+    /// `sys_balloc(size, r, num)`: bulk allocation, one round trip.
+    pub fn balloc(&mut self, size: u64, r: RegionId, num: usize) -> Vec<ObjectId> {
+        let owner = self.world.mem.owner(NodeId::Region(r));
+        let objs = self.world.mem.balloc(size, r, num);
+        self.world.gstats.objects_created += num as u64;
+        self.ops.push(TaskOp::Rpc { owner, op: MemOpKind::Balloc { n: num as u32 } });
+        objs
+    }
+
+    /// `sys_free(o)`.
+    pub fn free(&mut self, o: ObjectId) {
+        let owner = self.world.mem.owner(NodeId::Object(o));
+        self.world.dep.retire(NodeId::Object(o));
+        self.world.store.remove(o);
+        let ok = self.world.mem.free(o);
+        debug_assert!(ok, "double free of {o}");
+        self.ops.push(TaskOp::Rpc { owner, op: MemOpKind::Free });
+    }
+
+    /// `sys_realloc(o, size, new_r)`.
+    pub fn realloc(&mut self, o: ObjectId, size: u64, new_r: RegionId) {
+        let owner = self.world.mem.owner(NodeId::Object(o));
+        self.world.mem.realloc(o, size, new_r);
+        self.ops.push(TaskOp::Rpc { owner, op: MemOpKind::Realloc });
+    }
+
+    // ------------------------------------------------------ task management
+
+    /// `sys_spawn(idx, args, types)`.
+    pub fn spawn(&mut self, func: usize, args: Vec<TaskArg>) {
+        self.ops.push(TaskOp::Spawn(TaskDesc::new(func, args)));
+    }
+
+    /// `sys_wait(args, types)`: suspend until the listed arguments are
+    /// again exclusively available to this task. The body should return
+    /// right after calling this; it will be re-invoked with `phase()+1`.
+    pub fn wait(&mut self, args: &[TaskArg]) {
+        let nodes: Vec<(NodeId, Access)> = args
+            .iter()
+            .filter(|a| !a.is_safe())
+            .map(|a| (a.node.expect("wait arg without node"), a.access()))
+            .collect();
+        self.ops.push(TaskOp::Wait(nodes));
+    }
+
+    // ------------------------------------------------------------- compute
+
+    /// Model `cycles` of task computation.
+    pub fn compute(&mut self, cycles: Cycles) {
+        self.ops.push(TaskOp::Compute(cycles));
+    }
+
+    // ------------------------------------------------------------ real data
+
+    pub fn write_f32(&mut self, o: ObjectId, data: &[f32]) {
+        self.world.store.put_f32(o, data);
+    }
+
+    pub fn read_f32(&self, o: ObjectId) -> Vec<f32> {
+        self.world.store.get_f32(o).unwrap_or_else(|| panic!("no data for {o}"))
+    }
+
+    pub fn try_read_f32(&self, o: ObjectId) -> Option<Vec<f32>> {
+        self.world.store.get_f32(o)
+    }
+
+    pub fn write_u32(&mut self, o: ObjectId, data: &[u32]) {
+        self.world.store.put_u32(o, data);
+    }
+
+    pub fn read_u32(&self, o: ObjectId) -> Vec<u32> {
+        self.world.store.get_u32(o).unwrap_or_else(|| panic!("no data for {o}"))
+    }
+
+    /// Is the platform running with real (PJRT) kernels attached?
+    pub fn real_compute(&self) -> bool {
+        self.world.kernels.is_some()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::PlatformConfig;
+    use crate::task::descriptor::TaskDesc;
+
+    fn world() -> World {
+        World::new(PlatformConfig::hierarchical(32))
+    }
+
+    fn mkctx(w: &mut World) -> TaskCtx<'_> {
+        let t = w.tasks.create(TaskDesc::new(0, vec![]), None, 0, 0);
+        TaskCtx::new(w, t, crate::ids::CoreId(1), 0, vec![])
+    }
+
+    #[test]
+    fn api_calls_record_rpcs() {
+        let mut w = world();
+        let mut ctx = mkctx(&mut w);
+        let r = ctx.ralloc(RegionId::ROOT, 1);
+        let o = ctx.alloc(256, r);
+        let objs = ctx.balloc(64, r, 10);
+        ctx.free(o);
+        ctx.compute(1000);
+        ctx.spawn(0, vec![TaskArg::obj_in(objs[0])]);
+        let ops = ctx.into_ops();
+        assert_eq!(ops.len(), 6);
+        assert!(matches!(ops[0], TaskOp::Rpc { op: MemOpKind::Ralloc, .. }));
+        assert!(matches!(ops[1], TaskOp::Rpc { op: MemOpKind::Alloc, .. }));
+        assert!(matches!(ops[2], TaskOp::Rpc { op: MemOpKind::Balloc { n: 10 }, .. }));
+        assert!(matches!(ops[3], TaskOp::Rpc { op: MemOpKind::Free, .. }));
+        assert!(matches!(ops[4], TaskOp::Compute(1000)));
+        assert!(matches!(ops[5], TaskOp::Spawn(_)));
+        assert_eq!(w.mem.n_objects(), 10);
+    }
+
+    #[test]
+    fn rfree_retires_dep_nodes_and_data() {
+        let mut w = world();
+        let mut ctx = mkctx(&mut w);
+        let r = ctx.ralloc(RegionId::ROOT, 1);
+        let o = ctx.alloc(64, r);
+        ctx.write_f32(o, &[1.0, 2.0]);
+        assert_eq!(ctx.read_f32(o), vec![1.0, 2.0]);
+        ctx.rfree(r);
+        let ops = ctx.into_ops();
+        assert!(matches!(ops.last(), Some(TaskOp::Rpc { op: MemOpKind::Rfree { nodes: 2 }, .. })));
+        assert!(!w.mem.exists(NodeId::Region(r)));
+        assert!(w.store.get(o).is_none());
+    }
+
+    #[test]
+    fn wait_collects_dep_nodes_only() {
+        let mut w = world();
+        let mut ctx = mkctx(&mut w);
+        let r = ctx.ralloc(RegionId::ROOT, 0);
+        ctx.wait(&[TaskArg::region_inout(r), TaskArg::val(7)]);
+        let ops = ctx.into_ops();
+        match &ops[1] {
+            TaskOp::Wait(nodes) => {
+                assert_eq!(nodes.len(), 1);
+                assert_eq!(nodes[0], (NodeId::Region(r), Access::Write));
+            }
+            other => panic!("expected Wait, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn ralloc_rpc_targets_parent_owner() {
+        let mut w = world();
+        let mut ctx = mkctx(&mut w);
+        // Parent is the root region, owned by scheduler 0.
+        ctx.ralloc(RegionId::ROOT, 1);
+        let ops = ctx.into_ops();
+        assert!(matches!(ops[0], TaskOp::Rpc { owner: 0, .. }));
+    }
+}

@@ -1,0 +1,2 @@
+//! The Myrmics application API (paper Fig 4).
+pub mod ctx;

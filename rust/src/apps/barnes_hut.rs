@@ -1,0 +1,280 @@
+//! Barnes-Hut N-body (paper VI-B, Figs 8f/8l): irregular, pointer-based
+//! parallelism over dynamically allocated region trees.
+//!
+//! "The application makes heavy use of dynamically allocated trees, which
+//! are built and destroyed in each step ... Each computation task
+//! allocates a tree for its local bodies; this tree belongs to a new
+//! region, which is created for the loop repetition and destroyed when
+//! the repetition ends. To compute the gravitational forces, tasks are
+//! created to operate on two regions, each containing an octree of a part
+//! of the 3D space."
+//!
+//! Per iteration, main: creates a fresh tree region per band, spawns
+//! build tasks (bodies -> octree), a summary task reading *all* trees
+//! (the all-to-all-flavoured phase that limits scaling), force tasks per
+//! band reading the own + neighbouring trees + the summary, then
+//! `sys_wait`s and frees the per-iteration regions. Exercises dynamic
+//! regions, `sys_rfree` of draining subtrees, and wait/resume.
+
+use crate::api::ctx::TaskCtx;
+use crate::apps::workload::{bh_build_cycles, bh_force_cycles};
+use crate::ids::{ObjectId, RegionId};
+use crate::mpi::rank::MpiOp;
+use crate::task::descriptor::TaskArg;
+use crate::task::registry::Registry;
+
+#[derive(Clone, Debug)]
+pub struct BhParams {
+    pub bodies: usize,
+    /// Spatial bands (tasks per phase).
+    pub bands: usize,
+    pub groups: usize,
+    pub iters: usize,
+}
+
+pub struct BhState {
+    pub p: BhParams,
+    /// Persistent body objects, one per band.
+    pub bodies: Vec<ObjectId>,
+    pub band_sizes: Vec<usize>,
+    pub group_regions: Vec<RegionId>,
+    /// Per-iteration state: tree regions + tree objects + summary.
+    pub tree_regions: Vec<RegionId>,
+    pub trees: Vec<ObjectId>,
+    pub summary: Option<ObjectId>,
+    pub iters_done: usize,
+}
+
+fn band_group(p: &BhParams, b: usize) -> usize {
+    b * p.groups / p.bands
+}
+
+/// Build one iteration's tasks; returns the wait list.
+fn spawn_iteration(ctx: &mut TaskCtx<'_>) -> Vec<TaskArg> {
+    let (p, bodies, band_sizes, group_regions) = {
+        let st = ctx.world.app_ref::<BhState>();
+        (st.p.clone(), st.bodies.clone(), st.band_sizes.clone(), st.group_regions.clone())
+    };
+    // Fresh per-iteration tree regions + tree objects (octree footprint
+    // ~2x the bodies of the band) + the global summary object.
+    let mut tree_regions = Vec::with_capacity(p.bands);
+    let mut trees = Vec::with_capacity(p.bands);
+    for b in 0..p.bands {
+        let r = ctx.ralloc(group_regions[band_group(&p, b)], 2);
+        let tree_bytes = (band_sizes[b] * 2 * 32) as u64;
+        trees.push(ctx.alloc(tree_bytes, r));
+        tree_regions.push(r);
+    }
+    let summary = ctx.alloc((p.bands * 64) as u64, RegionId::ROOT);
+    {
+        let st = ctx.world.app_mut::<BhState>();
+        st.tree_regions = tree_regions.clone();
+        st.trees = trees.clone();
+        st.summary = Some(summary);
+    }
+    // Build tasks: bodies -> octree (tree region inout).
+    for b in 0..p.bands {
+        ctx.spawn(
+            0,
+            vec![
+                TaskArg::obj_in(bodies[b]),
+                TaskArg::region_inout(tree_regions[b]),
+                TaskArg::val(b as u64),
+            ],
+        );
+    }
+    // Summary task: reads every tree (all-to-all flavour).
+    let mut args = vec![TaskArg::obj_out(summary)];
+    for b in 0..p.bands {
+        args.push(TaskArg::region_in(tree_regions[b]));
+    }
+    ctx.spawn(1, args);
+    // Force tasks: own tree + ring neighbours + summary; update bodies.
+    for b in 0..p.bands {
+        let mut args = vec![
+            TaskArg::obj_inout(bodies[b]),
+            TaskArg::region_in(tree_regions[b]),
+            TaskArg::obj_in(summary),
+            TaskArg::val(b as u64),
+        ];
+        if p.bands > 1 {
+            args.push(TaskArg::region_in(tree_regions[(b + p.bands - 1) % p.bands]));
+            args.push(TaskArg::region_in(tree_regions[(b + 1) % p.bands]));
+        }
+        ctx.spawn(2, args);
+    }
+    // Wait on the persistent body objects + the summary: everything the
+    // iteration writes.
+    let mut wait_args: Vec<TaskArg> =
+        bodies.iter().map(|&o| TaskArg::obj_inout(o)).collect();
+    wait_args.push(TaskArg::obj_inout(summary));
+    wait_args
+}
+
+pub fn myrmics() -> (Registry, usize) {
+    let mut reg = Registry::new();
+
+    // fn 0: build octree for a band.
+    reg.register("bh_build", |ctx: &mut TaskCtx<'_>| {
+        let b = ctx.val_arg(2) as usize;
+        let n = ctx.world.app_ref::<BhState>().band_sizes[b] as u64;
+        ctx.compute(bh_build_cycles(n));
+    });
+
+    // fn 1: summarize all trees (multipole summary).
+    reg.register("bh_summary", |ctx: &mut TaskCtx<'_>| {
+        let bands = ctx.world.app_ref::<BhState>().p.bands as u64;
+        ctx.compute(bands * 3_000);
+    });
+
+    // fn 2: force + integrate for a band.
+    reg.register("bh_force", |ctx: &mut TaskCtx<'_>| {
+        let b = ctx.val_arg(3) as usize;
+        let (n, total) = {
+            let st = ctx.world.app_ref::<BhState>();
+            (st.band_sizes[b] as u64, st.p.bodies as u64)
+        };
+        ctx.compute(bh_force_cycles(n, total));
+    });
+
+    // fn 3: main — iteration loop through sys_wait phases.
+    let main = reg.register("bh_main", |ctx: &mut TaskCtx<'_>| {
+        let phase = ctx.phase() as usize;
+        if phase == 0 {
+            let p = ctx.world.app_ref::<BhParams>().clone();
+            assert!(p.groups <= p.bands);
+            let mut group_regions = Vec::new();
+            for _ in 0..p.groups {
+                group_regions.push(ctx.ralloc(RegionId::ROOT, 1));
+            }
+            let mut bodies = Vec::new();
+            let mut band_sizes = Vec::new();
+            for b in 0..p.bands {
+                let n0 = b * p.bodies / p.bands;
+                let n1 = (b + 1) * p.bodies / p.bands;
+                band_sizes.push(n1 - n0);
+                bodies.push(ctx.alloc(((n1 - n0) * 32) as u64, group_regions[band_group(&p, b)]));
+            }
+            ctx.world.app = Some(Box::new(BhState {
+                p,
+                bodies,
+                band_sizes,
+                group_regions,
+                tree_regions: Vec::new(),
+                trees: Vec::new(),
+                summary: None,
+                iters_done: 0,
+            }));
+        } else {
+            // Previous iteration finished: tear down its trees ("destroyed
+            // when the repetition ends").
+            let (tree_regions, summary) = {
+                let st = ctx.world.app_mut::<BhState>();
+                st.iters_done += 1;
+                (std::mem::take(&mut st.tree_regions), st.summary.take())
+            };
+            for r in tree_regions {
+                ctx.rfree(r);
+            }
+            if let Some(s) = summary {
+                ctx.free(s);
+            }
+        }
+        let (iters_done, iters) = {
+            let st = ctx.world.app_ref::<BhState>();
+            (st.iters_done, st.p.iters)
+        };
+        if iters_done < iters {
+            let wait_args = spawn_iteration(ctx);
+            ctx.wait(&wait_args);
+        }
+    });
+    (reg, main)
+}
+
+/// MPI baseline: build + all-to-all body-sample exchange + force +
+/// allreduce of the global summary. The quadratic message count is what
+/// makes Barnes-Hut scale poorly (paper: "involves many and
+/// communication-intensive steps").
+pub fn mpi_programs(p: &BhParams, ranks: usize) -> Vec<Vec<MpiOp>> {
+    (0..ranks)
+        .map(|r| {
+            let n = ((r + 1) * p.bodies / ranks - r * p.bodies / ranks) as u64;
+            let sample_bytes = (n * 32 / 8).max(64);
+            let mut prog = Vec::new();
+            for it in 0..p.iters as u64 {
+                prog.push(MpiOp::Compute(bh_build_cycles(n)));
+                // All-to-all sample exchange.
+                for other in 0..ranks {
+                    if other != r {
+                        prog.push(MpiOp::Send {
+                            to: other,
+                            tag: it * 1000 + r as u64,
+                            bytes: sample_bytes,
+                        });
+                    }
+                }
+                for other in 0..ranks {
+                    if other != r {
+                        prog.push(MpiOp::Recv {
+                            from: other,
+                            tag: it * 1000 + other as u64,
+                            bytes: sample_bytes,
+                        });
+                    }
+                }
+                prog.push(MpiOp::Compute(bh_force_cycles(n, p.bodies as u64)));
+                prog.push(MpiOp::Allreduce { bytes: (ranks * 64) as u64 });
+            }
+            prog
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::PlatformConfig;
+    use crate::platform::Platform;
+
+    #[test]
+    fn iterations_create_and_destroy_regions() {
+        let (reg, main) = myrmics();
+        let p = BhParams { bodies: 4000, bands: 8, groups: 2, iters: 3 };
+        let mut plat = Platform::build_with(PlatformConfig::hierarchical(8), reg, main, |w| {
+            w.app = Some(Box::new(p));
+        });
+        plat.run(Some(1 << 44));
+        let w = plat.world();
+        // main + iters * (bands builds + 1 summary + bands forces)
+        assert_eq!(w.gstats.tasks_spawned, 1 + 3 * (8 + 1 + 8));
+        assert_eq!(w.gstats.tasks_completed, w.gstats.tasks_spawned);
+        // All per-iteration tree regions freed (24 would leak over 3
+        // iterations otherwise): only root + the 2 group regions remain.
+        assert_eq!(w.mem.n_regions(), 1 + 2);
+    }
+
+    #[test]
+    fn final_phase_frees_nothing_extra() {
+        let (reg, main) = myrmics();
+        let p = BhParams { bodies: 1000, bands: 4, groups: 2, iters: 1 };
+        let mut plat = Platform::build_with(PlatformConfig::flat(4), reg, main, |w| {
+            w.app = Some(Box::new(p));
+        });
+        plat.run(Some(1 << 44));
+        let w = plat.world();
+        assert_eq!(w.gstats.tasks_completed, w.gstats.tasks_spawned);
+    }
+
+    #[test]
+    fn mpi_bh_alltoall_limits_scaling() {
+        let p = BhParams { bodies: 20_000, bands: 8, groups: 2, iters: 2 };
+        let cfg = PlatformConfig::flat(1);
+        let t2 = crate::mpi::runner::mpi_time(mpi_programs(&p, 2), &cfg);
+        let t64 = crate::mpi::runner::mpi_time(mpi_programs(&p, 64), &cfg);
+        // 32x more ranks: the quadratic all-to-all keeps the speedup well
+        // below linear (the paper's "does not scale well").
+        let speedup = t2 as f64 / t64 as f64;
+        assert!(speedup > 2.0 && speedup < 24.0, "speedup {speedup:.2}");
+    }
+}

@@ -1,0 +1,303 @@
+//! Bitonic sort (paper VI-B, Figs 8c/8i): butterfly communication.
+//!
+//! `blocks` buffers of `m` elements each. After a local sort, `log2(B)`
+//! stages of `(k, j)` passes merge-split partner blocks (`partner = i ^
+//! 2^j`), the classic block-bitonic network — compare-exchange becomes
+//! merge-split on sorted blocks.
+//!
+//! **Myrmics decomposition**: buffers live under per-group regions ("the
+//! data to be sorted are divided into coarse regions when the algorithm
+//! initializes"). Passes whose partner distance stays inside a group are
+//! spawned by per-group pass tasks (hierarchical); wider passes are
+//! spawned by main. This is the paper's worst-scaling benchmark: the task
+//! count per pass is high and the schedulers saturate (Fig 9a).
+
+use crate::api::ctx::TaskCtx;
+use crate::apps::workload::{merge_cycles, sort_cycles};
+use crate::ids::{ObjectId, RegionId};
+use crate::mpi::rank::MpiOp;
+use crate::task::descriptor::TaskArg;
+use crate::task::registry::Registry;
+
+#[derive(Clone, Debug)]
+pub struct BitonicParams {
+    /// Number of blocks; must be a power of two.
+    pub blocks: usize,
+    /// Elements per block.
+    pub m: usize,
+    /// Groups (power of two, <= blocks).
+    pub groups: usize,
+    pub real_data: bool,
+}
+
+pub struct BitonicState {
+    pub p: BitonicParams,
+    pub bufs: Vec<ObjectId>,
+    pub group_regions: Vec<RegionId>,
+}
+
+fn log2(x: usize) -> u32 {
+    debug_assert!(x.is_power_of_two());
+    x.trailing_zeros()
+}
+
+/// The (k, j) pass schedule after the local sort.
+pub fn passes(blocks: usize) -> Vec<(u32, u32)> {
+    let mut out = Vec::new();
+    for k in 1..=log2(blocks) {
+        for j in (0..k).rev() {
+            out.push((k, j));
+        }
+    }
+    out
+}
+
+/// Merge-split: both blocks sorted ascending; `asc` keeps the low half in
+/// `a`.
+fn merge_split(a: &mut Vec<u32>, b: &mut Vec<u32>, asc: bool) {
+    let m = a.len();
+    let mut all: Vec<u32> = a.iter().chain(b.iter()).copied().collect();
+    all.sort_unstable();
+    if asc {
+        b.copy_from_slice(&all[m..]);
+        a.copy_from_slice(&all[..m]);
+    } else {
+        b.copy_from_slice(&all[..m]);
+        a.copy_from_slice(&all[m..]);
+    }
+}
+
+pub fn myrmics() -> (Registry, usize) {
+    let mut reg = Registry::new();
+
+    // fn 0: local sort — inout buf, val i.
+    reg.register("bt_sort", |ctx: &mut TaskCtx<'_>| {
+        let (m, real) = {
+            let st = ctx.world.app_ref::<BitonicState>();
+            (st.p.m, st.p.real_data)
+        };
+        ctx.compute(sort_cycles(m as u64));
+        if real {
+            let o = ctx.obj_arg(0);
+            let mut v = ctx.read_u32(o);
+            v.sort_unstable();
+            ctx.write_u32(o, &v);
+        }
+    });
+
+    // fn 1: merge-split pair — inout buf_lo, inout buf_hi, val asc.
+    reg.register("bt_pair", |ctx: &mut TaskCtx<'_>| {
+        let (m, real) = {
+            let st = ctx.world.app_ref::<BitonicState>();
+            (st.p.m, st.p.real_data)
+        };
+        ctx.compute(merge_cycles(2 * m as u64));
+        if real {
+            let (oa, ob) = (ctx.obj_arg(0), ctx.obj_arg(1));
+            let mut a = ctx.read_u32(oa);
+            let mut b = ctx.read_u32(ob);
+            merge_split(&mut a, &mut b, ctx.val_arg(2) != 0);
+            ctx.write_u32(oa, &a);
+            ctx.write_u32(ob, &b);
+        }
+    });
+
+    // fn 2: per-group pass driver — spawns the group's intra-group pairs.
+    reg.register("bt_pass", |ctx: &mut TaskCtx<'_>| {
+        let g = ctx.val_arg(1) as usize;
+        let k = ctx.val_arg(2) as u32;
+        let j = ctx.val_arg(3) as u32;
+        let (blocks, groups, bufs) = {
+            let st = ctx.world.app_ref::<BitonicState>();
+            (st.p.blocks, st.p.groups, st.bufs.clone())
+        };
+        let gs = blocks / groups;
+        for i in (g * gs)..((g + 1) * gs) {
+            let partner = i ^ (1 << j);
+            if partner > i {
+                let asc = (i >> k) & 1 == 0;
+                ctx.spawn(
+                    1,
+                    vec![
+                        TaskArg::obj_inout(bufs[i]),
+                        TaskArg::obj_inout(bufs[partner]),
+                        TaskArg::val(asc as u64),
+                    ],
+                );
+            }
+        }
+    });
+
+    // fn 3: main.
+    let main = reg.register("bt_main", |ctx: &mut TaskCtx<'_>| {
+        let p = ctx.world.app_ref::<BitonicParams>().clone();
+        assert!(p.blocks.is_power_of_two() && p.groups.is_power_of_two());
+        assert!(p.groups <= p.blocks);
+        let mut group_regions = Vec::new();
+        let mut bufs = Vec::new();
+        for _ in 0..p.groups {
+            group_regions.push(ctx.ralloc(RegionId::ROOT, 1));
+        }
+        let gs = p.blocks / p.groups;
+        for i in 0..p.blocks {
+            bufs.push(ctx.alloc((p.m * 4) as u64, group_regions[i / gs]));
+        }
+        if p.real_data {
+            let mut rng = crate::sim::rng::Rng::new(42);
+            for &o in &bufs {
+                let data: Vec<u32> = (0..p.m).map(|_| rng.next_u64() as u32).collect();
+                ctx.write_u32(o, &data);
+            }
+        }
+        ctx.world.app =
+            Some(Box::new(BitonicState { p: p.clone(), bufs: bufs.clone(), group_regions: group_regions.clone() }));
+        // Local sorts, via per-group drivers (hierarchical spawn).
+        for (g, &gr) in group_regions.iter().enumerate() {
+            ctx.spawn(
+                4,
+                vec![TaskArg::region_inout(gr).notransfer(), TaskArg::val(g as u64)],
+            );
+        }
+        // Merge passes.
+        for (k, j) in passes(p.blocks) {
+            if (1usize << j) < gs {
+                // Intra-group: delegate to per-group pass drivers.
+                for (g, &gr) in group_regions.iter().enumerate() {
+                    ctx.spawn(
+                        2,
+                        vec![
+                            TaskArg::region_inout(gr).notransfer(),
+                            TaskArg::val(g as u64),
+                            TaskArg::val(k as u64),
+                            TaskArg::val(j as u64),
+                        ],
+                    );
+                }
+            } else {
+                // Cross-group pairs: spawned flat from main.
+                for i in 0..p.blocks {
+                    let partner = i ^ (1usize << j);
+                    if partner > i {
+                        let asc = (i >> k) & 1 == 0;
+                        ctx.spawn(
+                            1,
+                            vec![
+                                TaskArg::obj_inout(bufs[i]),
+                                TaskArg::obj_inout(bufs[partner]),
+                                TaskArg::val(asc as u64),
+                            ],
+                        );
+                    }
+                }
+            }
+        }
+    });
+
+    // fn 4: per-group local-sort driver.
+    reg.register("bt_sortgrp", |ctx: &mut TaskCtx<'_>| {
+        let g = ctx.val_arg(1) as usize;
+        let (blocks, groups, bufs) = {
+            let st = ctx.world.app_ref::<BitonicState>();
+            (st.p.blocks, st.p.groups, st.bufs.clone())
+        };
+        let gs = blocks / groups;
+        for i in (g * gs)..((g + 1) * gs) {
+            ctx.spawn(0, vec![TaskArg::obj_inout(bufs[i]), TaskArg::val(i as u64)]);
+        }
+    });
+
+    (reg, main)
+}
+
+/// Gather the fully sorted sequence from a finished real-data run.
+pub fn read_result(world: &crate::platform::World) -> Vec<u32> {
+    let st = world.app_ref::<BitonicState>();
+    let mut out = Vec::new();
+    for &o in &st.bufs {
+        out.extend(world.store.get_u32(o).unwrap());
+    }
+    out
+}
+
+/// MPI baseline: local sort, then pairwise exchange + merge per pass.
+pub fn mpi_programs(p: &BitonicParams, ranks: usize) -> Vec<Vec<MpiOp>> {
+    assert!(ranks.is_power_of_two());
+    let m = (p.blocks * p.m / ranks) as u64; // elements per rank
+    let bytes = m * 4;
+    (0..ranks)
+        .map(|r| {
+            let mut prog = vec![MpiOp::Compute(sort_cycles(m))];
+            for (tag, (_k, j)) in passes(ranks).into_iter().enumerate() {
+                let partner = r ^ (1usize << j);
+                prog.push(MpiOp::Send { to: partner, tag: tag as u64, bytes });
+                prog.push(MpiOp::Recv { from: partner, tag: tag as u64, bytes });
+                prog.push(MpiOp::Compute(merge_cycles(2 * m)));
+            }
+            prog
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::PlatformConfig;
+    use crate::platform::Platform;
+
+    #[test]
+    fn pass_schedule_is_log_squared() {
+        assert_eq!(passes(2).len(), 1);
+        assert_eq!(passes(8).len(), 6); // 1 + 2 + 3
+        assert_eq!(passes(16).len(), 10);
+    }
+
+    #[test]
+    fn real_sort_is_correct() {
+        let (reg, main) = myrmics();
+        let p = BitonicParams { blocks: 8, m: 64, groups: 2, real_data: true };
+        let mut plat = Platform::build_with(PlatformConfig::hierarchical(8), reg, main, |w| {
+            w.app = Some(Box::new(p));
+        });
+        plat.run(Some(1 << 44));
+        let w = plat.world();
+        assert_eq!(w.gstats.tasks_completed, w.gstats.tasks_spawned);
+        let out = read_result(w);
+        assert_eq!(out.len(), 512);
+        for win in out.windows(2) {
+            assert!(win[0] <= win[1], "sequence not sorted");
+        }
+    }
+
+    #[test]
+    fn modeled_run_completes_flat() {
+        let (reg, main) = myrmics();
+        let p = BitonicParams { blocks: 16, m: 128, groups: 4, real_data: false };
+        let mut plat = Platform::build_with(PlatformConfig::flat(16), reg, main, |w| {
+            w.app = Some(Box::new(p));
+        });
+        plat.run(Some(1 << 44));
+        let w = plat.world();
+        assert_eq!(w.gstats.tasks_completed, w.gstats.tasks_spawned);
+    }
+
+    #[test]
+    fn mpi_bitonic_completes_and_scales_modestly() {
+        let p = BitonicParams { blocks: 16, m: 4096, groups: 4, real_data: false };
+        let cfg = PlatformConfig::flat(1);
+        let t1 = crate::mpi::runner::mpi_time(mpi_programs(&p, 1), &cfg);
+        let t8 = crate::mpi::runner::mpi_time(mpi_programs(&p, 8), &cfg);
+        assert!(t1 as f64 / t8 as f64 > 2.0);
+    }
+
+    #[test]
+    fn merge_split_partitions() {
+        let mut a = vec![1, 4, 9, 12];
+        let mut b = vec![2, 3, 10, 11];
+        merge_split(&mut a, &mut b, true);
+        assert_eq!(a, vec![1, 2, 3, 4]);
+        assert_eq!(b, vec![9, 10, 11, 12]);
+        merge_split(&mut a, &mut b, false);
+        assert_eq!(a, vec![9, 10, 11, 12]);
+        assert_eq!(b, vec![1, 2, 3, 4]);
+    }
+}

@@ -1,0 +1,435 @@
+//! Jacobi iteration (paper VI-B, Figs 8a/8g): nearest-neighbour stencil.
+//!
+//! An `n x n` table with a fixed border; each iteration replaces every
+//! cell with the mean of its four neighbours. Double-buffered (A/B), as
+//! the paper's "nontrivial, optimized implementations" are.
+//!
+//! **Myrmics decomposition.** The table is split into `bands` row bands,
+//! grouped under `groups` super-regions ("we use regions to split the
+//! table into groups of rows"). Interior rows live in per-band regions
+//! under the group region; the halo *edge* rows live in separate per-group
+//! **halo regions, one per buffer parity** (`H_g^A`, `H_g^B`). That split
+//! is what keeps groups of the same iteration parallel: a group task of
+//! parity X holds the X-halos of its neighbours `in` (read-compatible with
+//! the neighbours' own X reads) and only its own Y-halo `inout`, so
+//! cross-group readers never queue behind a region-wide write hold. A
+//! per-iteration *group task* (all arguments NOTRANSFER — it only spawns)
+//! spawns one *band task* per band with fine-grained object arguments;
+//! iterations chain through the dependency queues in program order.
+//!
+//! **MPI baseline.** Classic halo exchange: each rank sends its edge rows
+//! to both neighbours, receives theirs, computes its band.
+
+use crate::api::ctx::TaskCtx;
+use crate::apps::workload::jacobi_cycles;
+use crate::ids::{ObjectId, RegionId};
+use crate::mpi::rank::MpiOp;
+use crate::task::descriptor::TaskArg;
+use crate::task::registry::Registry;
+
+#[derive(Clone, Debug)]
+pub struct JacobiParams {
+    /// Table dimension (n x n cells, f32).
+    pub n: usize,
+    pub iters: usize,
+    /// Row bands (= band tasks per iteration).
+    pub bands: usize,
+    /// Super-regions (hierarchical decomposition width).
+    pub groups: usize,
+    /// Compute the real stencil on stored data (vs modeled cycles only).
+    pub real_data: bool,
+}
+
+impl JacobiParams {
+    pub fn modeled(n: usize, iters: usize, bands: usize, groups: usize) -> Self {
+        JacobiParams { n, iters, bands, groups, real_data: false }
+    }
+}
+
+/// Per-band objects, one set per buffer (A = even iterations' read side).
+#[derive(Clone, Copy, Debug)]
+pub struct BandObjs {
+    pub top: ObjectId,
+    pub interior: ObjectId,
+    pub bot: ObjectId,
+}
+
+pub struct JacobiState {
+    pub p: JacobiParams,
+    /// [buffer][band]
+    pub bufs: [Vec<BandObjs>; 2],
+    pub group_regions: Vec<RegionId>,
+    /// [parity][group]: halo regions holding the edge-row objects.
+    pub halo_regions: [Vec<RegionId>; 2],
+    /// rows per band (last band may be larger).
+    pub rows: Vec<usize>,
+}
+
+impl JacobiState {
+    fn band_group(&self, b: usize) -> usize {
+        b * self.p.groups / self.p.bands
+    }
+
+    /// Bands belonging to group g (contiguous).
+    fn group_bands(&self, g: usize) -> Vec<usize> {
+        (0..self.p.bands).filter(|&b| self.band_group(b) == g).collect()
+    }
+}
+
+/// Sequential reference for `iters` Jacobi sweeps (fixed border).
+pub fn jacobi_reference(n: usize, iters: usize, init: &[f32]) -> Vec<f32> {
+    let mut a = init.to_vec();
+    let mut b = init.to_vec();
+    for _ in 0..iters {
+        for i in 1..n - 1 {
+            for j in 1..n - 1 {
+                b[i * n + j] =
+                    0.25 * (a[(i - 1) * n + j] + a[(i + 1) * n + j] + a[i * n + j - 1] + a[i * n + j + 1]);
+            }
+        }
+        std::mem::swap(&mut a, &mut b);
+    }
+    a
+}
+
+/// Deterministic initial table: border fixed at 1.0, interior 0.
+pub fn jacobi_init(n: usize) -> Vec<f32> {
+    let mut t = vec![0f32; n * n];
+    for i in 0..n {
+        t[i] = 1.0;
+        t[(n - 1) * n + i] = 1.0;
+        t[i * n] = 1.0;
+        t[i * n + n - 1] = 1.0;
+    }
+    t
+}
+
+// Argument layout of a band task (see module docs).
+const A_TOP: usize = 0;
+const A_INT: usize = 1;
+const A_BOT: usize = 2;
+const A_OUT_TOP: usize = 3;
+const A_OUT_INT: usize = 4;
+const A_OUT_BOT: usize = 5;
+const A_BAND: usize = 6;
+const A_NB_UP: usize = 7; // in: bottom edge of band b-1 (value 0 = none)
+
+/// Build the Myrmics Jacobi app. Returns (registry, main_fn).
+pub fn myrmics() -> (Registry, usize) {
+    let mut reg = Registry::new();
+
+    let _band_task = reg.register("jacobi_band", |ctx: &mut TaskCtx<'_>| {
+        let b = ctx.val_arg(A_BAND) as usize;
+        let (rows, n, real) = {
+            let st = ctx.world.app_ref::<JacobiState>();
+            (st.rows[b], st.p.n, st.p.real_data)
+        };
+        ctx.compute(jacobi_cycles(rows as u64, n as u64));
+        if !real {
+            return;
+        }
+        // Assemble the local band plus halo rows, run the stencil, write Y.
+        let mut rows_in: Vec<f32> = Vec::with_capacity((rows + 2) * n);
+        let halo_up = if ctx.val_arg(A_NB_UP) != 0 {
+            ctx.read_f32(ctx.obj_arg(A_NB_UP))
+        } else {
+            vec![0.0; n] // unused: band 0's top edge is the fixed border
+        };
+        rows_in.extend_from_slice(&halo_up);
+        for i in [A_TOP, A_INT, A_BOT] {
+            rows_in.extend(ctx.read_f32(ctx.obj_arg(i)));
+        }
+        let halo_dn = if ctx.n_args() > A_NB_UP + 1 && ctx.val_arg(A_NB_UP + 1) != 0 {
+            ctx.read_f32(ctx.obj_arg(A_NB_UP + 1))
+        } else {
+            vec![0.0; n]
+        };
+        rows_in.extend_from_slice(&halo_dn);
+        debug_assert_eq!(rows_in.len(), (rows + 2) * n);
+
+        let first_band = ctx.val_arg(A_NB_UP) == 0;
+        let last_band = !(ctx.n_args() > A_NB_UP + 1 && ctx.val_arg(A_NB_UP + 1) != 0);
+        let mut out = vec![0f32; rows * n];
+        // Kernel path (PJRT, L1 Pallas) or pure-rust fallback.
+        let used_kernel = if ctx.real_compute() {
+            let shape_in = [rows + 2, n];
+            let k = ctx.world.kernels.as_mut().unwrap();
+            if k.available("jacobi_band") && (rows + 2, n) == crate::runtime::shapes::JACOBI_IN {
+                let res = k
+                    .run_f32("jacobi_band", &[(&rows_in, &shape_in)])
+                    .expect("jacobi_band kernel");
+                out.copy_from_slice(&res[0]);
+                true
+            } else {
+                false
+            }
+        } else {
+            false
+        };
+        if !used_kernel {
+            for i in 0..rows {
+                for j in 0..n {
+                    let g = |r: usize, c: usize| rows_in[r * n + c];
+                    out[i * n + j] = 0.25 * (g(i, j) + g(i + 2, j) + g(i + 1, j.saturating_sub(1)) + g(i + 1, (j + 1).min(n - 1)));
+                }
+            }
+        }
+        // Fixed border: restore border cells from the input.
+        for i in 0..rows {
+            out[i * n] = rows_in[(i + 1) * n];
+            out[i * n + n - 1] = rows_in[(i + 1) * n + n - 1];
+            let global_first = first_band && i == 0;
+            let global_last = last_band && i == rows - 1;
+            if global_first || global_last {
+                for j in 0..n {
+                    out[i * n + j] = rows_in[(i + 1) * n + j];
+                }
+            }
+        }
+        let o_top = ctx.obj_arg(A_OUT_TOP);
+        let o_int = ctx.obj_arg(A_OUT_INT);
+        let o_bot = ctx.obj_arg(A_OUT_BOT);
+        ctx.write_f32(o_top, &out[..n]);
+        ctx.write_f32(o_int, &out[n..(rows - 1) * n]);
+        ctx.write_f32(o_bot, &out[(rows - 1) * n..]);
+    });
+
+    let group_task = reg.register("jacobi_group", move |ctx: &mut TaskCtx<'_>| {
+        let g = ctx.val_arg(1) as usize;
+        let parity = ctx.val_arg(2) as usize;
+        let (bands, n_bands) = {
+            let st = ctx.world.app_ref::<JacobiState>();
+            (st.group_bands(g), st.p.bands)
+        };
+        for b in bands {
+            let (x, y) = {
+                let st = ctx.world.app_ref::<JacobiState>();
+                (st.bufs[parity % 2][b], st.bufs[(parity + 1) % 2][b])
+            };
+            let mut args = vec![
+                TaskArg::obj_in(x.top),
+                TaskArg::obj_in(x.interior),
+                TaskArg::obj_in(x.bot),
+                TaskArg::obj_out(y.top),
+                TaskArg::obj_out(y.interior),
+                TaskArg::obj_out(y.bot),
+                TaskArg::val(b as u64),
+            ];
+            if b > 0 {
+                let up = ctx.world.app_ref::<JacobiState>().bufs[parity % 2][b - 1];
+                args.push(TaskArg::obj_in(up.bot));
+            } else {
+                args.push(TaskArg::val(0));
+            }
+            if b + 1 < n_bands {
+                let dn = ctx.world.app_ref::<JacobiState>().bufs[parity % 2][b + 1];
+                args.push(TaskArg::obj_in(dn.top));
+            }
+            ctx.spawn(0, args); // band_task is fn 0
+        }
+    });
+    debug_assert_eq!(group_task, 1);
+
+    let main = reg.register("jacobi_main", move |ctx: &mut TaskCtx<'_>| {
+        let p = ctx.world.app_ref::<JacobiParams>().clone();
+        assert!(p.bands * 3 <= p.n, "bands too fine for n");
+        assert!(p.groups <= p.bands);
+        // Regions: one per group (level 1), one per band (level 2).
+        let mut group_regions = Vec::with_capacity(p.groups);
+        for _ in 0..p.groups {
+            group_regions.push(ctx.ralloc(RegionId::ROOT, 1));
+        }
+        let mut halo_regions: [Vec<RegionId>; 2] = [Vec::new(), Vec::new()];
+        for _g in 0..p.groups {
+            halo_regions[0].push(ctx.ralloc(RegionId::ROOT, 1));
+            halo_regions[1].push(ctx.ralloc(RegionId::ROOT, 1));
+        }
+        let mut rows_v = Vec::with_capacity(p.bands);
+        let mut bufs: [Vec<BandObjs>; 2] = [Vec::new(), Vec::new()];
+        for b in 0..p.bands {
+            let g = b * p.groups / p.bands;
+            let br = ctx.ralloc(group_regions[g], 2);
+            let r0 = b * p.n / p.bands;
+            let r1 = (b + 1) * p.n / p.bands;
+            let rows = r1 - r0;
+            rows_v.push(rows);
+            let row_bytes = (p.n * 4) as u64;
+            for side in 0..2 {
+                let edges = ctx.balloc(row_bytes, halo_regions[side][g], 2); // top + bot
+                let interior = ctx.alloc(row_bytes * (rows as u64 - 2), br);
+                bufs[side].push(BandObjs { top: edges[0], interior, bot: edges[1] });
+            }
+        }
+        let st = JacobiState {
+            p: p.clone(),
+            bufs,
+            group_regions: group_regions.clone(),
+            halo_regions,
+            rows: rows_v.clone(),
+        };
+        // Seed real data into buffer A (side 0).
+        if p.real_data {
+            let init = jacobi_init(p.n);
+            for b in 0..p.bands {
+                let r0 = b * p.n / p.bands;
+                let rows = st.rows[b];
+                let band = &init[r0 * p.n..(r0 + rows) * p.n];
+                let o = st.bufs[0][b];
+                ctx.write_f32(o.top, &band[..p.n]);
+                ctx.write_f32(o.interior, &band[p.n..(rows - 1) * p.n]);
+                ctx.write_f32(o.bot, &band[(rows - 1) * p.n..]);
+            }
+        }
+        let groups = st.group_bands(0).len(); // touch to validate
+        let _ = groups;
+        ctx.world.app = Some(Box::new(st));
+        // Spawn all iterations in program order; the dependency queues
+        // chain them correctly.
+        for it in 0..p.iters {
+            let parity = it % 2;
+            for g in 0..p.groups {
+                let st = ctx.world.app_ref::<JacobiState>();
+                let mut args = vec![
+                    TaskArg::region_inout(group_regions[g]).notransfer(),
+                    TaskArg::val(g as u64),
+                    TaskArg::val(parity as u64),
+                    // Children write the Y-parity halo of this group and
+                    // read the X-parity one.
+                    TaskArg::region_inout(st.halo_regions[(parity + 1) % 2][g]).notransfer(),
+                    TaskArg::region_in(st.halo_regions[parity][g]).notransfer(),
+                ];
+                // Cross-group halo edges this group's bands will read.
+                let gb = st.group_bands(g);
+                if let Some(&first) = gb.first() {
+                    if first > 0 {
+                        args.push(TaskArg::obj_in(st.bufs[parity][first - 1].bot).notransfer());
+                    }
+                }
+                if let Some(&last) = gb.last() {
+                    if last + 1 < p.bands {
+                        args.push(TaskArg::obj_in(st.bufs[parity][last + 1].top).notransfer());
+                    }
+                }
+                ctx.spawn(1, args); // group_task
+            }
+        }
+    });
+    (reg, main)
+}
+
+/// Read the final table (buffer parity depends on iteration count) from a
+/// finished real-data run.
+pub fn read_result(world: &crate::platform::World) -> Vec<f32> {
+    let st = world.app_ref::<JacobiState>();
+    let side = st.p.iters % 2;
+    let n = st.p.n;
+    let mut out = Vec::with_capacity(n * n);
+    for b in 0..st.p.bands {
+        let o = st.bufs[side][b];
+        out.extend(world.store.get_f32(o.top).unwrap());
+        out.extend(world.store.get_f32(o.interior).unwrap());
+        out.extend(world.store.get_f32(o.bot).unwrap());
+    }
+    out
+}
+
+/// MPI baseline: halo exchange + compute, one rank per core.
+pub fn mpi_programs(p: &JacobiParams, ranks: usize) -> Vec<Vec<MpiOp>> {
+    let row_bytes = (p.n * 4) as u64;
+    (0..ranks)
+        .map(|r| {
+            let rows = ((r + 1) * p.n / ranks - r * p.n / ranks) as u64;
+            let mut prog = Vec::new();
+            for it in 0..p.iters as u64 {
+                if r > 0 {
+                    prog.push(MpiOp::Send { to: r - 1, tag: it * 2, bytes: row_bytes });
+                }
+                if r + 1 < ranks {
+                    prog.push(MpiOp::Send { to: r + 1, tag: it * 2 + 1, bytes: row_bytes });
+                }
+                if r + 1 < ranks {
+                    prog.push(MpiOp::Recv { from: r + 1, tag: it * 2, bytes: row_bytes });
+                }
+                if r > 0 {
+                    prog.push(MpiOp::Recv { from: r - 1, tag: it * 2 + 1, bytes: row_bytes });
+                }
+                prog.push(MpiOp::Compute(jacobi_cycles(rows, p.n as u64)));
+            }
+            prog
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::PlatformConfig;
+    use crate::mpi::runner::run_mpi;
+    use crate::platform::Platform;
+
+    #[test]
+    fn myrmics_modeled_completes() {
+        let (reg, main) = myrmics();
+        let p = JacobiParams::modeled(64, 4, 8, 2);
+        let mut plat = Platform::build_with(PlatformConfig::hierarchical(8), reg, main, |w| {
+            w.app = Some(Box::new(p));
+        });
+        plat.run(Some(1 << 44));
+        let w = plat.world();
+        // 1 main + 4 iters * (2 groups + 8 bands)
+        assert_eq!(w.gstats.tasks_spawned, 1 + 4 * (2 + 8));
+        assert_eq!(w.gstats.tasks_completed, w.gstats.tasks_spawned);
+    }
+
+    #[test]
+    fn myrmics_real_data_matches_reference() {
+        let (reg, main) = myrmics();
+        let n = 32;
+        let iters = 3;
+        let p = JacobiParams { n, iters, bands: 4, groups: 2, real_data: true };
+        let mut plat = Platform::build_with(PlatformConfig::flat(4), reg, main, |w| {
+            w.app = Some(Box::new(p));
+        });
+        plat.run(Some(1 << 44));
+        let got = read_result(plat.world());
+        let want = jacobi_reference(n, iters, &jacobi_init(n));
+        assert_eq!(got.len(), want.len());
+        for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+            assert!((g - w).abs() < 1e-5, "cell {i}: got {g}, want {w}");
+        }
+    }
+
+    #[test]
+    fn bands_of_same_iteration_overlap_in_time() {
+        let (reg, main) = myrmics();
+        let p = JacobiParams::modeled(128, 2, 8, 2);
+        let mut plat = Platform::build_with(PlatformConfig::flat(8), reg, main, |w| {
+            w.app = Some(Box::new(p));
+        });
+        plat.run(Some(1 << 44));
+        let w = plat.world();
+        // Find band tasks (func 0) of iteration 0 and check some overlap.
+        let spans: Vec<(u64, u64)> = w
+            .tasks
+            .iter()
+            .filter(|e| e.desc.func == 0)
+            .take(8)
+            .map(|e| (e.started_at, e.done_at))
+            .collect();
+        let overlaps = spans
+            .iter()
+            .enumerate()
+            .any(|(i, a)| spans.iter().skip(i + 1).any(|b| a.0 < b.1 && b.0 < a.1));
+        assert!(overlaps, "bands should run in parallel: {spans:?}");
+    }
+
+    #[test]
+    fn mpi_jacobi_scales() {
+        let p = JacobiParams::modeled(256, 4, 16, 4);
+        let cfg = PlatformConfig::flat(1);
+        let t1 = run_mpi(mpi_programs(&p, 1), &cfg).sim.now;
+        let t8 = run_mpi(mpi_programs(&p, 8), &cfg).sim.now;
+        let speedup = t1 as f64 / t8 as f64;
+        assert!(speedup > 5.0, "MPI jacobi speedup on 8 ranks: {speedup:.2}");
+    }
+}

@@ -1,0 +1,404 @@
+//! K-Means clustering (paper VI-B, Figs 8d/8j): reductions + broadcasts.
+//!
+//! 3D points are grouped into `k` clusters. Each iteration: every band
+//! task assigns its points to the nearest centroid and emits partial sums;
+//! a hierarchical reduction (per-group, then global) recomputes centroids.
+//! "We use two kinds of regions: the objects to be clustered are divided
+//! into a number of regions [and] a few regions hold the temporary buffers
+//! during the reductions at the end of each loop."
+//!
+//! The main task drives iterations with `sys_wait` on the centroid object
+//! — exercising the suspend/resume path of the API.
+
+use crate::api::ctx::TaskCtx;
+use crate::apps::workload::kmeans_assign_cycles;
+use crate::ids::{ObjectId, RegionId};
+use crate::mpi::rank::MpiOp;
+use crate::task::descriptor::TaskArg;
+use crate::task::registry::Registry;
+
+#[derive(Clone, Debug)]
+pub struct KmParams {
+    pub points: usize,
+    pub k: usize,
+    pub iters: usize,
+    /// Assign tasks per iteration (point bands).
+    pub bands: usize,
+    pub groups: usize,
+    pub real_data: bool,
+}
+
+pub struct KmState {
+    pub p: KmParams,
+    /// Point-band objects.
+    pub bands: Vec<ObjectId>,
+    pub band_sizes: Vec<usize>,
+    /// Per-band partial buffers (k * 4 floats: sum xyz + count).
+    pub partials: Vec<ObjectId>,
+    /// Per-group reduced buffers.
+    pub group_partials: Vec<ObjectId>,
+    /// Centroid object (k * 3 floats), rewritten every iteration.
+    pub centroids: ObjectId,
+    /// (group regions, reduction-buffer regions), kept for re-spawning.
+    pub regions: Option<(Vec<RegionId>, Vec<RegionId>)>,
+}
+
+fn band_group(p: &KmParams, b: usize) -> usize {
+    b * p.groups / p.bands
+}
+
+/// Deterministic point cloud: three fuzzy blobs.
+pub fn gen_points(n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = crate::sim::rng::Rng::new(seed);
+    let mut pts = Vec::with_capacity(n * 3);
+    for i in 0..n {
+        let c = (i % 3) as f32 * 10.0;
+        for _ in 0..3 {
+            pts.push(c + rng.f64() as f32);
+        }
+    }
+    pts
+}
+
+/// Sequential reference: one k-means iteration (returns new centroids).
+pub fn kmeans_step_reference(pts: &[f32], centroids: &[f32], k: usize) -> Vec<f32> {
+    let mut sums = vec![0f64; k * 3];
+    let mut counts = vec![0u64; k];
+    for p in pts.chunks_exact(3) {
+        let mut best = 0;
+        let mut best_d = f64::MAX;
+        for c in 0..k {
+            let d: f64 = (0..3)
+                .map(|j| (p[j] as f64 - centroids[c * 3 + j] as f64).powi(2))
+                .sum();
+            if d < best_d {
+                best_d = d;
+                best = c;
+            }
+        }
+        for j in 0..3 {
+            sums[best * 3 + j] += p[j] as f64;
+        }
+        counts[best] += 1;
+    }
+    (0..k * 3)
+        .map(|i| {
+            let c = i / 3;
+            if counts[c] == 0 {
+                centroids[i]
+            } else {
+                (sums[i] / counts[c] as f64) as f32
+            }
+        })
+        .collect()
+}
+
+/// Partial (sums+counts) for one band, used by the real-data task bodies.
+fn assign_partial(pts: &[f32], centroids: &[f32], k: usize) -> Vec<f32> {
+    let mut out = vec![0f32; k * 4];
+    for p in pts.chunks_exact(3) {
+        let mut best = 0;
+        let mut best_d = f32::MAX;
+        for c in 0..k {
+            let d: f32 = (0..3).map(|j| (p[j] - centroids[c * 3 + j]).powi(2)).sum();
+            if d < best_d {
+                best_d = d;
+                best = c;
+            }
+        }
+        for j in 0..3 {
+            out[best * 4 + j] += p[j];
+        }
+        out[best * 4 + 3] += 1.0;
+    }
+    out
+}
+
+fn merge_partials(acc: &mut [f32], part: &[f32]) {
+    for (a, p) in acc.iter_mut().zip(part) {
+        *a += p;
+    }
+}
+
+pub fn myrmics() -> (Registry, usize) {
+    let mut reg = Registry::new();
+
+    // fn 0: assign — in centroids, in band, out partial, val band_idx.
+    let assign = reg.register("km_assign", |ctx: &mut TaskCtx<'_>| {
+        let b = ctx.val_arg(3) as usize;
+        let (npts, k, real) = {
+            let st = ctx.world.app_ref::<KmState>();
+            (st.band_sizes[b], st.p.k, st.p.real_data)
+        };
+        ctx.compute(kmeans_assign_cycles(npts as u64, k as u64));
+        if real {
+            let pts = ctx.read_f32(ctx.obj_arg(1));
+            let cents = ctx.read_f32(ctx.obj_arg(0));
+            // Kernel path when the AOT shape matches, else rust fallback
+            // (results are identical; see python/tests).
+            let mut part: Option<Vec<f32>> = None;
+            if ctx.real_compute()
+                && npts == crate::runtime::shapes::KMEANS_POINTS
+                && k == crate::runtime::shapes::KMEANS_K
+            {
+                let kern = ctx.world.kernels.as_mut().unwrap();
+                if kern.available("kmeans_assign") {
+                    let res = kern
+                        .run_f32("kmeans_assign", &[(&pts, &[npts, 3]), (&cents, &[k, 3])])
+                        .expect("kmeans_assign kernel");
+                    part = Some(res[0].clone());
+                }
+            }
+            let part = part.unwrap_or_else(|| assign_partial(&pts, &cents, k));
+            let o = ctx.obj_arg(2);
+            ctx.write_f32(o, &part);
+        }
+    });
+    debug_assert_eq!(assign, 0);
+
+    // fn 1: group-reduce — in partials of the group's bands, out group buf.
+    reg.register("km_group_reduce", |ctx: &mut TaskCtx<'_>| {
+        let g = ctx.val_arg(0) as usize;
+        let (k, n_in, real) = {
+            let st = ctx.world.app_ref::<KmState>();
+            let n_in = (0..st.p.bands).filter(|&b| band_group(&st.p, b) == g).count();
+            (st.p.k, n_in, st.p.real_data)
+        };
+        ctx.compute((n_in as u64) * (k as u64) * 40);
+        if real {
+            let mut acc = vec![0f32; k * 4];
+            for i in 0..n_in {
+                let part = ctx.read_f32(ctx.obj_arg(2 + i));
+                merge_partials(&mut acc, &part);
+            }
+            let o = ctx.obj_arg(1);
+            ctx.write_f32(o, &acc);
+        }
+    });
+
+    // fn 2: global reduce — in group bufs, inout centroids.
+    reg.register("km_global_reduce", |ctx: &mut TaskCtx<'_>| {
+        let (k, groups, real) = {
+            let st = ctx.world.app_ref::<KmState>();
+            (st.p.k, st.p.groups, st.p.real_data)
+        };
+        ctx.compute((groups as u64) * (k as u64) * 40 + 2_000);
+        if real {
+            let mut acc = vec![0f32; k * 4];
+            for i in 0..groups {
+                let part = ctx.read_f32(ctx.obj_arg(1 + i));
+                merge_partials(&mut acc, &part);
+            }
+            let old = ctx.read_f32(ctx.obj_arg(0));
+            let mut cents = vec![0f32; k * 3];
+            for c in 0..k {
+                let n = acc[c * 4 + 3];
+                for j in 0..3 {
+                    cents[c * 3 + j] =
+                        if n == 0.0 { old[c * 3 + j] } else { acc[c * 4 + j] / n };
+                }
+            }
+            let o = ctx.obj_arg(0);
+            ctx.write_f32(o, &cents);
+        }
+    });
+
+    // fn 3: per-iteration group driver (spawns the group's assign tasks).
+    reg.register("km_group", |ctx: &mut TaskCtx<'_>| {
+        let g = ctx.val_arg(1) as usize;
+        let st = ctx.world.app_ref::<KmState>();
+        let p = st.p.clone();
+        let cent = st.centroids;
+        let plan: Vec<(ObjectId, ObjectId, usize)> = (0..p.bands)
+            .filter(|&b| band_group(&p, b) == g)
+            .map(|b| (st.bands[b], st.partials[b], b))
+            .collect();
+        for (band, partial, b) in plan {
+            ctx.spawn(
+                0,
+                vec![
+                    TaskArg::obj_in(cent),
+                    TaskArg::obj_in(band),
+                    TaskArg::obj_out(partial),
+                    TaskArg::val(b as u64),
+                ],
+            );
+        }
+    });
+
+    // fn 4: main — setup, then per iteration: group drivers, group
+    // reduces, one global reduce; sys_wait on the centroids between
+    // iterations (main re-reads them to drive the next phase).
+    let main = reg.register("km_main", |ctx: &mut TaskCtx<'_>| {
+        let phase = ctx.phase() as usize;
+        if phase == 0 {
+            let p = ctx.world.app_ref::<KmParams>().clone();
+            assert!(p.groups <= p.bands);
+            let mut group_regions = Vec::new();
+            let mut reduce_regions = Vec::new();
+            for _ in 0..p.groups {
+                group_regions.push(ctx.ralloc(RegionId::ROOT, 1));
+                reduce_regions.push(ctx.ralloc(RegionId::ROOT, 1));
+            }
+            let mut bands = Vec::new();
+            let mut partials = Vec::new();
+            let mut band_sizes = Vec::new();
+            for b in 0..p.bands {
+                let g = band_group(&p, b);
+                let n0 = b * p.points / p.bands;
+                let n1 = (b + 1) * p.points / p.bands;
+                band_sizes.push(n1 - n0);
+                let br = ctx.ralloc(group_regions[g], 2);
+                bands.push(ctx.alloc(((n1 - n0) * 12) as u64, br));
+                partials.push(ctx.alloc((p.k * 16) as u64, reduce_regions[g]));
+            }
+            let mut group_partials = Vec::new();
+            for g in 0..p.groups {
+                group_partials.push(ctx.alloc((p.k * 16) as u64, reduce_regions[g]));
+            }
+            let centroids = ctx.alloc((p.k * 12) as u64, RegionId::ROOT);
+            if p.real_data {
+                let pts = gen_points(p.points, 17);
+                for b in 0..p.bands {
+                    let n0 = b * p.points / p.bands;
+                    let n1 = (b + 1) * p.points / p.bands;
+                    ctx.write_f32(bands[b], &pts[n0 * 3..n1 * 3]);
+                }
+                // Initial centroids: first k points.
+                ctx.write_f32(centroids, &pts[..p.k * 3]);
+            }
+            let st = KmState {
+                p: p.clone(),
+                bands,
+                band_sizes,
+                partials,
+                group_partials,
+                centroids,
+                regions: None,
+            };
+            ctx.world.app = Some(Box::new(st));
+            // Stash the region handles for the spawner below.
+            let regions = (group_regions, reduce_regions);
+            spawn_iteration(ctx, &regions);
+            ctx.world.app_mut::<KmState>().regions = Some(regions);
+            let st = ctx.world.app_ref::<KmState>();
+            ctx.wait(&[TaskArg::obj_inout(st.centroids)]);
+            return;
+        }
+        let iters = ctx.world.app_ref::<KmState>().p.iters;
+        if phase < iters {
+            let regions = ctx.world.app_ref::<KmState>().regions.clone().unwrap();
+            spawn_iteration(ctx, &regions);
+            let st = ctx.world.app_ref::<KmState>();
+            ctx.wait(&[TaskArg::obj_inout(st.centroids)]);
+        }
+    });
+    (reg, main)
+}
+
+type Regions = (Vec<RegionId>, Vec<RegionId>);
+
+fn spawn_iteration(ctx: &mut TaskCtx<'_>, regions: &Regions) {
+    let (group_regions, reduce_regions) = regions;
+    let (p, centroids, partials, group_partials) = {
+        let st = ctx.world.app_ref::<KmState>();
+        (st.p.clone(), st.centroids, st.partials.clone(), st.group_partials.clone())
+    };
+    // Group drivers spawn the assign tasks near their data.
+    for g in 0..p.groups {
+        ctx.spawn(
+            3,
+            vec![
+                TaskArg::region_inout(group_regions[g]).notransfer(),
+                TaskArg::val(g as u64),
+                TaskArg::obj_in(centroids).notransfer(),
+                TaskArg::region_inout(reduce_regions[g]).notransfer(),
+            ],
+        );
+    }
+    // Per-group reductions.
+    for g in 0..p.groups {
+        let mut args = vec![TaskArg::val(g as u64), TaskArg::obj_out(group_partials[g])];
+        for b in 0..p.bands {
+            if band_group(&p, b) == g {
+                args.push(TaskArg::obj_in(partials[b]));
+            }
+        }
+        ctx.spawn(1, args);
+    }
+    // Global reduction into the centroids.
+    let mut args = vec![TaskArg::obj_inout(centroids)];
+    for g in 0..p.groups {
+        args.push(TaskArg::obj_in(group_partials[g]));
+    }
+    ctx.spawn(2, args);
+}
+
+/// MPI baseline: assign + allreduce of (sums, counts) per iteration.
+pub fn mpi_programs(p: &KmParams, ranks: usize) -> Vec<Vec<MpiOp>> {
+    (0..ranks)
+        .map(|r| {
+            let npts = ((r + 1) * p.points / ranks - r * p.points / ranks) as u64;
+            let mut prog = Vec::new();
+            for _ in 0..p.iters {
+                prog.push(MpiOp::Compute(kmeans_assign_cycles(npts, p.k as u64)));
+                prog.push(MpiOp::Allreduce { bytes: (p.k * 16) as u64 });
+            }
+            prog
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::PlatformConfig;
+    use crate::platform::Platform;
+
+    fn params(real: bool) -> KmParams {
+        KmParams { points: 600, k: 4, iters: 3, bands: 6, groups: 2, real_data: real }
+    }
+
+    #[test]
+    fn completes_with_wait_phases() {
+        let (reg, main) = myrmics();
+        let mut plat = Platform::build_with(PlatformConfig::hierarchical(8), reg, main, |w| {
+            w.app = Some(Box::new(params(false)));
+        });
+        plat.run(Some(1 << 44));
+        let w = plat.world();
+        // main + iters * (groups drivers + bands assigns + groups reduces + 1 global)
+        let expect = 1 + 3 * (2 + 6 + 2 + 1);
+        assert_eq!(w.gstats.tasks_spawned, expect as u64);
+        assert_eq!(w.gstats.tasks_completed, w.gstats.tasks_spawned);
+    }
+
+    #[test]
+    fn real_data_matches_sequential_reference() {
+        let (reg, main) = myrmics();
+        let p = params(true);
+        let mut plat = Platform::build_with(PlatformConfig::flat(4), reg, main, |w| {
+            w.app = Some(Box::new(p.clone()));
+        });
+        plat.run(Some(1 << 44));
+        let st = plat.world().app_ref::<KmState>();
+        let got = plat.world().store.get_f32(st.centroids).unwrap();
+        // Reference: run the same iterations sequentially.
+        let pts = gen_points(p.points, 17);
+        let mut want = pts[..p.k * 3].to_vec();
+        for _ in 0..p.iters {
+            want = kmeans_step_reference(&pts, &want, p.k);
+        }
+        for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+            assert!((g - w).abs() < 1e-3, "centroid {i}: got {g}, want {w}");
+        }
+    }
+
+    #[test]
+    fn mpi_kmeans_runs() {
+        let p = params(false);
+        let t1 = crate::mpi::runner::mpi_time(mpi_programs(&p, 1), &PlatformConfig::flat(1));
+        let t4 = crate::mpi::runner::mpi_time(mpi_programs(&p, 4), &PlatformConfig::flat(1));
+        assert!(t1 > t4);
+    }
+}

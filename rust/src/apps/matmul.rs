@@ -1,0 +1,313 @@
+//! Dense matrix multiplication (paper VI-B, Figs 8e/8k): SUMMA-style
+//! phases with communication bursts.
+//!
+//! `n x n` matrices on a `p x p` block grid (the paper notes the algorithm
+//! "depends on the number of cores being a power of 4", i.e. square
+//! grids). In phase `k`, every task `(i, j)` accumulates `A[i][k] *
+//! B[k][j]` into `C[i][j]` — so each `A[i][k]` / `B[k][j]` block is read
+//! by a whole row/column of tasks at once: the "communication bursts" and
+//! temporary hot spots the paper describes.
+//!
+//! **Regions**: per grid-row regions `R_i` (A and C blocks) and `T_k`
+//! (B row blocks); a per-(row, phase) group task holds `R_i` inout and
+//! `T_k` in (both NOTRANSFER) and spawns the row's block tasks.
+
+use crate::api::ctx::TaskCtx;
+use crate::apps::workload::matmul_cycles;
+use crate::ids::{ObjectId, RegionId};
+use crate::mpi::rank::MpiOp;
+use crate::task::descriptor::TaskArg;
+use crate::task::registry::Registry;
+
+#[derive(Clone, Debug)]
+pub struct MatmulParams {
+    /// Matrix dimension; `p` must divide `n`.
+    pub n: usize,
+    /// Grid dimension (p x p blocks; p*p tasks per phase).
+    pub p: usize,
+    pub real_data: bool,
+}
+
+pub struct MmState {
+    pub p: MatmulParams,
+    /// Block objects, indexed [i][j].
+    pub a: Vec<Vec<ObjectId>>,
+    pub b: Vec<Vec<ObjectId>>,
+    pub c: Vec<Vec<ObjectId>>,
+    pub row_regions: Vec<RegionId>,
+    pub brow_regions: Vec<RegionId>,
+}
+
+/// Deterministic test matrices.
+pub fn gen_matrix(n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = crate::sim::rng::Rng::new(seed);
+    (0..n * n).map(|_| (rng.f64() as f32) - 0.5).collect()
+}
+
+pub fn matmul_reference(a: &[f32], b: &[f32], n: usize) -> Vec<f32> {
+    let mut c = vec![0f32; n * n];
+    for i in 0..n {
+        for k in 0..n {
+            let aik = a[i * n + k];
+            for j in 0..n {
+                c[i * n + j] += aik * b[k * n + j];
+            }
+        }
+    }
+    c
+}
+
+fn block_of(m: &[f32], n: usize, s: usize, bi: usize, bj: usize) -> Vec<f32> {
+    let mut out = Vec::with_capacity(s * s);
+    for r in 0..s {
+        let base = (bi * s + r) * n + bj * s;
+        out.extend_from_slice(&m[base..base + s]);
+    }
+    out
+}
+
+pub fn myrmics() -> (Registry, usize) {
+    let mut reg = Registry::new();
+
+    // fn 0: block task — inout C_ij, in A_ik, in B_kj, val s.
+    reg.register("mm_block", |ctx: &mut TaskCtx<'_>| {
+        let s = ctx.val_arg(3) as usize;
+        let real = ctx.world.app_ref::<MmState>().p.real_data;
+        ctx.compute(matmul_cycles(s as u64, s as u64, s as u64));
+        if real {
+            let a = ctx.read_f32(ctx.obj_arg(1));
+            let b = ctx.read_f32(ctx.obj_arg(2));
+            let oc = ctx.obj_arg(0);
+            let mut c = ctx.read_f32(oc);
+            let mut done = false;
+            if ctx.real_compute() && (s, s, s) == crate::runtime::shapes::MATMUL_TILE {
+                let kern = ctx.world.kernels.as_mut().unwrap();
+                if kern.available("matmul_tile") {
+                    let res = kern
+                        .run_f32(
+                            "matmul_tile",
+                            &[(&a, &[s, s]), (&b, &[s, s]), (&c, &[s, s])],
+                        )
+                        .expect("matmul_tile kernel");
+                    c.copy_from_slice(&res[0]);
+                    done = true;
+                }
+            }
+            if !done {
+                for i in 0..s {
+                    for k in 0..s {
+                        let aik = a[i * s + k];
+                        for j in 0..s {
+                            c[i * s + j] += aik * b[k * s + j];
+                        }
+                    }
+                }
+            }
+            ctx.write_f32(oc, &c);
+        }
+    });
+
+    // fn 1: per-(row, phase) driver.
+    reg.register("mm_row_phase", |ctx: &mut TaskCtx<'_>| {
+        let i = ctx.val_arg(2) as usize;
+        let k = ctx.val_arg(3) as usize;
+        let st = ctx.world.app_ref::<MmState>();
+        let p = st.p.p;
+        let s = (st.p.n / p) as u64;
+        let plan: Vec<(ObjectId, ObjectId, ObjectId)> =
+            (0..p).map(|j| (st.c[i][j], st.a[i][k], st.b[k][j])).collect();
+        for (c, a, b) in plan {
+            ctx.spawn(
+                0,
+                vec![
+                    TaskArg::obj_inout(c),
+                    TaskArg::obj_in(a),
+                    TaskArg::obj_in(b),
+                    TaskArg::val(s),
+                ],
+            );
+        }
+    });
+
+    // fn 2: main.
+    let main = reg.register("mm_main", |ctx: &mut TaskCtx<'_>| {
+        let prm = ctx.world.app_ref::<MatmulParams>().clone();
+        let p = prm.p;
+        assert_eq!(prm.n % p, 0);
+        let s = prm.n / p;
+        let blk_bytes = (s * s * 4) as u64;
+        let mut row_regions = Vec::new();
+        let mut brow_regions = Vec::new();
+        for _ in 0..p {
+            row_regions.push(ctx.ralloc(RegionId::ROOT, 1));
+            brow_regions.push(ctx.ralloc(RegionId::ROOT, 1));
+        }
+        let mut a = vec![Vec::new(); p];
+        let mut b = vec![Vec::new(); p];
+        let mut c = vec![Vec::new(); p];
+        for i in 0..p {
+            for _j in 0..p {
+                a[i].push(ctx.alloc(blk_bytes, row_regions[i]));
+                c[i].push(ctx.alloc(blk_bytes, row_regions[i]));
+                b[i].push(ctx.alloc(blk_bytes, brow_regions[i]));
+            }
+        }
+        if prm.real_data {
+            let am = gen_matrix(prm.n, 5);
+            let bm = gen_matrix(prm.n, 6);
+            for i in 0..p {
+                for j in 0..p {
+                    ctx.write_f32(a[i][j], &block_of(&am, prm.n, s, i, j));
+                    ctx.write_f32(b[i][j], &block_of(&bm, prm.n, s, i, j));
+                    ctx.write_f32(c[i][j], &vec![0f32; s * s]);
+                }
+            }
+        }
+        ctx.world.app = Some(Box::new(MmState {
+            p: prm.clone(),
+            a,
+            b,
+            c,
+            row_regions: row_regions.clone(),
+            brow_regions: brow_regions.clone(),
+        }));
+        for k in 0..p {
+            for i in 0..p {
+                ctx.spawn(
+                    1,
+                    vec![
+                        TaskArg::region_inout(row_regions[i]).notransfer(),
+                        TaskArg::region_in(brow_regions[k]).notransfer(),
+                        TaskArg::val(i as u64),
+                        TaskArg::val(k as u64),
+                    ],
+                );
+            }
+        }
+    });
+    (reg, main)
+}
+
+/// Read back the result matrix from a finished real-data run.
+pub fn read_result(world: &crate::platform::World) -> Vec<f32> {
+    let st = world.app_ref::<MmState>();
+    let p = st.p.p;
+    let n = st.p.n;
+    let s = n / p;
+    let mut out = vec![0f32; n * n];
+    for i in 0..p {
+        for j in 0..p {
+            let blk = world.store.get_f32(st.c[i][j]).unwrap();
+            for r in 0..s {
+                let base = (i * s + r) * n + j * s;
+                out[base..base + s].copy_from_slice(&blk[r * s..(r + 1) * s]);
+            }
+        }
+    }
+    out
+}
+
+/// MPI baseline (SUMMA): per phase, the A/B block owners send to their
+/// row/column peers; everyone computes the partial product.
+pub fn mpi_programs(prm: &MatmulParams, ranks: usize) -> Vec<Vec<MpiOp>> {
+    let p = (ranks as f64).sqrt().round() as usize;
+    assert_eq!(p * p, ranks, "matmul needs a square (power-of-4) rank count");
+    let s = (prm.n / p) as u64;
+    let blk_bytes = s * s * 4;
+    let rank_of = |i: usize, j: usize| i * p + j;
+    (0..ranks)
+        .map(|r| {
+            let (i, j) = (r / p, r % p);
+            let mut prog = Vec::new();
+            for k in 0..p {
+                // A[i][k] broadcast along row i.
+                if j == k {
+                    for jj in 0..p {
+                        if jj != j {
+                            prog.push(MpiOp::Send {
+                                to: rank_of(i, jj),
+                                tag: (2 * k) as u64,
+                                bytes: blk_bytes,
+                            });
+                        }
+                    }
+                } else {
+                    prog.push(MpiOp::Recv {
+                        from: rank_of(i, k),
+                        tag: (2 * k) as u64,
+                        bytes: blk_bytes,
+                    });
+                }
+                // B[k][j] broadcast along column j.
+                if i == k {
+                    for ii in 0..p {
+                        if ii != i {
+                            prog.push(MpiOp::Send {
+                                to: rank_of(ii, j),
+                                tag: (2 * k + 1) as u64,
+                                bytes: blk_bytes,
+                            });
+                        }
+                    }
+                } else {
+                    prog.push(MpiOp::Recv {
+                        from: rank_of(k, j),
+                        tag: (2 * k + 1) as u64,
+                        bytes: blk_bytes,
+                    });
+                }
+                prog.push(MpiOp::Compute(matmul_cycles(s, s, s)));
+            }
+            prog
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::PlatformConfig;
+    use crate::platform::Platform;
+
+    #[test]
+    fn real_matmul_matches_reference() {
+        let (reg, main) = myrmics();
+        let prm = MatmulParams { n: 32, p: 4, real_data: true };
+        let mut plat = Platform::build_with(PlatformConfig::hierarchical(8), reg, main, |w| {
+            w.app = Some(Box::new(prm.clone()));
+        });
+        plat.run(Some(1 << 44));
+        let w = plat.world();
+        assert_eq!(w.gstats.tasks_completed, w.gstats.tasks_spawned);
+        // main + p*p drivers + p^3 block tasks
+        assert_eq!(w.gstats.tasks_spawned as usize, 1 + 16 + 64);
+        let got = read_result(w);
+        let want = matmul_reference(&gen_matrix(32, 5), &gen_matrix(32, 6), 32);
+        for (i, (g, wv)) in got.iter().zip(&want).enumerate() {
+            assert!((g - wv).abs() < 1e-3, "cell {i}: got {g} want {wv}");
+        }
+    }
+
+    #[test]
+    fn phases_serialize_per_c_block() {
+        // C[i][j] is inout in every phase: the p tasks touching it must
+        // not overlap.
+        let (reg, main) = myrmics();
+        let prm = MatmulParams { n: 64, p: 2, real_data: false };
+        let mut plat = Platform::build_with(PlatformConfig::flat(4), reg, main, |w| {
+            w.app = Some(Box::new(prm));
+        });
+        plat.run(Some(1 << 44));
+        let w = plat.world();
+        assert_eq!(w.gstats.tasks_completed, w.gstats.tasks_spawned);
+    }
+
+    #[test]
+    fn mpi_matmul_square_grid() {
+        let prm = MatmulParams { n: 128, p: 4, real_data: false };
+        let cfg = PlatformConfig::flat(1);
+        let t4 = crate::mpi::runner::mpi_time(mpi_programs(&prm, 4), &cfg);
+        let t16 = crate::mpi::runner::mpi_time(mpi_programs(&prm, 16), &cfg);
+        assert!(t4 > t16, "t4={t4} t16={t16}");
+    }
+}

@@ -1,0 +1,12 @@
+//! Benchmark applications (paper VI): the six kernels/applications in
+//! both Myrmics (region-decomposed, hierarchical tasks) and MPI
+//! (hand-tuned message passing) variants, plus the synthetic
+//! microbenchmarks, over shared compute-cost models.
+pub mod barnes_hut;
+pub mod bitonic;
+pub mod jacobi;
+pub mod kmeans;
+pub mod matmul;
+pub mod raytrace;
+pub mod synthetic;
+pub mod workload;

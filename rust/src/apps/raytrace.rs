@@ -1,0 +1,185 @@
+//! Raytracing (paper VI-B, Figs 8b/8h): embarrassingly parallel.
+//!
+//! "A description of a scene geometry is made available to all workers.
+//! Each worker renders a part of a picture frame ... We use regions to
+//! split the frame into groups of pixel lines." Per-line cost varies with
+//! the scene profile (`workload::raytrace_line_cycles`), which is why
+//! workers are not fully busy at low core counts (paper VI-C).
+
+use crate::api::ctx::TaskCtx;
+use crate::apps::workload::raytrace_line_cycles;
+use crate::ids::{ObjectId, RegionId};
+use crate::mpi::rank::MpiOp;
+use crate::task::descriptor::TaskArg;
+use crate::task::registry::Registry;
+
+#[derive(Clone, Debug)]
+pub struct RayParams {
+    pub width: usize,
+    pub height: usize,
+    /// Render tasks (chunks of lines).
+    pub tasks: usize,
+    pub groups: usize,
+    /// Scene description size in bytes (broadcast/read by everyone).
+    pub scene_bytes: u64,
+}
+
+pub struct RayState {
+    pub p: RayParams,
+    pub scene: ObjectId,
+    pub chunks: Vec<ObjectId>,
+}
+
+/// Total modeled cycles to render lines `[l0, l1)`.
+pub fn chunk_cycles(p: &RayParams, l0: usize, l1: usize) -> u64 {
+    (l0..l1)
+        .map(|l| raytrace_line_cycles(l as u64, p.width as u64, p.height as u64))
+        .sum()
+}
+
+pub fn myrmics() -> (Registry, usize) {
+    let mut reg = Registry::new();
+
+    let render = reg.register("ray_render", |ctx: &mut TaskCtx<'_>| {
+        let c = ctx.val_arg(2) as usize;
+        let p = ctx.world.app_ref::<RayState>().p.clone();
+        let l0 = c * p.height / p.tasks;
+        let l1 = (c + 1) * p.height / p.tasks;
+        ctx.compute(chunk_cycles(&p, l0, l1));
+    });
+    debug_assert_eq!(render, 0);
+
+    let _group = reg.register("ray_group", move |ctx: &mut TaskCtx<'_>| {
+        let g = ctx.val_arg(1) as usize;
+        let (tasks, groups, scene, chunks) = {
+            let st = ctx.world.app_ref::<RayState>();
+            (st.p.tasks, st.p.groups, st.scene, st.chunks.clone())
+        };
+        for c in 0..tasks {
+            if c * groups / tasks == g {
+                ctx.spawn(
+                    0,
+                    vec![
+                        TaskArg::obj_in(scene),
+                        TaskArg::obj_out(chunks[c]),
+                        TaskArg::val(c as u64),
+                    ],
+                );
+            }
+        }
+    });
+
+    let main = reg.register("ray_main", move |ctx: &mut TaskCtx<'_>| {
+        let p = ctx.world.app_ref::<RayParams>().clone();
+        assert!(p.groups <= p.tasks);
+        // Scene lives in the root region; one frame-chunk object per task,
+        // packed into per-group regions of pixel lines.
+        let scene = ctx.alloc(p.scene_bytes, RegionId::ROOT);
+        let mut chunks = Vec::with_capacity(p.tasks);
+        let mut group_regions = Vec::with_capacity(p.groups);
+        for _ in 0..p.groups {
+            group_regions.push(ctx.ralloc(RegionId::ROOT, 1));
+        }
+        for c in 0..p.tasks {
+            let g = c * p.groups / p.tasks;
+            let lines = (c + 1) * p.height / p.tasks - c * p.height / p.tasks;
+            chunks.push(ctx.alloc((lines * p.width * 4) as u64, group_regions[g]));
+        }
+        ctx.world.app = Some(Box::new(RayState { p: p.clone(), scene, chunks }));
+        for g in 0..p.groups {
+            let st = ctx.world.app_ref::<RayState>();
+            let _ = st;
+            ctx.spawn(
+                1,
+                vec![
+                    TaskArg::region_inout(group_regions[g]).notransfer(),
+                    TaskArg::val(g as u64),
+                    TaskArg::obj_in(scene).notransfer(),
+                ],
+            );
+        }
+    });
+    (reg, main)
+}
+
+/// MPI baseline: broadcast the scene, render, gather to rank 0. Lines are
+/// assigned round-robin (hand-tuned static balance against the scene's
+/// per-line cost profile).
+pub fn mpi_programs(p: &RayParams, ranks: usize) -> Vec<Vec<MpiOp>> {
+    (0..ranks)
+        .map(|r| {
+            let lines: Vec<usize> = (r..p.height).step_by(ranks).collect();
+            let line_bytes = (lines.len() * p.width * 4) as u64;
+            let cycles: u64 = lines
+                .iter()
+                .map(|&l| {
+                    crate::apps::workload::raytrace_line_cycles(
+                        l as u64,
+                        p.width as u64,
+                        p.height as u64,
+                    )
+                })
+                .sum();
+            let mut prog = vec![
+                MpiOp::Bcast { root: 0, bytes: p.scene_bytes },
+                MpiOp::Compute(cycles),
+            ];
+            if r == 0 {
+                for src in 1..ranks {
+                    prog.push(MpiOp::Recv { from: src, tag: 1, bytes: line_bytes });
+                }
+            } else {
+                prog.push(MpiOp::Send { to: 0, tag: 1, bytes: line_bytes });
+            }
+            prog
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::PlatformConfig;
+    use crate::mpi::runner::mpi_time;
+    use crate::platform::Platform;
+
+    fn params() -> RayParams {
+        RayParams { width: 256, height: 64, tasks: 16, groups: 4, scene_bytes: 8192 }
+    }
+
+    #[test]
+    fn myrmics_completes_and_scales() {
+        let run = |workers| {
+            let (reg, main) = myrmics();
+            let mut plat =
+                Platform::build_with(PlatformConfig::hierarchical(workers), reg, main, |w| {
+                    w.app = Some(Box::new(params()));
+                });
+            let t = plat.run(Some(1 << 44));
+            assert_eq!(plat.world().gstats.tasks_completed, 1 + 4 + 16);
+            t
+        };
+        let t1 = run(1);
+        let t8 = run(8);
+        assert!(t1 as f64 / t8 as f64 > 3.0, "speedup {:.2}", t1 as f64 / t8 as f64);
+    }
+
+    #[test]
+    fn mpi_scales_nearly_perfectly() {
+        let p = params();
+        let t1 = mpi_time(mpi_programs(&p, 1), &PlatformConfig::flat(1));
+        let t8 = mpi_time(mpi_programs(&p, 8), &PlatformConfig::flat(1));
+        let s = t1 as f64 / t8 as f64;
+        assert!(s > 5.0, "mpi speedup {s:.2}");
+    }
+
+    #[test]
+    fn line_cost_variation_creates_imbalance() {
+        // With per-line cost variation, equal line counts != equal work
+        // (the effect the paper reports for low core counts).
+        let p = params();
+        let a = chunk_cycles(&p, 0, 8);
+        let b = chunk_cycles(&p, 28, 36);
+        assert!((b as f64 / a as f64) > 1.1);
+    }
+}

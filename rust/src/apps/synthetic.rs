@@ -1,0 +1,232 @@
+//! Synthetic microbenchmarks (paper VI-A and VI-E).
+//!
+//! * [`empty_chain`] — Fig 7a: spawn N empty tasks on one shared object,
+//!   measuring intrinsic per-task spawn/execute overhead.
+//! * [`independent`] — Fig 7b / Fig 12a: one master spawns N independent
+//!   tasks of a given size; the single scheduler is the bottleneck.
+//! * [`hier_empty`] — Fig 12b: a hierarchy of small regions with empty
+//!   tasks, saturating the schedulers so deeper hierarchies pay off.
+
+use crate::api::ctx::TaskCtx;
+use crate::ids::RegionId;
+use crate::task::descriptor::TaskArg;
+use crate::task::registry::Registry;
+
+/// Parameters read by the synthetic task bodies (installed as app state).
+pub struct SynthParams {
+    pub n_tasks: usize,
+    pub task_cycles: u64,
+    /// `hier_empty`: regions (domains) and tasks per domain.
+    pub domains: usize,
+    pub per_domain: usize,
+    /// Level hint for domain regions.
+    pub domain_level: i32,
+}
+
+impl Default for SynthParams {
+    fn default() -> Self {
+        SynthParams { n_tasks: 0, task_cycles: 0, domains: 0, per_domain: 0, domain_level: 1 }
+    }
+}
+
+/// Fig 7a: main spawns `n_tasks` empty tasks, all `inout` on the same
+/// object, from one worker through one scheduler. Returns (registry,
+/// main_fn).
+pub fn empty_chain() -> (Registry, usize) {
+    let mut reg = Registry::new();
+    let empty = reg.register("empty", |_ctx: &mut TaskCtx<'_>| {});
+    let main = reg.register("main", move |ctx: &mut TaskCtx<'_>| {
+        let n = ctx.world.app_ref::<SynthParams>().n_tasks;
+        let o = ctx.alloc(64, RegionId::ROOT);
+        for _ in 0..n {
+            ctx.spawn(empty, vec![TaskArg::obj_inout(o)]);
+        }
+    });
+    (reg, main)
+}
+
+/// Fig 7b / 12a: main spawns `n_tasks` tasks, each on its own object,
+/// each computing `task_cycles`.
+pub fn independent() -> (Registry, usize) {
+    let mut reg = Registry::new();
+    let work = reg.register("work", |ctx: &mut TaskCtx<'_>| {
+        let cycles = ctx.val_arg(1);
+        ctx.compute(cycles);
+    });
+    let main = reg.register("main", move |ctx: &mut TaskCtx<'_>| {
+        let p = ctx.world.app_ref::<SynthParams>();
+        let (n, cycles) = (p.n_tasks, p.task_cycles);
+        let objs = ctx.balloc(64, RegionId::ROOT, n);
+        for o in objs {
+            ctx.spawn(work, vec![TaskArg::obj_inout(o), TaskArg::val(cycles)]);
+        }
+    });
+    (reg, main)
+}
+
+/// Fig 12b: a *hierarchy* of small regions mirroring the scheduler tree
+/// ("creates a hierarchy of small regions and spawns empty tasks"): main
+/// creates one mid-region per ~6 domains and spawns a mid task per
+/// region; each mid task creates `~6` domain subregions and spawns domain
+/// tasks; each domain task bulk-allocates `per_domain` objects and spawns
+/// an empty task per object. The fan-out parallelizes spawning and the
+/// nested regions distribute the dependency metadata across scheduler
+/// levels — which is what deeper hierarchies exploit.
+pub fn hier_empty() -> (Registry, usize) {
+    let mut reg = Registry::new();
+    let empty = reg.register("empty", |ctx: &mut TaskCtx<'_>| {
+        let cycles = ctx.world.app_ref::<SynthParams>().task_cycles;
+        ctx.compute(cycles);
+    });
+    let domain = reg.register("domain", move |ctx: &mut TaskCtx<'_>| {
+        let r = ctx.region_arg(0);
+        let k = ctx.val_arg(1) as usize;
+        let objs = ctx.balloc(64, r, k);
+        for o in objs {
+            ctx.spawn(empty, vec![TaskArg::obj_inout(o)]);
+        }
+    });
+    let mid = reg.register("mid", move |ctx: &mut TaskCtx<'_>| {
+        let g = ctx.region_arg(0);
+        let n_domains = ctx.val_arg(1) as usize;
+        let (k, lvl) = {
+            let p = ctx.world.app_ref::<SynthParams>();
+            (p.per_domain, p.domain_level)
+        };
+        for _ in 0..n_domains {
+            let r = ctx.ralloc(g, lvl);
+            // The domain task only spawns subtasks: NOTRANSFER saves the
+            // region DMA (paper V-A's stated use case).
+            ctx.spawn(
+                domain,
+                vec![TaskArg::region_inout(r).notransfer(), TaskArg::val(k as u64)],
+            );
+        }
+    });
+    let main = reg.register("main", move |ctx: &mut TaskCtx<'_>| {
+        let p = ctx.world.app_ref::<SynthParams>();
+        let d = p.domains;
+        let mids = d.div_ceil(6).max(1);
+        for m in 0..mids {
+            let n_domains = (m + 1) * d / mids - m * d / mids;
+            if n_domains == 0 {
+                continue;
+            }
+            let g = ctx.ralloc(RegionId::ROOT, 1);
+            ctx.spawn(
+                mid,
+                vec![TaskArg::region_inout(g).notransfer(), TaskArg::val(n_domains as u64)],
+            );
+        }
+    });
+    (reg, main)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::PlatformConfig;
+    use crate::platform::Platform;
+    use crate::task::table::TaskState;
+
+    #[test]
+    fn empty_chain_runs_to_completion() {
+        let (reg, main) = empty_chain();
+        let mut p = Platform::build_with(PlatformConfig::flat(1), reg, main, |w| {
+            w.app = Some(Box::new(SynthParams { n_tasks: 20, ..Default::default() }));
+        });
+        let t = p.run(Some(1 << 40));
+        let w = p.world();
+        assert_eq!(w.gstats.tasks_spawned, 21, "main + 20 children");
+        assert_eq!(w.gstats.tasks_completed, 21);
+        assert!(w.tasks.iter().all(|e| e.state == TaskState::Done));
+        assert!(t > 0);
+    }
+
+    #[test]
+    fn empty_chain_serializes_on_the_object() {
+        let (reg, main) = empty_chain();
+        let mut p = Platform::build_with(PlatformConfig::flat(4), reg, main, |w| {
+            w.app = Some(Box::new(SynthParams { n_tasks: 10, ..Default::default() }));
+        });
+        p.run(Some(1 << 40));
+        // inout on one object: executions must not overlap.
+        let mut spans: Vec<(u64, u64)> = p
+            .world()
+            .tasks
+            .iter()
+            .skip(1)
+            .map(|e| (e.started_at, e.done_at))
+            .collect();
+        spans.sort_unstable();
+        for w in spans.windows(2) {
+            assert!(w[0].1 <= w[1].0, "serialized tasks overlap: {w:?}");
+        }
+    }
+
+    #[test]
+    fn independent_tasks_parallelize() {
+        let run = |workers: usize| {
+            let (reg, main) = independent();
+            let mut p = Platform::build_with(PlatformConfig::flat(workers), reg, main, |w| {
+                w.app = Some(Box::new(SynthParams {
+                    n_tasks: 32,
+                    task_cycles: 2_000_000,
+                    ..Default::default()
+                }));
+            });
+            p.run(Some(1 << 42))
+        };
+        let t1 = run(1);
+        let t8 = run(8);
+        let speedup = t1 as f64 / t8 as f64;
+        assert!(speedup > 4.0, "8 workers should speed up ~32 independent tasks: {speedup:.2}x");
+    }
+
+    /// Locks the Fig 7a cost-model calibration: heterogeneous spawn
+    /// ~16.2 K cycles, execute ~13.3 K; MicroBlaze-only spawn ~37.4 K.
+    #[test]
+    fn fig7a_calibration_within_ten_percent() {
+        let measure = |hetero: bool| {
+            let (reg, main) = empty_chain();
+            let mut cfg = PlatformConfig::flat(1);
+            cfg.hetero = hetero;
+            let n = 500usize;
+            let mut p = Platform::build_with(cfg, reg, main, |w| {
+                w.app = Some(Box::new(SynthParams { n_tasks: n, ..Default::default() }));
+            });
+            let end = p.run(Some(1 << 44));
+            let main_e = p.world().tasks.get(crate::ids::TaskId(0));
+            let spawn = (main_e.done_at - main_e.started_at) as f64 / n as f64;
+            let exec = (end - main_e.done_at) as f64 / n as f64;
+            (spawn, exec)
+        };
+        let (spawn_h, exec_h) = measure(true);
+        let (spawn_mb, _) = measure(false);
+        assert!((spawn_h - 16_200.0).abs() / 16_200.0 < 0.10, "hetero spawn {spawn_h}");
+        assert!((exec_h - 13_300.0).abs() / 13_300.0 < 0.10, "hetero exec {exec_h}");
+        assert!((spawn_mb - 37_400.0).abs() / 37_400.0 < 0.10, "mb spawn {spawn_mb}");
+    }
+
+    #[test]
+    fn hier_empty_completes_on_two_levels() {
+        let (reg, main) = hier_empty();
+        let mut p = Platform::build_with(PlatformConfig::hierarchical(32), reg, main, |w| {
+            w.app = Some(Box::new(SynthParams {
+                domains: 4,
+                per_domain: 8,
+                domain_level: 1,
+                task_cycles: 0,
+                ..Default::default()
+            }));
+        });
+        p.run(Some(1 << 42));
+        let w = p.world();
+        // main + 1 mid + 4 domains + 32 empties
+        assert_eq!(w.gstats.tasks_spawned, 1 + 1 + 4 + 32);
+        assert_eq!(w.gstats.tasks_completed, w.gstats.tasks_spawned);
+        // Delegation must have pushed domain tasks to leaf schedulers.
+        let delegated = w.tasks.iter().filter(|e| e.resp != 0).count();
+        assert!(delegated > 0, "no tasks were delegated to leaf schedulers");
+    }
+}

@@ -1,0 +1,201 @@
+//! Dependency-forest state and path/anchor computations (paper V-D).
+
+use crate::fxmap::FxHashMap;
+use crate::ids::NodeId;
+use crate::memory::region::Memory;
+use crate::task::descriptor::{Access, TaskArg};
+
+use super::node::DepNode;
+
+/// All live dependency nodes, keyed by node id. Each node is *owned* by
+/// one scheduler (`DepNode::owner`); scheduler logic only mutates nodes it
+/// owns — cross-owner steps travel as NoC messages.
+#[derive(Default)]
+pub struct DepState {
+    nodes: FxHashMap<NodeId, DepNode>,
+}
+
+impl DepState {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn get(&self, id: NodeId) -> Option<&DepNode> {
+        self.nodes.get(&id)
+    }
+
+    pub fn get_mut(&mut self, id: NodeId) -> Option<&mut DepNode> {
+        self.nodes.get_mut(&id)
+    }
+
+    pub fn contains(&self, id: NodeId) -> bool {
+        self.nodes.contains_key(&id)
+    }
+
+    /// Get or lazily create the node, deriving parent/owner from the
+    /// memory metadata (both are frozen into the node so teardown works
+    /// after the region is freed).
+    pub fn node_mut(&mut self, id: NodeId, mem: &Memory) -> &mut DepNode {
+        self.nodes.entry(id).or_insert_with(|| {
+            let parent = mem.parent_of(id);
+            let owner = mem.owner(id);
+            DepNode::new(id, parent, owner)
+        })
+    }
+
+    pub fn remove(&mut self, id: NodeId) -> Option<DepNode> {
+        self.nodes.remove(&id)
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    /// Mark a node dying (region freed while draining) or remove it
+    /// immediately if it is already idle.
+    pub fn retire(&mut self, id: NodeId) {
+        let remove = match self.nodes.get_mut(&id) {
+            None => false,
+            Some(n) => {
+                if n.queue.is_empty() && n.cr == 0 && n.cw == 0 && n.waiters.is_empty() {
+                    true
+                } else {
+                    n.dying = true;
+                    false
+                }
+            }
+        };
+        if remove {
+            self.nodes.remove(&id);
+        }
+    }
+}
+
+/// Find the *anchor* for a child task argument: the parent task's argument
+/// node that is an ancestor-or-self of `target` (nearest one wins). The
+/// programming model guarantees child footprints are subsets of the
+/// parent's (paper [6]); `None` here means the application violated that.
+pub fn find_anchor(
+    parent_args: &[TaskArg],
+    mem: &Memory,
+    target: NodeId,
+    mode: Access,
+) -> Option<NodeId> {
+    let mut cur = Some(target);
+    while let Some(n) = cur {
+        for a in parent_args {
+            if a.is_safe() {
+                continue;
+            }
+            if a.node == Some(n) {
+                // The parent must hold at least the access the child wants.
+                if mode == Access::Write && a.access() == Access::Read {
+                    return None;
+                }
+                return Some(n);
+            }
+        }
+        cur = mem.parent_of(n);
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::HierarchySpec;
+    use crate::ids::{RegionId, TaskId};
+    use crate::sched::hierarchy::HierarchyMap;
+
+    fn setup() -> (Memory, HierarchyMap) {
+        let h = HierarchyMap::build(8, &HierarchySpec::flat());
+        (Memory::new(1), h)
+    }
+
+    #[test]
+    fn anchor_is_nearest_parent_arg() {
+        let (mut m, h) = setup();
+        let a = m.ralloc(RegionId::ROOT, 0, &h);
+        let b = m.ralloc(a, 0, &h);
+        let o = m.alloc(64, b);
+        // Parent holds both A (inout) and B (inout): nearest is B.
+        let args = vec![TaskArg::region_inout(a), TaskArg::region_inout(b)];
+        assert_eq!(
+            find_anchor(&args, &m, NodeId::Object(o), Access::Write),
+            Some(NodeId::Region(b))
+        );
+        // Parent holds only A.
+        let args = vec![TaskArg::region_inout(a)];
+        assert_eq!(
+            find_anchor(&args, &m, NodeId::Object(o), Access::Write),
+            Some(NodeId::Region(a))
+        );
+    }
+
+    #[test]
+    fn anchor_respects_access_mode() {
+        let (mut m, h) = setup();
+        let a = m.ralloc(RegionId::ROOT, 0, &h);
+        let o = m.alloc(64, a);
+        // Parent holds A read-only: child may read but not write.
+        let args = vec![TaskArg::region_in(a)];
+        assert_eq!(
+            find_anchor(&args, &m, NodeId::Object(o), Access::Read),
+            Some(NodeId::Region(a))
+        );
+        assert_eq!(find_anchor(&args, &m, NodeId::Object(o), Access::Write), None);
+    }
+
+    #[test]
+    fn anchor_missing_for_foreign_target() {
+        let (mut m, h) = setup();
+        let a = m.ralloc(RegionId::ROOT, 0, &h);
+        let c = m.ralloc(RegionId::ROOT, 0, &h);
+        let o = m.alloc(64, c);
+        let args = vec![TaskArg::region_inout(a)];
+        assert_eq!(find_anchor(&args, &m, NodeId::Object(o), Access::Write), None);
+    }
+
+    #[test]
+    fn anchor_can_equal_target() {
+        let (mut m, h) = setup();
+        let a = m.ralloc(RegionId::ROOT, 0, &h);
+        let args = vec![TaskArg::region_inout(a)];
+        assert_eq!(
+            find_anchor(&args, &m, NodeId::Region(a), Access::Write),
+            Some(NodeId::Region(a))
+        );
+    }
+
+    #[test]
+    fn retire_defers_busy_nodes() {
+        let (mut m, h) = setup();
+        let a = m.ralloc(RegionId::ROOT, 0, &h);
+        let mut ds = DepState::new();
+        let n = ds.node_mut(NodeId::Region(a), &m);
+        n.enqueue_granted(TaskId(1), 0, Access::Write);
+        ds.retire(NodeId::Region(a));
+        assert!(ds.contains(NodeId::Region(a)), "busy node only marked dying");
+        assert!(ds.get(NodeId::Region(a)).unwrap().dying);
+        // Idle node removes immediately.
+        let b = m.ralloc(RegionId::ROOT, 0, &h);
+        ds.node_mut(NodeId::Region(b), &m);
+        ds.retire(NodeId::Region(b));
+        assert!(!ds.contains(NodeId::Region(b)));
+        let _ = h;
+    }
+
+    #[test]
+    fn node_mut_freezes_parent_and_owner() {
+        let (mut m, h) = setup();
+        let a = m.ralloc(RegionId::ROOT, 0, &h);
+        let mut ds = DepState::new();
+        let n = ds.node_mut(NodeId::Region(a), &m);
+        assert_eq!(n.parent, Some(NodeId::Region(RegionId::ROOT)));
+        assert_eq!(n.owner, 0);
+    }
+}

@@ -1,0 +1,3 @@
+//! Dependency analysis: queues, counters, traversal (paper V-D).
+pub mod analysis;
+pub mod node;

@@ -1,0 +1,518 @@
+//! Dependency queues, child counters and parent (race-avoidance) counters
+//! — the per-node state of paper V-D / Fig 5.
+//!
+//! Every object and region with dependency activity has a [`DepNode`]:
+//!
+//! * an in-order *dependency queue* of tasks waiting for (or currently
+//!   granted) access at this node;
+//! * *child counters* `cr`/`cw`: how many live argument instances are
+//!   enqueued or granted somewhere strictly below this region (split by
+//!   read/write so concurrent readers can be optimized, as the paper
+//!   notes);
+//! * *parent counters* `pr_recv`/`pw_recv`: cumulative enqueues that ever
+//!   crossed into this node from its parent — the race-avoidance protocol:
+//!   a quiescence report carries them, and the parent ignores the report
+//!   unless they match its own cumulative send counts.
+//!
+//! The grant rule (serial-equivalence preserving): an entry may be granted
+//! (or a traversal may pass through) when every entry ahead of it is a
+//! granted entry of an *ancestor task* (a parent delegating a subset to a
+//! child) or a compatible granted reader; region grants additionally
+//! require the child counters to be compatible (writers need `cr == cw ==
+//! 0`, readers need `cw == 0`).
+
+use std::collections::{BTreeMap, VecDeque};
+
+use crate::ids::{Cycles, NodeId, TaskId};
+use crate::task::descriptor::Access;
+
+/// One queued argument instance.
+#[derive(Clone, Debug)]
+pub struct DepEntry {
+    pub task: TaskId,
+    /// Argument index within the task's descriptor.
+    pub arg: usize,
+    pub mode: Access,
+    /// The node this instance ultimately wants (== the node it is queued
+    /// on once it arrives; an earlier node while it is blocked mid-path).
+    pub target: NodeId,
+    pub granted: bool,
+}
+
+/// What a queue re-evaluation decided (the caller owns messaging/IO).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ReadyAction {
+    /// Entry (task, arg) reached its target here and is now granted.
+    Grant { task: TaskId, arg: usize },
+    /// Entry was unblocked and must resume its downward traversal from
+    /// this node towards `target`.
+    Resume { task: TaskId, arg: usize, mode: Access, target: NodeId },
+}
+
+#[derive(Debug)]
+pub struct DepNode {
+    pub id: NodeId,
+    /// Region-tree parent at creation time (kept here so teardown works
+    /// even after the memory metadata is freed).
+    pub parent: Option<NodeId>,
+    /// Owning scheduler index (owners never migrate).
+    pub owner: usize,
+    pub queue: VecDeque<DepEntry>,
+    /// Live descendant readers/writers (regions only).
+    pub cr: u64,
+    pub cw: u64,
+    /// Cumulative enqueues received from the parent link.
+    pub pr_recv: u64,
+    pub pw_recv: u64,
+    /// Cumulative enqueues sent down each child link.
+    pub sent_r: BTreeMap<NodeId, u64>,
+    pub sent_w: BTreeMap<NodeId, u64>,
+    /// Cumulative enqueues already acknowledged per child link (via
+    /// matched quiescence reports).
+    pub acked_r: BTreeMap<NodeId, u64>,
+    pub acked_w: BTreeMap<NodeId, u64>,
+    /// `sys_wait` registrations: tasks waiting for this subtree to drain.
+    pub waiters: Vec<(TaskId, Access)>,
+    /// Last pr / pw included in a quiescence report, to avoid duplicate
+    /// decrements at the parent (separate channels per access mode: the
+    /// paper's "separate child counters ... so we can optimize for
+    /// multiple tasks to have access to read-only arguments").
+    pub last_quiesce_r: Option<u64>,
+    pub last_quiesce_w: Option<u64>,
+    /// Region was freed while entries were still draining; remove this
+    /// node once it quiesces.
+    pub dying: bool,
+    /// Timestamp of the last grant (profiling aid).
+    pub last_grant_at: Cycles,
+}
+
+impl DepNode {
+    pub fn new(id: NodeId, parent: Option<NodeId>, owner: usize) -> Self {
+        DepNode {
+            id,
+            parent,
+            owner,
+            queue: VecDeque::new(),
+            cr: 0,
+            cw: 0,
+            pr_recv: 0,
+            pw_recv: 0,
+            sent_r: BTreeMap::new(),
+            sent_w: BTreeMap::new(),
+            acked_r: BTreeMap::new(),
+            acked_w: BTreeMap::new(),
+            waiters: Vec::new(),
+            last_quiesce_r: None,
+            last_quiesce_w: None,
+            dying: false,
+            last_grant_at: 0,
+        }
+    }
+
+    /// Counter compatibility for granting `mode` at this node.
+    pub fn counters_ok(&self, mode: Access) -> bool {
+        match mode {
+            Access::Write => self.cr == 0 && self.cw == 0,
+            Access::Read => self.cw == 0,
+        }
+    }
+
+    /// Queue position preserving *serial program order*: a descendant of a
+    /// granted holder belongs inside that ancestor's subtree window (right
+    /// after the last entry of the same subtree), ahead of unrelated
+    /// entries that were appended later but come after the whole subtree
+    /// in serial order. Unrelated tasks append at the tail.
+    pub fn insertion_point(
+        &self,
+        task: TaskId,
+        is_ancestor: &dyn Fn(TaskId, TaskId) -> bool,
+    ) -> usize {
+        let Some(i) = self
+            .queue
+            .iter()
+            .rposition(|x| x.granted && is_ancestor(x.task, task))
+        else {
+            return self.queue.len();
+        };
+        let a = self.queue[i].task;
+        let mut j = i + 1;
+        while j < self.queue.len()
+            && (self.queue[j].task == a || is_ancestor(a, self.queue[j].task))
+        {
+            j += 1;
+        }
+        j
+    }
+
+    /// May a traversal of (`task`, `mode`) pass through this node without
+    /// enqueueing? True iff every entry *ahead of its serial position* is
+    /// granted and either an ancestor of `task` (delegation) or a
+    /// compatible reader.
+    pub fn can_pass(
+        &self,
+        task: TaskId,
+        mode: Access,
+        is_ancestor: &dyn Fn(TaskId, TaskId) -> bool,
+    ) -> bool {
+        let j = self.insertion_point(task, is_ancestor);
+        self.queue.iter().take(j).all(|e| {
+            e.granted && (is_ancestor(e.task, task) || e.mode.compatible(mode))
+        })
+    }
+
+    /// Record an instance crossing from this node down the `child` link.
+    pub fn note_descent(&mut self, child: NodeId, mode: Access) {
+        match mode {
+            Access::Read => {
+                self.cr += 1;
+                *self.sent_r.entry(child).or_insert(0) += 1;
+            }
+            Access::Write => {
+                self.cw += 1;
+                *self.sent_w.entry(child).or_insert(0) += 1;
+            }
+        }
+    }
+
+    /// Record an instance arriving from the parent link.
+    pub fn note_arrival(&mut self, mode: Access) {
+        match mode {
+            Access::Read => self.pr_recv += 1,
+            Access::Write => self.pw_recv += 1,
+        }
+    }
+
+    /// Enqueue a (non-granted) entry at its serial-order position (see
+    /// [`DepNode::insertion_point`]).
+    pub fn enqueue(
+        &mut self,
+        task: TaskId,
+        arg: usize,
+        mode: Access,
+        target: NodeId,
+        is_ancestor: &dyn Fn(TaskId, TaskId) -> bool,
+    ) {
+        let j = self.insertion_point(task, is_ancestor);
+        self.queue.insert(j, DepEntry { task, arg, mode, target, granted: false });
+    }
+
+    /// Push an already-granted entry (used to bootstrap the main task).
+    pub fn enqueue_granted(&mut self, task: TaskId, arg: usize, mode: Access) {
+        let target = self.id;
+        self.queue.push_back(DepEntry { task, arg, mode, target, granted: true });
+    }
+
+    /// Remove `task`'s entry (granted or not). Returns true if found.
+    pub fn pop_task(&mut self, task: TaskId, arg: usize) -> bool {
+        if let Some(pos) = self.queue.iter().position(|e| e.task == task && e.arg == arg) {
+            self.queue.remove(pos);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Re-scan the queue in order, granting / resuming everything that is
+    /// no longer blocked. Stops at the first entry that must keep waiting.
+    pub fn collect_ready(
+        &mut self,
+        is_ancestor: &dyn Fn(TaskId, TaskId) -> bool,
+    ) -> Vec<ReadyAction> {
+        let mut out = Vec::new();
+        let mut i = 0;
+        while i < self.queue.len() {
+            if self.queue[i].granted {
+                i += 1;
+                continue;
+            }
+            // Blocked by anything ahead?
+            let e = self.queue[i].clone();
+            let blocked = self.queue.iter().take(i).any(|ahead| {
+                !(ahead.granted
+                    && (is_ancestor(ahead.task, e.task) || ahead.mode.compatible(e.mode)))
+            });
+            if blocked {
+                break;
+            }
+            if e.target == self.id {
+                if self.counters_ok(e.mode) {
+                    self.queue[i].granted = true;
+                    out.push(ReadyAction::Grant { task: e.task, arg: e.arg });
+                    i += 1;
+                } else {
+                    break;
+                }
+            } else {
+                // Resume the downward traversal; the instance leaves this
+                // queue and moves below (the caller bumps counters).
+                self.queue.remove(i);
+                out.push(ReadyAction::Resume {
+                    task: e.task,
+                    arg: e.arg,
+                    mode: e.mode,
+                    target: e.target,
+                });
+            }
+        }
+        out
+    }
+
+    /// Queue empty and no live descendants: the subtree is quiescent.
+    pub fn is_quiescent(&self) -> bool {
+        self.queue.is_empty() && self.cr == 0 && self.cw == 0
+    }
+
+    /// No read activity at or below this node: every read instance that
+    /// entered has finished (long-lived writers may remain).
+    pub fn read_quiescent(&self) -> bool {
+        self.cr == 0 && !self.queue.iter().any(|e| e.mode == Access::Read)
+    }
+
+    /// No write activity at or below this node (long-lived readers may
+    /// remain — this is what lets a region's write counter drain at the
+    /// parent while granted readers still hold objects below it).
+    pub fn write_quiescent(&self) -> bool {
+        self.cw == 0 && !self.queue.iter().any(|e| e.mode == Access::Write)
+    }
+
+    /// Is `task`'s `sys_wait` on this node satisfied? All descendants
+    /// drained and nothing queued except the task's own granted entries.
+    pub fn wait_satisfied(&self, task: TaskId, mode: Access) -> bool {
+        self.counters_ok(mode) && self.queue.iter().all(|e| e.task == task && e.granted)
+    }
+
+    /// Handle a quiescence report from `child`. Each mode is an
+    /// independent channel carrying the child's cumulative arrival count
+    /// for that mode (`None` = that mode not quiescent); a channel is
+    /// applied only when the count matches this node's cumulative sends
+    /// (the race-avoidance parent-counter check). Returns true if any
+    /// channel matched (counters changed).
+    pub fn apply_quiesce(&mut self, child: NodeId, pr: Option<u64>, pw: Option<u64>) -> bool {
+        let mut matched = false;
+        if let Some(pr) = pr {
+            let sent_r = self.sent_r.get(&child).copied().unwrap_or(0);
+            if pr == sent_r {
+                let ar = self.acked_r.entry(child).or_insert(0);
+                self.cr -= pr - *ar;
+                *ar = pr;
+                matched = true;
+            }
+        }
+        if let Some(pw) = pw {
+            let sent_w = self.sent_w.get(&child).copied().unwrap_or(0);
+            if pw == sent_w {
+                let aw = self.acked_w.entry(child).or_insert(0);
+                self.cw -= pw - *aw;
+                *aw = pw;
+                matched = true;
+            }
+        }
+        matched
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ids::{ObjectId, RegionId};
+
+    fn node(id: u64) -> DepNode {
+        DepNode::new(NodeId::Region(RegionId(id)), None, 0)
+    }
+
+    /// Ancestry oracle: t1 is parent of everything else.
+    fn anc(a: TaskId, t: TaskId) -> bool {
+        a == TaskId(1) && t != TaskId(1)
+    }
+
+    #[test]
+    fn empty_node_grants_writer_at_target() {
+        let mut n = node(1);
+        n.enqueue(TaskId(2), 0, Access::Write, n.id, &anc);
+        let acts = n.collect_ready(&anc);
+        assert_eq!(acts, vec![ReadyAction::Grant { task: TaskId(2), arg: 0 }]);
+        assert!(n.queue[0].granted);
+    }
+
+    #[test]
+    fn busy_counters_block_grant() {
+        let mut n = node(1);
+        n.cw = 1;
+        n.enqueue(TaskId(2), 0, Access::Write, n.id, &anc);
+        assert!(n.collect_ready(&anc).is_empty());
+        n.cw = 0;
+        n.cr = 2;
+        // A reader can be granted with readers below; a writer cannot.
+        assert!(!n.counters_ok(Access::Write));
+        assert!(n.counters_ok(Access::Read));
+    }
+
+    #[test]
+    fn reader_prefix_grants_together() {
+        let mut n = node(1);
+        n.enqueue(TaskId(2), 0, Access::Read, n.id, &anc);
+        n.enqueue(TaskId(3), 0, Access::Read, n.id, &anc);
+        n.enqueue(TaskId(4), 0, Access::Write, n.id, &anc);
+        let acts = n.collect_ready(&anc);
+        assert_eq!(acts.len(), 2, "both readers grant, writer waits");
+        assert!(n.queue[0].granted && n.queue[1].granted && !n.queue[2].granted);
+        // Writer grants only after both readers pop.
+        assert!(n.pop_task(TaskId(2), 0));
+        assert!(n.collect_ready(&anc).is_empty());
+        assert!(n.pop_task(TaskId(3), 0));
+        let acts = n.collect_ready(&anc);
+        assert_eq!(acts, vec![ReadyAction::Grant { task: TaskId(4), arg: 0 }]);
+    }
+
+    #[test]
+    fn granted_ancestor_does_not_block_child() {
+        let mut n = node(1);
+        n.enqueue_granted(TaskId(1), 0, Access::Write); // parent holds the region
+        n.enqueue(TaskId(2), 0, Access::Write, n.id, &anc); // child wants the whole thing
+        let acts = n.collect_ready(&anc);
+        assert_eq!(acts, vec![ReadyAction::Grant { task: TaskId(2), arg: 0 }]);
+    }
+
+    #[test]
+    fn non_ancestor_writer_blocks() {
+        let mut n = node(1);
+        n.enqueue_granted(TaskId(5), 0, Access::Write); // unrelated granted writer
+        n.enqueue(TaskId(2), 0, Access::Write, n.id, &anc);
+        assert!(n.collect_ready(&anc).is_empty());
+        assert!(n.pop_task(TaskId(5), 0));
+        assert_eq!(n.collect_ready(&anc).len(), 1);
+    }
+
+    #[test]
+    fn mid_path_entry_resumes_not_grants() {
+        let mut n = node(1);
+        let deeper = NodeId::Object(ObjectId(7));
+        n.enqueue_granted(TaskId(5), 0, Access::Write);
+        n.enqueue(TaskId(2), 0, Access::Write, deeper, &anc); // stopped here mid-path
+        assert!(n.collect_ready(&anc).is_empty());
+        n.pop_task(TaskId(5), 0);
+        let acts = n.collect_ready(&anc);
+        assert_eq!(
+            acts,
+            vec![ReadyAction::Resume { task: TaskId(2), arg: 0, mode: Access::Write, target: deeper }]
+        );
+        assert!(n.queue.is_empty(), "resumed entry leaves the queue");
+    }
+
+    #[test]
+    fn can_pass_rules() {
+        let mut n = node(1);
+        assert!(n.can_pass(TaskId(2), Access::Write, &anc));
+        n.enqueue_granted(TaskId(1), 0, Access::Write);
+        // Ancestor grant: children may pass.
+        assert!(n.can_pass(TaskId(2), Access::Write, &anc));
+        // Unrelated task may not pass a granted writer.
+        n.queue.clear();
+        n.enqueue_granted(TaskId(5), 0, Access::Write);
+        assert!(!n.can_pass(TaskId(2), Access::Write, &anc));
+        // Readers pass granted readers.
+        n.queue.clear();
+        n.enqueue_granted(TaskId(5), 0, Access::Read);
+        assert!(n.can_pass(TaskId(2), Access::Read, &anc));
+        assert!(!n.can_pass(TaskId(2), Access::Write, &anc));
+        // Waiting (non-granted) entries block everyone.
+        n.queue.clear();
+        n.enqueue(TaskId(5), 0, Access::Read, n.id, &anc);
+        assert!(!n.can_pass(TaskId(2), Access::Read, &anc));
+    }
+
+    #[test]
+    fn descent_and_arrival_counters() {
+        let mut n = node(1);
+        let c1 = NodeId::Region(RegionId(2));
+        let c2 = NodeId::Region(RegionId(3));
+        n.note_descent(c1, Access::Write);
+        n.note_descent(c2, Access::Write);
+        n.note_descent(c1, Access::Read);
+        assert_eq!((n.cr, n.cw), (1, 2));
+        assert_eq!(n.sent_w.get(&c1), Some(&1));
+        assert_eq!(n.sent_w.get(&c2), Some(&1));
+        assert_eq!(n.sent_r.get(&c1), Some(&1));
+        n.note_arrival(Access::Write);
+        assert_eq!((n.pr_recv, n.pw_recv), (0, 1));
+    }
+
+    #[test]
+    fn quiesce_protocol_matches_and_races() {
+        // Mirrors Fig 5b: region B with two children C and D.
+        let mut b = node(10);
+        let c = NodeId::Region(RegionId(11));
+        let d = NodeId::Region(RegionId(12));
+        b.note_descent(c, Access::Write);
+        b.note_descent(d, Access::Write);
+        assert_eq!(b.cw, 2);
+        // D quiesces having received 1 write enqueue: matched, cw drops.
+        assert!(b.apply_quiesce(d, Some(0), Some(1)));
+        assert_eq!(b.cw, 1);
+        // A racing (stale) report from C claiming 0 enqueues is ignored.
+        assert!(!b.apply_quiesce(c, None, Some(0)));
+        assert_eq!(b.cw, 1);
+        // The real report matches.
+        assert!(b.apply_quiesce(c, None, Some(1)));
+        assert_eq!(b.cw, 0);
+        assert!(b.is_quiescent());
+        // Re-activation: another descent, another quiesce, cumulative.
+        b.note_descent(c, Access::Write);
+        assert_eq!(b.cw, 1);
+        assert!(!b.apply_quiesce(c, None, Some(1)), "old count must not match");
+        assert!(b.apply_quiesce(c, None, Some(2)));
+        assert_eq!(b.cw, 0);
+    }
+
+    #[test]
+    fn double_quiesce_is_idempotent_via_ack() {
+        let mut b = node(10);
+        let c = NodeId::Region(RegionId(11));
+        b.note_descent(c, Access::Read);
+        assert!(b.apply_quiesce(c, Some(1), None));
+        assert_eq!(b.cr, 0);
+        // Same report again: matches but the ack makes the delta zero.
+        assert!(b.apply_quiesce(c, Some(1), None));
+        assert_eq!(b.cr, 0);
+
+        // Per-mode independence: a granted reader below must not block a
+        // write-quiescence report from draining the parent's cw.
+        let mut n = node(20);
+        n.note_descent(c, Access::Read);
+        n.note_descent(c, Access::Write);
+        assert!(n.apply_quiesce(c, None, Some(1)), "write channel drains alone");
+        assert_eq!((n.cr, n.cw), (1, 0));
+        assert!(n.apply_quiesce(c, Some(1), None));
+        assert_eq!((n.cr, n.cw), (0, 0));
+    }
+
+    #[test]
+    fn wait_satisfaction() {
+        let mut n = node(1);
+        n.enqueue_granted(TaskId(1), 0, Access::Write);
+        assert!(n.wait_satisfied(TaskId(1), Access::Write));
+        n.cw = 1;
+        assert!(!n.wait_satisfied(TaskId(1), Access::Write));
+        n.cw = 0;
+        n.enqueue(TaskId(2), 0, Access::Write, n.id, &anc);
+        assert!(!n.wait_satisfied(TaskId(1), Access::Write));
+    }
+
+    #[test]
+    fn fig5a_scenario_traversal_stops_at_busy_queue() {
+        // parent() holds region A; child() wants object 1 under F; another
+        // task child2 is granted on F. child's descent must stop at F.
+        let mut f = node(6);
+        let obj1 = NodeId::Object(ObjectId(1));
+        f.enqueue_granted(TaskId(9), 0, Access::Write); // child2 (unrelated)
+        assert!(!f.can_pass(TaskId(2), Access::Write, &anc));
+        f.enqueue(TaskId(2), 0, Access::Write, obj1, &anc);
+        // child2 finishes:
+        f.pop_task(TaskId(9), 0);
+        let acts = f.collect_ready(&anc);
+        assert_eq!(
+            acts,
+            vec![ReadyAction::Resume { task: TaskId(2), arg: 0, mode: Access::Write, target: obj1 }]
+        );
+    }
+}

@@ -1,0 +1,88 @@
+//! Experiment driver shared by the `figures` bench and the `myrmics`
+//! CLI binary: runs the selected experiments and prints paper-style rows.
+
+use super::bench::{BenchKind, Scaling};
+use super::{fig11, fig12, fig7, fig8, fig9};
+
+/// `args`: experiment names (empty = all) plus optional `--quick`.
+pub fn run(args: &[String]) {
+    let quick = args.iter().any(|a| a == "--quick");
+    let picks: Vec<&str> =
+        args.iter().filter(|a| !a.starts_with("--")).map(|s| s.as_str()).collect();
+    let want = |name: &str| picks.is_empty() || picks.contains(&name);
+
+
+    let workers_full: &[usize] = &[1, 4, 16, 64, 128, 256, 512];
+    let workers_quick: &[usize] = &[1, 4, 16, 64];
+    let workers = if quick { workers_quick } else { workers_full };
+
+    if want("fig7a") {
+        fig7::print_fig7a(&fig7::fig7a(1000));
+    }
+    if want("fig7b") {
+        let wc: &[usize] = if quick { &[1, 8, 32, 64] } else { &[1, 8, 32, 64, 128, 256, 512] };
+        let sizes: &[u64] = if quick {
+            &[100_000, 1_000_000]
+        } else {
+            &[100_000, 400_000, 1_000_000, 4_000_000, 16_000_000]
+        };
+        let n = if quick { 128 } else { 512 };
+        let pts = fig7::granularity(n, wc, sizes, true);
+        fig7::print_granularity(&pts, "Fig 7b — task granularity (A9 scheduler)");
+    }
+    for (scaling, tag) in [(Scaling::Strong, "fig8-strong"), (Scaling::Weak, "fig8-weak")] {
+        if !(want(tag) || (scaling == Scaling::Strong && want("overhead"))) {
+            continue;
+        }
+        let mut all = Vec::new();
+        for bench in BenchKind::all() {
+            let pts = fig8::scaling_curves(bench, scaling, workers);
+            fig8::print_curves(&pts, scaling);
+            all.extend(pts);
+        }
+        if scaling == Scaling::Strong {
+            fig8::print_overheads(&fig8::overhead_table(&all));
+        }
+    }
+    if want("fig9") || want("fig10") {
+        let wc: &[usize] = if quick { &[4, 16, 64] } else { &[4, 16, 64, 128, 256, 512] };
+        for bench in fig9::QUALITATIVE_BENCHES {
+            let rows = fig9::breakdown(bench, wc);
+            if want("fig9") {
+                fig9::print_breakdown(&rows);
+            }
+            if want("fig10") {
+                fig9::print_traffic(&rows);
+            }
+        }
+    }
+    if want("fig11") {
+        let ps: &[u32] = if quick { &[100, 50, 20, 0] } else { &[100, 80, 60, 40, 20, 10, 0] };
+        let configs = if quick {
+            vec![(BenchKind::Matmul, 16usize, false)]
+        } else {
+            fig11::PAPER_CONFIGS.to_vec()
+        };
+        for (bench, w, hier) in configs {
+            fig11::print_sweep(&fig11::sweep(bench, w, hier, ps));
+        }
+    }
+    if want("fig12a") {
+        let wc: &[usize] = if quick { &[1, 8, 32] } else { &[1, 8, 32, 64, 128, 256] };
+        let sizes: &[u64] =
+            if quick { &[400_000] } else { &[100_000, 400_000, 1_000_000, 4_000_000] };
+        let n = if quick { 128 } else { 512 };
+        let pts = fig12::fig12a(n, wc, sizes);
+        fig12::print_granularity(&pts, "Fig 12a — task granularity (MicroBlaze scheduler)");
+    }
+    if want("fig12b") {
+        let wc: &[usize] = if quick { &[12, 36, 72] } else { &[12, 36, 72, 144, 216, 438] };
+        let pts = fig12::fig12b(wc, &[1, 2, 3], 8);
+        fig12::print_fig12b(&pts, wc);
+    }
+}
+
+pub const EXPERIMENTS: &[&str] = &[
+    "fig7a", "fig7b", "fig8-strong", "fig8-weak", "overhead", "fig9", "fig10", "fig11",
+    "fig12a", "fig12b",
+];

@@ -1,0 +1,106 @@
+//! Fig 11: locality vs load-balance policy sweep (paper VI-D).
+//!
+//! Sweeps the policy bias `p` from pure locality (p=100) to pure load
+//! balance (p=0) for the paper's three configurations: MatMul flat/32w,
+//! Jacobi hier/128w, K-Means hier/512w; reports running time, system-wide
+//! load balance and total DMA traffic, normalized to each experiment's
+//! maximum (percent, as in the figure).
+
+use super::bench::{run_myrmics, BenchKind, Scaling};
+use super::summarize;
+
+#[derive(Clone, Debug)]
+pub struct PolicyPoint {
+    pub p_locality: u32,
+    pub time_pct: f64,
+    pub balance_pct: f64,
+    pub dma_pct: f64,
+}
+
+#[derive(Clone, Debug)]
+pub struct PolicySweep {
+    pub bench: BenchKind,
+    pub workers: usize,
+    pub hier: bool,
+    pub points: Vec<PolicyPoint>,
+}
+
+pub const PAPER_CONFIGS: [(BenchKind, usize, bool); 3] = [
+    (BenchKind::Matmul, 16, false), // paper uses 32; 16 keeps the square grid
+    (BenchKind::Jacobi, 128, true),
+    (BenchKind::Kmeans, 512, true),
+];
+
+pub fn sweep(bench: BenchKind, workers: usize, hier: bool, ps: &[u32]) -> PolicySweep {
+    let mut raw = Vec::new();
+    for &p in ps {
+        let (t, eng) = run_myrmics(bench, workers, Scaling::Strong, hier, Some(p));
+        let s = summarize(&eng, t);
+        raw.push((p, t as f64, s.balance, s.total_dma_bytes as f64));
+    }
+    let t_max = raw.iter().map(|r| r.1).fold(0.0, f64::max).max(1.0);
+    let d_max = raw.iter().map(|r| r.3).fold(0.0, f64::max).max(1.0);
+    PolicySweep {
+        bench,
+        workers,
+        hier,
+        points: raw
+            .into_iter()
+            .map(|(p, t, b, d)| PolicyPoint {
+                p_locality: p,
+                time_pct: 100.0 * t / t_max,
+                balance_pct: b,
+                dma_pct: 100.0 * d / d_max,
+            })
+            .collect(),
+    }
+}
+
+pub fn print_sweep(s: &PolicySweep) {
+    println!(
+        "Fig 11 — {} / {} workers / {} scheduling",
+        s.bench.name(),
+        s.workers,
+        if s.hier { "hierarchical" } else { "flat" }
+    );
+    println!(
+        "{:>10} {:>10} {:>10} {:>10}",
+        "p(local%)", "time%", "balance%", "DMA%"
+    );
+    for p in &s.points {
+        println!(
+            "{:>10} {:>10.1} {:>10.1} {:>10.1}",
+            p.p_locality, p.time_pct, p.balance_pct, p.dma_pct
+        );
+    }
+    println!("paper: best trade-off at 0.1-0.3 locality weight\n");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn locality_extreme_hurts_balance_and_time() {
+        let s = sweep(BenchKind::Kmeans, 16, true, &[100, 20, 0]);
+        let p100 = &s.points[0];
+        let p20 = &s.points[1];
+        // Pure locality: worse balance than the balanced policy.
+        assert!(p100.balance_pct <= p20.balance_pct + 1e-9);
+        // Balanced policy runs at least as fast as pure locality.
+        assert!(p20.time_pct <= p100.time_pct + 1e-9);
+    }
+
+    #[test]
+    fn balance_extreme_moves_more_data() {
+        let s = sweep(BenchKind::Jacobi, 16, true, &[100, 0]);
+        let p100 = &s.points[0];
+        let p0 = &s.points[1];
+        assert!(
+            p0.dma_pct >= p100.dma_pct,
+            "pure balance should move at least as much data: {} vs {}",
+            p0.dma_pct,
+            p100.dma_pct
+        );
+    }
+}

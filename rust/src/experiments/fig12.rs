@@ -1,0 +1,158 @@
+//! Fig 12: MicroBlaze-scheduler granularity (a) and deeper scheduler
+//! hierarchies (b), on the homogeneous 512-core system (paper VI-E).
+
+use crate::apps::synthetic::{hier_empty, SynthParams};
+use crate::config::{HierarchySpec, PlatformConfig};
+use crate::ids::Cycles;
+use crate::platform::Platform;
+
+pub use super::fig7::{granularity, print_granularity, GranularityPoint};
+
+/// Fig 12a: the Fig 7b sweep with a MicroBlaze scheduler (hetero=false) —
+/// the intrinsic spawn cost rises to ~37.4 K cycles and the achievable
+/// speedup drops.
+pub fn fig12a(
+    n_tasks: usize,
+    worker_counts: &[usize],
+    task_sizes: &[Cycles],
+) -> Vec<GranularityPoint> {
+    granularity(n_tasks, worker_counts, task_sizes, false)
+}
+
+#[derive(Clone, Debug)]
+pub struct HierPoint {
+    pub levels: usize,
+    pub workers: usize,
+    pub time: Cycles,
+    /// Weak-scaling slowdown vs the same config's smallest run.
+    pub slowdown: f64,
+}
+
+/// Fig 12b: empty-task hierarchy benchmark, weak scaling, scheduler
+/// fanout 6, on the homogeneous (all-MicroBlaze) system. One domain
+/// region per ~6 workers, `tasks_per_domain` empty tasks each.
+pub fn fig12b(worker_counts: &[usize], levels_list: &[usize], tasks_per_domain: usize) -> Vec<HierPoint> {
+    let mut out = Vec::new();
+    for &levels in levels_list {
+        let mut base: Option<f64> = None;
+        for &w in worker_counts {
+            let t = run_hier(w, levels, tasks_per_domain);
+            // Weak scaling: work per worker is constant, so the slowdown
+            // is the plain time ratio to the curve's first point.
+            let b = *base.get_or_insert(t as f64);
+            out.push(HierPoint { levels, workers: w, time: t, slowdown: t as f64 / b });
+        }
+    }
+    out
+}
+
+fn spec_for(levels: usize, workers: usize) -> HierarchySpec {
+    // Scheduler fanout 6 (paper VI-E): leaves = ceil(w/6); mid = ceil(l/6).
+    match levels {
+        1 => HierarchySpec::flat(),
+        2 => {
+            let leaves = workers.div_ceil(6).max(1);
+            HierarchySpec { scheds_per_level: vec![1, leaves] }
+        }
+        3 => {
+            let leaves = workers.div_ceil(6).max(1);
+            let mids = leaves.div_ceil(6).max(1);
+            HierarchySpec { scheds_per_level: vec![1, mids, leaves] }
+        }
+        _ => panic!("unsupported level count {levels}"),
+    }
+}
+
+fn run_hier(workers: usize, levels: usize, tasks_per_domain: usize) -> Cycles {
+    let (reg, main) = hier_empty();
+    let mut cfg = PlatformConfig::new(workers, spec_for(levels, workers));
+    cfg.hetero = false; // homogeneous 512-core MicroBlaze system
+    let domains = workers.div_ceil(6).max(1);
+    let levels_i = levels as i32;
+    let mut plat = Platform::build_with(cfg, reg, main, move |w| {
+        w.app = Some(Box::new(SynthParams {
+            domains,
+            per_domain: tasks_per_domain,
+            domain_level: levels_i - 1,
+            task_cycles: 0,
+            ..Default::default()
+        }));
+    });
+    plat.run(Some(1 << 46))
+}
+
+/// Weak-scaling slowdown normalized to each curve's first point: the
+/// paper's Fig 12b Y axis.
+pub fn normalized(points: &[HierPoint], worker_counts: &[usize]) -> Vec<(usize, Vec<f64>)> {
+    let mut rows = Vec::new();
+    let mut levels: Vec<usize> = points.iter().map(|p| p.levels).collect();
+    levels.sort_unstable();
+    levels.dedup();
+    for l in levels {
+        let curve: Vec<&HierPoint> = points.iter().filter(|p| p.levels == l).collect();
+        let base = curve
+            .iter()
+            .find(|p| p.workers == worker_counts[0])
+            .map(|p| p.time as f64)
+            .unwrap_or(1.0);
+        rows.push((l, curve.iter().map(|p| p.time as f64 / base).collect()));
+    }
+    rows
+}
+
+pub fn print_fig12b(points: &[HierPoint], worker_counts: &[usize]) {
+    println!("Fig 12b — multi-level weak scaling (empty tasks, fanout 6, MB-only)");
+    print!("{:<10}", "levels\\wrk");
+    for w in worker_counts {
+        print!("{w:>8}");
+    }
+    println!("   (slowdown normalized to first point)");
+    for (l, row) in normalized(points, worker_counts) {
+        print!("{l:<10}");
+        for v in row {
+            print!("{v:>8.2}");
+        }
+        println!();
+    }
+    println!("paper: 2-level >> 1-level; 3-level ~15% better than 2-level at scale\n");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hierarchy_beats_single_scheduler_at_scale() {
+        let workers = [12, 72];
+        let pts = fig12b(&workers, &[1, 2], 6);
+        let rows = normalized(&pts, &workers);
+        let one = &rows[0].1;
+        let two = &rows[1].1;
+        // At 72 workers, the single scheduler slows down much more.
+        assert!(
+            one[1] > two[1] * 1.2,
+            "1-level {:.2} vs 2-level {:.2} at 72 workers",
+            one[1],
+            two[1]
+        );
+    }
+
+    #[test]
+    fn three_levels_work() {
+        let pts = fig12b(&[36], &[3], 4);
+        assert_eq!(pts.len(), 1);
+        assert!(pts[0].time > 0);
+    }
+
+    #[test]
+    fn three_levels_beat_two_at_scale() {
+        // Paper VI-E: deeper hierarchies relieve the saturated top-level
+        // scheduler once enough leaf schedulers exist.
+        let workers = [12, 216];
+        let pts = fig12b(&workers, &[2, 3], 8);
+        let rows = normalized(&pts, &workers);
+        let two = rows.iter().find(|r| r.0 == 2).unwrap().1[1];
+        let three = rows.iter().find(|r| r.0 == 3).unwrap().1[1];
+        assert!(three < two, "3-level {three:.2} should beat 2-level {two:.2}");
+    }
+}

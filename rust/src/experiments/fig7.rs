@@ -1,0 +1,168 @@
+//! Fig 7: intrinsic overheads (a) and task-granularity impact (b).
+
+use crate::apps::synthetic::{empty_chain, independent, SynthParams};
+use crate::config::PlatformConfig;
+use crate::ids::{Cycles, TaskId};
+use crate::platform::Platform;
+
+/// One Fig 7a bar group: per-task spawn and execute cost.
+#[derive(Clone, Debug)]
+pub struct OverheadRow {
+    pub mode: &'static str,
+    pub spawn_cycles: f64,
+    pub exec_cycles: f64,
+}
+
+/// Fig 7a: 1,000 empty tasks on one object, 1 scheduler + 1 worker, in
+/// the three core-flavour modes (MicroBlaze/MicroBlaze, A9/MicroBlaze,
+/// A9/A9). Times in MicroBlaze cycles like the paper.
+pub fn fig7a(n: usize) -> Vec<OverheadRow> {
+    let run = |hetero: bool, fast_worker: bool| -> (f64, f64) {
+        let (reg, main) = empty_chain();
+        let mut cfg = PlatformConfig::flat(1);
+        cfg.hetero = hetero;
+        let mut plat = Platform::build_with(cfg, reg, main, |w| {
+            w.app = Some(Box::new(SynthParams { n_tasks: n, ..Default::default() }));
+        });
+        if fast_worker {
+            // ARM/ARM mode: the worker core is a Cortex-A9 too.
+            for m in plat.eng.sim.metas.iter_mut() {
+                m.kind = crate::config::CoreKind::CortexA9;
+            }
+        }
+        let end = plat.run(Some(1 << 46));
+        let main_e = plat.world().tasks.get(TaskId(0));
+        let spawn = (main_e.done_at - main_e.started_at) as f64 / n as f64;
+        let exec = (end - main_e.done_at) as f64 / n as f64;
+        (spawn, exec)
+    };
+    let (s_mb, e_mb) = run(false, false);
+    let (s_het, e_het) = run(true, false);
+    let (s_arm, e_arm) = run(true, true);
+    vec![
+        OverheadRow { mode: "MB sched / MB worker", spawn_cycles: s_mb, exec_cycles: e_mb },
+        OverheadRow { mode: "A9 sched / MB worker", spawn_cycles: s_het, exec_cycles: e_het },
+        OverheadRow { mode: "A9 sched / A9 worker", spawn_cycles: s_arm, exec_cycles: e_arm },
+    ]
+}
+
+/// One point of the Fig 7b surface.
+#[derive(Clone, Debug)]
+pub struct GranularityPoint {
+    pub workers: usize,
+    pub task_cycles: Cycles,
+    pub speedup: f64,
+}
+
+/// Fig 7b (hetero scheduler) / Fig 12a (MicroBlaze scheduler): 512
+/// independent tasks, single scheduler, sweep workers x task size.
+pub fn granularity(
+    n_tasks: usize,
+    worker_counts: &[usize],
+    task_sizes: &[Cycles],
+    hetero: bool,
+) -> Vec<GranularityPoint> {
+    let mut base: Vec<(Cycles, Cycles)> = Vec::new(); // (size, t1)
+    for &size in task_sizes {
+        let t1 = run_once(n_tasks, 1, size, hetero);
+        base.push((size, t1));
+    }
+    let mut out = Vec::new();
+    for &w in worker_counts {
+        for &(size, t1) in &base {
+            let tw = run_once(n_tasks, w, size, hetero);
+            out.push(GranularityPoint {
+                workers: w,
+                task_cycles: size,
+                speedup: t1 as f64 / tw as f64,
+            });
+        }
+    }
+    out
+}
+
+fn run_once(n_tasks: usize, workers: usize, task_cycles: Cycles, hetero: bool) -> Cycles {
+    let (reg, main) = independent();
+    let mut cfg = PlatformConfig::flat(workers);
+    cfg.hetero = hetero;
+    let mut plat = Platform::build_with(cfg, reg, main, |w| {
+        w.app = Some(Box::new(SynthParams { n_tasks, task_cycles, ..Default::default() }));
+    });
+    plat.run(Some(1 << 46))
+}
+
+/// Optimal worker count for a task size: the paper approximates it as
+/// task size / intrinsic spawn overhead (e.g. 1 M / 16.2 K ~= 64).
+pub fn optimal_workers(points: &[GranularityPoint], task_cycles: Cycles) -> usize {
+    points
+        .iter()
+        .filter(|p| p.task_cycles == task_cycles)
+        .max_by(|a, b| a.speedup.partial_cmp(&b.speedup).unwrap())
+        .map(|p| p.workers)
+        .unwrap_or(1)
+}
+
+pub fn print_fig7a(rows: &[OverheadRow]) {
+    println!("Fig 7a — time to spawn / execute an empty task (MB cycles)");
+    println!("{:<24} {:>12} {:>12}", "mode", "spawn", "execute");
+    for r in rows {
+        println!("{:<24} {:>12.0} {:>12.0}", r.mode, r.spawn_cycles, r.exec_cycles);
+    }
+    println!("paper: hetero 16.2K spawn / 13.3K exec; MB-only 37.4K spawn\n");
+}
+
+pub fn print_granularity(points: &[GranularityPoint], label: &str) {
+    println!("{label} — speedup vs single worker (rows: task size)");
+    let mut sizes: Vec<Cycles> = points.iter().map(|p| p.task_cycles).collect();
+    sizes.sort_unstable();
+    sizes.dedup();
+    let mut workers: Vec<usize> = points.iter().map(|p| p.workers).collect();
+    workers.sort_unstable();
+    workers.dedup();
+    print!("{:>10}", "task\\wrk");
+    for w in &workers {
+        print!("{w:>8}");
+    }
+    println!();
+    for s in &sizes {
+        print!("{:>10}", super::fmt_cycles(*s));
+        for w in &workers {
+            let p = points
+                .iter()
+                .find(|p| p.task_cycles == *s && p.workers == *w)
+                .expect("grid point");
+            print!("{:>8.1}", p.speedup);
+        }
+        let opt = optimal_workers(points, *s);
+        println!("   (opt {opt})");
+    }
+    println!();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig7a_reproduces_paper_overheads() {
+        let rows = fig7a(300);
+        assert!((rows[1].spawn_cycles - 16_200.0).abs() / 16_200.0 < 0.12);
+        assert!((rows[1].exec_cycles - 13_300.0).abs() / 13_300.0 < 0.12);
+        assert!((rows[0].spawn_cycles - 37_400.0).abs() / 37_400.0 < 0.12);
+        // ARM/ARM is the cheapest mode.
+        assert!(rows[2].spawn_cycles < rows[1].spawn_cycles);
+        assert!(rows[2].exec_cycles < rows[1].exec_cycles);
+    }
+
+    #[test]
+    fn granularity_has_an_optimum() {
+        // Small grid: 64 tasks of 1M cycles; optimum should be well below
+        // 64 workers but above 8 (paper: ~64 for 512 tasks at 1M).
+        let pts = granularity(64, &[1, 8, 16, 32, 64], &[1_000_000], true);
+        let opt = optimal_workers(&pts, 1_000_000);
+        assert!(opt >= 8, "optimum {opt}");
+        // Bigger tasks always speed up better at high worker counts.
+        let pts2 = granularity(64, &[32], &[100_000, 4_000_000], true);
+        assert!(pts2[1].speedup > pts2[0].speedup);
+    }
+}

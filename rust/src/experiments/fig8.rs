@@ -1,0 +1,157 @@
+//! Fig 8: strong (a-f) and weak (g-l) scaling of the six benchmarks,
+//! MPI vs Myrmics-flat vs Myrmics-hierarchical; plus the VI-B headline
+//! overhead table (Myrmics 10-30% over MPI at well-scaling points).
+
+use super::bench::{run_system, BenchKind, Scaling, System};
+use crate::ids::Cycles;
+
+#[derive(Clone, Debug)]
+pub struct ScalePoint {
+    pub bench: BenchKind,
+    pub system: System,
+    pub workers: usize,
+    pub time: Cycles,
+    /// Strong: speedup vs this system's 1-worker run.
+    /// Weak: slowdown vs this system's 1-worker run.
+    pub rel: f64,
+}
+
+pub const PAPER_WORKER_COUNTS: [usize; 7] = [1, 4, 16, 64, 128, 256, 512];
+
+/// Run one benchmark's scaling curves for all three systems.
+pub fn scaling_curves(
+    bench: BenchKind,
+    scaling: Scaling,
+    worker_counts: &[usize],
+) -> Vec<ScalePoint> {
+    let mut out = Vec::new();
+    for system in [System::Mpi, System::MyrmicsFlat, System::MyrmicsHier] {
+        let mut t1: Option<Cycles> = None;
+        for &w in worker_counts {
+            if !bench.valid_workers(w) {
+                continue;
+            }
+            let s = run_system(bench, system, w, scaling);
+            let base = *t1.get_or_insert(s.time);
+            let rel = match scaling {
+                Scaling::Strong => base as f64 / s.time as f64,
+                Scaling::Weak => s.time as f64 / base as f64,
+            };
+            out.push(ScalePoint { bench, system, workers: w, time: s.time, rel });
+        }
+    }
+    out
+}
+
+/// The VI-B headline: Myrmics-vs-MPI overhead at each worker count.
+#[derive(Clone, Debug)]
+pub struct OverheadPoint {
+    pub bench: BenchKind,
+    pub workers: usize,
+    pub overhead_pct: f64,
+}
+
+pub fn overhead_table(points: &[ScalePoint]) -> Vec<OverheadPoint> {
+    let mut out = Vec::new();
+    for p in points.iter().filter(|p| p.system == System::MyrmicsHier) {
+        if let Some(mpi) = points
+            .iter()
+            .find(|q| q.system == System::Mpi && q.workers == p.workers && q.bench == p.bench)
+        {
+            out.push(OverheadPoint {
+                bench: p.bench,
+                workers: p.workers,
+                overhead_pct: 100.0 * (p.time as f64 / mpi.time as f64 - 1.0),
+            });
+        }
+    }
+    out
+}
+
+fn sys_name(s: System) -> &'static str {
+    match s {
+        System::Mpi => "MPI",
+        System::MyrmicsFlat => "myrmics-flat",
+        System::MyrmicsHier => "myrmics-hier",
+    }
+}
+
+pub fn print_curves(points: &[ScalePoint], scaling: Scaling) {
+    let label = match scaling {
+        Scaling::Strong => "speedup",
+        Scaling::Weak => "slowdown",
+    };
+    let mut benches: Vec<BenchKind> = points.iter().map(|p| p.bench).collect();
+    benches.dedup();
+    for bench in benches {
+        println!("Fig 8 ({label}) — {}", bench.name());
+        let mut workers: Vec<usize> = points
+            .iter()
+            .filter(|p| p.bench == bench)
+            .map(|p| p.workers)
+            .collect();
+        workers.sort_unstable();
+        workers.dedup();
+        print!("{:<14}", "system");
+        for w in &workers {
+            print!("{w:>8}");
+        }
+        println!();
+        for system in [System::Mpi, System::MyrmicsFlat, System::MyrmicsHier] {
+            print!("{:<14}", sys_name(system));
+            for w in &workers {
+                match points.iter().find(|p| {
+                    p.bench == bench && p.system == system && p.workers == *w
+                }) {
+                    Some(p) => print!("{:>8.2}", p.rel),
+                    None => print!("{:>8}", "-"),
+                }
+            }
+            println!();
+        }
+        println!();
+    }
+}
+
+pub fn print_overheads(rows: &[OverheadPoint]) {
+    println!("VI-B headline — Myrmics(hier) execution-time overhead vs MPI (%)");
+    println!("{:<12} {:>8} {:>10}", "bench", "workers", "overhead");
+    for r in rows {
+        println!("{:<12} {:>8} {:>9.1}%", r.bench.name(), r.workers, r.overhead_pct);
+    }
+    println!("paper: typically 10-30% at points that scale well\n");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strong_scaling_shape_jacobi() {
+        let pts = scaling_curves(BenchKind::Jacobi, Scaling::Strong, &[1, 8, 32]);
+        // MPI scales near-perfectly.
+        let mpi32 = pts
+            .iter()
+            .find(|p| p.system == System::Mpi && p.workers == 32)
+            .unwrap();
+        assert!(mpi32.rel > 24.0, "MPI speedup at 32: {:.1}", mpi32.rel);
+        // Hierarchical Myrmics scales too, within the overhead budget.
+        let hier32 = pts
+            .iter()
+            .find(|p| p.system == System::MyrmicsHier && p.workers == 32)
+            .unwrap();
+        assert!(hier32.rel > 12.0, "Myrmics-hier speedup at 32: {:.1}", hier32.rel);
+    }
+
+    #[test]
+    fn overhead_in_paper_band_at_moderate_scale() {
+        let pts = scaling_curves(BenchKind::Raytrace, Scaling::Strong, &[1, 16]);
+        let over = overhead_table(&pts);
+        let at16 = over.iter().find(|o| o.workers == 16).unwrap();
+        assert!(
+            at16.overhead_pct > -5.0 && at16.overhead_pct < 60.0,
+            "overhead {:.1}%",
+            at16.overhead_pct
+        );
+    }
+}

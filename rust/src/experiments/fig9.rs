@@ -1,0 +1,109 @@
+//! Fig 9 (time breakdown) and Fig 10 (traffic analysis) for the three
+//! qualitative-study kernels: Bitonic (worst), K-Means (medium),
+//! Raytrace (best), on their strong-scaling hierarchical runs.
+
+use super::bench::{run_system, BenchKind, Scaling, System};
+use super::Summary;
+
+#[derive(Clone, Debug)]
+pub struct BreakdownRow {
+    pub bench: BenchKind,
+    pub workers: usize,
+    pub n_scheds: usize,
+    pub summary: Summary,
+}
+
+pub const QUALITATIVE_BENCHES: [BenchKind; 3] =
+    [BenchKind::Bitonic, BenchKind::Kmeans, BenchKind::Raytrace];
+
+pub fn breakdown(bench: BenchKind, worker_counts: &[usize]) -> Vec<BreakdownRow> {
+    worker_counts
+        .iter()
+        .filter(|&&w| bench.valid_workers(w))
+        .map(|&w| {
+            let s = run_system(bench, System::MyrmicsHier, w, Scaling::Strong);
+            BreakdownRow { bench, workers: w, n_scheds: s.n_scheds, summary: s }
+        })
+        .collect()
+}
+
+pub fn print_breakdown(rows: &[BreakdownRow]) {
+    let mut benches: Vec<BenchKind> = rows.iter().map(|r| r.bench).collect();
+    benches.dedup();
+    for bench in benches {
+        println!("Fig 9 — time breakdown: {}", bench.name());
+        println!(
+            "{:>8} {:>8} | {:>9} {:>9} {:>9} | {:>10}",
+            "workers", "(scheds)", "wrk task%", "wrk rt%", "wrk idle%", "sched busy%"
+        );
+        for r in rows.iter().filter(|r| r.bench == bench) {
+            let s = &r.summary;
+            println!(
+                "{:>8} {:>8} | {:>8.1}% {:>8.1}% {:>8.1}% | {:>9.1}%",
+                r.workers,
+                format!("({})", r.n_scheds),
+                100.0 * s.worker_task_frac,
+                100.0 * s.worker_runtime_frac,
+                100.0 * s.worker_idle_frac,
+                100.0 * s.sched_busy_frac,
+            );
+        }
+        println!();
+    }
+}
+
+pub fn print_traffic(rows: &[BreakdownRow]) {
+    let mut benches: Vec<BenchKind> = rows.iter().map(|r| r.bench).collect();
+    benches.dedup();
+    for bench in benches {
+        println!("Fig 10 — traffic per core: {}", bench.name());
+        println!(
+            "{:>8} {:>8} | {:>12} {:>12} {:>12}",
+            "workers", "(scheds)", "wrk msgs", "wrk DMA", "sched msgs"
+        );
+        for r in rows.iter().filter(|r| r.bench == bench) {
+            let s = &r.summary;
+            println!(
+                "{:>8} {:>8} | {:>12} {:>12} {:>12}",
+                r.workers,
+                format!("({})", r.n_scheds),
+                super::fmt_bytes(s.per_worker_msg_bytes),
+                super::fmt_bytes(s.per_worker_dma_bytes),
+                super::fmt_bytes(s.per_sched_msg_bytes),
+            );
+        }
+        println!();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn raytrace_keeps_schedulers_idle() {
+        // Paper: raytrace scheduler load is at worst ~6%.
+        let rows = breakdown(BenchKind::Raytrace, &[16]);
+        assert!(rows[0].summary.sched_busy_frac < 0.25);
+        // Workers actually do task work.
+        assert!(rows[0].summary.worker_task_frac > 0.3);
+    }
+
+    #[test]
+    fn bitonic_loads_schedulers_more_than_raytrace() {
+        let bt = breakdown(BenchKind::Bitonic, &[16]);
+        let rt = breakdown(BenchKind::Raytrace, &[16]);
+        assert!(
+            bt[0].summary.sched_busy_frac > rt[0].summary.sched_busy_frac,
+            "bitonic {:.3} vs raytrace {:.3}",
+            bt[0].summary.sched_busy_frac,
+            rt[0].summary.sched_busy_frac
+        );
+    }
+
+    #[test]
+    fn scheduler_traffic_grows_with_workers() {
+        let rows = breakdown(BenchKind::Kmeans, &[4, 32]);
+        assert!(rows[1].summary.per_sched_msg_bytes > rows[0].summary.per_sched_msg_bytes);
+    }
+}

@@ -1,0 +1,115 @@
+//! One harness per paper figure/table (see DESIGN.md 6).
+//!
+//! Every harness returns plain row structs and provides a `print_*`
+//! function emitting the same series the paper plots; `cargo bench
+//! --bench figures` regenerates everything.
+
+pub mod bench;
+pub mod cli;
+pub mod fig11;
+pub mod fig12;
+pub mod fig7;
+pub mod fig8;
+pub mod fig9;
+
+use crate::ids::Cycles;
+use crate::sim::engine::Engine;
+
+/// Aggregated per-run metrics backing Figs 8-11.
+#[derive(Clone, Debug)]
+pub struct Summary {
+    pub time: Cycles,
+    pub n_workers: usize,
+    pub n_scheds: usize,
+    /// Average worker time fractions (Fig 9 left bars).
+    pub worker_task_frac: f64,
+    pub worker_runtime_frac: f64,
+    pub worker_idle_frac: f64,
+    /// Average scheduler busy fraction (Fig 9 right bars).
+    pub sched_busy_frac: f64,
+    /// Average traffic per core (Fig 10): message and DMA bytes.
+    pub per_worker_msg_bytes: f64,
+    pub per_worker_dma_bytes: f64,
+    pub per_sched_msg_bytes: f64,
+    pub tasks_completed: u64,
+    /// Load balance % (Fig 11): 100 = perfectly even task counts,
+    /// 0 = one worker ran everything.
+    pub balance: f64,
+    pub total_dma_bytes: u64,
+}
+
+/// Extract a [`Summary`] from a finished Myrmics engine.
+pub fn summarize(eng: &Engine, time: Cycles) -> Summary {
+    let hier = &eng.world.hier;
+    let n_workers = hier.n_workers;
+    let n_scheds = hier.n_scheds;
+    let mut wt = 0.0;
+    let mut wr = 0.0;
+    let mut wmsg = 0.0;
+    let mut wdma = 0.0;
+    let mut tasks: Vec<u64> = Vec::new();
+    let mut total_dma = 0u64;
+    let mut smsg = 0.0;
+    let mut sbusy = 0.0;
+    for (i, st) in eng.sim.stats.iter().enumerate() {
+        let core = crate::ids::CoreId(i as u32);
+        total_dma += st.dma_bytes_in;
+        if i >= hier.n_cores() {
+            continue;
+        }
+        if hier.is_sched(core) {
+            sbusy += (st.busy().min(time)) as f64 / time.max(1) as f64;
+            smsg += (st.msg_bytes_sent + st.msg_bytes_recv) as f64;
+        } else {
+            wt += st.task_frac(time);
+            wr += st.runtime_frac(time);
+            wmsg += (st.msg_bytes_sent + st.msg_bytes_recv) as f64;
+            wdma += (st.dma_bytes_in + st.dma_bytes_out) as f64;
+            tasks.push(st.tasks_run);
+        }
+    }
+    let w = n_workers.max(1) as f64;
+    let s = n_scheds.max(1) as f64;
+    let total_tasks: u64 = tasks.iter().sum();
+    let mean = total_tasks as f64 / w;
+    let dev: f64 = tasks.iter().map(|&t| (t as f64 - mean).abs()).sum();
+    let worst = 2.0 * total_tasks as f64 * (1.0 - 1.0 / w);
+    let balance = if worst > 0.0 { 100.0 * (1.0 - dev / worst) } else { 100.0 };
+    Summary {
+        time,
+        n_workers,
+        n_scheds,
+        worker_task_frac: wt / w,
+        worker_runtime_frac: wr / w,
+        worker_idle_frac: (1.0 - wt / w - wr / w).max(0.0),
+        sched_busy_frac: sbusy / s,
+        per_worker_msg_bytes: wmsg / w,
+        per_worker_dma_bytes: wdma / w,
+        per_sched_msg_bytes: smsg / s,
+        tasks_completed: eng.world.gstats.tasks_completed,
+        balance,
+        total_dma_bytes: total_dma,
+    }
+}
+
+/// Format cycles as M/K for table output.
+pub fn fmt_cycles(c: Cycles) -> String {
+    if c >= 10_000_000 {
+        format!("{:.1}M", c as f64 / 1e6)
+    } else if c >= 10_000 {
+        format!("{:.1}K", c as f64 / 1e3)
+    } else {
+        format!("{c}")
+    }
+}
+
+/// Format bytes with units (Fig 10 is plotted in bytes, log scale).
+pub fn fmt_bytes(b: f64) -> String {
+    if b >= 1e6 {
+        format!("{:.1}MB", b / 1e6)
+    } else if b >= 1e3 {
+        format!("{:.1}KB", b / 1e3)
+    } else {
+        format!("{b:.0}B")
+    }
+}

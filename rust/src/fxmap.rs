@@ -1,0 +1,92 @@
+//! Tiny multiply-xor hasher for small integer keys (ids).
+//!
+//! The simulator's hottest maps (dependency nodes, region/object tables,
+//! NoC channels) are keyed by small newtype integers; std's SipHash shows
+//! up at ~9% of the whole-run profile (EXPERIMENTS.md Perf). This is the
+//! classic FxHash construction: one wrapping multiply + rotate per word.
+
+use std::hash::{BuildHasherDefault, Hasher};
+
+#[derive(Default)]
+pub struct FxHasher {
+    state: u64,
+}
+
+const SEED: u64 = 0x51_7c_c1_b7_27_22_0a_95;
+
+impl FxHasher {
+    #[inline]
+    fn mix(&mut self, word: u64) {
+        self.state = (self.state.rotate_left(5) ^ word).wrapping_mul(SEED);
+    }
+}
+
+impl Hasher for FxHasher {
+    #[inline]
+    fn finish(&self) -> u64 {
+        self.state
+    }
+
+    #[inline]
+    fn write(&mut self, bytes: &[u8]) {
+        for chunk in bytes.chunks(8) {
+            let mut buf = [0u8; 8];
+            buf[..chunk.len()].copy_from_slice(chunk);
+            self.mix(u64::from_le_bytes(buf));
+        }
+    }
+
+    #[inline]
+    fn write_u64(&mut self, n: u64) {
+        self.mix(n);
+    }
+
+    #[inline]
+    fn write_u32(&mut self, n: u32) {
+        self.mix(n as u64);
+    }
+
+    #[inline]
+    fn write_usize(&mut self, n: usize) {
+        self.mix(n as u64);
+    }
+
+    #[inline]
+    fn write_u8(&mut self, n: u8) {
+        self.mix(n as u64);
+    }
+}
+
+pub type FxBuildHasher = BuildHasherDefault<FxHasher>;
+pub type FxHashMap<K, V> = std::collections::HashMap<K, V, FxBuildHasher>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn distinct_keys_hash_distinctly() {
+        use std::hash::{BuildHasher, Hash};
+        let b = FxBuildHasher::default();
+        let hash = |x: u64| {
+            let mut h = b.build_hasher();
+            x.hash(&mut h);
+            h.finish()
+        };
+        let mut seen = std::collections::HashSet::new();
+        for k in 0..10_000u64 {
+            assert!(seen.insert(hash(k)), "collision at {k}");
+        }
+    }
+
+    #[test]
+    fn map_roundtrip() {
+        let mut m: FxHashMap<crate::ids::NodeId, u64> = FxHashMap::default();
+        for i in 0..1000 {
+            m.insert(crate::ids::NodeId::Object(crate::ids::ObjectId(i)), i * 3);
+        }
+        for i in 0..1000 {
+            assert_eq!(m[&crate::ids::NodeId::Object(crate::ids::ObjectId(i))], i * 3);
+        }
+    }
+}

@@ -1,0 +1,159 @@
+//! Core identifier newtypes shared across all subsystems.
+//!
+//! Everything in the simulated platform is addressed by small integer ids:
+//! cores (schedulers + workers), tasks, regions, objects and dependency
+//! nodes. Newtypes keep them from being mixed up and make the message
+//! protocol self-documenting.
+
+use std::fmt;
+
+/// Virtual time, measured in MicroBlaze clock cycles (the slow cores of the
+/// paper's 520-core prototype). ARM Cortex-A9 cores charge
+/// `cycles / arm_speedup` for the same work (Fig 7a: 7-8x difference).
+pub type Cycles = u64;
+
+/// A physical core in the simulated platform (0-based, schedulers and
+/// workers share the same namespace).
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Debug)]
+pub struct CoreId(pub u32);
+
+impl CoreId {
+    pub fn idx(self) -> usize {
+        self.0 as usize
+    }
+}
+
+impl fmt::Display for CoreId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "c{}", self.0)
+    }
+}
+
+/// A task instance. Ids are handed out by the platform in spawn order,
+/// which makes task-related logs and tie-breaking deterministic.
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Debug)]
+pub struct TaskId(pub u64);
+
+impl fmt::Display for TaskId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "t{}", self.0)
+    }
+}
+
+/// A memory region (`rid_t` in the paper's API, Fig 4). Region 0 is the
+/// default top-level root region.
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Debug)]
+pub struct RegionId(pub u64);
+
+impl RegionId {
+    pub const ROOT: RegionId = RegionId(0);
+}
+
+impl fmt::Display for RegionId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "r{}", self.0)
+    }
+}
+
+/// A heap object allocated by `sys_alloc`. The id doubles as the key into
+/// the backing store; its *address* in the global address space is separate
+/// (see `memory::addr`).
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Debug)]
+pub struct ObjectId(pub u64);
+
+impl fmt::Display for ObjectId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "o{}", self.0)
+    }
+}
+
+/// A node in the dependency forest: either a region or an object.
+/// Dependency queues, child counters and last-producer metadata hang off
+/// these (paper 5a/5b).
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Debug)]
+pub enum NodeId {
+    Region(RegionId),
+    Object(ObjectId),
+}
+
+impl NodeId {
+    pub fn as_region(self) -> Option<RegionId> {
+        match self {
+            NodeId::Region(r) => Some(r),
+            NodeId::Object(_) => None,
+        }
+    }
+
+    pub fn as_object(self) -> Option<ObjectId> {
+        match self {
+            NodeId::Object(o) => Some(o),
+            NodeId::Region(_) => None,
+        }
+    }
+
+    pub fn is_region(self) -> bool {
+        matches!(self, NodeId::Region(_))
+    }
+}
+
+impl fmt::Display for NodeId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            NodeId::Region(r) => write!(f, "{r}"),
+            NodeId::Object(o) => write!(f, "{o}"),
+        }
+    }
+}
+
+impl From<RegionId> for NodeId {
+    fn from(r: RegionId) -> Self {
+        NodeId::Region(r)
+    }
+}
+
+impl From<ObjectId> for NodeId {
+    fn from(o: ObjectId) -> Self {
+        NodeId::Object(o)
+    }
+}
+
+/// Request id used to match replies to reentrant pending operations inside
+/// a scheduler (the paper's "reentrant events with saved local state").
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Debug)]
+pub struct ReqId(pub u64);
+
+impl fmt::Display for ReqId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "q{}", self.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn node_id_conversions() {
+        let r: NodeId = RegionId(3).into();
+        let o: NodeId = ObjectId(7).into();
+        assert!(r.is_region());
+        assert!(!o.is_region());
+        assert_eq!(r.as_region(), Some(RegionId(3)));
+        assert_eq!(r.as_object(), None);
+        assert_eq!(o.as_object(), Some(ObjectId(7)));
+        assert_eq!(o.as_region(), None);
+    }
+
+    #[test]
+    fn display_forms() {
+        assert_eq!(CoreId(4).to_string(), "c4");
+        assert_eq!(TaskId(9).to_string(), "t9");
+        assert_eq!(NodeId::Region(RegionId(1)).to_string(), "r1");
+        assert_eq!(NodeId::Object(ObjectId(2)).to_string(), "o2");
+    }
+
+    #[test]
+    fn root_region_is_zero() {
+        assert_eq!(RegionId::ROOT, RegionId(0));
+    }
+}

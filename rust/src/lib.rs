@@ -1,0 +1,35 @@
+//! Myrmics: scalable, dependency-aware task scheduling on heterogeneous
+//! manycores — a full-system reproduction.
+//!
+//! See DESIGN.md for the architecture and EXPERIMENTS.md for the
+//! paper-vs-measured results. Top-level layout:
+//!
+//! * [`sim`], [`noc`] — the discrete-event simulator of the 520-core
+//!   prototype platform (mesh, messages, credits, DMA).
+//! * [`memory`], [`dep`], [`sched`], [`task`], [`api`] — the Myrmics
+//!   runtime itself (regions, slab allocation, dependency analysis,
+//!   hierarchical scheduling, the Fig-4 API).
+//! * [`mpi`] — the hand-tuned message-passing baseline on the same NoC.
+//! * [`apps`] — the paper's six benchmarks for both runtimes plus the
+//!   synthetic microbenchmarks.
+//! * [`runtime`] — the PJRT bridge executing AOT-compiled JAX/Pallas
+//!   kernels (real compute mode).
+//! * [`experiments`] — one harness per paper figure/table.
+
+pub mod api;
+pub mod apps;
+pub mod config;
+pub mod dep;
+pub mod experiments;
+pub mod fxmap;
+pub mod ids;
+pub mod memory;
+pub mod mpi;
+pub mod noc;
+pub mod platform;
+pub mod runtime;
+pub mod sched;
+pub mod sim;
+pub mod stats;
+pub mod task;
+pub mod testutil;

@@ -1,0 +1,75 @@
+//! The `myrmics` launcher: run paper experiments or individual benchmark
+//! simulations from the command line.
+
+use myrmics::experiments::bench::{run_mpi_bench, run_myrmics, BenchKind, Scaling};
+use myrmics::experiments::{cli, summarize};
+
+fn usage() -> ! {
+    eprintln!("myrmics — Myrmics runtime-system reproduction");
+    eprintln!();
+    eprintln!("USAGE:");
+    eprintln!("  myrmics exp [NAMES...] [--quick]   regenerate paper figures/tables");
+    eprintln!("  myrmics run <bench> [OPTS]         run one benchmark simulation");
+    eprintln!();
+    eprintln!("EXPERIMENTS: {}", cli::EXPERIMENTS.join(" "));
+    eprintln!("BENCHES:     jacobi raytrace bitonic kmeans matmul barnes-hut");
+    eprintln!();
+    eprintln!("run OPTS: --workers N (default 64)  --flat  --mpi  --weak");
+    std::process::exit(2)
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(|s| s.as_str()) {
+        Some("exp") => cli::run(&args[1..]),
+        Some("run") => {
+            let name = args.get(1).cloned().unwrap_or_else(|| usage());
+            let bench = BenchKind::all()
+                .into_iter()
+                .find(|b| b.name() == name)
+                .unwrap_or_else(|| usage());
+            let mut workers = 64usize;
+            let mut flat = false;
+            let mut mpi = false;
+            let mut weak = false;
+            let mut it = args[2..].iter();
+            while let Some(a) = it.next() {
+                match a.as_str() {
+                    "--workers" => {
+                        workers = it.next().and_then(|v| v.parse().ok()).unwrap_or_else(|| usage())
+                    }
+                    "--flat" => flat = true,
+                    "--mpi" => mpi = true,
+                    "--weak" => weak = true,
+                    _ => usage(),
+                }
+            }
+            if !bench.valid_workers(workers) {
+                eprintln!("{} does not support {} workers", bench.name(), workers);
+                std::process::exit(1);
+            }
+            let scaling = if weak { Scaling::Weak } else { Scaling::Strong };
+            let (t, eng) = if mpi {
+                run_mpi_bench(bench, workers, scaling)
+            } else {
+                run_myrmics(bench, workers, scaling, !flat, None)
+            };
+            let s = summarize(&eng, t);
+            println!(
+                "{} | {} workers ({} scheds) | {} cycles | tasks {} | worker task/rt/idle \
+                 {:.0}%/{:.0}%/{:.0}% | sched busy {:.1}% | balance {:.0}%",
+                bench.name(),
+                s.n_workers,
+                s.n_scheds,
+                t,
+                s.tasks_completed,
+                100.0 * s.worker_task_frac,
+                100.0 * s.worker_runtime_frac,
+                100.0 * s.worker_idle_frac,
+                100.0 * s.sched_busy_frac,
+                s.balance,
+            );
+        }
+        _ => usage(),
+    }
+}

@@ -1,0 +1,182 @@
+//! Global address space: 1-MB page trading between schedulers.
+//!
+//! "The allocator uses a slab size of 4 KB as the basic unit inside a
+//! scheduler ... and a 1-MB page size as the basic unit which schedulers
+//! trade free address ranges to implement a global address space"
+//! (paper V-C).
+//!
+//! The top-level scheduler logically owns the whole address space; child
+//! schedulers request pages from their parent when their local free-slab
+//! pool drains below the low watermark, and return pages above the high
+//! watermark. The *functional* side lives here; the message cost of a page
+//! request is charged by the memory API replay (see `api::ctx`).
+
+pub const PAGE_BYTES: u64 = 1 << 20;
+pub const SLAB_BYTES: u64 = 4096;
+pub const CACHE_LINE: u64 = 64;
+pub const SLABS_PER_PAGE: u64 = PAGE_BYTES / SLAB_BYTES;
+
+/// Hands out fresh 1-MB pages from the global address space. The space
+/// starts at a non-zero base so that address 0 stays an invalid pointer.
+#[derive(Clone, Debug)]
+pub struct GlobalPages {
+    next: u64,
+}
+
+impl Default for GlobalPages {
+    fn default() -> Self {
+        GlobalPages { next: PAGE_BYTES }
+    }
+}
+
+impl GlobalPages {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Allocate one fresh page; returns its base address.
+    pub fn take_page(&mut self) -> u64 {
+        let base = self.next;
+        self.next += PAGE_BYTES;
+        base
+    }
+
+    /// Total address space handed out so far.
+    pub fn handed_out(&self) -> u64 {
+        self.next - PAGE_BYTES
+    }
+}
+
+/// Per-scheduler pool of free 4-KB slabs, refilled a page at a time.
+#[derive(Clone, Debug, Default)]
+pub struct PagePool {
+    free_slabs: Vec<u64>,
+    /// Pages this scheduler has requested from its parent (statistics /
+    /// fragmentation accounting).
+    pub pages_held: u64,
+    /// Number of times this pool had to go to the parent for a page —
+    /// each one models a scheduler->parent round trip.
+    pub page_requests: u64,
+}
+
+impl PagePool {
+    /// Take one free slab, pulling a fresh page from the global allocator
+    /// if the pool is empty. Returns (slab base, had_to_request_page).
+    pub fn take_slab(&mut self, global: &mut GlobalPages) -> (u64, bool) {
+        if let Some(s) = self.free_slabs.pop() {
+            return (s, false);
+        }
+        let page = global.take_page();
+        self.pages_held += 1;
+        self.page_requests += 1;
+        // Carve the page into slabs; keep them in descending address order
+        // so allocation proceeds from the page base upwards.
+        for i in (1..SLABS_PER_PAGE).rev() {
+            self.free_slabs.push(page + i * SLAB_BYTES);
+        }
+        (page, true)
+    }
+
+    /// Return a slab to the pool (region freed or watermark trading).
+    pub fn give_slab(&mut self, base: u64) {
+        debug_assert_eq!(base % SLAB_BYTES, 0);
+        self.free_slabs.push(base);
+    }
+
+    /// Take `n` *contiguous* slabs (multi-slab allocations). Prefers a run
+    /// from the free pool; falls back to fresh pages (which are contiguous
+    /// by construction). Returns the base address of the run.
+    pub fn take_contiguous(&mut self, n: u64, global: &mut GlobalPages) -> u64 {
+        debug_assert!(n >= 1);
+        // Scan the free pool for an existing run.
+        self.free_slabs.sort_unstable();
+        let mut run_start = 0usize;
+        for i in 0..self.free_slabs.len() {
+            if i > run_start && self.free_slabs[i] != self.free_slabs[i - 1] + SLAB_BYTES {
+                run_start = i;
+            }
+            if (i - run_start + 1) as u64 == n {
+                let base = self.free_slabs[run_start];
+                self.free_slabs.drain(run_start..=i);
+                return base;
+            }
+        }
+        // No run available: take fresh, consecutive pages.
+        let pages = n.div_ceil(SLABS_PER_PAGE);
+        let base = global.take_page();
+        for p in 1..pages {
+            let next = global.take_page();
+            debug_assert_eq!(next, base + p * PAGE_BYTES, "global pages are sequential");
+        }
+        self.pages_held += pages;
+        self.page_requests += 1;
+        // Return the tail of the last page to the pool.
+        for i in n..pages * SLABS_PER_PAGE {
+            self.free_slabs.push(base + i * SLAB_BYTES);
+        }
+        base
+    }
+
+    pub fn free_slab_count(&self) -> usize {
+        self.free_slabs.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pages_are_disjoint_and_aligned() {
+        let mut g = GlobalPages::new();
+        let a = g.take_page();
+        let b = g.take_page();
+        assert_eq!(a % PAGE_BYTES, 0);
+        assert_eq!(b, a + PAGE_BYTES);
+        assert!(a > 0, "address 0 must stay invalid");
+        assert_eq!(g.handed_out(), 2 * PAGE_BYTES);
+    }
+
+    #[test]
+    fn pool_refills_from_global() {
+        let mut g = GlobalPages::new();
+        let mut p = PagePool::default();
+        let (s0, requested) = p.take_slab(&mut g);
+        assert!(requested);
+        assert_eq!(p.page_requests, 1);
+        assert_eq!(s0 % SLAB_BYTES, 0);
+        // The rest of the page is now pooled: 255 more slabs, no request.
+        for i in 1..SLABS_PER_PAGE {
+            let (s, req) = p.take_slab(&mut g);
+            assert!(!req, "slab {i} should come from the pool");
+            assert_eq!(s % SLAB_BYTES, 0);
+        }
+        // Page exhausted: next take requests again.
+        let (_, req) = p.take_slab(&mut g);
+        assert!(req);
+        assert_eq!(p.page_requests, 2);
+        assert_eq!(p.pages_held, 2);
+    }
+
+    #[test]
+    fn returned_slabs_are_reused() {
+        let mut g = GlobalPages::new();
+        let mut p = PagePool::default();
+        let (s, _) = p.take_slab(&mut g);
+        let before = p.free_slab_count();
+        p.give_slab(s);
+        assert_eq!(p.free_slab_count(), before + 1);
+        let (s2, req) = p.take_slab(&mut g);
+        assert!(!req);
+        assert_eq!(s2, s);
+    }
+
+    #[test]
+    fn slabs_within_page_ascend() {
+        let mut g = GlobalPages::new();
+        let mut p = PagePool::default();
+        let (first, _) = p.take_slab(&mut g);
+        let (second, _) = p.take_slab(&mut g);
+        assert_eq!(second, first + SLAB_BYTES);
+    }
+}

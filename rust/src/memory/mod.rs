@@ -1,0 +1,6 @@
+//! Region-based memory management over a global address space.
+pub mod addr;
+pub mod region;
+pub mod slab;
+pub mod store;
+pub mod trie;

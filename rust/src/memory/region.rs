@@ -1,0 +1,553 @@
+//! Regions, objects, and the distributed ownership map.
+//!
+//! Myrmics regions are dynamic, growable pools of memory containing
+//! objects and subregions (paper II). Metadata for each region lives on
+//! exactly one scheduler (its *owner*); owners are assigned on creation
+//! from the user's level hint ("vertical" placement) plus load balancing
+//! ("horizontal": the child scheduler with the lowest region load wins,
+//! paper V-C) and never migrate.
+//!
+//! The functional state is kept here in one place; ownership is respected
+//! by the scheduler logic, which only touches nodes it owns and crosses
+//! boundaries with explicit NoC messages (see `sched::scheduler`).
+
+use std::collections::BTreeMap;
+
+use crate::fxmap::FxHashMap;
+
+use crate::ids::{CoreId, NodeId, ObjectId, RegionId};
+use crate::memory::addr::{GlobalPages, PagePool};
+use crate::memory::slab::{size_class, SlabPool};
+use crate::memory::trie::Trie;
+use crate::noc::msg::ProducerRange;
+use crate::sched::hierarchy::HierarchyMap;
+
+#[derive(Debug)]
+pub struct Region {
+    pub id: RegionId,
+    pub parent: Option<RegionId>,
+    pub children: Vec<RegionId>,
+    pub objects: Vec<ObjectId>,
+    /// Owning scheduler index.
+    pub owner: usize,
+    pub level_hint: i32,
+    pub pool: SlabPool,
+}
+
+#[derive(Clone, Debug)]
+pub struct Object {
+    pub id: ObjectId,
+    pub region: RegionId,
+    pub addr: u64,
+    pub size: u64,
+    /// The worker core that last had write access (paper V-E: "the last
+    /// worker core which had write access to a specific address range").
+    pub last_producer: Option<CoreId>,
+}
+
+/// The global-address-space memory manager.
+pub struct Memory {
+    regions: FxHashMap<RegionId, Region>,
+    objects: FxHashMap<ObjectId, Object>,
+    next_rid: u64,
+    next_oid: u64,
+    pub global_pages: GlobalPages,
+    /// Per-scheduler page pools.
+    pub pools: Vec<PagePool>,
+    /// Regions owned per scheduler (the load-balance criterion).
+    pub region_load: Vec<u64>,
+    /// Region-id routing trie (rid -> owner scheduler index).
+    pub rid_owner: Trie<usize>,
+    /// Address -> object map for pack/locate (base address keyed).
+    addr_map: BTreeMap<u64, ObjectId>,
+}
+
+impl Memory {
+    /// Create the memory manager with the root region owned by the
+    /// top-level scheduler.
+    pub fn new(n_scheds: usize) -> Self {
+        let mut m = Memory {
+            regions: FxHashMap::default(),
+            objects: FxHashMap::default(),
+            next_rid: 1,
+            next_oid: 1,
+            global_pages: GlobalPages::new(),
+            pools: (0..n_scheds).map(|_| PagePool::default()).collect(),
+            region_load: vec![0; n_scheds],
+            rid_owner: Trie::new(),
+            addr_map: BTreeMap::new(),
+        };
+        m.regions.insert(
+            RegionId::ROOT,
+            Region {
+                id: RegionId::ROOT,
+                parent: None,
+                children: Vec::new(),
+                objects: Vec::new(),
+                owner: 0,
+                level_hint: 0,
+                pool: SlabPool::new(),
+            },
+        );
+        m.rid_owner.insert(0, 0);
+        m.region_load[0] += 1;
+        m
+    }
+
+    pub fn region(&self, r: RegionId) -> &Region {
+        self.regions.get(&r).unwrap_or_else(|| panic!("no region {r}"))
+    }
+
+    pub fn region_mut(&mut self, r: RegionId) -> &mut Region {
+        self.regions.get_mut(&r).unwrap_or_else(|| panic!("no region {r}"))
+    }
+
+    pub fn object(&self, o: ObjectId) -> &Object {
+        self.objects.get(&o).unwrap_or_else(|| panic!("no object {o}"))
+    }
+
+    pub fn object_mut(&mut self, o: ObjectId) -> &mut Object {
+        self.objects.get_mut(&o).unwrap_or_else(|| panic!("no object {o}"))
+    }
+
+    pub fn exists(&self, n: NodeId) -> bool {
+        match n {
+            NodeId::Region(r) => self.regions.contains_key(&r),
+            NodeId::Object(o) => self.objects.contains_key(&o),
+        }
+    }
+
+    /// Owning scheduler index of a node.
+    pub fn owner(&self, n: NodeId) -> usize {
+        match n {
+            NodeId::Region(r) => self.region(r).owner,
+            NodeId::Object(o) => self.region(self.object(o).region).owner,
+        }
+    }
+
+    /// `sys_ralloc`: create a region under `parent` with a level hint.
+    /// Owner: start from the parent region's owner and descend while the
+    /// hint asks for a deeper level, picking the least-loaded child.
+    pub fn ralloc(&mut self, parent: RegionId, lvl: i32, hier: &HierarchyMap) -> RegionId {
+        let powner = self.region(parent).owner;
+        let mut owner = powner;
+        while (hier.level_of[owner] as i32) < lvl && !hier.children[owner].is_empty() {
+            owner = hier.children[owner]
+                .iter()
+                .copied()
+                .min_by_key(|&c| (self.region_load[c], c))
+                .unwrap();
+        }
+        let id = RegionId(self.next_rid);
+        self.next_rid += 1;
+        self.regions.insert(
+            id,
+            Region {
+                id,
+                parent: Some(parent),
+                children: Vec::new(),
+                objects: Vec::new(),
+                owner,
+                level_hint: lvl,
+                pool: SlabPool::new(),
+            },
+        );
+        self.region_mut(parent).children.push(id);
+        self.region_load[owner] += 1;
+        self.rid_owner.insert(id.0, owner);
+        id
+    }
+
+    /// `sys_alloc`: allocate `size` bytes in region `r`.
+    pub fn alloc(&mut self, size: u64, r: RegionId) -> ObjectId {
+        let owner = self.region(r).owner;
+        let id = ObjectId(self.next_oid);
+        self.next_oid += 1;
+        let region = self.regions.get_mut(&r).expect("alloc in dead region");
+        let addr = region.pool.alloc(size, &mut self.pools[owner], &mut self.global_pages);
+        region.objects.push(id);
+        self.objects.insert(id, Object { id, region: r, addr, size, last_producer: None });
+        self.addr_map.insert(addr, id);
+        id
+    }
+
+    /// `sys_balloc`: bulk-allocate `n` same-sized objects (packed).
+    pub fn balloc(&mut self, size: u64, r: RegionId, n: usize) -> Vec<ObjectId> {
+        (0..n).map(|_| self.alloc(size, r)).collect()
+    }
+
+    /// `sys_free`.
+    pub fn free(&mut self, o: ObjectId) -> bool {
+        let Some(obj) = self.objects.remove(&o) else { return false };
+        self.addr_map.remove(&obj.addr);
+        let owner = self.region(obj.region).owner;
+        let region = self.regions.get_mut(&obj.region).expect("object region missing");
+        region.objects.retain(|&x| x != o);
+        region.pool.free(obj.addr, &mut self.pools[owner]);
+        true
+    }
+
+    /// `sys_realloc`: move/resize an object, possibly to a new region.
+    pub fn realloc(&mut self, o: ObjectId, new_size: u64, new_r: RegionId) -> u64 {
+        let (old_region, old_addr, producer) = {
+            let obj = self.object(o);
+            (obj.region, obj.addr, obj.last_producer)
+        };
+        let old_owner = self.region(old_region).owner;
+        self.addr_map.remove(&old_addr);
+        let reg = self.regions.get_mut(&old_region).expect("realloc old region");
+        reg.pool.free(old_addr, &mut self.pools[old_owner]);
+        reg.objects.retain(|&x| x != o);
+
+        let new_owner = self.region(new_r).owner;
+        let reg = self.regions.get_mut(&new_r).expect("realloc new region");
+        let addr = reg.pool.alloc(new_size, &mut self.pools[new_owner], &mut self.global_pages);
+        reg.objects.push(o);
+        self.objects
+            .insert(o, Object { id: o, region: new_r, addr, size: new_size, last_producer: producer });
+        self.addr_map.insert(addr, o);
+        addr
+    }
+
+    /// `sys_rfree`: recursively destroy a region, its objects and children.
+    /// Returns every node that was destroyed (so dependency metadata can be
+    /// torn down too).
+    pub fn rfree(&mut self, r: RegionId) -> Vec<NodeId> {
+        assert_ne!(r, RegionId::ROOT, "cannot free the root region");
+        let mut destroyed = Vec::new();
+        self.rfree_rec(r, &mut destroyed);
+        if let Some(parent) = self.regions.get(&r).and_then(|x| x.parent) {
+            let _ = parent;
+        }
+        destroyed
+    }
+
+    fn rfree_rec(&mut self, r: RegionId, out: &mut Vec<NodeId>) {
+        let Some(mut region) = self.regions.remove(&r) else { return };
+        // Unlink from parent.
+        if let Some(p) = region.parent {
+            if let Some(parent) = self.regions.get_mut(&p) {
+                parent.children.retain(|&c| c != r);
+            }
+        }
+        for c in region.children.clone() {
+            self.rfree_rec(c, out);
+        }
+        for o in region.objects.clone() {
+            if let Some(obj) = self.objects.remove(&o) {
+                self.addr_map.remove(&obj.addr);
+                out.push(NodeId::Object(o));
+            }
+        }
+        region.pool.release_all(&mut self.pools[region.owner]);
+        self.region_load[region.owner] = self.region_load[region.owner].saturating_sub(1);
+        self.rid_owner.remove(r.0);
+        out.push(NodeId::Region(r));
+    }
+
+    /// Region an object belongs to; a region maps to itself.
+    pub fn region_of(&self, n: NodeId) -> RegionId {
+        match n {
+            NodeId::Region(r) => r,
+            NodeId::Object(o) => self.object(o).region,
+        }
+    }
+
+    /// The parent node in the region tree (an object's parent is its
+    /// region; a region's parent is its parent region).
+    pub fn parent_of(&self, n: NodeId) -> Option<NodeId> {
+        match n {
+            NodeId::Object(o) => Some(NodeId::Region(self.object(o).region)),
+            NodeId::Region(r) => self.region(r).parent.map(NodeId::Region),
+        }
+    }
+
+    /// Chain `[anchor, ..., target]` walking region parents up from
+    /// `target`; `None` if `anchor` is not an ancestor-or-self of `target`.
+    pub fn path_down(&self, anchor: NodeId, target: NodeId) -> Option<Vec<NodeId>> {
+        let mut chain = vec![target];
+        let mut cur = target;
+        while cur != anchor {
+            cur = self.parent_of(cur)?;
+            chain.push(cur);
+        }
+        chain.reverse();
+        Some(chain)
+    }
+
+    /// Record `worker` as last producer of every object under `n`.
+    pub fn set_producer(&mut self, n: NodeId, worker: CoreId) {
+        match n {
+            NodeId::Object(o) => self.object_mut(o).last_producer = Some(worker),
+            NodeId::Region(r) => {
+                let (objs, kids) = {
+                    let reg = self.region(r);
+                    (reg.objects.clone(), reg.children.clone())
+                };
+                for o in objs {
+                    self.object_mut(o).last_producer = Some(worker);
+                }
+                for k in kids {
+                    self.set_producer(NodeId::Region(k), worker);
+                }
+            }
+        }
+    }
+
+    /// Pack the portion of `n`'s subtree owned by `n`'s owner: returns the
+    /// coalesced local ranges plus the roots of subregions owned by other
+    /// schedulers (each continues as a remote PackReq).
+    pub fn collect_pack(&self, n: NodeId) -> (Vec<ProducerRange>, Vec<RegionId>) {
+        let mut raw: Vec<(u64, u64, Option<CoreId>)> = Vec::new();
+        let mut remote = Vec::new();
+        match n {
+            NodeId::Object(o) => {
+                let obj = self.object(o);
+                raw.push((obj.addr, size_class(obj.size), obj.last_producer));
+            }
+            NodeId::Region(r) => {
+                let owner = self.region(r).owner;
+                self.collect_region(r, owner, &mut raw, &mut remote);
+            }
+        }
+        (coalesce(raw), remote)
+    }
+
+    fn collect_region(
+        &self,
+        r: RegionId,
+        owner: usize,
+        raw: &mut Vec<(u64, u64, Option<CoreId>)>,
+        remote: &mut Vec<RegionId>,
+    ) {
+        let reg = self.region(r);
+        for &o in &reg.objects {
+            let obj = self.object(o);
+            raw.push((obj.addr, size_class(obj.size), obj.last_producer));
+        }
+        for &c in &reg.children {
+            if self.region(c).owner == owner {
+                self.collect_region(c, owner, raw, remote);
+            } else {
+                remote.push(c);
+            }
+        }
+    }
+
+    /// Number of live regions (including the root).
+    pub fn n_regions(&self) -> usize {
+        self.regions.len()
+    }
+
+    pub fn n_objects(&self) -> usize {
+        self.objects.len()
+    }
+
+    /// Object whose allocation contains `addr`, if any.
+    pub fn object_at(&self, addr: u64) -> Option<ObjectId> {
+        let (_, &oid) = self.addr_map.range(..=addr).next_back()?;
+        let obj = self.object(oid);
+        (addr < obj.addr + size_class(obj.size)).then_some(oid)
+    }
+
+    /// Total bytes of a node's subtree (object sizes, class-rounded).
+    pub fn footprint(&self, n: NodeId) -> u64 {
+        match n {
+            NodeId::Object(o) => size_class(self.object(o).size),
+            NodeId::Region(r) => {
+                let reg = self.region(r);
+                reg.objects.iter().map(|&o| size_class(self.object(o).size)).sum::<u64>()
+                    + reg.children.iter().map(|&c| self.footprint(NodeId::Region(c))).sum::<u64>()
+            }
+        }
+    }
+}
+
+/// Merge adjacent ranges with the same producer (sorted by address).
+fn coalesce(mut raw: Vec<(u64, u64, Option<CoreId>)>) -> Vec<ProducerRange> {
+    raw.sort_unstable_by_key(|&(a, _, _)| a);
+    let mut out: Vec<ProducerRange> = Vec::new();
+    for (addr, bytes, prod) in raw {
+        let Some(p) = prod else { continue }; // never-produced: no transfer source
+        if let Some(last) = out.last_mut() {
+            if last.producer == p && last.addr + last.bytes == addr {
+                last.bytes += bytes;
+                continue;
+            }
+        }
+        out.push(ProducerRange { producer: p, addr, bytes });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::HierarchySpec;
+
+    fn hier2() -> HierarchyMap {
+        HierarchyMap::build(32, &HierarchySpec::two_level(2))
+    }
+
+    #[test]
+    fn ralloc_assigns_owner_by_level_and_load() {
+        let h = hier2();
+        let mut m = Memory::new(h.n_scheds);
+        // Level 0: stays at the top scheduler.
+        let top_r = m.ralloc(RegionId::ROOT, 0, &h);
+        assert_eq!(m.region(top_r).owner, 0);
+        // Level 1: descends to the least-loaded leaf (index 1 first).
+        let r1 = m.ralloc(RegionId::ROOT, 1, &h);
+        assert_eq!(m.region(r1).owner, 1);
+        // Next level-1 region balances to the other leaf.
+        let r2 = m.ralloc(RegionId::ROOT, 1, &h);
+        assert_eq!(m.region(r2).owner, 2);
+        // Routing trie agrees.
+        assert_eq!(m.rid_owner.get(r1.0), Some(&1));
+        assert_eq!(m.rid_owner.get(r2.0), Some(&2));
+    }
+
+    #[test]
+    fn objects_live_in_their_region() {
+        let h = hier2();
+        let mut m = Memory::new(h.n_scheds);
+        let r = m.ralloc(RegionId::ROOT, 1, &h);
+        let o = m.alloc(256, r);
+        assert_eq!(m.object(o).region, r);
+        assert_eq!(m.owner(NodeId::Object(o)), m.region(r).owner);
+        assert_eq!(m.object_at(m.object(o).addr), Some(o));
+        assert_eq!(m.object_at(m.object(o).addr + 100), Some(o));
+    }
+
+    #[test]
+    fn balloc_packs_contiguously() {
+        let h = hier2();
+        let mut m = Memory::new(h.n_scheds);
+        let r = m.ralloc(RegionId::ROOT, 1, &h);
+        let objs = m.balloc(64, r, 32);
+        let addrs: Vec<u64> = objs.iter().map(|&o| m.object(o).addr).collect();
+        for w in addrs.windows(2) {
+            assert_eq!(w[1], w[0] + 64, "bulk objects should pack into the slab");
+        }
+    }
+
+    #[test]
+    fn path_down_and_parents() {
+        let h = hier2();
+        let mut m = Memory::new(h.n_scheds);
+        let a = m.ralloc(RegionId::ROOT, 0, &h);
+        let b = m.ralloc(a, 1, &h);
+        let o = m.alloc(64, b);
+        let path = m
+            .path_down(NodeId::Region(a), NodeId::Object(o))
+            .expect("a is an ancestor of o");
+        assert_eq!(path, vec![NodeId::Region(a), NodeId::Region(b), NodeId::Object(o)]);
+        // Non-ancestor anchor.
+        let c = m.ralloc(RegionId::ROOT, 0, &h);
+        assert!(m.path_down(NodeId::Region(c), NodeId::Object(o)).is_none());
+    }
+
+    #[test]
+    fn rfree_destroys_subtree() {
+        let h = hier2();
+        let mut m = Memory::new(h.n_scheds);
+        let a = m.ralloc(RegionId::ROOT, 0, &h);
+        let b = m.ralloc(a, 1, &h);
+        let o1 = m.alloc(64, a);
+        let o2 = m.alloc(64, b);
+        let destroyed = m.rfree(a);
+        assert_eq!(destroyed.len(), 4); // o1, o2, b, a
+        assert!(destroyed.contains(&NodeId::Object(o1)));
+        assert!(destroyed.contains(&NodeId::Object(o2)));
+        assert!(destroyed.contains(&NodeId::Region(b)));
+        assert!(!m.exists(NodeId::Region(a)));
+        assert!(!m.exists(NodeId::Object(o2)));
+        assert!(!m.region(RegionId::ROOT).children.contains(&a));
+    }
+
+    #[test]
+    fn pack_coalesces_by_producer() {
+        let h = hier2();
+        let mut m = Memory::new(h.n_scheds);
+        let r = m.ralloc(RegionId::ROOT, 1, &h);
+        let objs = m.balloc(64, r, 8);
+        // First 4 produced by worker c10, next 4 by c11.
+        for &o in &objs[..4] {
+            m.object_mut(o).last_producer = Some(CoreId(10));
+        }
+        for &o in &objs[4..] {
+            m.object_mut(o).last_producer = Some(CoreId(11));
+        }
+        let (ranges, remote) = m.collect_pack(NodeId::Region(r));
+        assert!(remote.is_empty());
+        assert_eq!(ranges.len(), 2);
+        assert_eq!(ranges[0].bytes, 256);
+        assert_eq!(ranges[0].producer, CoreId(10));
+        assert_eq!(ranges[1].bytes, 256);
+        assert_eq!(ranges[1].producer, CoreId(11));
+    }
+
+    #[test]
+    fn pack_reports_remote_subregions() {
+        let h = hier2();
+        let mut m = Memory::new(h.n_scheds);
+        // Parent owned by top (level 0); child forced to a leaf (level 1).
+        let a = m.ralloc(RegionId::ROOT, 0, &h);
+        let b = m.ralloc(a, 1, &h);
+        assert_ne!(m.region(a).owner, m.region(b).owner);
+        m.alloc(64, a);
+        let (_, remote) = m.collect_pack(NodeId::Region(a));
+        assert_eq!(remote, vec![b]);
+    }
+
+    #[test]
+    fn set_producer_recurses() {
+        let h = hier2();
+        let mut m = Memory::new(h.n_scheds);
+        let a = m.ralloc(RegionId::ROOT, 0, &h);
+        let b = m.ralloc(a, 1, &h);
+        let o1 = m.alloc(64, a);
+        let o2 = m.alloc(64, b);
+        m.set_producer(NodeId::Region(a), CoreId(42));
+        assert_eq!(m.object(o1).last_producer, Some(CoreId(42)));
+        assert_eq!(m.object(o2).last_producer, Some(CoreId(42)));
+    }
+
+    #[test]
+    fn footprint_rounds_to_class() {
+        let h = hier2();
+        let mut m = Memory::new(h.n_scheds);
+        let r = m.ralloc(RegionId::ROOT, 0, &h);
+        m.alloc(100, r); // class 128
+        m.alloc(64, r);
+        assert_eq!(m.footprint(NodeId::Region(r)), 192);
+    }
+
+    #[test]
+    fn never_produced_ranges_do_not_transfer() {
+        let h = hier2();
+        let mut m = Memory::new(h.n_scheds);
+        let r = m.ralloc(RegionId::ROOT, 0, &h);
+        m.alloc(64, r);
+        let (ranges, _) = m.collect_pack(NodeId::Region(r));
+        assert!(ranges.is_empty(), "unproduced data needs no DMA source");
+    }
+
+    #[test]
+    fn realloc_moves_object() {
+        let h = hier2();
+        let mut m = Memory::new(h.n_scheds);
+        let r1 = m.ralloc(RegionId::ROOT, 1, &h);
+        let r2 = m.ralloc(RegionId::ROOT, 1, &h);
+        let o = m.alloc(64, r1);
+        m.object_mut(o).last_producer = Some(CoreId(9));
+        let new_addr = m.realloc(o, 256, r2);
+        let obj = m.object(o);
+        assert_eq!(obj.region, r2);
+        assert_eq!(obj.addr, new_addr);
+        assert_eq!(obj.size, 256);
+        assert_eq!(obj.last_producer, Some(CoreId(9)), "producer survives realloc");
+        assert!(m.region(r2).objects.contains(&o));
+        assert!(!m.region(r1).objects.contains(&o));
+    }
+}

@@ -1,0 +1,304 @@
+//! Per-region slab allocator.
+//!
+//! "We use a new slab pool to build each local region when it is created.
+//! Packing region objects in dedicated slabs helps to isolate them from
+//! other regions and to enable communication on slab-based quantities ...
+//! The underlying slab allocator manages the dynamic allocation and
+//! freeing of memory objects of any size organized in packed groups of
+//! same-sized objects. We tune the slab allocator to the size of the 64-B
+//! cache lines" (paper V-C).
+//!
+//! Every region owns a [`SlabPool`]. Objects are rounded up to a multiple
+//! of the cache line and packed into 4-KB slabs of the same size class;
+//! objects larger than a slab take a run of contiguous slabs. Keeping a
+//! region's objects packed is what later makes packing produce few,
+//! large, coalesced ranges (paper V-E).
+
+use std::collections::BTreeMap;
+
+use crate::memory::addr::{GlobalPages, PagePool, CACHE_LINE, SLAB_BYTES};
+
+/// One 4-KB slab serving a single size class.
+#[derive(Clone, Debug)]
+struct Slab {
+    base: u64,
+    /// Rounded object size this slab serves.
+    class: u64,
+    /// Occupancy bitmap; slot `i` covers `base + i*class`.
+    used: u64,
+    n_slots: u32,
+}
+
+impl Slab {
+    fn new(base: u64, class: u64) -> Self {
+        let n_slots = (SLAB_BYTES / class).min(64) as u32;
+        Slab { base, class, used: 0, n_slots }
+    }
+
+    fn full(&self) -> bool {
+        self.used.count_ones() == self.n_slots
+    }
+
+    fn empty(&self) -> bool {
+        self.used == 0
+    }
+
+    fn alloc(&mut self) -> Option<u64> {
+        for i in 0..self.n_slots {
+            if self.used & (1 << i) == 0 {
+                self.used |= 1 << i;
+                return Some(self.base + i as u64 * self.class);
+            }
+        }
+        None
+    }
+
+    fn free(&mut self, addr: u64) -> bool {
+        if addr < self.base || addr >= self.base + SLAB_BYTES {
+            return false;
+        }
+        let off = addr - self.base;
+        if off % self.class != 0 {
+            return false;
+        }
+        let i = off / self.class;
+        if i >= self.n_slots as u64 || self.used & (1 << i) == 0 {
+            return false;
+        }
+        self.used &= !(1 << i);
+        true
+    }
+}
+
+/// A region's allocator: slabs grouped by size class plus big multi-slab
+/// allocations.
+#[derive(Clone, Debug, Default)]
+pub struct SlabPool {
+    /// slab base -> slab, for address-based free.
+    slabs: BTreeMap<u64, Slab>,
+    /// size class -> bases of slabs with free slots.
+    open: BTreeMap<u64, Vec<u64>>,
+    /// Large allocations: base -> (bytes, slab run length).
+    big: BTreeMap<u64, (u64, u64)>,
+    pub allocated_bytes: u64,
+    pub requested_bytes: u64,
+}
+
+/// Round a request up to the cache-line multiple (the slab size class).
+pub fn size_class(size: u64) -> u64 {
+    size.max(1).div_ceil(CACHE_LINE) * CACHE_LINE
+}
+
+impl SlabPool {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Allocate `size` bytes. Returns the address. `pool`/`global` supply
+    /// fresh slabs when needed.
+    pub fn alloc(&mut self, size: u64, pool: &mut PagePool, global: &mut GlobalPages) -> u64 {
+        let class = size_class(size);
+        self.requested_bytes += size;
+        self.allocated_bytes += class;
+        if class > SLAB_BYTES {
+            // Multi-slab allocation: a contiguous run from the page pool.
+            let n = class.div_ceil(SLAB_BYTES);
+            let base = pool.take_contiguous(n, global);
+            self.big.insert(base, (class, n));
+            return base;
+        }
+        if let Some(bases) = self.open.get_mut(&class) {
+            while let Some(&b) = bases.last() {
+                let slab = self.slabs.get_mut(&b).expect("open slab missing");
+                if let Some(addr) = slab.alloc() {
+                    if slab.full() {
+                        bases.pop();
+                    }
+                    return addr;
+                }
+                bases.pop();
+            }
+        }
+        let (base, _) = pool.take_slab(global);
+        let mut slab = Slab::new(base, class);
+        let addr = slab.alloc().expect("fresh slab must have a slot");
+        let full = slab.full();
+        self.slabs.insert(base, slab);
+        if !full {
+            self.open.entry(class).or_default().push(base);
+        }
+        addr
+    }
+
+    /// Free the allocation at `addr`. Empty slabs return to the page pool
+    /// (the paper's watermark-based slab trading between regions).
+    /// Returns false if the address was not live.
+    pub fn free(&mut self, addr: u64, pool: &mut PagePool) -> bool {
+        if let Some((class, n)) = self.big.remove(&addr) {
+            self.allocated_bytes -= class;
+            for i in 0..n {
+                pool.give_slab(addr + i * SLAB_BYTES);
+            }
+            return true;
+        }
+        let slab_base = addr - addr % SLAB_BYTES;
+        let Some(slab) = self.slabs.get_mut(&slab_base) else { return false };
+        let class = slab.class;
+        if !slab.free(addr) {
+            return false;
+        }
+        self.allocated_bytes -= class;
+        if slab.empty() {
+            self.slabs.remove(&slab_base);
+            if let Some(open) = self.open.get_mut(&class) {
+                open.retain(|&b| b != slab_base);
+            }
+            pool.give_slab(slab_base);
+        } else if let Some(open) = self.open.get_mut(&class) {
+            if !open.contains(&slab_base) {
+                open.push(slab_base);
+            }
+        } else {
+            self.open.entry(class).or_default().push(slab_base);
+        }
+        true
+    }
+
+    /// Release every slab back to the page pool (region destruction).
+    pub fn release_all(&mut self, pool: &mut PagePool) {
+        for (&base, _) in std::mem::take(&mut self.slabs).iter() {
+            pool.give_slab(base);
+        }
+        for (&base, &(_, n)) in std::mem::take(&mut self.big).iter() {
+            for i in 0..n {
+                pool.give_slab(base + i * SLAB_BYTES);
+            }
+        }
+        self.open.clear();
+        self.allocated_bytes = 0;
+    }
+
+    /// Bytes held in slabs vs bytes actually allocated — the external
+    /// fragmentation the paper trades for locality.
+    pub fn fragmentation(&self) -> f64 {
+        let held =
+            self.slabs.len() as u64 * SLAB_BYTES + self.big.values().map(|&(c, _)| c).sum::<u64>();
+        if held == 0 {
+            0.0
+        } else {
+            1.0 - self.allocated_bytes as f64 / held as f64
+        }
+    }
+
+    pub fn n_slabs(&self) -> usize {
+        self.slabs.len() + self.big.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn setup() -> (SlabPool, PagePool, GlobalPages) {
+        (SlabPool::new(), PagePool::default(), GlobalPages::new())
+    }
+
+    #[test]
+    fn size_classes_are_line_multiples() {
+        assert_eq!(size_class(1), 64);
+        assert_eq!(size_class(64), 64);
+        assert_eq!(size_class(65), 128);
+        assert_eq!(size_class(4096), 4096);
+        assert_eq!(size_class(0), 64);
+    }
+
+    #[test]
+    fn same_class_objects_pack_into_one_slab() {
+        let (mut s, mut p, mut g) = setup();
+        let addrs: Vec<u64> = (0..64).map(|_| s.alloc(64, &mut p, &mut g)).collect();
+        // 64 * 64B = 4096: exactly one slab.
+        assert_eq!(s.n_slabs(), 1);
+        // All addresses distinct and contiguous within the slab.
+        let base = addrs.iter().copied().min().unwrap();
+        let mut sorted = addrs.clone();
+        sorted.sort_unstable();
+        for (i, a) in sorted.iter().enumerate() {
+            assert_eq!(*a, base + i as u64 * 64);
+        }
+        // 65th allocation opens a second slab.
+        s.alloc(64, &mut p, &mut g);
+        assert_eq!(s.n_slabs(), 2);
+    }
+
+    #[test]
+    fn free_and_reuse() {
+        let (mut s, mut p, mut g) = setup();
+        let a = s.alloc(100, &mut p, &mut g);
+        assert!(s.free(a, &mut p));
+        assert!(!s.free(a, &mut p), "double free must fail");
+        let b = s.alloc(100, &mut p, &mut g);
+        assert_eq!(a, b, "freed slot should be reused");
+    }
+
+    #[test]
+    fn big_objects_span_slabs() {
+        let (mut s, mut p, mut g) = setup();
+        let a = s.alloc(10_000, &mut p, &mut g);
+        assert_eq!(a % SLAB_BYTES, 0);
+        assert!(s.free(a, &mut p));
+        assert_eq!(s.allocated_bytes, 0);
+    }
+
+    #[test]
+    fn empty_slab_returns_to_pool() {
+        let (mut s, mut p, mut g) = setup();
+        let a = s.alloc(64, &mut p, &mut g);
+        let free_before = p.free_slab_count();
+        s.free(a, &mut p);
+        assert_eq!(p.free_slab_count(), free_before + 1);
+        assert_eq!(s.n_slabs(), 0);
+    }
+
+    #[test]
+    fn fragmentation_accounting() {
+        let (mut s, mut p, mut g) = setup();
+        assert_eq!(s.fragmentation(), 0.0);
+        s.alloc(64, &mut p, &mut g);
+        // One 64-B object holds a whole 4-KB slab: high fragmentation.
+        assert!(s.fragmentation() > 0.9);
+        for _ in 0..63 {
+            s.alloc(64, &mut p, &mut g);
+        }
+        assert_eq!(s.fragmentation(), 0.0);
+    }
+
+    #[test]
+    fn release_all_returns_everything() {
+        let (mut s, mut p, mut g) = setup();
+        for i in 0..100 {
+            s.alloc(64 + (i % 5) * 64, &mut p, &mut g);
+        }
+        let n = s.n_slabs();
+        assert!(n > 0);
+        let before = p.free_slab_count();
+        s.release_all(&mut p);
+        assert!(p.free_slab_count() >= before + n);
+        assert_eq!(s.n_slabs(), 0);
+        assert_eq!(s.allocated_bytes, 0);
+    }
+
+    #[test]
+    fn mixed_classes_do_not_collide() {
+        let (mut s, mut p, mut g) = setup();
+        let mut addrs = Vec::new();
+        for i in 0..200u64 {
+            let sz = 1 + (i * 37) % 300;
+            addrs.push((s.alloc(sz, &mut p, &mut g), size_class(sz)));
+        }
+        // No two allocations overlap.
+        addrs.sort_unstable();
+        for w in addrs.windows(2) {
+            assert!(w[0].0 + w[0].1 <= w[1].0, "overlap between {:?} and {:?}", w[0], w[1]);
+        }
+    }
+}

@@ -1,0 +1,106 @@
+//! Backing byte store for real-compute objects.
+//!
+//! The simulator models where data *lives* (last producers, DMA volumes)
+//! separately from what data *is*. When a benchmark runs in `Real` compute
+//! mode, task bodies read and write actual bytes here and the L1/L2 PJRT
+//! kernels operate on them; in `Modeled` mode the store stays empty.
+
+use std::collections::HashMap;
+
+use crate::ids::ObjectId;
+
+#[derive(Default, Debug)]
+pub struct DataStore {
+    bytes: HashMap<ObjectId, Vec<u8>>,
+}
+
+impl DataStore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn put(&mut self, o: ObjectId, data: Vec<u8>) {
+        self.bytes.insert(o, data);
+    }
+
+    pub fn get(&self, o: ObjectId) -> Option<&[u8]> {
+        self.bytes.get(&o).map(|v| v.as_slice())
+    }
+
+    pub fn get_mut(&mut self, o: ObjectId) -> Option<&mut Vec<u8>> {
+        self.bytes.get_mut(&o)
+    }
+
+    pub fn remove(&mut self, o: ObjectId) {
+        self.bytes.remove(&o);
+    }
+
+    pub fn put_f32(&mut self, o: ObjectId, data: &[f32]) {
+        let mut v = Vec::with_capacity(data.len() * 4);
+        for x in data {
+            v.extend_from_slice(&x.to_le_bytes());
+        }
+        self.bytes.insert(o, v);
+    }
+
+    pub fn get_f32(&self, o: ObjectId) -> Option<Vec<f32>> {
+        let b = self.bytes.get(&o)?;
+        Some(b.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
+    }
+
+    pub fn put_u32(&mut self, o: ObjectId, data: &[u32]) {
+        let mut v = Vec::with_capacity(data.len() * 4);
+        for x in data {
+            v.extend_from_slice(&x.to_le_bytes());
+        }
+        self.bytes.insert(o, v);
+    }
+
+    pub fn get_u32(&self, o: ObjectId) -> Option<Vec<u32>> {
+        let b = self.bytes.get(&o)?;
+        Some(b.chunks_exact(4).map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
+    }
+
+    pub fn len(&self) -> usize {
+        self.bytes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.bytes.is_empty()
+    }
+
+    pub fn total_bytes(&self) -> usize {
+        self.bytes.values().map(|v| v.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_roundtrip() {
+        let mut s = DataStore::new();
+        let data = vec![1.5f32, -2.25, 0.0, f32::MAX];
+        s.put_f32(ObjectId(1), &data);
+        assert_eq!(s.get_f32(ObjectId(1)), Some(data));
+        assert_eq!(s.get_f32(ObjectId(2)), None);
+    }
+
+    #[test]
+    fn u32_roundtrip() {
+        let mut s = DataStore::new();
+        s.put_u32(ObjectId(3), &[7, 0, u32::MAX]);
+        assert_eq!(s.get_u32(ObjectId(3)), Some(vec![7, 0, u32::MAX]));
+    }
+
+    #[test]
+    fn raw_bytes_and_remove() {
+        let mut s = DataStore::new();
+        s.put(ObjectId(1), vec![1, 2, 3]);
+        assert_eq!(s.get(ObjectId(1)), Some(&[1u8, 2, 3][..]));
+        assert_eq!(s.total_bytes(), 3);
+        s.remove(ObjectId(1));
+        assert!(s.is_empty());
+    }
+}

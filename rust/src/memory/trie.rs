@@ -1,0 +1,323 @@
+//! Compressed binary trie over `u64` keys.
+//!
+//! "Schedulers use tries to track which region IDs and address ranges
+//! belong to which children schedulers" (paper V-C). This is that
+//! structure: a path-compressed radix tree with O(word) lookup,
+//! insert and remove, plus a predecessor query used to resolve interior
+//! addresses to the object that contains them.
+
+/// A path-compressed binary trie mapping `u64` keys to values.
+#[derive(Clone, Debug)]
+pub struct Trie<V> {
+    root: Option<Box<Node<V>>>,
+    len: usize,
+}
+
+#[derive(Clone, Debug)]
+enum Node<V> {
+    Leaf {
+        key: u64,
+        val: V,
+    },
+    /// Inner node: all keys below share `prefix` in the bits above `bit`;
+    /// `bit` is the discriminating bit index (0 = LSB).
+    Inner {
+        prefix: u64,
+        bit: u32,
+        left: Box<Node<V>>,
+        right: Box<Node<V>>,
+    },
+}
+
+fn mask_above(bit: u32) -> u64 {
+    // Bits strictly above `bit`.
+    if bit >= 63 {
+        0
+    } else {
+        !0u64 << (bit + 1)
+    }
+}
+
+impl<V> Node<V> {
+    fn any_key(&self) -> u64 {
+        match self {
+            Node::Leaf { key, .. } => *key,
+            Node::Inner { prefix, .. } => *prefix,
+        }
+    }
+}
+
+impl<V> Default for Trie<V> {
+    fn default() -> Self {
+        Trie { root: None, len: 0 }
+    }
+}
+
+impl<V> Trie<V> {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn insert(&mut self, key: u64, val: V) -> Option<V> {
+        match self.root.take() {
+            None => {
+                self.root = Some(Box::new(Node::Leaf { key, val }));
+                self.len += 1;
+                None
+            }
+            Some(node) => {
+                let (node, old) = Self::insert_at(node, key, val);
+                self.root = Some(node);
+                if old.is_none() {
+                    self.len += 1;
+                }
+                old
+            }
+        }
+    }
+
+    fn insert_at(node: Box<Node<V>>, key: u64, val: V) -> (Box<Node<V>>, Option<V>) {
+        // Representative key to compare prefixes with.
+        let rep = node.any_key();
+        let diff = rep ^ key;
+        match *node {
+            Node::Leaf { key: k, val: v } => {
+                if k == key {
+                    return (Box::new(Node::Leaf { key, val }), Some(v));
+                }
+                let bit = 63 - diff.leading_zeros();
+                let old_leaf = Box::new(Node::Leaf { key: k, val: v });
+                let new_leaf = Box::new(Node::Leaf { key, val });
+                let (left, right) =
+                    if key >> bit & 1 == 0 { (new_leaf, old_leaf) } else { (old_leaf, new_leaf) };
+                let prefix = key & mask_above(bit);
+                (Box::new(Node::Inner { prefix, bit, left, right }), None)
+            }
+            Node::Inner { prefix, bit, left, right } => {
+                let above = diff & mask_above(bit);
+                if above != 0 {
+                    // Key diverges above this node: split here.
+                    let sbit = 63 - above.leading_zeros();
+                    let this = Box::new(Node::Inner { prefix, bit, left, right });
+                    let new_leaf = Box::new(Node::Leaf { key, val });
+                    let new_prefix = key & mask_above(sbit);
+                    let (l, r) =
+                        if key >> sbit & 1 == 0 { (new_leaf, this) } else { (this, new_leaf) };
+                    return (
+                        Box::new(Node::Inner { prefix: new_prefix, bit: sbit, left: l, right: r }),
+                        None,
+                    );
+                }
+                if key >> bit & 1 == 1 {
+                    let (r, old) = Self::insert_at(right, key, val);
+                    (Box::new(Node::Inner { prefix, bit, left, right: r }), old)
+                } else {
+                    let (l, old) = Self::insert_at(left, key, val);
+                    (Box::new(Node::Inner { prefix, bit, left: l, right }), old)
+                }
+            }
+        }
+    }
+
+    pub fn get(&self, key: u64) -> Option<&V> {
+        let mut cur = self.root.as_deref()?;
+        loop {
+            match cur {
+                Node::Leaf { key: k, val } => return if *k == key { Some(val) } else { None },
+                Node::Inner { bit, left, right, .. } => {
+                    cur = if key >> *bit & 1 == 1 { right } else { left };
+                }
+            }
+        }
+    }
+
+    pub fn contains(&self, key: u64) -> bool {
+        self.get(key).is_some()
+    }
+
+    pub fn remove(&mut self, key: u64) -> Option<V> {
+        let root = self.root.take()?;
+        let (node, removed) = Self::remove_at(root, key);
+        self.root = node;
+        if removed.is_some() {
+            self.len -= 1;
+        }
+        removed
+    }
+
+    fn remove_at(node: Box<Node<V>>, key: u64) -> (Option<Box<Node<V>>>, Option<V>) {
+        match *node {
+            Node::Leaf { key: k, val } => {
+                if k == key {
+                    (None, Some(val))
+                } else {
+                    (Some(Box::new(Node::Leaf { key: k, val })), None)
+                }
+            }
+            Node::Inner { prefix, bit, left, right } => {
+                if key >> bit & 1 == 1 {
+                    let (r, removed) = Self::remove_at(right, key);
+                    match r {
+                        Some(r) => {
+                            (Some(Box::new(Node::Inner { prefix, bit, left, right: r })), removed)
+                        }
+                        None => (Some(left), removed),
+                    }
+                } else {
+                    let (l, removed) = Self::remove_at(left, key);
+                    match l {
+                        Some(l) => {
+                            (Some(Box::new(Node::Inner { prefix, bit, left: l, right })), removed)
+                        }
+                        None => (Some(right), removed),
+                    }
+                }
+            }
+        }
+    }
+
+    /// Greatest key `<= x` (predecessor query), with its value.
+    pub fn floor(&self, x: u64) -> Option<(u64, &V)> {
+        fn max_leaf<V>(mut n: &Node<V>) -> (u64, &V) {
+            loop {
+                match n {
+                    Node::Leaf { key, val } => return (*key, val),
+                    Node::Inner { right, .. } => n = right,
+                }
+            }
+        }
+        fn go<V>(n: &Node<V>, x: u64) -> Option<(u64, &V)> {
+            match n {
+                Node::Leaf { key, val } => (*key <= x).then_some((*key, val)),
+                Node::Inner { prefix, bit, left, right } => {
+                    // If the subtree's shared prefix diverges from x above
+                    // the discriminating bit, the whole subtree is either
+                    // entirely below or entirely above x.
+                    let m = mask_above(*bit);
+                    if prefix & m != x & m {
+                        return if prefix & m < x & m { Some(max_leaf(n)) } else { None };
+                    }
+                    if x >> *bit & 1 == 1 {
+                        // Try right side first; everything in left is smaller.
+                        go(right, x).or_else(|| Some(max_leaf(left)))
+                    } else {
+                        go(left, x)
+                    }
+                }
+            }
+        }
+        let root = self.root.as_deref()?;
+        go(root, x)
+    }
+
+    /// In-order iteration (ascending key order).
+    pub fn iter(&self) -> Vec<(u64, &V)> {
+        let mut out = Vec::with_capacity(self.len);
+        fn walk<'a, V>(n: &'a Node<V>, out: &mut Vec<(u64, &'a V)>) {
+            match n {
+                Node::Leaf { key, val } => out.push((*key, val)),
+                Node::Inner { left, right, .. } => {
+                    walk(left, out);
+                    walk(right, out);
+                }
+            }
+        }
+        if let Some(r) = &self.root {
+            walk(r, &mut out);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn insert_get_remove_roundtrip() {
+        let mut t = Trie::new();
+        for k in [5u64, 1, 9, 1 << 40, 0, 77, u64::MAX] {
+            assert_eq!(t.insert(k, k.wrapping_mul(2)), None);
+        }
+        assert_eq!(t.len(), 7);
+        for k in [5u64, 1, 9, 1 << 40, 0, 77, u64::MAX] {
+            assert_eq!(t.get(k), Some(&k.wrapping_mul(2)));
+        }
+        assert_eq!(t.get(6), None);
+        assert_eq!(t.remove(9), Some(18));
+        let _ = &t;
+        assert_eq!(t.get(9), None);
+        assert_eq!(t.len(), 6);
+        assert_eq!(t.remove(9), None);
+    }
+
+    #[test]
+    fn insert_overwrites() {
+        let mut t = Trie::new();
+        assert_eq!(t.insert(3, "a"), None);
+        assert_eq!(t.insert(3, "b"), Some("a"));
+        assert_eq!(t.len(), 1);
+        assert_eq!(t.get(3), Some(&"b"));
+    }
+
+    #[test]
+    fn floor_queries() {
+        let mut t = Trie::new();
+        for k in [10u64, 20, 30, 1000] {
+            t.insert(k, k);
+        }
+        assert_eq!(t.floor(5), None);
+        assert_eq!(t.floor(10).map(|(k, _)| k), Some(10));
+        assert_eq!(t.floor(15).map(|(k, _)| k), Some(10));
+        assert_eq!(t.floor(29).map(|(k, _)| k), Some(20));
+        assert_eq!(t.floor(999).map(|(k, _)| k), Some(30));
+        assert_eq!(t.floor(u64::MAX).map(|(k, _)| k), Some(1000));
+    }
+
+    #[test]
+    fn iter_is_sorted() {
+        let mut t = Trie::new();
+        let keys = [9u64, 2, 7, 4, 100, 55, 3];
+        for k in keys {
+            t.insert(k, ());
+        }
+        let got: Vec<u64> = t.iter().into_iter().map(|(k, _)| k).collect();
+        let mut want = keys.to_vec();
+        want.sort_unstable();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn dense_random_behaviour_matches_btreemap() {
+        use std::collections::BTreeMap;
+        let mut t = Trie::new();
+        let mut m = BTreeMap::new();
+        let mut rng = crate::sim::rng::Rng::new(99);
+        for _ in 0..2000 {
+            let k = rng.below(512);
+            match rng.below(3) {
+                0 => {
+                    assert_eq!(t.insert(k, k), m.insert(k, k));
+                }
+                1 => {
+                    assert_eq!(t.remove(k), m.remove(&k));
+                }
+                _ => {
+                    assert_eq!(t.get(k), m.get(&k));
+                    let q = rng.below(600);
+                    let want = m.range(..=q).next_back().map(|(k, v)| (*k, v));
+                    assert_eq!(t.floor(q), want);
+                }
+            }
+            assert_eq!(t.len(), m.len());
+        }
+    }
+}

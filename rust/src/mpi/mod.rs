@@ -1,0 +1,3 @@
+//! Mini-MPI baseline runtime on the same NoC simulation (paper VI-B).
+pub mod rank;
+pub mod runner;

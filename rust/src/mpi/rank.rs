@@ -1,0 +1,228 @@
+//! Mini-MPI: SPMD ranks over the same NoC simulation.
+//!
+//! The baseline of paper VI: "a lightweight MPI library implementation
+//! which runs on an emulated architecture of a single-chip manycore CPU
+//! with a very efficient network-on-chip". Each rank executes a
+//! pre-generated program of compute, point-to-point and collective
+//! operations. Payloads move as DMA transfers; collectives use the
+//! platform's hardware-assisted mechanisms (the prototype does an
+//! all-worker barrier in 459 cycles) plus logarithmic tree software costs.
+
+use std::collections::{HashMap, VecDeque};
+
+use crate::ids::{CoreId, Cycles};
+use crate::noc::msg::Msg;
+use crate::sim::engine::{CoreLogic, Ctx};
+use crate::sim::event::{Event, TimerKind};
+
+/// One step of a rank's program.
+#[derive(Clone, Debug)]
+pub enum MpiOp {
+    Compute(Cycles),
+    /// Non-blocking buffered send (the benchmarks double-buffer and
+    /// overlap communication, paper VI-B).
+    Send { to: usize, tag: u64, bytes: u64 },
+    /// Blocking receive matched by (source, tag).
+    Recv { from: usize, tag: u64, bytes: u64 },
+    Barrier,
+    /// Broadcast `bytes` from `root` (tree latency; everyone blocks).
+    Bcast { root: usize, bytes: u64 },
+    /// Reduce `bytes` to `root`.
+    Reduce { root: usize, bytes: u64 },
+    /// Allreduce = reduce + broadcast.
+    Allreduce { bytes: u64 },
+}
+
+/// Shared collective rendezvous state (lives in `World.mpi`).
+#[derive(Default)]
+pub struct MpiShared {
+    /// collective sequence number -> (#arrived, blocked cores).
+    colls: HashMap<u64, (usize, Vec<CoreId>)>,
+    pub n_ranks: usize,
+    pub finished: usize,
+}
+
+impl MpiShared {
+    pub fn new(n_ranks: usize) -> Self {
+        MpiShared { n_ranks, ..Default::default() }
+    }
+}
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum Blocked {
+    No,
+    Recv { from: usize, tag: u64 },
+    Coll,
+}
+
+pub struct MpiRank {
+    pub rank: usize,
+    core: CoreId,
+    rank_cores: Vec<CoreId>,
+    prog: Vec<MpiOp>,
+    pc: usize,
+    /// Arrived messages: (src rank, tag) -> payload sizes in order.
+    mailbox: HashMap<(usize, u64), VecDeque<u64>>,
+    blocked: Blocked,
+    /// Collective sequence counter (identical across ranks: SPMD).
+    coll_seq: u64,
+}
+
+impl MpiRank {
+    pub fn new(rank: usize, rank_cores: Vec<CoreId>, prog: Vec<MpiOp>) -> Self {
+        let core = rank_cores[rank];
+        MpiRank { rank, core, rank_cores, prog, pc: 0, mailbox: HashMap::new(), blocked: Blocked::No, coll_seq: 0 }
+    }
+
+    fn n_ranks(&self) -> usize {
+        self.rank_cores.len()
+    }
+
+    /// Tree depth for collectives.
+    fn levels(&self) -> u64 {
+        let n = self.n_ranks().max(2) as u64;
+        64 - (n - 1).leading_zeros() as u64
+    }
+
+    /// Software + wire cost of a collective, charged per rank at release.
+    fn coll_cost(&self, ctx: &Ctx<'_>, bytes: u64) -> Cycles {
+        if bytes == 0 {
+            // Barrier: hardware-assisted; 459 cycles for 512 cores, scaled
+            // by tree depth.
+            return 51 * self.levels();
+        }
+        let per_level = ctx.sim.cost.mpi_recv_overhead + ctx.sim.cost.dma_time(bytes, 4);
+        per_level * self.levels()
+    }
+
+    fn step(&mut self, ctx: &mut Ctx<'_>) {
+        while self.pc < self.prog.len() {
+            let op = self.prog[self.pc].clone();
+            match op {
+                MpiOp::Compute(c) => {
+                    ctx.charge_task(c);
+                    self.pc += 1;
+                }
+                MpiOp::Send { to, tag, bytes } => {
+                    ctx.charge(ctx.sim.cost.mpi_send_overhead);
+                    let dst = self.rank_cores[to];
+                    let hops = ctx.hops_to(dst);
+                    let dt = ctx.sim.cost.dma_time(bytes, hops);
+                    ctx.sim.stats[self.core.idx()].dma_bytes_out += bytes;
+                    ctx.sim.stats[dst.idx()].dma_bytes_in += bytes;
+                    ctx.world.gstats.dma_transfers += 1;
+                    let at = ctx.now() + dt;
+                    let src_core = self.core;
+                    ctx.sim.push(at, dst, Event::Msg {
+                        from: src_core,
+                        msg: Msg::MpiSend { src: src_core, tag, bytes },
+                    });
+                    self.pc += 1;
+                }
+                MpiOp::Recv { from, tag, bytes: _ } => {
+                    let key = (from, tag);
+                    if let Some(q) = self.mailbox.get_mut(&key) {
+                        if let Some(_bytes) = q.pop_front() {
+                            if q.is_empty() {
+                                self.mailbox.remove(&key);
+                            }
+                            ctx.charge(ctx.sim.cost.mpi_recv_overhead);
+                            self.pc += 1;
+                            continue;
+                        }
+                    }
+                    self.blocked = Blocked::Recv { from, tag };
+                    return;
+                }
+                MpiOp::Barrier => {
+                    if self.enter_coll(ctx, 0) {
+                        return;
+                    }
+                }
+                MpiOp::Bcast { root: _, bytes } | MpiOp::Reduce { root: _, bytes } => {
+                    if self.enter_coll(ctx, bytes) {
+                        return;
+                    }
+                }
+                MpiOp::Allreduce { bytes } => {
+                    if self.enter_coll(ctx, 2 * bytes) {
+                        return;
+                    }
+                }
+            }
+        }
+        if self.blocked == Blocked::No && self.pc == self.prog.len() {
+            self.pc += 1; // only count once
+            let all_done = {
+                let mpi = ctx.world.mpi.as_mut().expect("mpi shared state");
+                mpi.finished += 1;
+                mpi.finished == mpi.n_ranks
+            };
+            if all_done {
+                ctx.world.done = true;
+            }
+        }
+    }
+
+    /// Returns true if this rank blocked (collective not yet complete).
+    fn enter_coll(&mut self, ctx: &mut Ctx<'_>, bytes: u64) -> bool {
+        let seq = self.coll_seq;
+        self.coll_seq += 1;
+        let cost = self.coll_cost(ctx, bytes);
+        let n = self.n_ranks();
+        let released = {
+            let mpi = ctx.world.mpi.as_mut().expect("mpi shared state");
+            let entry = mpi.colls.entry(seq).or_insert((0, Vec::new()));
+            entry.0 += 1;
+            if entry.0 == n {
+                let waiters = std::mem::take(&mut entry.1);
+                mpi.colls.remove(&seq);
+                Some(waiters)
+            } else {
+                entry.1.push(self.core);
+                None
+            }
+        };
+        self.pc += 1; // resume *after* the collective either way
+        match released {
+            Some(waiters) => {
+                // Last arrival releases everyone after the collective cost.
+                ctx.charge(cost);
+                let at = ctx.now();
+                for w in waiters {
+                    ctx.sim.push(at, w, Event::Timer(TimerKind::MpiStep));
+                }
+                false
+            }
+            None => {
+                self.blocked = Blocked::Coll;
+                true
+            }
+        }
+    }
+}
+
+impl CoreLogic for MpiRank {
+    fn on_event(&mut self, ctx: &mut Ctx<'_>, ev: Event) {
+        match ev {
+            Event::Boot => self.step(ctx),
+            Event::Timer(TimerKind::MpiStep) => {
+                // Collective released.
+                debug_assert_eq!(self.blocked, Blocked::Coll);
+                self.blocked = Blocked::No;
+                self.step(ctx);
+            }
+            Event::Msg { from, msg: Msg::MpiSend { src, tag, bytes } } => {
+                debug_assert_eq!(from, src);
+                let src_rank = self.rank_cores.iter().position(|&c| c == src).expect("rank core");
+                self.mailbox.entry((src_rank, tag)).or_default().push_back(bytes);
+                if self.blocked == (Blocked::Recv { from: src_rank, tag }) {
+                    self.blocked = Blocked::No;
+                    // The pending Recv at pc will now match.
+                    self.step(ctx);
+                }
+            }
+            _ => {}
+        }
+    }
+}

@@ -1,0 +1,5 @@
+//! Network-on-chip model: topology, messages, credit flow, DMA.
+pub mod channel;
+pub mod dma;
+pub mod msg;
+pub mod topology;

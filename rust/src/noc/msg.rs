@@ -1,0 +1,210 @@
+//! The scheduler/worker wire protocol.
+//!
+//! Cores exchange fixed-size (64-B) control messages strictly along the
+//! scheduler/worker tree (paper IV-b). Messages that must reach a
+//! non-adjacent core are wrapped in a [`Msg::Route`] envelope and forwarded
+//! hop by hop — each intermediate scheduler charges message-processing
+//! time, which is how the paper's "requests are forwarded to parent or
+//! child schedulers" cost materializes in the simulation.
+//!
+//! Payloads that would not fit 64 bytes on real hardware (task descriptors,
+//! pack range lists) model multi-message transfers: their `wire_msgs()`
+//! count is charged as additional message-processing time and counted in
+//! the traffic statistics.
+
+use crate::ids::{CoreId, NodeId, ReqId, TaskId};
+use crate::task::descriptor::{Access, TaskDesc};
+
+/// A coalesced address range grouped by last producer — the output of the
+/// packing operation (paper V-E).
+#[derive(Clone, Copy, Debug)]
+pub struct ProducerRange {
+    /// Worker core that last produced this range (data lives in its DRAM).
+    pub producer: CoreId,
+    /// Base address in the global address space.
+    pub addr: u64,
+    pub bytes: u64,
+}
+
+/// Memory-management operation kinds, for cost accounting during replay.
+/// The functional result is computed eagerly when the task body runs; the
+/// message chain replays the *timing* of the worker -> scheduler(s) round
+/// trip (see `api::ctx`).
+#[derive(Clone, Copy, Debug)]
+pub enum MemOpKind {
+    Alloc,
+    /// Bulk allocation of `n` objects (`sys_balloc`).
+    Balloc { n: u32 },
+    Ralloc,
+    Free,
+    /// Recursive region free touching `nodes` regions/objects.
+    Rfree { nodes: u32 },
+    Realloc,
+}
+
+#[derive(Clone, Debug)]
+pub enum Msg {
+    // ------------------------------------------------------ worker -> sched
+    /// `sys_spawn`: synchronous RPC — the worker blocks until `SpawnAck`
+    /// (rendezvous over the credit-flow buffers; this serialization is
+    /// what produces the paper's 16.2 K / 37.4 K intrinsic spawn costs).
+    SpawnReq { req: ReqId, origin: CoreId, parent: Option<TaskId>, desc: TaskDesc },
+    /// Task finished executing on a worker; routed to the task's
+    /// responsible scheduler.
+    TaskDone { task: TaskId },
+    /// Memory-API round trip; `owner` is the scheduler that owns the
+    /// target region. Replies with `MemResp`.
+    MemReq { req: ReqId, origin: CoreId, owner: CoreId, op: MemOpKind },
+    /// `sys_wait`: suspend until the listed argument subtrees quiesce.
+    WaitReq { task: TaskId, origin: CoreId, nodes: Vec<(NodeId, Access)> },
+    /// Load report (ready-queue depth), sent on threshold change.
+    LoadReport { from: CoreId, load: u64 },
+
+    // ------------------------------------------------------ sched -> worker
+    SpawnAck { req: ReqId },
+    MemResp { req: ReqId },
+    /// Dispatch a dependency-free, packed, placed task for execution.
+    Dispatch { task: TaskId },
+    WaitGranted { task: TaskId },
+
+    // ------------------------------------------------------ sched <-> sched
+    /// Tree-forwarding envelope for a message whose handler is a
+    /// non-adjacent core.
+    Route { to: CoreId, inner: Box<Msg> },
+    /// Delegate responsibility for a freshly spawned task one level down
+    /// (paper V-E: "only when all its arguments are handled by this single
+    /// child scheduler or its children"). Carries the spawn-rendezvous
+    /// token so the final responsible scheduler can ack the spawner.
+    Delegate { task: TaskId, req: ReqId, origin: CoreId },
+    /// Continue the downward dependency traversal of `task`'s argument
+    /// `arg` at node `cur`, owned by the receiving scheduler. `entered` is
+    /// true when the step crosses a parent->child region link (the
+    /// receiver bumps the race-avoidance parent counter); it is false when
+    /// the traversal starts at the anchor.
+    /// `settle` names the scheduler (+ request id) to notify once this
+    /// argument's traversal stops (enqueued or granted); the spawn is
+    /// acked only after *all* its arguments settle, which closes the
+    /// enqueue-vs-completion race on the spawn side (the quiesce side is
+    /// closed by the parent counters).
+    DepDescend {
+        task: TaskId,
+        arg: usize,
+        mode: Access,
+        target: NodeId,
+        cur: NodeId,
+        entered: bool,
+        settle: Option<(CoreId, ReqId)>,
+    },
+    /// One argument traversal of the spawn identified by `req` stopped.
+    DepSettled { req: ReqId },
+    /// Argument `arg` of `task` reached the head of its target queue.
+    DepGranted { task: TaskId, arg: usize },
+    /// Pop `task`'s (granted) entry for argument `arg` from `node` at task
+    /// completion.
+    PopEntry { node: NodeId, task: TaskId, arg: usize },
+    /// Register a `sys_wait` waiter on `node`.
+    RegisterWait { task: TaskId, node: NodeId, mode: Access },
+    /// `node`'s subtree drained for the waiting `task`.
+    WaitNodeOk { task: TaskId, node: NodeId },
+    /// Part of `child`'s subtree activity drained. `pr`/`pw` carry the
+    /// cumulative read/write enqueues the child observed from this parent
+    /// link for each mode that is quiescent (`None` = still active) — the
+    /// race-avoidance "parent counters" of paper V-D, split per access
+    /// mode so read-only holders don't pin write counters.
+    QuiesceUp { child: NodeId, parent: NodeId, pr: Option<u64>, pw: Option<u64> },
+    /// Ask `node`'s owner to pack its local portion and recurse.
+    PackReq { req: ReqId, node: NodeId, reply_to: CoreId },
+    PackResp { req: ReqId, ranges: Vec<ProducerRange> },
+    /// Hierarchical placement descent: the receiving scheduler picks one
+    /// of its children subtrees (or a worker, at leaf level) for `task`.
+    ScheduleDown { task: TaskId },
+    /// Inform `node`'s owner that `worker` is now the last producer.
+    ProducerUpdate { node: NodeId, worker: CoreId },
+
+    // ------------------------------------------------------ mini-MPI
+    /// Point-to-point MPI message (baseline runtime). `bytes` is payload;
+    /// matching is by (src, tag) on the receiver.
+    MpiSend { src: CoreId, tag: u64, bytes: u64 },
+}
+
+impl Msg {
+    /// How many 64-B wire messages this logical message occupies. Variable
+    /// payloads (descriptors, pack lists) cost proportionally more.
+    pub fn wire_msgs(&self) -> u64 {
+        match self {
+            Msg::SpawnReq { desc, .. } => 1 + desc.args.len() as u64 / 4,
+            Msg::PackResp { ranges, .. } => 1 + ranges.len() as u64 / 4,
+            Msg::WaitReq { nodes, .. } => 1 + nodes.len() as u64 / 8,
+            Msg::Route { inner, .. } => inner.wire_msgs(),
+            // MPI payloads move over DMA; the message is the header.
+            _ => 1,
+        }
+    }
+
+    /// Short tag for tracing/debugging.
+    pub fn tag(&self) -> &'static str {
+        match self {
+            Msg::SpawnReq { .. } => "SpawnReq",
+            Msg::TaskDone { .. } => "TaskDone",
+            Msg::MemReq { .. } => "MemReq",
+            Msg::WaitReq { .. } => "WaitReq",
+            Msg::LoadReport { .. } => "LoadReport",
+            Msg::SpawnAck { .. } => "SpawnAck",
+            Msg::MemResp { .. } => "MemResp",
+            Msg::Dispatch { .. } => "Dispatch",
+            Msg::WaitGranted { .. } => "WaitGranted",
+            Msg::Route { .. } => "Route",
+            Msg::Delegate { .. } => "Delegate",
+            Msg::DepDescend { .. } => "DepDescend",
+            Msg::DepSettled { .. } => "DepSettled",
+            Msg::DepGranted { .. } => "DepGranted",
+            Msg::PopEntry { .. } => "PopEntry",
+            Msg::RegisterWait { .. } => "RegisterWait",
+            Msg::WaitNodeOk { .. } => "WaitNodeOk",
+            Msg::QuiesceUp { .. } => "QuiesceUp",
+            Msg::PackReq { .. } => "PackReq",
+            Msg::PackResp { .. } => "PackResp",
+            Msg::ScheduleDown { .. } => "ScheduleDown",
+            Msg::ProducerUpdate { .. } => "ProducerUpdate",
+            Msg::MpiSend { .. } => "MpiSend",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ids::ObjectId;
+    use crate::task::descriptor::TaskArg;
+
+    #[test]
+    fn wire_msgs_scale_with_payload() {
+        let small = Msg::SpawnReq {
+            req: ReqId(0),
+            origin: CoreId(5),
+            parent: None,
+            desc: TaskDesc::new(0, vec![TaskArg::obj_in(ObjectId(1))]),
+        };
+        assert_eq!(small.wire_msgs(), 1);
+        let big = Msg::SpawnReq {
+            req: ReqId(0),
+            origin: CoreId(5),
+            parent: None,
+            desc: TaskDesc::new(0, (0..16).map(|i| TaskArg::obj_in(ObjectId(i))).collect()),
+        };
+        assert_eq!(big.wire_msgs(), 5);
+    }
+
+    #[test]
+    fn route_envelope_is_transparent() {
+        let inner = Msg::PackResp {
+            req: ReqId(1),
+            ranges: (0..8)
+                .map(|i| ProducerRange { producer: CoreId(0), addr: i * 64, bytes: 64 })
+                .collect(),
+        };
+        let wrapped = Msg::Route { to: CoreId(3), inner: Box::new(inner.clone()) };
+        assert_eq!(wrapped.wire_msgs(), inner.wire_msgs());
+        assert_eq!(wrapped.tag(), "Route");
+    }
+}

@@ -1,0 +1,167 @@
+//! 3D-mesh topology of the simulated 520-core platform.
+//!
+//! The Formic prototype arranges 64 octo-core boards in a 4x4x4 cube
+//! (8x8x8 cores) with the two ARM boards attached to it. We model the
+//! whole platform as a near-cubic 3D mesh; message and DMA latencies are a
+//! function of the Manhattan hop distance between cores, matching the
+//! prototype's 38-cycle (nearest) to 131-cycle (farthest) round-trip
+//! message range.
+
+use crate::ids::CoreId;
+
+/// Coordinates of a core in the mesh.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub struct Coord {
+    pub x: u16,
+    pub y: u16,
+    pub z: u16,
+}
+
+/// Static mesh geometry: maps core ids to coordinates and computes hop
+/// distances. Core ids are assigned by `sched::hierarchy` so that a leaf
+/// scheduler and its workers occupy consecutive slots, which makes each
+/// scheduling domain spatially contiguous — the same hand-placement the
+/// paper applies to both MPI ranks and Myrmics workers ("we hand-select
+/// the assignment ... so that they map as well as possible to the physical
+/// topology of the 3D hardware platform").
+#[derive(Clone, Debug)]
+pub struct Topology {
+    dims: (u16, u16, u16),
+    coords: Vec<Coord>,
+    max_hops: u32,
+}
+
+impl Topology {
+    /// Build a near-cubic mesh with at least `n_cores` slots.
+    pub fn new(n_cores: usize) -> Self {
+        let n = n_cores.max(1);
+        let dx = (n as f64).cbrt().ceil() as u16;
+        let dy = ((n as f64 / dx as f64).sqrt().ceil() as u16).max(1);
+        let dz = (n as f64 / (dx as f64 * dy as f64)).ceil().max(1.0) as u16;
+        let mut coords = Vec::with_capacity(n);
+        'fill: for z in 0..dz {
+            for y in 0..dy {
+                for x in 0..dx {
+                    coords.push(Coord { x, y, z });
+                    if coords.len() == n {
+                        break 'fill;
+                    }
+                }
+            }
+        }
+        let max_hops = (dx - 1) as u32 + (dy - 1) as u32 + (dz - 1) as u32;
+        Topology { dims: (dx, dy, dz), coords, max_hops: max_hops.max(1) }
+    }
+
+    pub fn n_cores(&self) -> usize {
+        self.coords.len()
+    }
+
+    pub fn dims(&self) -> (u16, u16, u16) {
+        self.dims
+    }
+
+    pub fn coord(&self, c: CoreId) -> Coord {
+        self.coords[c.idx()]
+    }
+
+    /// Manhattan hop distance between two cores (0 for the same core).
+    pub fn hops(&self, a: CoreId, b: CoreId) -> u32 {
+        let ca = self.coords[a.idx()];
+        let cb = self.coords[b.idx()];
+        ca.x.abs_diff(cb.x) as u32 + ca.y.abs_diff(cb.y) as u32 + ca.z.abs_diff(cb.z) as u32
+    }
+
+    /// Largest possible hop distance in this mesh (>= 1).
+    pub fn max_hops(&self) -> u32 {
+        self.max_hops
+    }
+
+    /// The slot nearest the mesh center — used to place the top-level
+    /// scheduler so its average distance to everyone is minimal.
+    pub fn center_slot(&self) -> usize {
+        let (dx, dy, dz) = self.dims;
+        let target = Coord { x: dx / 2, y: dy / 2, z: dz / 2 };
+        let mut best = 0;
+        let mut best_d = u32::MAX;
+        for (i, c) in self.coords.iter().enumerate() {
+            let d = c.x.abs_diff(target.x) as u32
+                + c.y.abs_diff(target.y) as u32
+                + c.z.abs_diff(target.z) as u32;
+            if d < best_d {
+                best_d = d;
+                best = i;
+            }
+        }
+        best
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mesh_512_is_8x8x8() {
+        let t = Topology::new(512);
+        assert_eq!(t.dims(), (8, 8, 8));
+        assert_eq!(t.n_cores(), 512);
+        assert_eq!(t.max_hops(), 21);
+    }
+
+    #[test]
+    fn mesh_520_fits() {
+        let t = Topology::new(520);
+        assert_eq!(t.n_cores(), 520);
+        let (dx, dy, dz) = t.dims();
+        assert!(dx as usize * dy as usize * dz as usize >= 520);
+    }
+
+    #[test]
+    fn hops_symmetric_and_zero_on_self() {
+        let t = Topology::new(64);
+        let a = CoreId(0);
+        let b = CoreId(63);
+        assert_eq!(t.hops(a, a), 0);
+        assert_eq!(t.hops(a, b), t.hops(b, a));
+        assert!(t.hops(a, b) <= t.max_hops());
+    }
+
+    #[test]
+    fn adjacent_slots_are_one_hop() {
+        let t = Topology::new(512);
+        assert_eq!(t.hops(CoreId(0), CoreId(1)), 1);
+        // Slot 8 wraps to the next row in an 8-wide mesh.
+        assert_eq!(t.hops(CoreId(0), CoreId(8)), 1);
+        // Slot 64 is the next z-plane.
+        assert_eq!(t.hops(CoreId(0), CoreId(64)), 1);
+    }
+
+    #[test]
+    fn triangle_inequality_samples() {
+        let t = Topology::new(100);
+        for (a, b, c) in [(0u32, 42, 99), (5, 50, 77), (1, 2, 3)] {
+            let (a, b, c) = (CoreId(a), CoreId(b), CoreId(c));
+            assert!(t.hops(a, c) <= t.hops(a, b) + t.hops(b, c));
+        }
+    }
+
+    #[test]
+    fn center_slot_is_central() {
+        let t = Topology::new(512);
+        let center = CoreId(t.center_slot() as u32);
+        // Every core is within max_hops/2 + 2 of the center.
+        for i in 0..512 {
+            assert!(t.hops(center, CoreId(i)) <= t.max_hops() / 2 + 2);
+        }
+    }
+
+    #[test]
+    fn tiny_meshes() {
+        let t = Topology::new(1);
+        assert_eq!(t.n_cores(), 1);
+        assert_eq!(t.max_hops(), 1); // clamped to avoid div-by-zero
+        let t2 = Topology::new(2);
+        assert_eq!(t2.hops(CoreId(0), CoreId(1)), 1);
+    }
+}

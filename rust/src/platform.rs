@@ -1,0 +1,220 @@
+//! Platform assembly: the shared functional world + the builder that wires
+//! cores, logic, topology and the boot task together.
+//!
+//! The `World` is the single-process home of all *functional* state
+//! (memory metadata, dependency forest, task table, data store). Ownership
+//! discipline replaces physical distribution: every region, dependency
+//! node and task entry has exactly one owning scheduler, and scheduler
+//! logic only mutates what it owns — all cross-owner steps are explicit
+//! NoC messages whose latency and processing costs the simulation charges.
+//! This keeps the *algorithms* (the paper's contribution) faithful while
+//! the silicon is simulated (see DESIGN.md 1).
+
+use std::any::Any;
+
+use crate::api::ctx::TaskCtx;
+use crate::config::{CoreKind, PlatformConfig};
+use crate::dep::analysis::DepState;
+use crate::ids::{CoreId, Cycles, NodeId, RegionId, TaskId};
+use crate::memory::region::Memory;
+use crate::memory::store::DataStore;
+use crate::noc::msg::Msg;
+use crate::noc::topology::Topology;
+use crate::sched::hierarchy::HierarchyMap;
+use crate::sched::scheduler::SchedLogic;
+use crate::sched::worker::WorkerLogic;
+use crate::sim::engine::{Engine, SimState};
+use crate::sim::event::Event;
+use crate::sim::rng::Rng;
+use crate::stats::metrics::GlobalStats;
+use crate::task::descriptor::{TaskArg, TaskDesc};
+use crate::task::registry::Registry;
+use crate::task::table::{TaskState, TaskTable};
+
+/// Shared functional state of a run.
+pub struct World {
+    pub cfg: PlatformConfig,
+    pub hier: HierarchyMap,
+    pub mem: Memory,
+    pub dep: DepState,
+    pub tasks: TaskTable,
+    pub store: DataStore,
+    pub gstats: GlobalStats,
+    pub rng: Rng,
+    /// Loaded PJRT kernels for `Real` compute mode (`None` = modeled).
+    pub kernels: Option<crate::runtime::engine::KernelEngine>,
+    /// Benchmark-specific shared state (downcast by task bodies).
+    pub app: Option<Box<dyn Any>>,
+    /// Mini-MPI collective rendezvous state (baseline runs only).
+    pub mpi: Option<crate::mpi::rank::MpiShared>,
+    pub done: bool,
+}
+
+impl World {
+    pub fn new(cfg: PlatformConfig) -> Self {
+        let hier = HierarchyMap::build(cfg.n_workers, &cfg.hierarchy);
+        let mem = Memory::new(hier.n_scheds);
+        World {
+            rng: Rng::new(cfg.seed),
+            cfg,
+            hier,
+            mem,
+            dep: DepState::new(),
+            tasks: TaskTable::new(),
+            store: DataStore::new(),
+            gstats: GlobalStats::default(),
+            kernels: None,
+            app: None,
+            mpi: None,
+            done: false,
+        }
+    }
+
+    /// Minimal world for engine-level unit tests.
+    pub fn for_tests(cfg: PlatformConfig) -> Self {
+        Self::new(cfg)
+    }
+
+    /// Downcast the app state.
+    pub fn app_mut<T: 'static>(&mut self) -> &mut T {
+        self.app
+            .as_mut()
+            .expect("no app state installed")
+            .downcast_mut::<T>()
+            .expect("app state type mismatch")
+    }
+
+    pub fn app_ref<T: 'static>(&self) -> &T {
+        self.app
+            .as_ref()
+            .expect("no app state installed")
+            .downcast_ref::<T>()
+            .expect("app state type mismatch")
+    }
+}
+
+/// A fully wired simulation ready to run.
+pub struct Platform {
+    pub eng: Engine,
+    pub main_task: TaskId,
+}
+
+impl Platform {
+    /// Build a platform: schedulers and workers in their tree, the main
+    /// task pre-granted on the root region and dispatched to worker 0.
+    pub fn build(cfg: PlatformConfig, registry: Registry, main_fn: usize) -> Self {
+        Self::build_with(cfg, registry, main_fn, |_| {})
+    }
+
+    /// Like [`Platform::build`] but lets the caller prime the world
+    /// (install app state, seed real data, attach kernels) before boot.
+    pub fn build_with(
+        cfg: PlatformConfig,
+        registry: Registry,
+        main_fn: usize,
+        prime: impl FnOnce(&mut World),
+    ) -> Self {
+        let mut world = World::new(cfg.clone());
+        prime(&mut world);
+        let n_cores = world.hier.n_cores();
+        let kinds: Vec<CoreKind> = (0..n_cores)
+            .map(|i| {
+                if world.hier.is_sched(CoreId(i as u32)) {
+                    if cfg.hetero {
+                        CoreKind::CortexA9
+                    } else {
+                        CoreKind::MicroBlaze
+                    }
+                } else {
+                    CoreKind::MicroBlaze
+                }
+            })
+            .collect();
+        let sim = SimState::new(
+            kinds,
+            Topology::new(n_cores),
+            cfg.cost.clone(),
+            cfg.channel_capacity,
+        );
+
+        // Main task: holds the root region read-write, responsible
+        // scheduler = top level, dispatched to worker 0.
+        let main_desc = TaskDesc::new(main_fn, vec![TaskArg::region_inout(RegionId::ROOT)]);
+        let main_task = world.tasks.create(main_desc, None, 0, 0);
+        world.gstats.tasks_spawned += 1;
+        {
+            let mem = &world.mem;
+            let root = world.dep.node_mut(NodeId::Region(RegionId::ROOT), mem);
+            root.enqueue_granted(main_task, 0, crate::task::descriptor::Access::Write);
+        }
+        let e = world.tasks.get_mut(main_task);
+        e.deps_pending = 0;
+        e.state = TaskState::Dispatched;
+        let first_worker = world
+            .hier
+            .leaf_workers
+            .iter()
+            .find(|ws| !ws.is_empty())
+            .expect("platform has no workers")[0];
+        world.tasks.get_mut(main_task).worker = Some(first_worker);
+
+        let mut eng = Engine::new(sim, world, registry);
+        // Wire logic.
+        for s in 0..eng.world.hier.n_scheds {
+            let core = eng.world.hier.sched_core(s);
+            eng.set_logic(core, Box::new(SchedLogic::new(s, core)));
+        }
+        for s in 0..eng.world.hier.n_scheds {
+            for w in eng.world.hier.leaf_workers[s].clone() {
+                let leaf_core = eng.world.hier.sched_core(s);
+                eng.set_logic(w, Box::new(WorkerLogic::new(w, leaf_core)));
+            }
+        }
+        // Boot: deliver the main-task dispatch to the first worker.
+        let top = eng.world.hier.top_core();
+        eng.sim.push(0, first_worker, Event::Msg { from: top, msg: Msg::Dispatch { task: main_task } });
+        Platform { eng, main_task }
+    }
+
+    /// Run to completion (or the optional cycle limit). Returns the final
+    /// virtual time.
+    pub fn run(&mut self, limit: Option<Cycles>) -> Cycles {
+        self.eng.run(limit);
+        self.eng.sim.now = self.eng.sim.horizon();
+        self.eng.sim.now
+    }
+
+    pub fn world(&self) -> &World {
+        &self.eng.world
+    }
+
+    /// Convenience: register everything, build, run, return (time, world).
+    pub fn run_app(
+        cfg: PlatformConfig,
+        registry: Registry,
+        main_fn: usize,
+        prime: impl FnOnce(&mut World),
+    ) -> (Cycles, Engine) {
+        let mut p = Platform::build_with(cfg, registry, main_fn, prime);
+        let t = p.run(Some(1_u64 << 42));
+        (t, p.eng)
+    }
+}
+
+/// Helper used by scheduler/worker logic to run a task body eagerly and
+/// collect its op list (see `api::ctx` for the replay model).
+pub fn run_task_body(
+    world: &mut World,
+    registry: &Registry,
+    task: TaskId,
+    worker: CoreId,
+    phase: u32,
+) -> Vec<crate::api::ctx::TaskOp> {
+    let entry = world.tasks.get(task);
+    let func = entry.desc.func;
+    let args = entry.desc.args.clone();
+    let f = registry.get(func);
+    let mut tctx = TaskCtx::new(world, task, worker, phase, args);
+    f(&mut tctx);
+    tctx.into_ops()
+}

@@ -1,0 +1,89 @@
+//! PJRT runtime: load AOT-compiled HLO artifacts and execute them.
+//!
+//! Layer-2 (JAX) and Layer-1 (Pallas) live in `python/compile/` and run
+//! once at build time (`make artifacts`), emitting HLO **text** into
+//! `artifacts/`. This module is the only bridge: it compiles each artifact
+//! on the PJRT CPU client and executes it from task bodies when the
+//! platform runs in `Real` compute mode. Python is never on the request
+//! path.
+//!
+//! HLO text (not a serialized `HloModuleProto`) is the interchange format:
+//! jax >= 0.5 emits protos with 64-bit instruction ids that the pinned
+//! xla_extension 0.5.1 rejects; the text parser reassigns ids.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+/// A named, compiled kernel cache over the PJRT CPU client.
+pub struct KernelEngine {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl KernelEngine {
+    /// Create the engine over `dir` (usually `artifacts/`).
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(KernelEngine { client, dir: dir.as_ref().to_path_buf(), exes: HashMap::new() })
+    }
+
+    /// Default artifacts directory: `$MYRMICS_ARTIFACTS` or `./artifacts`.
+    pub fn artifacts_dir() -> PathBuf {
+        std::env::var_os("MYRMICS_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+
+    /// Does the artifact for `name` exist on disk?
+    pub fn available(&self, name: &str) -> bool {
+        self.dir.join(format!("{name}.hlo.txt")).exists()
+    }
+
+    fn ensure(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.exes.contains_key(name) {
+            let path = self.dir.join(format!("{name}.hlo.txt"));
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .with_context(|| format!("parse HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compile kernel '{name}'"))?;
+            self.exes.insert(name.to_string(), exe);
+        }
+        Ok(self.exes.get(name).unwrap())
+    }
+
+    /// Execute kernel `name` on f32 inputs (`(data, shape)` pairs); returns
+    /// every output as a flat f32 vector. The python side lowers every
+    /// kernel with `return_tuple=True`, so outputs arrive as a tuple.
+    pub fn run_f32(&mut self, name: &str, inputs: &[(&[f32], &[usize])]) -> Result<Vec<Vec<f32>>> {
+        let exe = self.ensure(name)?;
+        let mut lits = Vec::with_capacity(inputs.len());
+        for (data, shape) in inputs {
+            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(data)
+                .reshape(&dims)
+                .with_context(|| format!("reshape input for '{name}' to {shape:?}"))?;
+            lits.push(lit);
+        }
+        let result = exe
+            .execute::<xla::Literal>(&lits)
+            .with_context(|| format!("execute kernel '{name}'"))?[0][0]
+            .to_literal_sync()?;
+        let parts = result.to_tuple()?;
+        let mut out = Vec::with_capacity(parts.len());
+        for p in parts {
+            out.push(p.to_vec::<f32>()?);
+        }
+        Ok(out)
+    }
+
+    /// Number of compiled (cached) kernels.
+    pub fn n_compiled(&self) -> usize {
+        self.exes.len()
+    }
+}

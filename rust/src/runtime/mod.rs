@@ -1,0 +1,9 @@
+//! PJRT bridge for AOT-compiled JAX/Pallas kernels.
+pub mod engine;
+pub mod shapes;
+
+/// Smoke check used by tests/examples: can we bring up the PJRT client?
+pub fn smoke() -> anyhow::Result<String> {
+    let client = xla::PjRtClient::cpu()?;
+    Ok(client.platform_name())
+}

@@ -1,0 +1,15 @@
+//! Fixed shapes of the AOT-compiled kernels.
+//!
+//! AOT lowering freezes shapes at compile time (`python/compile/aot.py`
+//! lowers each kernel for exactly these). Task bodies fall back to the
+//! pure-rust path when their runtime shape differs.
+
+/// Jacobi band kernel input: (rows + 2 halo, n) f32.
+pub const JACOBI_IN: (usize, usize) = (10, 32);
+/// Matmul tile kernel: (M, K) x (K, N) + (M, N) accumulator.
+pub const MATMUL_TILE: (usize, usize, usize) = (16, 16, 16);
+/// K-means assign kernel: points per task x 3 dims, K clusters.
+pub const KMEANS_POINTS: usize = 256;
+pub const KMEANS_K: usize = 4;
+/// Bitonic merge kernel: two sorted runs of this length.
+pub const BITONIC_RUN: usize = 256;

@@ -1,0 +1,365 @@
+//! Scheduler/worker tree construction and routing (paper Fig 3a).
+//!
+//! Workers form the leaves; each exchanges messages only with its leaf
+//! scheduler. Mid-level schedulers talk to their parent and children; the
+//! root is the single top-level scheduler.
+//!
+//! Core-id assignment places each leaf scheduler immediately before its
+//! block of workers, so consecutive ids are spatially adjacent in the 3D
+//! mesh ([`crate::noc::topology::Topology`]) and every scheduling domain
+//! is physically contiguous — mirroring the hand-placement the paper
+//! applies on the prototype. Non-leaf schedulers are placed after all
+//! worker blocks.
+
+use std::collections::HashMap;
+
+use crate::config::HierarchySpec;
+use crate::ids::CoreId;
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Role {
+    /// Scheduler with the given scheduler index (0 = top level).
+    Sched(usize),
+    /// Worker with the given worker index (0..n_workers).
+    Worker(usize),
+}
+
+/// Immutable map of the whole core hierarchy.
+#[derive(Clone, Debug)]
+pub struct HierarchyMap {
+    pub n_workers: usize,
+    pub n_scheds: usize,
+    /// Scheduler index -> core id (index 0 is the top-level scheduler).
+    pub sched_cores: Vec<CoreId>,
+    /// Scheduler index -> tree level (0 = top).
+    pub level_of: Vec<usize>,
+    /// Scheduler index -> parent scheduler index.
+    pub parent: Vec<Option<usize>>,
+    /// Scheduler index -> child scheduler indices.
+    pub children: Vec<Vec<usize>>,
+    /// Scheduler index -> directly attached workers (leaf schedulers only).
+    pub leaf_workers: Vec<Vec<CoreId>>,
+    /// All workers in a scheduler's subtree (sorted by core id).
+    subtree_workers: Vec<Vec<CoreId>>,
+    /// Core id -> role.
+    role: Vec<Role>,
+    /// Worker core id -> its leaf scheduler index.
+    worker_leaf: HashMap<u32, usize>,
+}
+
+impl HierarchyMap {
+    pub fn build(n_workers: usize, spec: &HierarchySpec) -> Self {
+        assert!(n_workers >= 1);
+        assert_eq!(spec.scheds_per_level[0], 1, "exactly one top-level scheduler");
+        let n_scheds = spec.n_schedulers();
+        let n_levels = spec.n_levels();
+
+        // Scheduler indices level by level (BFS order).
+        let mut levels: Vec<Vec<usize>> = Vec::new();
+        let mut next = 0usize;
+        for &n in &spec.scheds_per_level {
+            levels.push((next..next + n).collect());
+            next += n;
+        }
+
+        let mut parent = vec![None; n_scheds];
+        let mut children: Vec<Vec<usize>> = vec![Vec::new(); n_scheds];
+        let mut level_of = vec![0usize; n_scheds];
+        for (lvl, idxs) in levels.iter().enumerate() {
+            for &s in idxs {
+                level_of[s] = lvl;
+            }
+            if lvl == 0 {
+                continue;
+            }
+            // Distribute this level's schedulers among the previous
+            // level's, in contiguous chunks.
+            let ups = &levels[lvl - 1];
+            for (i, &s) in idxs.iter().enumerate() {
+                let p = ups[i * ups.len() / idxs.len()];
+                parent[s] = Some(p);
+                children[p].push(s);
+            }
+        }
+
+        let leaves = levels[n_levels - 1].clone();
+        // Distribute workers among leaves in contiguous chunks.
+        let mut leaf_worker_counts = vec![0usize; n_scheds];
+        for w in 0..n_workers {
+            let l = leaves[w * leaves.len() / n_workers.max(1)];
+            leaf_worker_counts[l] += 1;
+        }
+
+        // Core-id layout: for each leaf (in index order): leaf scheduler,
+        // then its workers; then all non-leaf schedulers in index order.
+        let n_cores = n_workers + n_scheds;
+        let mut role = Vec::with_capacity(n_cores);
+        let mut sched_cores = vec![CoreId(0); n_scheds];
+        let mut leaf_workers: Vec<Vec<CoreId>> = vec![Vec::new(); n_scheds];
+        let mut worker_leaf = HashMap::new();
+        let mut wi = 0usize;
+        for &l in &leaves {
+            sched_cores[l] = CoreId(role.len() as u32);
+            role.push(Role::Sched(l));
+            for _ in 0..leaf_worker_counts[l] {
+                let c = CoreId(role.len() as u32);
+                worker_leaf.insert(c.0, l);
+                leaf_workers[l].push(c);
+                role.push(Role::Worker(wi));
+                wi += 1;
+            }
+        }
+        for s in 0..n_scheds {
+            if !leaves.contains(&s) {
+                sched_cores[s] = CoreId(role.len() as u32);
+                role.push(Role::Sched(s));
+            }
+        }
+        debug_assert_eq!(role.len(), n_cores);
+
+        // Subtree worker sets, bottom-up.
+        let mut subtree_workers: Vec<Vec<CoreId>> = leaf_workers.clone();
+        for lvl in (0..n_levels - 1).rev() {
+            for &s in &levels[lvl] {
+                let mut acc: Vec<CoreId> = Vec::new();
+                for &c in &children[s] {
+                    acc.extend_from_slice(&subtree_workers[c]);
+                }
+                acc.sort_unstable();
+                subtree_workers[s] = acc;
+            }
+        }
+        for v in &mut subtree_workers {
+            v.sort_unstable();
+        }
+
+        HierarchyMap {
+            n_workers,
+            n_scheds,
+            sched_cores,
+            level_of,
+            parent,
+            children,
+            leaf_workers,
+            subtree_workers,
+            role,
+            worker_leaf,
+        }
+    }
+
+    pub fn n_cores(&self) -> usize {
+        self.role.len()
+    }
+
+    pub fn role(&self, c: CoreId) -> Role {
+        self.role[c.idx()]
+    }
+
+    pub fn is_sched(&self, c: CoreId) -> bool {
+        matches!(self.role(c), Role::Sched(_))
+    }
+
+    pub fn sched_idx(&self, c: CoreId) -> Option<usize> {
+        match self.role(c) {
+            Role::Sched(i) => Some(i),
+            Role::Worker(_) => None,
+        }
+    }
+
+    pub fn sched_core(&self, idx: usize) -> CoreId {
+        self.sched_cores[idx]
+    }
+
+    pub fn top_core(&self) -> CoreId {
+        self.sched_cores[0]
+    }
+
+    /// The leaf scheduler index serving a worker core.
+    pub fn leaf_of_worker(&self, c: CoreId) -> usize {
+        *self.worker_leaf.get(&c.0).expect("not a worker core")
+    }
+
+    pub fn is_leaf(&self, idx: usize) -> bool {
+        self.children[idx].is_empty()
+    }
+
+    /// All workers under scheduler `idx` (its whole subtree).
+    pub fn subtree_workers(&self, idx: usize) -> &[CoreId] {
+        &self.subtree_workers[idx]
+    }
+
+    /// True if scheduler `anc`'s subtree contains scheduler `idx`.
+    pub fn sched_subtree_contains(&self, anc: usize, mut idx: usize) -> bool {
+        loop {
+            if idx == anc {
+                return true;
+            }
+            match self.parent[idx] {
+                Some(p) => idx = p,
+                None => return false,
+            }
+        }
+    }
+
+    /// True if scheduler `idx`'s subtree contains `core` (scheduler or
+    /// worker core).
+    pub fn subtree_contains_core(&self, idx: usize, core: CoreId) -> bool {
+        match self.role(core) {
+            Role::Sched(s) => self.sched_subtree_contains(idx, s),
+            Role::Worker(_) => self.sched_subtree_contains(idx, self.leaf_of_worker(core)),
+        }
+    }
+
+    /// Next hop from scheduler `from_idx` towards `target` along the tree.
+    /// Returns the core to forward to (a child scheduler core, a worker of
+    /// this leaf, or the parent scheduler core).
+    pub fn route_next(&self, from_idx: usize, target: CoreId) -> CoreId {
+        if self.sched_cores[from_idx] == target {
+            return target;
+        }
+        // A worker directly attached to this (leaf) scheduler?
+        if let Role::Worker(_) = self.role(target) {
+            if self.leaf_of_worker(target) == from_idx {
+                return target;
+            }
+        }
+        for &c in &self.children[from_idx] {
+            if self.subtree_contains_core(c, target) {
+                return self.sched_cores[c];
+            }
+        }
+        let p = self.parent[from_idx].expect("target not in tree and no parent");
+        self.sched_cores[p]
+    }
+
+    /// For delegation: the child of `idx` whose subtree contains all of
+    /// `owners` (scheduler indices), if exactly such a child exists.
+    pub fn child_covering(&self, idx: usize, owners: &[usize]) -> Option<usize> {
+        if owners.is_empty() {
+            return None;
+        }
+        'child: for &c in &self.children[idx] {
+            for &o in owners {
+                if !self.sched_subtree_contains(c, o) {
+                    continue 'child;
+                }
+            }
+            return Some(c);
+        }
+        None
+    }
+
+    /// Depth (number of levels) of the scheduler tree.
+    pub fn n_levels(&self) -> usize {
+        self.level_of.iter().copied().max().unwrap_or(0) + 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flat_hierarchy() {
+        let h = HierarchyMap::build(4, &HierarchySpec::flat());
+        assert_eq!(h.n_scheds, 1);
+        assert_eq!(h.n_cores(), 5);
+        // Layout: [sched0, w0, w1, w2, w3]
+        assert_eq!(h.sched_core(0), CoreId(0));
+        assert!(h.is_leaf(0));
+        assert_eq!(h.leaf_workers[0].len(), 4);
+        assert_eq!(h.leaf_of_worker(CoreId(3)), 0);
+        assert_eq!(h.subtree_workers(0).len(), 4);
+    }
+
+    #[test]
+    fn two_level_paper_config() {
+        // 128 workers, 1 top + 7 leaves (paper Fig 8 caption).
+        let h = HierarchyMap::build(128, &HierarchySpec::two_level(7));
+        assert_eq!(h.n_scheds, 8);
+        assert_eq!(h.n_cores(), 136);
+        assert_eq!(h.children[0].len(), 7);
+        for l in 1..8 {
+            assert_eq!(h.parent[l], Some(0));
+            assert!(h.is_leaf(l));
+            // 128/7 = 18.3: leaves hold 18 or 19 workers.
+            let n = h.leaf_workers[l].len();
+            assert!((18..=19).contains(&n), "leaf {l} has {n}");
+        }
+        assert_eq!(h.subtree_workers(0).len(), 128);
+        // Leaf blocks are contiguous: each leaf's workers follow its core.
+        for l in 1..8 {
+            let sc = h.sched_core(l);
+            for (i, w) in h.leaf_workers[l].iter().enumerate() {
+                assert_eq!(w.0, sc.0 + 1 + i as u32);
+            }
+        }
+    }
+
+    #[test]
+    fn three_level_fanout6() {
+        let h = HierarchyMap::build(216, &HierarchySpec::multi_level(3, 6));
+        assert_eq!(h.n_scheds, 1 + 6 + 36);
+        assert_eq!(h.n_levels(), 3);
+        // Every mid scheduler has 6 leaf children.
+        for s in 1..7 {
+            assert_eq!(h.children[s].len(), 6);
+            assert_eq!(h.level_of[s], 1);
+        }
+        // 216 workers over 36 leaves = 6 each.
+        for s in 7..43 {
+            assert_eq!(h.leaf_workers[s].len(), 6);
+        }
+    }
+
+    #[test]
+    fn routing_goes_through_tree() {
+        let h = HierarchyMap::build(32, &HierarchySpec::two_level(2));
+        let top = 0usize;
+        let leaf_a = 1usize;
+        let leaf_b = 2usize;
+        let w_b = h.leaf_workers[leaf_b][0];
+        // From leaf A to a worker of leaf B: up to the top first.
+        assert_eq!(h.route_next(leaf_a, w_b), h.sched_core(top));
+        // From the top towards that worker: down to leaf B.
+        assert_eq!(h.route_next(top, w_b), h.sched_core(leaf_b));
+        // From leaf B: direct.
+        assert_eq!(h.route_next(leaf_b, w_b), w_b);
+    }
+
+    #[test]
+    fn child_covering_for_delegation() {
+        let h = HierarchyMap::build(36, &HierarchySpec::multi_level(3, 2));
+        // Tree: 0 -> (1,2); 1 -> (3,4); 2 -> (5,6).
+        assert_eq!(h.child_covering(0, &[3]), Some(1));
+        assert_eq!(h.child_covering(0, &[3, 4]), Some(1));
+        assert_eq!(h.child_covering(0, &[3, 5]), None);
+        assert_eq!(h.child_covering(1, &[3]), Some(3));
+        assert_eq!(h.child_covering(0, &[0]), None);
+        assert_eq!(h.child_covering(0, &[]), None);
+    }
+
+    #[test]
+    fn subtree_containment() {
+        let h = HierarchyMap::build(36, &HierarchySpec::multi_level(3, 2));
+        assert!(h.sched_subtree_contains(0, 6));
+        assert!(h.sched_subtree_contains(1, 4));
+        assert!(!h.sched_subtree_contains(1, 5));
+        let w = h.leaf_workers[3][0];
+        assert!(h.subtree_contains_core(1, w));
+        assert!(!h.subtree_contains_core(2, w));
+        assert!(h.subtree_contains_core(0, w));
+    }
+
+    #[test]
+    fn all_workers_covered_once() {
+        for (nw, spec) in
+            [(100, HierarchySpec::two_level(7)), (57, HierarchySpec::multi_level(3, 3))]
+        {
+            let h = HierarchyMap::build(nw, &spec);
+            let total: usize = (0..h.n_scheds).map(|s| h.leaf_workers[s].len()).sum();
+            assert_eq!(total, nw);
+            assert_eq!(h.subtree_workers(0).len(), nw);
+        }
+    }
+}

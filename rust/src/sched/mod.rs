@@ -1,0 +1,5 @@
+//! Hierarchical scheduling: the tree, scheduler/worker logic, scoring.
+pub mod hierarchy;
+pub mod scheduler;
+pub mod scoring;
+pub mod worker;

@@ -1,0 +1,868 @@
+//! Scheduler core logic: the event-based server of paper V.
+//!
+//! One instance drives each scheduler core. It implements, against the
+//! nodes/tasks it *owns*:
+//!
+//! * spawn handling + downward delegation (V-E),
+//! * the dependency traversal, grants, quiescence propagation and the
+//!   parent-counter race protocol (V-D),
+//! * packing with reentrant pending state (V-E),
+//! * hierarchical placement with locality/load-balance scoring (V-E, VI-D),
+//! * the memory-API service path and load-report aggregation (V-C).
+//!
+//! Everything that touches state owned by another scheduler leaves this
+//! core as a routed NoC message and is charged accordingly.
+
+use std::collections::{BTreeMap, HashMap};
+
+use crate::dep::node::ReadyAction;
+use crate::ids::{CoreId, NodeId, ReqId, TaskId};
+use crate::noc::msg::{MemOpKind, Msg, ProducerRange};
+use crate::sched::scoring::{balance_score, locality_score, pick_best};
+use crate::sim::engine::{CoreLogic, Ctx};
+use crate::sim::event::Event;
+use crate::task::descriptor::{Access, TaskDesc};
+use crate::task::table::TaskState;
+
+/// Reentrant pending packing operation ("reentrant events with saved local
+/// state", paper V-C).
+struct PackPending {
+    /// Root pend: drives `task`'s scheduling when complete.
+    task: Option<TaskId>,
+    /// Aggregation pend: reply to (original req, requester) when complete.
+    reply: Option<(ReqId, CoreId)>,
+    outstanding: usize,
+    acc: Vec<ProducerRange>,
+}
+
+pub struct SchedLogic {
+    pub idx: usize,
+    pub core: CoreId,
+    next_req: u64,
+    packs: HashMap<ReqId, PackPending>,
+    /// Spawn rendezvous: (spawner core, unsettled argument traversals).
+    spawns: HashMap<ReqId, (CoreId, usize)>,
+    /// task -> outstanding wait-node count.
+    waits: HashMap<TaskId, usize>,
+    /// Child-scheduler load estimates (from reports + eager increments).
+    child_load: BTreeMap<usize, u64>,
+    /// Worker load estimates (leaf schedulers).
+    worker_load: BTreeMap<u32, u64>,
+    last_reported: u64,
+}
+
+impl SchedLogic {
+    pub fn new(idx: usize, core: CoreId) -> Self {
+        SchedLogic {
+            idx,
+            core,
+            next_req: 1,
+            packs: HashMap::new(),
+            spawns: HashMap::new(),
+            waits: HashMap::new(),
+            child_load: BTreeMap::new(),
+            worker_load: BTreeMap::new(),
+            last_reported: 0,
+        }
+    }
+
+    fn fresh_req(&mut self) -> ReqId {
+        let r = ReqId((self.idx as u64) << 48 | self.next_req);
+        self.next_req += 1;
+        r
+    }
+
+    /// Send `msg` towards `to`, forwarding along the tree; handle locally
+    /// if `to` is this core.
+    fn send_routed(&mut self, ctx: &mut Ctx<'_>, to: CoreId, msg: Msg) {
+        if to == self.core {
+            self.handle(ctx, self.core, msg);
+            return;
+        }
+        let next = ctx.world.hier.route_next(self.idx, to);
+        if next == to {
+            ctx.send(to, msg);
+        } else {
+            ctx.send(next, Msg::Route { to, inner: Box::new(msg) });
+        }
+    }
+
+    fn sched_core(&self, ctx: &Ctx<'_>, idx: usize) -> CoreId {
+        ctx.world.hier.sched_core(idx)
+    }
+
+    // =================================================== spawn + delegation
+
+    fn on_spawn(
+        &mut self,
+        ctx: &mut Ctx<'_>,
+        req: ReqId,
+        origin: CoreId,
+        parent: Option<TaskId>,
+        desc: TaskDesc,
+    ) {
+        // The parent task's responsible scheduler handles the spawn.
+        if let Some(p) = parent {
+            let resp = ctx.world.tasks.get(p).resp;
+            if resp != self.idx {
+                let to = self.sched_core(ctx, resp);
+                self.send_routed(ctx, to, Msg::SpawnReq { req, origin, parent, desc });
+                return;
+            }
+        }
+        ctx.charge(ctx.sim.cost.sc_spawn_handle);
+        let now = ctx.now();
+        let task = ctx.world.tasks.create(desc, parent, self.idx, now);
+        ctx.world.gstats.tasks_spawned += 1;
+        // sys_spawn is a synchronous RPC, and the ack doubles as the
+        // race-closing rendezvous: it is sent only after every argument
+        // traversal has settled (see Msg::DepDescend::settle).
+        self.adopt_task(ctx, task, req, origin);
+    }
+
+    /// Take responsibility for a task: delegate further down if a single
+    /// child subtree owns every argument, else run dependency analysis.
+    fn adopt_task(&mut self, ctx: &mut Ctx<'_>, task: TaskId, req: ReqId, origin: CoreId) {
+        ctx.world.tasks.get_mut(task).resp = self.idx;
+        let desc = ctx.world.tasks.get(task).desc.clone();
+        let owners: Vec<usize> = desc
+            .dep_args()
+            .map(|(_, a)| {
+                ctx.charge(ctx.sim.cost.sc_dep_locate);
+                ctx.world.mem.owner(a.node.unwrap())
+            })
+            .collect();
+        if !owners.is_empty() {
+            if let Some(child) = ctx.world.hier.child_covering(self.idx, &owners) {
+                ctx.world.tasks.get_mut(task).resp = child;
+                let to = self.sched_core(ctx, child);
+                self.send_routed(ctx, to, Msg::Delegate { task, req, origin });
+                return;
+            }
+        }
+        self.start_dep_analysis(ctx, task, req, origin);
+    }
+
+    /// One argument traversal settled; ack the spawner once all have.
+    fn on_settled(&mut self, ctx: &mut Ctx<'_>, req: ReqId) {
+        let Some(entry) = self.spawns.get_mut(&req) else { return };
+        entry.1 -= 1;
+        if entry.1 == 0 {
+            let (origin, _) = self.spawns.remove(&req).unwrap();
+            self.send_routed(ctx, origin, Msg::SpawnAck { req });
+        }
+    }
+
+    /// Settle one traversal: locally if the rendezvous lives here, else by
+    /// message to the spawn-handling scheduler.
+    fn settle(&mut self, ctx: &mut Ctx<'_>, settle: Option<(CoreId, ReqId)>) {
+        let Some((core, req)) = settle else { return };
+        if core == self.core {
+            self.on_settled(ctx, req);
+        } else {
+            self.send_routed(ctx, core, Msg::DepSettled { req });
+        }
+    }
+
+    // ==================================================== dependency engine
+
+    fn start_dep_analysis(&mut self, ctx: &mut Ctx<'_>, task: TaskId, req: ReqId, origin: CoreId) {
+        let entry = ctx.world.tasks.get(task);
+        if entry.deps_pending == 0 {
+            self.send_routed(ctx, origin, Msg::SpawnAck { req });
+            self.task_ready(ctx, task);
+            return;
+        }
+        self.spawns.insert(req, (origin, entry.deps_pending));
+        let settle = Some((self.core, req));
+        let parent = entry.parent.expect("spawned task has a parent");
+        let parent_args = ctx.world.tasks.get(parent).desc.args.clone();
+        let desc = entry.desc.clone();
+        for (i, a) in desc.dep_args() {
+            let target = a.node.unwrap();
+            let mode = a.access();
+            // Locate the target and discover the path by following parent
+            // pointers up to the parent task's argument (paper V-D).
+            let anchor =
+                crate::dep::analysis::find_anchor(&parent_args, &ctx.world.mem, target, mode)
+                    .unwrap_or_else(|| {
+                        panic!(
+                            "task {task} arg {i} ({target}) is not covered by its parent's footprint"
+                        )
+                    });
+            let path_len = ctx
+                .world
+                .mem
+                .path_down(anchor, target)
+                .map(|p| p.len())
+                .unwrap_or(1);
+            ctx.charge(
+                ctx.sim.cost.sc_dep_locate + ctx.sim.cost.sc_dep_path_step * path_len as u64,
+            );
+            let owner = ctx.world.mem.owner(anchor);
+            if owner == self.idx {
+                self.descend(ctx, task, i, mode, target, anchor, false, settle);
+            } else {
+                ctx.world.gstats.dep_boundary_msgs += 1;
+                let to = self.sched_core(ctx, owner);
+                self.send_routed(
+                    ctx,
+                    to,
+                    Msg::DepDescend {
+                        task,
+                        arg: i,
+                        mode,
+                        target,
+                        cur: anchor,
+                        entered: false,
+                        settle,
+                    },
+                );
+            }
+        }
+    }
+
+    /// Downward traversal from `at` towards `target` (paper Fig 5a).
+    #[allow(clippy::too_many_arguments)]
+    fn descend(
+        &mut self,
+        ctx: &mut Ctx<'_>,
+        task: TaskId,
+        arg: usize,
+        mode: Access,
+        target: NodeId,
+        mut at: NodeId,
+        mut entered: bool,
+        settle: Option<(CoreId, ReqId)>,
+    ) {
+        loop {
+            ctx.charge(ctx.sim.cost.sc_dep_path_step);
+            let w = &mut *ctx.world;
+            let node = w.dep.node_mut(at, &w.mem);
+            debug_assert_eq!(node.owner, self.idx, "descend on foreign node {at}");
+            if entered {
+                node.note_arrival(mode);
+            }
+            if at == target {
+                let tasks = &w.tasks;
+                let node = w.dep.node_mut(at, &w.mem);
+                node.enqueue(task, arg, mode, target, &|a, t| tasks.is_ancestor(a, t));
+                ctx.charge(ctx.sim.cost.sc_dep_enqueue);
+                self.settle(ctx, settle);
+                self.reeval(ctx, at);
+                return;
+            }
+            let path = w.mem.path_down(at, target).expect("target below current node");
+            let next = path[1];
+            let tasks = &w.tasks;
+            let can_pass = node.can_pass(task, mode, &|a, t| tasks.is_ancestor(a, t));
+            if can_pass {
+                let node = w.dep.node_mut(at, &w.mem);
+                node.note_descent(next, mode);
+                let next_owner = w.mem.owner(next);
+                if next_owner == self.idx {
+                    at = next;
+                    entered = true;
+                    continue;
+                }
+                ctx.world.gstats.dep_boundary_msgs += 1;
+                let to = self.sched_core(ctx, next_owner);
+                self.send_routed(
+                    ctx,
+                    to,
+                    Msg::DepDescend { task, arg, mode, target, cur: next, entered: true, settle },
+                );
+                return;
+            }
+            // Blocked: enqueue here; the traversal resumes when the queue
+            // ahead drains (paper: "the process stops and child() is
+            // enqueued at the end of the local queue instead").
+            let tasks = &w.tasks;
+            let node = w.dep.node_mut(at, &w.mem);
+            node.enqueue(task, arg, mode, target, &|a, t| tasks.is_ancestor(a, t));
+            ctx.charge(ctx.sim.cost.sc_dep_enqueue);
+            self.settle(ctx, settle);
+            return;
+        }
+    }
+
+    /// Re-evaluate a node after any state change: grant/resume entries,
+    /// satisfy waiters, propagate quiescence.
+    fn reeval(&mut self, ctx: &mut Ctx<'_>, at: NodeId) {
+        let actions = {
+            let w = &mut *ctx.world;
+            let Some(node) = w.dep.get_mut(at) else { return };
+            let tasks = &w.tasks;
+            node.collect_ready(&|a, t| tasks.is_ancestor(a, t))
+        };
+        for act in actions {
+            match act {
+                ReadyAction::Grant { task, arg } => {
+                    ctx.charge(ctx.sim.cost.sc_grant);
+                    let now = ctx.now();
+                    if let Some(node) = ctx.world.dep.get_mut(at) {
+                        node.last_grant_at = now;
+                    }
+                    let resp = ctx.world.tasks.get(task).resp;
+                    if resp == self.idx {
+                        self.on_arg_granted(ctx, task, arg);
+                    } else {
+                        let to = self.sched_core(ctx, resp);
+                        self.send_routed(ctx, to, Msg::DepGranted { task, arg });
+                    }
+                }
+                ReadyAction::Resume { task, arg, mode, target } => {
+                    // The instance moves below this node.
+                    let w = &mut *ctx.world;
+                    let path = w.mem.path_down(at, target).expect("resume path");
+                    let next = path[1];
+                    let node = w.dep.node_mut(at, &w.mem);
+                    node.note_descent(next, mode);
+                    let next_owner = w.mem.owner(next);
+                    if next_owner == self.idx {
+                        self.descend(ctx, task, arg, mode, target, next, true, None);
+                    } else {
+                        ctx.world.gstats.dep_boundary_msgs += 1;
+                        let to = self.sched_core(ctx, next_owner);
+                        self.send_routed(
+                            ctx,
+                            to,
+                            Msg::DepDescend {
+                                task,
+                                arg,
+                                mode,
+                                target,
+                                cur: next,
+                                entered: true,
+                                settle: None,
+                            },
+                        );
+                    }
+                }
+            }
+        }
+        // Waiters (sys_wait).
+        let satisfied: Vec<TaskId> = {
+            let Some(node) = ctx.world.dep.get_mut(at) else { return };
+            let ok: Vec<bool> = node
+                .waiters
+                .iter()
+                .map(|&(t, m)| node_wait_ok(&ctx.world.tasks, t, m, node))
+                .collect();
+            let mut done = Vec::new();
+            let mut i = 0;
+            node.waiters.retain(|&(t, _)| {
+                let keep = !ok[i];
+                if !keep {
+                    done.push(t);
+                }
+                i += 1;
+                keep
+            });
+            done
+        };
+        for t in satisfied {
+            self.wait_node_ok(ctx, t, at);
+        }
+        // Quiescence propagation with the parent-counter race protocol.
+        self.maybe_quiesce(ctx, at);
+    }
+
+    fn maybe_quiesce(&mut self, ctx: &mut Ctx<'_>, at: NodeId) {
+        let (parent, pr, pw, dying) = {
+            let Some(node) = ctx.world.dep.get_mut(at) else { return };
+            // Per-mode quiescence channels: report each mode whose
+            // activity drained and whose arrival count changed since the
+            // last report for that mode.
+            let mut pr = None;
+            let mut pw = None;
+            if node.read_quiescent() && node.last_quiesce_r != Some(node.pr_recv) {
+                node.last_quiesce_r = Some(node.pr_recv);
+                pr = Some(node.pr_recv);
+            }
+            if node.write_quiescent() && node.last_quiesce_w != Some(node.pw_recv) {
+                node.last_quiesce_w = Some(node.pw_recv);
+                pw = Some(node.pw_recv);
+            }
+            if pr.is_none() && pw.is_none() {
+                return;
+            }
+            (node.parent, pr, pw, node.dying)
+        };
+        if let Some(p) = parent {
+            if ctx.world.dep.contains(p) {
+                ctx.charge(ctx.sim.cost.sc_quiesce);
+                let powner = ctx.world.dep.get(p).unwrap().owner;
+                if powner == self.idx {
+                    self.on_quiesce(ctx, p, at, pr, pw);
+                } else {
+                    ctx.world.gstats.dep_boundary_msgs += 1;
+                    let to = self.sched_core(ctx, powner);
+                    self.send_routed(ctx, to, Msg::QuiesceUp { child: at, parent: p, pr, pw });
+                }
+            }
+        }
+        if dying {
+            let remove = ctx
+                .world
+                .dep
+                .get(at)
+                .map(|n| n.waiters.is_empty() && n.is_quiescent())
+                .unwrap_or(false);
+            if remove {
+                ctx.world.dep.remove(at);
+            }
+        }
+    }
+
+    fn on_quiesce(
+        &mut self,
+        ctx: &mut Ctx<'_>,
+        parent: NodeId,
+        child: NodeId,
+        pr: Option<u64>,
+        pw: Option<u64>,
+    ) {
+        ctx.charge(ctx.sim.cost.sc_quiesce);
+        let matched = match ctx.world.dep.get_mut(parent) {
+            Some(node) => node.apply_quiesce(child, pr, pw),
+            None => false,
+        };
+        if matched {
+            self.reeval(ctx, parent);
+        }
+    }
+
+    fn on_arg_granted(&mut self, ctx: &mut Ctx<'_>, task: TaskId, _arg: usize) {
+        if let Ok(t) = std::env::var("MYRMICS_TRACE_TASK") {
+            if t.parse::<u64>() == Ok(task.0) {
+                eprintln!("[{}] t{} arg {} granted ({:?})", ctx.now(), task.0, _arg,
+                    ctx.world.tasks.get(task).desc.args[_arg].node);
+            }
+        }
+        let entry = ctx.world.tasks.get_mut(task);
+        debug_assert!(entry.deps_pending > 0);
+        entry.deps_pending -= 1;
+        if entry.deps_pending == 0 {
+            self.task_ready(ctx, task);
+        }
+    }
+
+    // ============================================================== packing
+
+    fn task_ready(&mut self, ctx: &mut Ctx<'_>, task: TaskId) {
+        let now = ctx.now();
+        {
+            let entry = ctx.world.tasks.get_mut(task);
+            entry.state = TaskState::Packing;
+            entry.ready_at = now;
+        }
+        let desc = ctx.world.tasks.get(task).desc.clone();
+        let mut acc: Vec<ProducerRange> = Vec::new();
+        let mut outstanding = 0usize;
+        let req = self.fresh_req();
+        for (_, a) in desc.dep_args() {
+            if a.is_notransfer() || a.flags & crate::task::descriptor::TYPE_IN_ARG == 0 {
+                // NOTRANSFER (paper V-A) and write-only arguments move no
+                // data to the consumer: nothing to pack.
+                continue;
+            }
+            let node = a.node.unwrap();
+            if ctx.world.mem.owner(node) == self.idx {
+                let (ranges, remote) = ctx.world.mem.collect_pack(node);
+                ctx.charge(
+                    ctx.sim.cost.sc_pack_base
+                        + ctx.sim.cost.sc_pack_per_range * ranges.len() as u64,
+                );
+                acc.extend(ranges);
+                for r in remote {
+                    outstanding += 1;
+                    let owner = ctx.world.mem.owner(NodeId::Region(r));
+                    let to = self.sched_core(ctx, owner);
+                    self.send_routed(
+                        ctx,
+                        to,
+                        Msg::PackReq { req, node: NodeId::Region(r), reply_to: self.core },
+                    );
+                }
+            } else {
+                outstanding += 1;
+                let owner = ctx.world.mem.owner(node);
+                let to = self.sched_core(ctx, owner);
+                self.send_routed(ctx, to, Msg::PackReq { req, node, reply_to: self.core });
+            }
+        }
+        if outstanding == 0 {
+            ctx.world.tasks.get_mut(task).pack = acc;
+            self.place(ctx, task);
+        } else {
+            self.packs
+                .insert(req, PackPending { task: Some(task), reply: None, outstanding, acc });
+        }
+    }
+
+    fn on_pack_req(&mut self, ctx: &mut Ctx<'_>, req: ReqId, node: NodeId, reply_to: CoreId) {
+        let (ranges, remote) = ctx.world.mem.collect_pack(node);
+        ctx.charge(
+            ctx.sim.cost.sc_pack_base + ctx.sim.cost.sc_pack_per_range * ranges.len() as u64,
+        );
+        if remote.is_empty() {
+            self.send_routed(ctx, reply_to, Msg::PackResp { req, ranges });
+            return;
+        }
+        let nested = self.fresh_req();
+        let outstanding = remote.len();
+        self.packs.insert(
+            nested,
+            PackPending { task: None, reply: Some((req, reply_to)), outstanding, acc: ranges },
+        );
+        for r in remote {
+            let owner = ctx.world.mem.owner(NodeId::Region(r));
+            let to = self.sched_core(ctx, owner);
+            self.send_routed(
+                ctx,
+                to,
+                Msg::PackReq { req: nested, node: NodeId::Region(r), reply_to: self.core },
+            );
+        }
+    }
+
+    fn on_pack_resp(&mut self, ctx: &mut Ctx<'_>, req: ReqId, ranges: Vec<ProducerRange>) {
+        let Some(p) = self.packs.get_mut(&req) else { return };
+        p.acc.extend(ranges);
+        p.outstanding -= 1;
+        if p.outstanding > 0 {
+            return;
+        }
+        let p = self.packs.remove(&req).unwrap();
+        if let Some(task) = p.task {
+            ctx.world.tasks.get_mut(task).pack = p.acc;
+            self.place(ctx, task);
+        } else if let Some((orig, reply_to)) = p.reply {
+            self.send_routed(ctx, reply_to, Msg::PackResp { req: orig, ranges: p.acc });
+        }
+    }
+
+    // ============================================================ placement
+
+    /// Hierarchical placement descent (paper V-E): children subtrees are
+    /// scored; at leaf level a worker is picked and the task dispatched.
+    fn place(&mut self, ctx: &mut Ctx<'_>, task: TaskId) {
+        ctx.world.tasks.get_mut(task).state = TaskState::Placing;
+        let pack = ctx.world.tasks.get(task).pack.clone();
+        let p_loc = ctx.world.cfg.policy.p_locality;
+        let children = ctx.world.hier.children[self.idx].clone();
+        if !children.is_empty() {
+            let cands: Vec<(u64, u64)> = children
+                .iter()
+                .map(|&c| {
+                    let members = ctx.world.hier.subtree_workers(c);
+                    let l = locality_score(&pack, members);
+                    let cap = 2 * members.len() as u64;
+                    let b = balance_score(*self.child_load.get(&c).unwrap_or(&0), cap);
+                    (l, b)
+                })
+                .collect();
+            ctx.charge(
+                ctx.sim.cost.sc_score_base
+                    + ctx.sim.cost.sc_score_per_child * children.len() as u64,
+            );
+            let chosen = children[pick_best(p_loc, &cands)];
+            *self.child_load.entry(chosen).or_insert(0) += 1; // eager estimate
+            let to = self.sched_core(ctx, chosen);
+            self.send_routed(ctx, to, Msg::ScheduleDown { task });
+            return;
+        }
+        // Leaf: pick a worker.
+        let workers = ctx.world.hier.leaf_workers[self.idx].clone();
+        assert!(!workers.is_empty(), "leaf scheduler {} has no workers", self.idx);
+        let cands: Vec<(u64, u64)> = workers
+            .iter()
+            .map(|&w| {
+                let l = locality_score(&pack, std::slice::from_ref(&w));
+                let b = balance_score(*self.worker_load.get(&w.0).unwrap_or(&0), 2);
+                (l, b)
+            })
+            .collect();
+        ctx.charge(
+            ctx.sim.cost.sc_score_base + ctx.sim.cost.sc_score_per_child * workers.len() as u64,
+        );
+        let w = workers[pick_best(p_loc, &cands)];
+        *self.worker_load.entry(w.0).or_insert(0) += 1; // eager estimate
+        {
+            let entry = ctx.world.tasks.get_mut(task);
+            entry.worker = Some(w);
+            entry.state = TaskState::Dispatched;
+        }
+        // New last producer for write arguments (paper V-E).
+        let desc = ctx.world.tasks.get(task).desc.clone();
+        for (_, a) in desc.dep_args() {
+            if a.access() == Access::Write && !a.is_notransfer() {
+                let node = a.node.unwrap();
+                ctx.world.mem.set_producer(node, w);
+                let owner = ctx.world.mem.owner(node);
+                if owner != self.idx {
+                    let to = self.sched_core(ctx, owner);
+                    self.send_routed(ctx, to, Msg::ProducerUpdate { node, worker: w });
+                }
+            }
+        }
+        ctx.charge(ctx.sim.cost.sc_dispatch);
+        self.send_routed(ctx, w, Msg::Dispatch { task });
+    }
+
+    // ============================================================ completion
+
+    fn on_task_done(&mut self, ctx: &mut Ctx<'_>, task: TaskId) {
+        let resp = ctx.world.tasks.get(task).resp;
+        if resp != self.idx {
+            // Leaf on the worker's path: refresh the local load estimate,
+            // then forward to the responsible scheduler.
+            if let Some(w) = ctx.world.tasks.get(task).worker {
+                if let Some(l) = self.worker_load.get_mut(&w.0) {
+                    *l = l.saturating_sub(1);
+                }
+                self.report_up(ctx);
+            }
+            let to = self.sched_core(ctx, resp);
+            self.send_routed(ctx, to, Msg::TaskDone { task });
+            return;
+        }
+        ctx.charge(ctx.sim.cost.sc_task_done);
+        let now = ctx.now();
+        {
+            let entry = ctx.world.tasks.get_mut(task);
+            entry.state = TaskState::Done;
+            entry.done_at = now;
+            if let Some(w) = entry.worker {
+                if let Some(l) = self.worker_load.get_mut(&w.0) {
+                    *l = l.saturating_sub(1);
+                }
+            }
+        }
+        ctx.world.gstats.tasks_completed += 1;
+        let desc = ctx.world.tasks.get(task).desc.clone();
+        for (i, a) in desc.dep_args() {
+            let node = a.node.unwrap();
+            let owner = match ctx.world.dep.get(node) {
+                Some(n) => n.owner,
+                None => continue, // region freed while the task ran
+            };
+            if owner == self.idx {
+                self.on_pop_entry(ctx, node, task, i);
+            } else {
+                let to = self.sched_core(ctx, owner);
+                self.send_routed(ctx, to, Msg::PopEntry { node, task, arg: i });
+            }
+        }
+        if ctx.world.gstats.tasks_completed == ctx.world.gstats.tasks_spawned {
+            ctx.world.done = true;
+        }
+    }
+
+    fn on_pop_entry(&mut self, ctx: &mut Ctx<'_>, node: NodeId, task: TaskId, arg: usize) {
+        let popped = match ctx.world.dep.get_mut(node) {
+            Some(n) => n.pop_task(task, arg),
+            None => false,
+        };
+        if popped {
+            ctx.charge(ctx.sim.cost.sc_dep_dequeue);
+            self.reeval(ctx, node);
+        }
+    }
+
+    // ============================================================== sys_wait
+
+    fn on_wait_req(
+        &mut self,
+        ctx: &mut Ctx<'_>,
+        task: TaskId,
+        origin: CoreId,
+        nodes: Vec<(NodeId, Access)>,
+    ) {
+        let resp = ctx.world.tasks.get(task).resp;
+        if resp != self.idx {
+            let to = self.sched_core(ctx, resp);
+            self.send_routed(ctx, to, Msg::WaitReq { task, origin, nodes });
+            return;
+        }
+        ctx.world.tasks.get_mut(task).state = TaskState::Waiting;
+        if nodes.is_empty() {
+            self.send_routed(ctx, origin, Msg::WaitGranted { task });
+            return;
+        }
+        self.waits.insert(task, nodes.len());
+        for (node, mode) in nodes {
+            let owner = match ctx.world.dep.get(node) {
+                Some(n) => n.owner,
+                None => ctx.world.mem.owner(node),
+            };
+            if owner == self.idx {
+                self.register_wait(ctx, task, node, mode);
+            } else {
+                let to = self.sched_core(ctx, owner);
+                self.send_routed(ctx, to, Msg::RegisterWait { task, node, mode });
+            }
+        }
+    }
+
+    fn register_wait(&mut self, ctx: &mut Ctx<'_>, task: TaskId, node: NodeId, mode: Access) {
+        let satisfied = {
+            let w = &mut *ctx.world;
+            let n = w.dep.node_mut(node, &w.mem);
+            let tasks = &w.tasks;
+            if node_wait_ok(tasks, task, mode, n) {
+                true
+            } else {
+                n.waiters.push((task, mode));
+                false
+            }
+        };
+        if satisfied {
+            self.wait_node_ok(ctx, task, node);
+        }
+    }
+
+    fn wait_node_ok(&mut self, ctx: &mut Ctx<'_>, task: TaskId, node: NodeId) {
+        let resp = ctx.world.tasks.get(task).resp;
+        if resp != self.idx {
+            let to = self.sched_core(ctx, resp);
+            self.send_routed(ctx, to, Msg::WaitNodeOk { task, node });
+            return;
+        }
+        let Some(left) = self.waits.get_mut(&task) else { return };
+        *left -= 1;
+        if *left == 0 {
+            self.waits.remove(&task);
+            let worker = ctx.world.tasks.get(task).worker.expect("waiting task has a worker");
+            ctx.world.tasks.get_mut(task).state = TaskState::Running;
+            self.send_routed(ctx, worker, Msg::WaitGranted { task });
+        }
+    }
+
+    // ======================================================= memory service
+
+    fn on_mem_req(
+        &mut self,
+        ctx: &mut Ctx<'_>,
+        req: ReqId,
+        origin: CoreId,
+        owner: CoreId,
+        op: MemOpKind,
+    ) {
+        if owner != self.core {
+            self.send_routed(ctx, owner, Msg::MemReq { req, origin, owner, op });
+            return;
+        }
+        let c = &ctx.sim.cost;
+        let cost = match op {
+            MemOpKind::Alloc => c.sc_alloc,
+            MemOpKind::Balloc { n } => c.sc_alloc + c.sc_balloc_per_obj * n as u64,
+            MemOpKind::Ralloc => c.sc_ralloc,
+            MemOpKind::Free => c.sc_free,
+            MemOpKind::Rfree { nodes } => c.sc_free + c.sc_rfree_per_node * nodes as u64,
+            MemOpKind::Realloc => c.sc_alloc + c.sc_free,
+        };
+        ctx.charge(cost);
+        self.send_routed(ctx, origin, Msg::MemResp { req });
+    }
+
+    // ========================================================= load reports
+
+    fn on_load_report(&mut self, ctx: &mut Ctx<'_>, from: CoreId, load: u64) {
+        ctx.charge(ctx.sim.cost.sc_load_report);
+        match ctx.world.hier.sched_idx(from) {
+            Some(s) => {
+                self.child_load.insert(s, load);
+            }
+            None => {
+                self.worker_load.insert(from.0, load);
+            }
+        }
+        self.report_up(ctx);
+    }
+
+    /// Re-aggregate and report upstream when the load changed by at least
+    /// the configured threshold (paper V-C).
+    fn report_up(&mut self, ctx: &mut Ctx<'_>) {
+        let my_load: u64 =
+            self.worker_load.values().sum::<u64>() + self.child_load.values().sum::<u64>();
+        let thr = ctx.world.cfg.load_report_threshold;
+        if my_load.abs_diff(self.last_reported) >= thr {
+            if let Some(p) = ctx.world.hier.parent[self.idx] {
+                self.last_reported = my_load;
+                let to = self.sched_core(ctx, p);
+                ctx.send(to, Msg::LoadReport { from: self.core, load: my_load });
+            }
+        }
+    }
+
+    // ============================================================= dispatch
+
+    pub fn handle(&mut self, ctx: &mut Ctx<'_>, _from: CoreId, msg: Msg) {
+        match msg {
+            Msg::Route { to, inner } => {
+                if to == self.core {
+                    self.handle(ctx, _from, *inner);
+                } else {
+                    let next = ctx.world.hier.route_next(self.idx, to);
+                    if next == to {
+                        ctx.send(to, *inner);
+                    } else {
+                        ctx.send(next, Msg::Route { to, inner });
+                    }
+                }
+            }
+            Msg::SpawnReq { req, origin, parent, desc } => {
+                self.on_spawn(ctx, req, origin, parent, desc)
+            }
+            Msg::Delegate { task, req, origin } => self.adopt_task(ctx, task, req, origin),
+            Msg::DepDescend { task, arg, mode, target, cur, entered, settle } => {
+                self.descend(ctx, task, arg, mode, target, cur, entered, settle)
+            }
+            Msg::DepSettled { req } => self.on_settled(ctx, req),
+            Msg::DepGranted { task, arg } => self.on_arg_granted(ctx, task, arg),
+            Msg::PopEntry { node, task, arg } => self.on_pop_entry(ctx, node, task, arg),
+            Msg::QuiesceUp { child, parent, pr, pw } => {
+                ctx.world.gstats.dep_boundary_msgs += 1;
+                self.on_quiesce(ctx, parent, child, pr, pw)
+            }
+            Msg::PackReq { req, node, reply_to } => self.on_pack_req(ctx, req, node, reply_to),
+            Msg::PackResp { req, ranges } => self.on_pack_resp(ctx, req, ranges),
+            Msg::ScheduleDown { task } => self.place(ctx, task),
+            Msg::ProducerUpdate { .. } => {
+                // Functional update was applied eagerly; charge bookkeeping.
+                ctx.charge(ctx.sim.cost.sc_load_report);
+            }
+            Msg::TaskDone { task } => self.on_task_done(ctx, task),
+            Msg::MemReq { req, origin, owner, op } => self.on_mem_req(ctx, req, origin, owner, op),
+            Msg::WaitReq { task, origin, nodes } => self.on_wait_req(ctx, task, origin, nodes),
+            Msg::RegisterWait { task, node, mode } => self.register_wait(ctx, task, node, mode),
+            Msg::WaitNodeOk { task, node } => self.wait_node_ok(ctx, task, node),
+            Msg::LoadReport { from, load } => self.on_load_report(ctx, from, load),
+            other => panic!("scheduler {} got unexpected message {}", self.idx, other.tag()),
+        }
+    }
+}
+
+/// Is `task`'s wait satisfied at `node`? (Free function to keep borrow
+/// scopes tight.)
+fn node_wait_ok(
+    tasks: &crate::task::table::TaskTable,
+    task: TaskId,
+    mode: Access,
+    node: &crate::dep::node::DepNode,
+) -> bool {
+    let _ = tasks;
+    node.wait_satisfied(task, mode)
+}
+
+impl CoreLogic for SchedLogic {
+    fn on_event(&mut self, ctx: &mut Ctx<'_>, ev: Event) {
+        match ev {
+            Event::Boot => {}
+            Event::Msg { from, msg } => self.handle(ctx, from, msg),
+            Event::DmaDone { .. } | Event::Timer(_) | Event::Wake => {}
+        }
+    }
+}

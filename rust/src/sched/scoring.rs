@@ -1,0 +1,117 @@
+//! Locality / load-balance scoring (paper V-E, evaluated in VI-D).
+//!
+//! When a dependency-free task is placed, each candidate subtree (child
+//! scheduler, or worker at leaf level) gets a locality score `L` — how many
+//! of the task's packed bytes were last produced inside the candidate —
+//! and a load-balance score `B` — how idle the candidate is. Both are
+//! normalized to 0..=1024 and combined as `T = p*L + (100-p)*B` with the
+//! policy bias percentage `p`.
+
+use crate::ids::CoreId;
+use crate::noc::msg::ProducerRange;
+
+pub const SCORE_MAX: u64 = 1024;
+
+/// Locality score: fraction of `pack` bytes produced by `members`
+/// (a sorted slice of worker core ids), scaled to 0..=1024.
+pub fn locality_score(pack: &[ProducerRange], members: &[CoreId]) -> u64 {
+    let total: u64 = pack.iter().map(|r| r.bytes).sum();
+    if total == 0 {
+        return 0;
+    }
+    let inside: u64 = pack
+        .iter()
+        .filter(|r| members.binary_search(&r.producer).is_ok())
+        .map(|r| r.bytes)
+        .sum();
+    SCORE_MAX * inside / total
+}
+
+/// Load-balance score: 1024 when idle, halved when the candidate holds
+/// `capacity` outstanding tasks (2x its worker count — the paper's "ready
+/// tasks twice the number of cores" operating point), falling smoothly
+/// towards 0 beyond. The hyperbolic shape keeps two properties the
+/// placement needs: small (+-1 task) imbalances do not swamp the locality
+/// score (sticky placement among equally-loaded candidates), and the
+/// score keeps discriminating at any overload level (no saturation ties).
+pub fn balance_score(load: u64, capacity: u64) -> u64 {
+    let cap = capacity.max(1) as u128;
+    (SCORE_MAX as u128 * cap / (cap + load as u128)) as u64
+}
+
+/// Combined score with policy bias `p` (percent weight of locality).
+pub fn total_score(p_locality: u32, l: u64, b: u64) -> u64 {
+    let p = p_locality.min(100) as u64;
+    (p * l + (100 - p) * b) / 100
+}
+
+/// Pick the candidate with the best combined score; ties break to the
+/// lowest index (determinism).
+pub fn pick_best(p_locality: u32, cands: &[(u64, u64)]) -> usize {
+    let mut best = 0;
+    let mut best_t = 0;
+    for (i, &(l, b)) in cands.iter().enumerate() {
+        let t = total_score(p_locality, l, b);
+        if i == 0 || t > best_t {
+            best = i;
+            best_t = t;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pr(producer: u32, bytes: u64) -> ProducerRange {
+        ProducerRange { producer: CoreId(producer), addr: 0, bytes }
+    }
+
+    #[test]
+    fn locality_fractions() {
+        let members = vec![CoreId(1), CoreId(2)];
+        let pack = vec![pr(1, 300), pr(2, 100), pr(9, 600)];
+        assert_eq!(locality_score(&pack, &members), 1024 * 400 / 1000);
+        assert_eq!(locality_score(&[], &members), 0);
+        assert_eq!(locality_score(&pack, &[]), 0);
+        let all = vec![CoreId(1), CoreId(2), CoreId(9)];
+        assert_eq!(locality_score(&pack, &all), 1024);
+    }
+
+    #[test]
+    fn balance_extremes() {
+        assert_eq!(balance_score(0, 1), 1024);
+        assert_eq!(balance_score(0, 10), 1024);
+        assert_eq!(balance_score(10, 10), 512);
+        // Keeps discriminating past capacity (no saturation ties).
+        assert!(balance_score(20, 10) < balance_score(19, 10));
+        assert!(balance_score(1000, 10) > 0 || balance_score(1000, 10) == 0);
+        let b = balance_score(30, 10);
+        assert_eq!(b, 1024 * 10 / 40);
+    }
+
+    #[test]
+    fn policy_bias_blends() {
+        // Pure locality.
+        assert_eq!(total_score(100, 1024, 0), 1024);
+        // Pure load balance.
+        assert_eq!(total_score(0, 1024, 0), 0);
+        assert_eq!(total_score(0, 0, 1024), 1024);
+        // Even split.
+        assert_eq!(total_score(50, 1024, 0), 512);
+        // The paper's default favors balance.
+        assert!(total_score(20, 1024, 0) < total_score(20, 0, 1024));
+    }
+
+    #[test]
+    fn pick_best_deterministic_ties() {
+        // Identical candidates: lowest index wins.
+        assert_eq!(pick_best(20, &[(100, 100), (100, 100)]), 0);
+        assert_eq!(pick_best(20, &[(0, 0), (1024, 1024)]), 1);
+        // Locality-heavy bias flips the winner.
+        let cands = [(1024, 0), (0, 1000)];
+        assert_eq!(pick_best(100, &cands), 0);
+        assert_eq!(pick_best(0, &cands), 1);
+    }
+}

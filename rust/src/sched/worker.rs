@@ -1,0 +1,276 @@
+//! Worker core logic (paper V-E, last paragraphs).
+//!
+//! "Worker cores run a very small portion of the Myrmics runtime system.
+//! They await messages from their parent scheduler which dispatch tasks to
+//! be executed. Workers implement ready-task queues ... The worker orders
+//! a group of DMA transfers for all remaining remote arguments ... Whenever
+//! two or more task descriptors exist in the queue, the worker optimizes
+//! the DMA transfers by ordering the DMA group for the second task ...
+//! before starting to execute the first task [double-buffering]. Workers
+//! do not interrupt running tasks."
+//!
+//! Task bodies run eagerly on arrival at the execution slot (functional
+//! effects) and are *replayed* as a timed op list: compute charges pass
+//! time, API calls become real message round trips that suspend the
+//! replay, spawns rendezvous with the scheduler (`SpawnAck`), `sys_wait`
+//! suspends until the scheduler re-grants the arguments.
+
+use std::collections::{HashMap, VecDeque};
+
+use crate::api::ctx::TaskOp;
+use crate::ids::{CoreId, ReqId, TaskId};
+use crate::noc::dma::Transfer;
+use crate::noc::msg::Msg;
+use crate::platform::run_task_body;
+use crate::sim::engine::{CoreLogic, Ctx};
+use crate::sim::event::Event;
+use crate::task::table::TaskState;
+
+/// DMA readiness of a queued task.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum Fetch {
+    Prepping,
+    Ready,
+}
+
+/// What the replay is suspended on.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum Waiting {
+    None,
+    Rpc(ReqId),
+    SpawnAck(ReqId),
+    WaitGrant,
+}
+
+struct Run {
+    task: TaskId,
+    ops: Vec<TaskOp>,
+    idx: usize,
+    phase: u32,
+    waiting: Waiting,
+}
+
+pub struct WorkerLogic {
+    pub core: CoreId,
+    leaf: CoreId,
+    ready: VecDeque<TaskId>,
+    fetch: HashMap<TaskId, Fetch>,
+    groups: HashMap<u64, TaskId>,
+    running: Option<Run>,
+    /// Tasks parked in `sys_wait` (they yield the core; paper V-A).
+    suspended: HashMap<TaskId, Run>,
+    /// Suspended tasks whose wait was granted, ready to resume.
+    resumable: VecDeque<TaskId>,
+    next_req: u64,
+    last_load: u64,
+}
+
+impl WorkerLogic {
+    pub fn new(core: CoreId, leaf: CoreId) -> Self {
+        WorkerLogic {
+            core,
+            leaf,
+            ready: VecDeque::new(),
+            fetch: HashMap::new(),
+            groups: HashMap::new(),
+            running: None,
+            suspended: HashMap::new(),
+            resumable: VecDeque::new(),
+            next_req: 1,
+            last_load: 0,
+        }
+    }
+
+    fn fresh_req(&mut self) -> ReqId {
+        let r = ReqId((self.core.0 as u64) << 32 | self.next_req);
+        self.next_req += 1;
+        r
+    }
+
+    fn load(&self) -> u64 {
+        self.ready.len() as u64 + self.running.is_some() as u64
+    }
+
+    fn report_load(&mut self, ctx: &mut Ctx<'_>) {
+        let load = self.load();
+        if load.abs_diff(self.last_load) >= ctx.world.cfg.load_report_threshold {
+            self.last_load = load;
+            ctx.send(self.leaf, Msg::LoadReport { from: self.core, load });
+        }
+    }
+
+    /// Order DMA groups for the first (up to) two unprepped queued tasks —
+    /// the paper's double-buffering window.
+    fn maybe_prep(&mut self, ctx: &mut Ctx<'_>) {
+        let window: Vec<TaskId> = self.ready.iter().take(2).copied().collect();
+        for t in window {
+            if self.fetch.contains_key(&t) {
+                continue;
+            }
+            let pack = ctx.world.tasks.get(t).pack.clone();
+            let transfers: Vec<Transfer> = pack
+                .iter()
+                .filter(|r| r.producer != self.core)
+                .map(|r| Transfer {
+                    src: r.producer,
+                    dst: self.core,
+                    bytes: r.bytes,
+                    hops: ctx.hops_to(r.producer),
+                })
+                .collect();
+            let group = ctx.dma_group(transfers);
+            self.fetch.insert(t, Fetch::Prepping);
+            self.groups.insert(group, t);
+        }
+    }
+
+    /// Start the queue-head task if its DMA group completed. Resumed
+    /// `sys_wait` tasks take priority over fresh dispatches.
+    fn maybe_start(&mut self, ctx: &mut Ctx<'_>) {
+        if self.running.is_some() {
+            return;
+        }
+        if let Some(t) = self.resumable.pop_front() {
+            let run = self.suspended.remove(&t).expect("resumable task is suspended");
+            ctx.charge(ctx.sim.cost.wk_dispatch_handle);
+            self.running = Some(run);
+            self.continue_run(ctx);
+            return;
+        }
+        let Some(&t) = self.ready.front() else { return };
+        if self.fetch.get(&t) != Some(&Fetch::Ready) {
+            return;
+        }
+        self.ready.pop_front();
+        self.fetch.remove(&t);
+        ctx.charge(ctx.sim.cost.wk_task_setup);
+        let phase = ctx.world.tasks.get(t).phase;
+        {
+            let now = ctx.now();
+            let entry = ctx.world.tasks.get_mut(t);
+            entry.state = TaskState::Running;
+            entry.started_at = now;
+        }
+        let ops = run_task_body(ctx.world, ctx.registry, t, self.core, phase);
+        self.running = Some(Run { task: t, ops, idx: 0, phase, waiting: Waiting::None });
+        self.continue_run(ctx);
+    }
+
+    /// Replay ops until the list ends or an RPC/wait suspends it.
+    fn continue_run(&mut self, ctx: &mut Ctx<'_>) {
+        loop {
+            let Some(run) = self.running.as_mut() else { return };
+            debug_assert_eq!(run.waiting, Waiting::None);
+            if run.idx >= run.ops.len() {
+                let task = run.task;
+                self.running = None;
+                self.finish_task(ctx, task);
+                return;
+            }
+            let op = run.ops[run.idx].clone();
+            run.idx += 1;
+            match op {
+                TaskOp::Compute(c) => {
+                    ctx.charge_task(c);
+                }
+                TaskOp::Rpc { owner, op } => {
+                    let req = self.fresh_req();
+                    let owner_core = ctx.world.hier.sched_core(owner);
+                    ctx.charge(ctx.sim.cost.wk_api_call);
+                    let origin = self.core;
+                    ctx.send(self.leaf, Msg::MemReq { req, origin, owner: owner_core, op });
+                    self.running.as_mut().unwrap().waiting = Waiting::Rpc(req);
+                    return;
+                }
+                TaskOp::Spawn(desc) => {
+                    let req = self.fresh_req();
+                    ctx.charge(ctx.sim.cost.wk_spawn_call);
+                    let parent = Some(self.running.as_ref().unwrap().task);
+                    let origin = self.core;
+                    ctx.send(self.leaf, Msg::SpawnReq { req, origin, parent, desc });
+                    self.running.as_mut().unwrap().waiting = Waiting::SpawnAck(req);
+                    return;
+                }
+                TaskOp::Wait(nodes) => {
+                    let task = self.running.as_ref().unwrap().task;
+                    let origin = self.core;
+                    ctx.charge(ctx.sim.cost.wk_api_call);
+                    ctx.send(self.leaf, Msg::WaitReq { task, origin, nodes });
+                    // Park the task: the core is free to run other ready
+                    // tasks while this one waits for its subtrees.
+                    let mut run = self.running.take().unwrap();
+                    run.waiting = Waiting::WaitGrant;
+                    self.suspended.insert(task, run);
+                    self.maybe_prep(ctx);
+                    self.maybe_start(ctx);
+                    return;
+                }
+            }
+        }
+    }
+
+    fn finish_task(&mut self, ctx: &mut Ctx<'_>, task: TaskId) {
+        ctx.charge(ctx.sim.cost.wk_task_teardown);
+        ctx.sim.stats[self.core.idx()].tasks_run += 1;
+        ctx.send(self.leaf, Msg::TaskDone { task });
+        self.maybe_prep(ctx);
+        self.maybe_start(ctx);
+        self.report_load(ctx);
+    }
+
+    fn resume(&mut self, ctx: &mut Ctx<'_>, expect: Waiting) {
+        let Some(run) = self.running.as_mut() else { return };
+        if run.waiting != expect {
+            return;
+        }
+        run.waiting = Waiting::None;
+        self.continue_run(ctx);
+    }
+}
+
+impl CoreLogic for WorkerLogic {
+    fn on_event(&mut self, ctx: &mut Ctx<'_>, ev: Event) {
+        match ev {
+            Event::Boot => {}
+            Event::Msg { from: _, msg } => match msg {
+                Msg::Dispatch { task } => {
+                    ctx.charge(ctx.sim.cost.wk_dispatch_handle);
+                    self.ready.push_back(task);
+                    self.maybe_prep(ctx);
+                    self.maybe_start(ctx);
+                    self.report_load(ctx);
+                }
+                Msg::SpawnAck { req } => self.resume(ctx, Waiting::SpawnAck(req)),
+                Msg::MemResp { req } => self.resume(ctx, Waiting::Rpc(req)),
+                Msg::WaitGranted { task } => {
+                    // Re-run the body at the next phase; its new ops replace
+                    // the old list. The task resumes once the core is free.
+                    let Some(run) = self.suspended.get_mut(&task) else { return };
+                    if run.waiting != Waiting::WaitGrant {
+                        return;
+                    }
+                    run.phase += 1;
+                    let phase = run.phase;
+                    ctx.world.tasks.get_mut(task).phase = phase;
+                    ctx.charge(ctx.sim.cost.wk_dispatch_handle);
+                    let ops = run_task_body(ctx.world, ctx.registry, task, self.core, phase);
+                    let run = self.suspended.get_mut(&task).unwrap();
+                    run.ops = ops;
+                    run.idx = 0;
+                    run.waiting = Waiting::None;
+                    self.resumable.push_back(task);
+                    self.maybe_start(ctx);
+                }
+                other => panic!("worker {} got unexpected message {}", self.core, other.tag()),
+            },
+            Event::DmaDone { group } => {
+                ctx.charge(ctx.sim.cost.wk_msg_proc);
+                if let Some(t) = self.groups.remove(&group) {
+                    self.fetch.insert(t, Fetch::Ready);
+                }
+                self.maybe_start(ctx);
+            }
+            Event::Timer(_) | Event::Wake => {}
+        }
+    }
+}

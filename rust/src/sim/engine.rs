@@ -1,0 +1,498 @@
+//! The discrete-event simulation engine.
+//!
+//! Every core of the simulated platform is an event-driven state machine
+//! (exactly how the paper describes Myrmics scheduler cores: "Each
+//! scheduler is organized as an event-based server ... in a continuous
+//! loop, waiting for new messages"). The engine delivers events in virtual
+//! time, models core occupancy (a busy core defers incoming events — this
+//! is what makes saturated schedulers slow the system down, Fig 9/12),
+//! charges per-operation cycle costs from the [`CostModel`], and models the
+//! NoC: wire latencies, per-peer credit-flow buffers and DMA groups.
+
+use std::collections::BinaryHeap;
+
+use crate::fxmap::FxHashMap;
+
+use crate::config::{CoreKind, CostModel};
+use crate::ids::{CoreId, Cycles};
+use crate::noc::channel::Channel;
+use crate::noc::dma::{group_completion, Transfer};
+use crate::noc::msg::Msg;
+use crate::noc::topology::Topology;
+use crate::platform::World;
+use crate::sim::event::{Event, Queued, TimerKind};
+use crate::stats::metrics::CoreStats;
+use crate::task::registry::Registry;
+
+/// Per-core engine metadata.
+#[derive(Clone, Debug)]
+pub struct CoreMeta {
+    pub kind: CoreKind,
+    /// The core is executing (task or runtime code) until this time;
+    /// events arriving earlier are deferred ("workers do not interrupt
+    /// running tasks", paper V-E).
+    pub busy_until: Cycles,
+    /// Events deferred while the core was busy, in arrival order. Drained
+    /// one per [`Event::Wake`] — O(1) per deferral instead of re-heaping
+    /// every deferred event each time `busy_until` advances.
+    pending: std::collections::VecDeque<Event>,
+    /// A Wake event is already scheduled for this core.
+    wake_scheduled: bool,
+}
+
+/// Mutable simulation state shared with handlers through [`Ctx`].
+pub struct SimState {
+    pub now: Cycles,
+    seq: u64,
+    queue: BinaryHeap<Queued>,
+    pub metas: Vec<CoreMeta>,
+    pub stats: Vec<CoreStats>,
+    pub topo: Topology,
+    pub cost: CostModel,
+    pub channel_capacity: usize,
+    channels: FxHashMap<(u32, u32), Channel>,
+    dma_seq: u64,
+    /// Print an event trace (debugging aid).
+    pub trace: bool,
+}
+
+impl SimState {
+    pub fn new(
+        kinds: Vec<CoreKind>,
+        topo: Topology,
+        cost: CostModel,
+        channel_capacity: usize,
+    ) -> Self {
+        let n = kinds.len();
+        SimState {
+            now: 0,
+            seq: 0,
+            queue: BinaryHeap::new(),
+            metas: kinds
+                .into_iter()
+                .map(|kind| CoreMeta {
+                    kind,
+                    busy_until: 0,
+                    pending: std::collections::VecDeque::new(),
+                    wake_scheduled: false,
+                })
+                .collect(),
+            stats: vec![CoreStats::default(); n],
+            topo,
+            cost,
+            channel_capacity,
+            channels: FxHashMap::default(),
+            dma_seq: 0,
+            trace: false,
+        }
+    }
+
+    pub fn n_cores(&self) -> usize {
+        self.metas.len()
+    }
+
+    /// Enqueue an event for `core` at absolute time `t`.
+    pub fn push(&mut self, t: Cycles, core: CoreId, ev: Event) {
+        let seq = self.seq;
+        self.seq += 1;
+        self.queue.push(Queued { t, seq, core, ev });
+    }
+
+    /// Latest point in virtual time any core is busy until (>= `now`).
+    pub fn horizon(&self) -> Cycles {
+        self.metas.iter().map(|m| m.busy_until).max().unwrap_or(0).max(self.now)
+    }
+
+    fn deliver_msg(&mut self, t_send: Cycles, from: CoreId, to: CoreId, msg: Msg) {
+        let lat = self.cost.msg_latency(self.topo.hops(from, to));
+        self.push(t_send + lat, to, Event::Msg { from, msg });
+    }
+}
+
+/// Handler context: everything a core's logic may touch while processing
+/// one event. Time charged through `charge`/`charge_task` advances the
+/// core's cursor; messages and DMA orders are stamped at the cursor.
+pub struct Ctx<'a> {
+    pub sim: &'a mut SimState,
+    pub world: &'a mut World,
+    pub registry: &'a Registry,
+    pub core: CoreId,
+    start: Cycles,
+    charged_rt: Cycles,
+    charged_task: Cycles,
+}
+
+impl<'a> Ctx<'a> {
+    /// Current cursor: event start time plus everything charged so far.
+    pub fn now(&self) -> Cycles {
+        self.start + self.charged_rt + self.charged_task
+    }
+
+    pub fn kind(&self) -> CoreKind {
+        self.sim.metas[self.core.idx()].kind
+    }
+
+    /// Charge `mb_cycles` of *runtime* work, scaled by this core's speed.
+    pub fn charge(&mut self, mb_cycles: Cycles) {
+        if mb_cycles == 0 {
+            return;
+        }
+        let kind = self.kind();
+        self.charged_rt += self.sim.cost.charge_on(kind, mb_cycles);
+    }
+
+    /// Charge `mb_cycles` of *application task* work, scaled by core speed.
+    pub fn charge_task(&mut self, mb_cycles: Cycles) {
+        if mb_cycles == 0 {
+            return;
+        }
+        let kind = self.kind();
+        self.charged_task += self.sim.cost.charge_on(kind, mb_cycles);
+    }
+
+    /// Send a control message. Charges sender-side push cost, consumes a
+    /// channel credit (or queues the send if the peer's buffer is full) and
+    /// schedules delivery after the wire latency.
+    pub fn send(&mut self, to: CoreId, msg: Msg) {
+        let wires = msg.wire_msgs();
+        self.charge(self.sim.cost.msg_send * wires);
+        let st = &mut self.sim.stats[self.core.idx()];
+        st.msgs_sent += wires;
+        st.msg_bytes_sent += wires * self.sim.cost.msg_bytes;
+        let t_send = self.start + self.charged_rt + self.charged_task;
+        let key = (self.core.0, to.0);
+        let cap = self.sim.channel_capacity;
+        let ch = self.sim.channels.entry(key).or_default();
+        if ch.try_acquire(cap) {
+            self.sim.deliver_msg(t_send, self.core, to, msg);
+        } else {
+            ch.blocked.push_back((t_send, msg));
+        }
+    }
+
+    /// Order a group of DMA transfers into this core. Returns the group id;
+    /// an [`Event::DmaDone`] fires when the whole group completes. An empty
+    /// group completes after just the issue cost.
+    pub fn dma_group(&mut self, transfers: Vec<Transfer>) -> u64 {
+        let id = self.sim.dma_seq;
+        self.sim.dma_seq += 1;
+        // Issue cost: one DMA start charge per transfer.
+        self.charge(self.sim.cost.dma_start * transfers.len() as Cycles);
+        for t in &transfers {
+            self.sim.stats[t.src.idx()].dma_bytes_out += t.bytes;
+            self.sim.stats[t.dst.idx()].dma_bytes_in += t.bytes;
+        }
+        self.world.gstats.dma_transfers += transfers.len() as u64;
+        let done = group_completion(&self.sim.cost, &transfers);
+        let at = self.now() + done;
+        let core = self.core;
+        self.sim.push(at, core, Event::DmaDone { group: id });
+        id
+    }
+
+    /// Schedule a timer event for this core `delay` cycles from the cursor.
+    pub fn after(&mut self, delay: Cycles, kind: TimerKind) {
+        let at = self.now() + delay;
+        let core = self.core;
+        self.sim.push(at, core, Event::Timer(kind));
+    }
+
+    /// Schedule a timer for another core (used by experiment drivers).
+    pub fn timer_for(&mut self, core: CoreId, delay: Cycles, kind: TimerKind) {
+        let at = self.now() + delay;
+        self.sim.push(at, core, Event::Timer(kind));
+    }
+
+    /// Mesh hop distance from this core.
+    pub fn hops_to(&self, to: CoreId) -> u32 {
+        self.sim.topo.hops(self.core, to)
+    }
+}
+
+/// Logic driving one simulated core.
+pub trait CoreLogic {
+    fn on_event(&mut self, ctx: &mut Ctx<'_>, ev: Event);
+}
+
+/// The assembled simulator: state + world + per-core logic.
+pub struct Engine {
+    pub sim: SimState,
+    pub world: World,
+    pub registry: Registry,
+    logic: Vec<Option<Box<dyn CoreLogic>>>,
+}
+
+impl Engine {
+    pub fn new(sim: SimState, world: World, registry: Registry) -> Self {
+        let n = sim.n_cores();
+        let mut logic = Vec::with_capacity(n);
+        logic.resize_with(n, || None);
+        Engine { sim, world, registry, logic }
+    }
+
+    pub fn set_logic(&mut self, core: CoreId, l: Box<dyn CoreLogic>) {
+        self.logic[core.idx()] = Some(l);
+    }
+
+    /// Schedule [`Event::Boot`] for every core with logic at t=0.
+    pub fn boot(&mut self) {
+        for i in 0..self.logic.len() {
+            if self.logic[i].is_some() {
+                self.sim.push(0, CoreId(i as u32), Event::Boot);
+            }
+        }
+    }
+
+    /// Run until the event queue drains, `world.done` is set, or the
+    /// optional time limit is exceeded. Returns the final virtual time.
+    pub fn run(&mut self, limit: Option<Cycles>) -> Cycles {
+        while let Some(q) = self.sim.queue.pop() {
+            if self.world.done {
+                break;
+            }
+            if let Some(lim) = limit {
+                if q.t > lim {
+                    self.sim.now = lim;
+                    break;
+                }
+            }
+            let ci = q.core.idx();
+            let is_wake = matches!(q.ev, Event::Wake);
+            {
+                let meta = &mut self.sim.metas[ci];
+                if !is_wake && (meta.busy_until > q.t || !meta.pending.is_empty()) {
+                    // Core occupied (or draining earlier deferrals): park
+                    // the event in arrival order behind a single waker.
+                    meta.pending.push_back(q.ev);
+                    if !meta.wake_scheduled {
+                        meta.wake_scheduled = true;
+                        let at = meta.busy_until.max(q.t);
+                        self.sim.push(at, q.core, Event::Wake);
+                    }
+                    continue;
+                }
+            }
+            let ev = if is_wake {
+                let meta = &mut self.sim.metas[ci];
+                meta.wake_scheduled = false;
+                if meta.busy_until > q.t {
+                    // Re-extended meanwhile: re-arm.
+                    if !meta.pending.is_empty() {
+                        meta.wake_scheduled = true;
+                        let at = meta.busy_until;
+                        self.sim.push(at, q.core, Event::Wake);
+                    }
+                    continue;
+                }
+                match meta.pending.pop_front() {
+                    Some(ev) => ev,
+                    None => continue,
+                }
+            } else {
+                q.ev
+            };
+            let q = Queued { t: q.t, seq: q.seq, core: q.core, ev };
+            debug_assert!(q.t >= self.sim.now, "time went backwards");
+            self.sim.now = q.t;
+            self.world.gstats.events_processed += 1;
+
+            // Message bookkeeping the handler should not have to repeat:
+            // credit return, receive stats, receiver processing cost.
+            let mut init_charge = 0;
+            if let Event::Msg { from, msg } = &q.ev {
+                let wires = msg.wire_msgs();
+                let st = &mut self.sim.stats[ci];
+                st.msgs_recv += wires;
+                st.msg_bytes_recv += wires * self.sim.cost.msg_bytes;
+                self.world.gstats.msgs_total += wires;
+                let hops = self.sim.topo.hops(*from, q.core);
+                let proc = self.sim.cost.msg_proc(hops, self.sim.topo.max_hops()) * wires;
+                init_charge = self.sim.cost.charge_on(self.sim.metas[ci].kind, proc);
+                // Return the credit; a blocked send may claim it.
+                let key = (from.0, q.core.0);
+                if let Some(ch) = self.sim.channels.get_mut(&key) {
+                    let released = ch.release();
+                    if let Some((t_blocked, blocked_msg)) = released {
+                        let stall = q.t.saturating_sub(t_blocked);
+                        self.sim.stats[from.idx()].credit_stall += stall;
+                        self.sim.deliver_msg(q.t, *from, q.core, blocked_msg);
+                    }
+                }
+            }
+
+            if self.sim.trace {
+                let tag = match &q.ev {
+                    Event::Boot => "Boot".to_string(),
+                    Event::Msg { from, msg } => format!("Msg({}) from {from}", msg.tag()),
+                    Event::DmaDone { group } => format!("DmaDone({group})"),
+                    Event::Timer(k) => format!("Timer({k:?})"),
+                    Event::Wake => "Wake".to_string(),
+                };
+                eprintln!("[{:>12}] {} <- {}", q.t, q.core, tag);
+            }
+
+            let mut logic = self.logic[ci].take().expect("event for core without logic");
+            let mut ctx = Ctx {
+                sim: &mut self.sim,
+                world: &mut self.world,
+                registry: &self.registry,
+                core: q.core,
+                start: q.t,
+                charged_rt: init_charge,
+                charged_task: 0,
+            };
+            logic.on_event(&mut ctx, q.ev);
+            let (rt, tk) = (ctx.charged_rt, ctx.charged_task);
+            self.logic[ci] = Some(logic);
+            let meta = &mut self.sim.metas[ci];
+            meta.busy_until = q.t + rt + tk;
+            // More deferred work waiting: re-arm the waker.
+            if !meta.pending.is_empty() && !meta.wake_scheduled {
+                meta.wake_scheduled = true;
+                let at = meta.busy_until;
+                self.sim.push(at, q.core, Event::Wake);
+            }
+            let st = &mut self.sim.stats[ci];
+            st.busy_task += tk;
+            st.busy_runtime += rt;
+        }
+        self.sim.now
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::PlatformConfig;
+    use crate::ids::ReqId;
+    use crate::platform::World;
+
+    /// Echo logic: replies to every message; counts events.
+    struct Echo {
+        seen: u64,
+        work: Cycles,
+    }
+
+    impl CoreLogic for Echo {
+        fn on_event(&mut self, ctx: &mut Ctx<'_>, ev: Event) {
+            self.seen += 1;
+            ctx.charge(self.work);
+            if let Event::Msg { from, msg: Msg::SpawnAck { req } } = ev {
+                if req.0 < 5 {
+                    ctx.send(from, Msg::SpawnAck { req: ReqId(req.0 + 1) });
+                }
+            }
+        }
+    }
+
+    fn tiny_engine(n: usize, work: Cycles) -> Engine {
+        let cfg = PlatformConfig::flat(1);
+        let sim = SimState::new(
+            vec![CoreKind::MicroBlaze; n],
+            Topology::new(n),
+            cfg.cost.clone(),
+            cfg.channel_capacity,
+        );
+        let world = World::for_tests(cfg);
+        let mut eng = Engine::new(sim, world, Registry::new());
+        for i in 0..n {
+            eng.set_logic(CoreId(i as u32), Box::new(Echo { seen: 0, work }));
+        }
+        eng
+    }
+
+    #[test]
+    fn ping_pong_advances_time() {
+        let mut eng = tiny_engine(2, 100);
+        eng.sim.push(0, CoreId(0), Event::Msg { from: CoreId(1), msg: Msg::SpawnAck { req: ReqId(0) } });
+        let end = eng.run(None);
+        // 6 messages processed (req 0..=5), each with latency + processing.
+        assert!(end > 6 * 100);
+        assert_eq!(eng.world.gstats.msgs_total, 6);
+    }
+
+    #[test]
+    fn busy_core_defers_events() {
+        let mut eng = tiny_engine(1, 1000);
+        // Two boot events can't exist, so use timers close together.
+        eng.sim.push(0, CoreId(0), Event::Timer(TimerKind::Custom(0)));
+        eng.sim.push(10, CoreId(0), Event::Timer(TimerKind::Custom(1)));
+        let end = eng.run(None);
+        // Second event deferred until t=1000, finishes at 2000.
+        assert_eq!(end, 1000);
+        assert_eq!(eng.sim.metas[0].busy_until, 2000);
+        assert_eq!(eng.sim.stats[0].busy_runtime, 2000);
+    }
+
+    #[test]
+    fn time_limit_stops_run() {
+        let mut eng = tiny_engine(2, 100);
+        eng.sim.push(0, CoreId(0), Event::Msg { from: CoreId(1), msg: Msg::SpawnAck { req: ReqId(0) } });
+        let end = eng.run(Some(250));
+        assert!(end <= 250);
+    }
+
+    #[test]
+    fn credit_exhaustion_blocks_and_recovers() {
+        let mut eng = tiny_engine(2, 50);
+        eng.sim.channel_capacity = 1;
+        // Core 0 sends 3 messages back-to-back to core 1 from one handler.
+        struct Burst;
+        impl CoreLogic for Burst {
+            fn on_event(&mut self, ctx: &mut Ctx<'_>, ev: Event) {
+                if matches!(ev, Event::Boot) {
+                    for i in 0..3 {
+                        ctx.send(CoreId(1), Msg::SpawnAck { req: ReqId(i) });
+                    }
+                }
+            }
+        }
+        eng.set_logic(CoreId(0), Box::new(Burst));
+        eng.sim.push(0, CoreId(0), Event::Boot);
+        eng.run(None);
+        // All three messages eventually processed by core 1.
+        assert_eq!(eng.sim.stats[1].msgs_recv, 3);
+        // Sender observed stall time from the blocked sends.
+        assert!(eng.sim.stats[0].credit_stall > 0);
+    }
+
+    #[test]
+    fn dma_group_completion_fires() {
+        let mut eng = tiny_engine(3, 10);
+        struct Fetch {
+            done: bool,
+        }
+        impl CoreLogic for Fetch {
+            fn on_event(&mut self, ctx: &mut Ctx<'_>, ev: Event) {
+                match ev {
+                    Event::Boot => {
+                        ctx.dma_group(vec![
+                            Transfer { src: CoreId(1), dst: CoreId(0), bytes: 4096, hops: 1 },
+                            Transfer { src: CoreId(2), dst: CoreId(0), bytes: 1024, hops: 2 },
+                        ]);
+                    }
+                    Event::DmaDone { .. } => self.done = true,
+                    _ => {}
+                }
+            }
+        }
+        eng.set_logic(CoreId(0), Box::new(Fetch { done: false }));
+        eng.sim.push(0, CoreId(0), Event::Boot);
+        eng.run(None);
+        assert_eq!(eng.sim.stats[0].dma_bytes_in, 5120);
+        assert_eq!(eng.sim.stats[1].dma_bytes_out, 4096);
+        assert_eq!(eng.world.gstats.dma_transfers, 2);
+    }
+
+    #[test]
+    fn deterministic_replay() {
+        let run = || {
+            let mut eng = tiny_engine(2, 100);
+            eng.sim
+                .push(0, CoreId(0), Event::Msg { from: CoreId(1), msg: Msg::SpawnAck { req: ReqId(0) } });
+            let t = eng.run(None);
+            (t, eng.world.gstats.msgs_total, eng.sim.stats[0].busy_runtime)
+        };
+        assert_eq!(run(), run());
+    }
+}

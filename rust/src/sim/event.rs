@@ -1,0 +1,92 @@
+//! Events delivered to simulated cores.
+
+use crate::ids::{CoreId, Cycles, TaskId};
+use crate::noc::msg::Msg;
+
+/// Self-scheduled continuation kinds.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum TimerKind {
+    /// Continue replaying the op list of a running task on a worker.
+    TaskStep(TaskId),
+    /// Advance a mini-MPI rank program.
+    MpiStep,
+    /// Free-form continuation for app/experiment logic.
+    Custom(u64),
+}
+
+/// An event delivered to a core at a point in virtual time.
+#[derive(Clone, Debug)]
+pub enum Event {
+    /// Delivered once to every core at t=0 (initialize, kick off work).
+    Boot,
+    /// An incoming control message (after wire latency). The engine
+    /// auto-charges receiver-side processing cost and handles the channel
+    /// credit return before the handler runs.
+    Msg { from: CoreId, msg: Msg },
+    /// A previously ordered DMA group completed.
+    DmaDone { group: u64 },
+    /// Self-scheduled timer.
+    Timer(TimerKind),
+    /// Engine-internal: a busy core's deferred-event queue should drain
+    /// (see `Engine::run`). Never delivered to core logic.
+    Wake,
+}
+
+/// Queue entry: ordered by (time, sequence number) for determinism.
+#[derive(Debug)]
+pub struct Queued {
+    pub t: Cycles,
+    pub seq: u64,
+    pub core: CoreId,
+    pub ev: Event,
+}
+
+impl PartialEq for Queued {
+    fn eq(&self, other: &Self) -> bool {
+        self.t == other.t && self.seq == other.seq
+    }
+}
+impl Eq for Queued {}
+impl PartialOrd for Queued {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Queued {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // Reversed: BinaryHeap is a max-heap, we want earliest first.
+        (other.t, other.seq).cmp(&(self.t, self.seq))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::BinaryHeap;
+
+    fn q(t: Cycles, seq: u64) -> Queued {
+        Queued { t, seq, core: CoreId(0), ev: Event::Boot }
+    }
+
+    #[test]
+    fn heap_pops_earliest_first() {
+        let mut h = BinaryHeap::new();
+        h.push(q(30, 0));
+        h.push(q(10, 1));
+        h.push(q(20, 2));
+        assert_eq!(h.pop().unwrap().t, 10);
+        assert_eq!(h.pop().unwrap().t, 20);
+        assert_eq!(h.pop().unwrap().t, 30);
+    }
+
+    #[test]
+    fn ties_break_by_sequence() {
+        let mut h = BinaryHeap::new();
+        h.push(q(10, 5));
+        h.push(q(10, 2));
+        h.push(q(10, 9));
+        assert_eq!(h.pop().unwrap().seq, 2);
+        assert_eq!(h.pop().unwrap().seq, 5);
+        assert_eq!(h.pop().unwrap().seq, 9);
+    }
+}

@@ -1,0 +1,4 @@
+//! Discrete-event simulation substrate.
+pub mod engine;
+pub mod event;
+pub mod rng;

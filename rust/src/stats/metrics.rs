@@ -1,0 +1,109 @@
+//! Per-core and platform-wide counters.
+//!
+//! These drive the paper's qualitative figures: the time breakdown of
+//! Fig 9 (task vs runtime vs idle time per core) and the traffic analysis
+//! of Fig 10 (message and DMA volumes per core).
+
+use crate::ids::Cycles;
+
+/// What a core was doing while busy. `Idle` is never charged; it is
+/// derived as `total - task - runtime` at reporting time.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum BusyKind {
+    /// Executing application task code.
+    Task,
+    /// Executing runtime code (message handling, dependency analysis,
+    /// scheduling, memory management, API overhead on workers).
+    Runtime,
+}
+
+/// Counters for a single simulated core.
+#[derive(Clone, Default, Debug)]
+pub struct CoreStats {
+    pub busy_task: Cycles,
+    pub busy_runtime: Cycles,
+    /// Control messages sent / received (count and bytes).
+    pub msgs_sent: u64,
+    pub msgs_recv: u64,
+    pub msg_bytes_sent: u64,
+    pub msg_bytes_recv: u64,
+    /// DMA payload bytes pulled into this core / pushed out of it.
+    pub dma_bytes_in: u64,
+    pub dma_bytes_out: u64,
+    /// Number of application tasks this core executed (workers only).
+    pub tasks_run: u64,
+    /// Number of cycles the core spent stalled on channel credits.
+    pub credit_stall: Cycles,
+}
+
+impl CoreStats {
+    pub fn busy(&self) -> Cycles {
+        self.busy_task + self.busy_runtime
+    }
+
+    /// Fraction of `total` spent on application tasks (0..=1).
+    pub fn task_frac(&self, total: Cycles) -> f64 {
+        if total == 0 {
+            0.0
+        } else {
+            self.busy_task as f64 / total as f64
+        }
+    }
+
+    /// Fraction of `total` spent on runtime work (0..=1).
+    pub fn runtime_frac(&self, total: Cycles) -> f64 {
+        if total == 0 {
+            0.0
+        } else {
+            self.busy_runtime as f64 / total as f64
+        }
+    }
+
+    /// Fraction of `total` spent idle (0..=1).
+    pub fn idle_frac(&self, total: Cycles) -> f64 {
+        (1.0 - self.task_frac(total) - self.runtime_frac(total)).max(0.0)
+    }
+}
+
+/// Platform-wide counters.
+#[derive(Clone, Default, Debug)]
+pub struct GlobalStats {
+    pub tasks_spawned: u64,
+    pub tasks_completed: u64,
+    pub events_processed: u64,
+    pub msgs_total: u64,
+    pub dma_transfers: u64,
+    pub regions_created: u64,
+    pub objects_created: u64,
+    /// Dependency-analysis boundary crossings (inter-scheduler messages
+    /// caused by region-tree traversal).
+    pub dep_boundary_msgs: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fractions_sum_to_one() {
+        let s = CoreStats { busy_task: 600, busy_runtime: 150, ..Default::default() };
+        let total = 1000;
+        let sum = s.task_frac(total) + s.runtime_frac(total) + s.idle_frac(total);
+        assert!((sum - 1.0).abs() < 1e-9);
+        assert!((s.idle_frac(total) - 0.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn zero_total_is_safe() {
+        let s = CoreStats::default();
+        assert_eq!(s.task_frac(0), 0.0);
+        assert_eq!(s.idle_frac(0), 1.0);
+    }
+
+    #[test]
+    fn idle_clamps_at_zero() {
+        // Overcommitted core (busy > wall) must not report negative idle.
+        let s = CoreStats { busy_task: 900, busy_runtime: 400, ..Default::default() };
+        assert_eq!(s.idle_frac(1000), 0.0);
+    }
+}

@@ -1,0 +1,2 @@
+//! Metrics and report generation.
+pub mod metrics;

@@ -1,0 +1,179 @@
+//! Task descriptors and argument annotations (paper Fig 4).
+//!
+//! A spawned task is a function-table index plus an argument list. Each
+//! argument carries the dependency flags of the Myrmics API:
+//! `TYPE_IN_ARG`, `TYPE_OUT_ARG`, `TYPE_NOTRANSFER_ARG`, `TYPE_SAFE_ARG`,
+//! `TYPE_REGION_ARG`.
+
+use crate::ids::{NodeId, ObjectId, RegionId};
+
+pub const TYPE_IN_ARG: u8 = 1 << 0;
+pub const TYPE_OUT_ARG: u8 = 1 << 1;
+pub const TYPE_NOTRANSFER_ARG: u8 = 1 << 2;
+pub const TYPE_SAFE_ARG: u8 = 1 << 3;
+pub const TYPE_REGION_ARG: u8 = 1 << 4;
+
+/// Dependency access mode derived from the IN/OUT flags.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Access {
+    /// Read-only: multiple readers may be granted concurrently.
+    Read,
+    /// Write or read-write: exclusive.
+    Write,
+}
+
+impl Access {
+    pub fn compatible(self, other: Access) -> bool {
+        self == Access::Read && other == Access::Read
+    }
+}
+
+/// One task argument.
+#[derive(Clone, Debug)]
+pub struct TaskArg {
+    /// The dependency node (object or region) — `None` for SAFE by-value
+    /// arguments, which skip dependency analysis entirely.
+    pub node: Option<NodeId>,
+    /// By-value payload (scalar arguments, or the raw pointer/rid the task
+    /// body receives).
+    pub value: u64,
+    /// OR of the `TYPE_*` flag bits.
+    pub flags: u8,
+}
+
+impl TaskArg {
+    /// An object argument with read-only access.
+    pub fn obj_in(o: ObjectId) -> Self {
+        TaskArg { node: Some(o.into()), value: o.0, flags: TYPE_IN_ARG }
+    }
+
+    /// An object argument with read-write access.
+    pub fn obj_inout(o: ObjectId) -> Self {
+        TaskArg { node: Some(o.into()), value: o.0, flags: TYPE_IN_ARG | TYPE_OUT_ARG }
+    }
+
+    /// An object argument with write-only access.
+    pub fn obj_out(o: ObjectId) -> Self {
+        TaskArg { node: Some(o.into()), value: o.0, flags: TYPE_OUT_ARG }
+    }
+
+    /// A region argument with read-only access.
+    pub fn region_in(r: RegionId) -> Self {
+        TaskArg { node: Some(r.into()), value: r.0, flags: TYPE_IN_ARG | TYPE_REGION_ARG }
+    }
+
+    /// A region argument with read-write access.
+    pub fn region_inout(r: RegionId) -> Self {
+        TaskArg {
+            node: Some(r.into()),
+            value: r.0,
+            flags: TYPE_IN_ARG | TYPE_OUT_ARG | TYPE_REGION_ARG,
+        }
+    }
+
+    /// A by-value scalar argument (no dependency analysis, no transfer).
+    pub fn val(v: u64) -> Self {
+        TaskArg { node: None, value: v, flags: TYPE_SAFE_ARG }
+    }
+
+    /// Mark this argument NOTRANSFER: dependency semantics apply but no
+    /// DMA transfer is performed (used by tasks that only spawn subtasks).
+    pub fn notransfer(mut self) -> Self {
+        self.flags |= TYPE_NOTRANSFER_ARG;
+        self
+    }
+
+    pub fn is_safe(&self) -> bool {
+        self.flags & TYPE_SAFE_ARG != 0 || self.node.is_none()
+    }
+
+    pub fn is_region(&self) -> bool {
+        self.flags & TYPE_REGION_ARG != 0
+    }
+
+    pub fn is_notransfer(&self) -> bool {
+        self.flags & TYPE_NOTRANSFER_ARG != 0
+    }
+
+    pub fn access(&self) -> Access {
+        if self.flags & TYPE_OUT_ARG != 0 {
+            Access::Write
+        } else {
+            Access::Read
+        }
+    }
+}
+
+/// A task to be spawned: function-table index + arguments.
+#[derive(Clone, Debug)]
+pub struct TaskDesc {
+    /// Index into the [`crate::task::registry::Registry`] function table
+    /// (the `idx` parameter of `sys_spawn`).
+    pub func: usize,
+    pub args: Vec<TaskArg>,
+}
+
+impl TaskDesc {
+    pub fn new(func: usize, args: Vec<TaskArg>) -> Self {
+        TaskDesc { func, args }
+    }
+
+    /// Arguments that participate in dependency analysis (non-SAFE).
+    pub fn dep_args(&self) -> impl Iterator<Item = (usize, &TaskArg)> {
+        self.args.iter().enumerate().filter(|(_, a)| !a.is_safe())
+    }
+
+    pub fn n_dep_args(&self) -> usize {
+        self.dep_args().count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn access_modes() {
+        assert_eq!(TaskArg::obj_in(ObjectId(1)).access(), Access::Read);
+        assert_eq!(TaskArg::obj_inout(ObjectId(1)).access(), Access::Write);
+        assert_eq!(TaskArg::obj_out(ObjectId(1)).access(), Access::Write);
+        assert_eq!(TaskArg::region_in(RegionId(1)).access(), Access::Read);
+        assert_eq!(TaskArg::region_inout(RegionId(1)).access(), Access::Write);
+    }
+
+    #[test]
+    fn compatibility() {
+        assert!(Access::Read.compatible(Access::Read));
+        assert!(!Access::Read.compatible(Access::Write));
+        assert!(!Access::Write.compatible(Access::Write));
+    }
+
+    #[test]
+    fn safe_args_skip_deps() {
+        let d = TaskDesc::new(
+            0,
+            vec![TaskArg::val(42), TaskArg::obj_in(ObjectId(1)), TaskArg::region_inout(RegionId(2))],
+        );
+        assert_eq!(d.n_dep_args(), 2);
+        assert!(d.args[0].is_safe());
+        assert!(!d.args[1].is_region());
+        assert!(d.args[2].is_region());
+    }
+
+    #[test]
+    fn notransfer_flag() {
+        let a = TaskArg::region_inout(RegionId(1)).notransfer();
+        assert!(a.is_notransfer());
+        assert_eq!(a.access(), Access::Write);
+        assert!(!a.is_safe());
+    }
+
+    #[test]
+    fn flag_bits_match_paper() {
+        assert_eq!(TYPE_IN_ARG, 1);
+        assert_eq!(TYPE_OUT_ARG, 2);
+        assert_eq!(TYPE_NOTRANSFER_ARG, 4);
+        assert_eq!(TYPE_SAFE_ARG, 8);
+        assert_eq!(TYPE_REGION_ARG, 16);
+    }
+}

@@ -1,0 +1,4 @@
+//! Task descriptors, the function registry and the task table.
+pub mod descriptor;
+pub mod registry;
+pub mod table;

@@ -1,0 +1,45 @@
+//! The task function table.
+//!
+//! `sys_spawn` names tasks by "an index to a table of function pointers"
+//! (paper V-A). Applications register their task bodies here before the
+//! platform boots; workers look bodies up by index when a dispatch
+//! arrives.
+
+use std::rc::Rc;
+
+use crate::api::ctx::TaskCtx;
+
+pub type TaskFn = Rc<dyn Fn(&mut TaskCtx<'_>)>;
+
+#[derive(Default)]
+pub struct Registry {
+    fns: Vec<(String, TaskFn)>,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register a task body; returns its function-table index.
+    pub fn register(&mut self, name: &str, f: impl Fn(&mut TaskCtx<'_>) + 'static) -> usize {
+        self.fns.push((name.to_string(), Rc::new(f)));
+        self.fns.len() - 1
+    }
+
+    pub fn get(&self, idx: usize) -> TaskFn {
+        self.fns[idx].1.clone()
+    }
+
+    pub fn name(&self, idx: usize) -> &str {
+        &self.fns[idx].0
+    }
+
+    pub fn len(&self) -> usize {
+        self.fns.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.fns.is_empty()
+    }
+}

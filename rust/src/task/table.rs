@@ -1,0 +1,182 @@
+//! The task table: every task's lifecycle state.
+//!
+//! "Each task in Myrmics is assigned to one of the schedulers, which is
+//! responsible to monitor it until it retires" (paper V-E). Entries live
+//! in one arena; each is *owned* by its responsible scheduler, which is
+//! the only core that mutates it (the worker running the task mutates only
+//! through messages to that scheduler).
+
+use crate::ids::{CoreId, Cycles, TaskId};
+use crate::noc::msg::ProducerRange;
+use crate::task::descriptor::TaskDesc;
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum TaskState {
+    /// Created; dependency analysis in flight.
+    DepWait,
+    /// All arguments granted; packing in flight.
+    Packing,
+    /// Packed; placement descent in flight.
+    Placing,
+    /// Sent to a worker; queued or fetching arguments there.
+    Dispatched,
+    /// Body executing on the worker.
+    Running,
+    /// Suspended in `sys_wait`.
+    Waiting,
+    Done,
+}
+
+#[derive(Debug)]
+pub struct TaskEntry {
+    pub id: TaskId,
+    pub desc: TaskDesc,
+    pub parent: Option<TaskId>,
+    /// Responsible scheduler index.
+    pub resp: usize,
+    pub state: TaskState,
+    /// Dependency-pending argument count (granted when it hits zero).
+    pub deps_pending: usize,
+    /// Packing result: coalesced ranges grouped by last producer.
+    pub pack: Vec<ProducerRange>,
+    /// Worker the task was dispatched to.
+    pub worker: Option<CoreId>,
+    /// Current `sys_wait` phase (0 = first run of the body).
+    pub phase: u32,
+    // --- timeline, for profiling/reports ---
+    pub spawned_at: Cycles,
+    pub ready_at: Cycles,
+    pub started_at: Cycles,
+    pub done_at: Cycles,
+}
+
+/// Arena of all tasks ever created in a run (ids are dense indices).
+#[derive(Default)]
+pub struct TaskTable {
+    tasks: Vec<TaskEntry>,
+}
+
+impl TaskTable {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn create(
+        &mut self,
+        desc: TaskDesc,
+        parent: Option<TaskId>,
+        resp: usize,
+        now: Cycles,
+    ) -> TaskId {
+        let id = TaskId(self.tasks.len() as u64);
+        let deps_pending = desc.n_dep_args();
+        self.tasks.push(TaskEntry {
+            id,
+            desc,
+            parent,
+            resp,
+            state: TaskState::DepWait,
+            deps_pending,
+            pack: Vec::new(),
+            worker: None,
+            phase: 0,
+            spawned_at: now,
+            ready_at: 0,
+            started_at: 0,
+            done_at: 0,
+        });
+        id
+    }
+
+    pub fn get(&self, t: TaskId) -> &TaskEntry {
+        &self.tasks[t.0 as usize]
+    }
+
+    pub fn get_mut(&mut self, t: TaskId) -> &mut TaskEntry {
+        &mut self.tasks[t.0 as usize]
+    }
+
+    pub fn len(&self) -> usize {
+        self.tasks.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tasks.is_empty()
+    }
+
+    /// Is `a` an ancestor task of `t` (walking the parent chain)?
+    pub fn is_ancestor(&self, a: TaskId, t: TaskId) -> bool {
+        if a == t {
+            return false;
+        }
+        let mut cur = self.get(t).parent;
+        while let Some(p) = cur {
+            if p == a {
+                return true;
+            }
+            cur = self.get(p).parent;
+        }
+        false
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &TaskEntry> {
+        self.tasks.iter()
+    }
+
+    pub fn n_done(&self) -> usize {
+        self.tasks.iter().filter(|t| t.state == TaskState::Done).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn desc() -> TaskDesc {
+        TaskDesc::new(0, vec![])
+    }
+
+    #[test]
+    fn ids_are_dense() {
+        let mut t = TaskTable::new();
+        let a = t.create(desc(), None, 0, 0);
+        let b = t.create(desc(), Some(a), 0, 10);
+        assert_eq!(a, TaskId(0));
+        assert_eq!(b, TaskId(1));
+        assert_eq!(t.len(), 2);
+        assert_eq!(t.get(b).parent, Some(a));
+        assert_eq!(t.get(b).spawned_at, 10);
+    }
+
+    #[test]
+    fn ancestry_chain() {
+        let mut t = TaskTable::new();
+        let a = t.create(desc(), None, 0, 0);
+        let b = t.create(desc(), Some(a), 0, 0);
+        let c = t.create(desc(), Some(b), 0, 0);
+        let d = t.create(desc(), Some(a), 0, 0);
+        assert!(t.is_ancestor(a, c));
+        assert!(t.is_ancestor(b, c));
+        assert!(t.is_ancestor(a, d));
+        assert!(!t.is_ancestor(c, a));
+        assert!(!t.is_ancestor(b, d));
+        assert!(!t.is_ancestor(a, a), "a task is not its own ancestor");
+    }
+
+    #[test]
+    fn deps_pending_counts_non_safe_args() {
+        use crate::ids::{ObjectId, RegionId};
+        use crate::task::descriptor::TaskArg;
+        let mut t = TaskTable::new();
+        let d = TaskDesc::new(
+            0,
+            vec![
+                TaskArg::val(1),
+                TaskArg::obj_in(ObjectId(1)),
+                TaskArg::region_inout(RegionId(1)),
+            ],
+        );
+        let id = t.create(d, None, 0, 0);
+        assert_eq!(t.get(id).deps_pending, 2);
+    }
+}

@@ -1,0 +1,2 @@
+//! Test utilities (mini property-testing harness).
+pub mod prop;

@@ -1,0 +1,156 @@
+//! Integration: AOT artifacts (L1 Pallas via L2 JAX) loaded and executed
+//! through the PJRT runtime, checked against the rust-side references.
+//!
+//! Requires `make artifacts`; tests skip (with a notice) when the
+//! artifacts directory is absent so `cargo test` works standalone.
+
+use myrmics::apps::jacobi::{jacobi_init, jacobi_reference, myrmics as jacobi_app, read_result, JacobiParams};
+use myrmics::apps::kmeans::{gen_points, kmeans_step_reference};
+use myrmics::config::PlatformConfig;
+use myrmics::platform::Platform;
+use myrmics::runtime::engine::KernelEngine;
+use myrmics::runtime::shapes;
+
+fn engine() -> Option<KernelEngine> {
+    let dir = KernelEngine::artifacts_dir();
+    if !dir.join("jacobi_band.hlo.txt").exists() {
+        eprintln!("SKIP: no artifacts in {} (run `make artifacts`)", dir.display());
+        return None;
+    }
+    Some(KernelEngine::load(dir).expect("PJRT client"))
+}
+
+#[test]
+fn jacobi_kernel_matches_rust_stencil() {
+    let Some(mut k) = engine() else { return };
+    let (rows2, n) = shapes::JACOBI_IN;
+    let x: Vec<f32> = (0..rows2 * n).map(|i| ((i * 37) % 101) as f32 / 10.0).collect();
+    let out = k.run_f32("jacobi_band", &[(&x, &[rows2, n])]).expect("run");
+    assert_eq!(out.len(), 1);
+    let got = &out[0];
+    assert_eq!(got.len(), (rows2 - 2) * n);
+    // Rust reference with the same clamped-edge semantics.
+    for i in 0..rows2 - 2 {
+        for j in 0..n {
+            let g = |r: usize, c: usize| x[r * n + c];
+            let want = 0.25
+                * (g(i, j)
+                    + g(i + 2, j)
+                    + g(i + 1, j.saturating_sub(1))
+                    + g(i + 1, (j + 1).min(n - 1)));
+            let gotv = got[i * n + j];
+            assert!((gotv - want).abs() < 1e-5, "({i},{j}): {gotv} vs {want}");
+        }
+    }
+}
+
+#[test]
+fn matmul_kernel_accumulates() {
+    let Some(mut k) = engine() else { return };
+    let (m, kk, n) = shapes::MATMUL_TILE;
+    let a: Vec<f32> = (0..m * kk).map(|i| (i % 7) as f32 - 3.0).collect();
+    let b: Vec<f32> = (0..kk * n).map(|i| (i % 5) as f32 - 2.0).collect();
+    let c: Vec<f32> = (0..m * n).map(|i| i as f32 * 0.1).collect();
+    let out = k
+        .run_f32("matmul_tile", &[(&a, &[m, kk]), (&b, &[kk, n]), (&c, &[m, n])])
+        .expect("run");
+    let got = &out[0];
+    for i in 0..m {
+        for j in 0..n {
+            let mut want = c[i * n + j];
+            for x in 0..kk {
+                want += a[i * kk + x] * b[x * n + j];
+            }
+            assert!((got[i * n + j] - want).abs() < 1e-3);
+        }
+    }
+}
+
+#[test]
+fn kmeans_kernel_counts_all_points() {
+    let Some(mut k) = engine() else { return };
+    let p = shapes::KMEANS_POINTS;
+    let kc = shapes::KMEANS_K;
+    let pts = gen_points(p, 3);
+    let cents: Vec<f32> = pts[..kc * 3].to_vec();
+    let out = k
+        .run_f32("kmeans_assign", &[(&pts, &[p, 3]), (&cents, &[kc, 3])])
+        .expect("run");
+    let got = &out[0];
+    assert_eq!(got.len(), kc * 4);
+    let total: f32 = (0..kc).map(|c| got[c * 4 + 3]).sum();
+    assert_eq!(total as usize, p, "every point assigned exactly once");
+}
+
+#[test]
+fn fused_x2_artifact_runs() {
+    let Some(mut k) = engine() else { return };
+    if !k.available("jacobi_band_x2") {
+        return;
+    }
+    let (rows2, n) = shapes::JACOBI_IN;
+    let rows4 = rows2 + 2;
+    let x: Vec<f32> = (0..rows4 * n).map(|i| (i % 13) as f32).collect();
+    let out = k.run_f32("jacobi_band_x2", &[(&x, &[rows4, n])]).expect("run");
+    assert_eq!(out[0].len(), (rows4 - 4) * n);
+}
+
+/// The headline e2e check: the full three-layer stack composes. The
+/// simulated 520-core platform runs the Jacobi benchmark with task bodies
+/// executing the AOT Pallas kernel through PJRT, and the distributed
+/// result matches the sequential reference.
+#[test]
+fn e2e_jacobi_through_pjrt_matches_reference() {
+    let Some(k) = engine() else { return };
+    let (reg, main) = jacobi_app();
+    // bands=4 over n=32 -> rows=8 -> kernel shape (10, 32) == JACOBI_IN.
+    let p = JacobiParams { n: 32, iters: 4, bands: 4, groups: 2, real_data: true };
+    let mut plat = Platform::build_with(PlatformConfig::hierarchical(8), reg, main, |w| {
+        w.app = Some(Box::new(p));
+        w.kernels = Some(k);
+    });
+    plat.run(Some(1 << 44));
+    let w = plat.world();
+    assert_eq!(w.gstats.tasks_completed, w.gstats.tasks_spawned);
+    assert!(
+        w.kernels.as_ref().unwrap().n_compiled() >= 1,
+        "the PJRT kernel path must actually be exercised"
+    );
+    let got = read_result(w);
+    let want = jacobi_reference(32, 4, &jacobi_init(32));
+    for (i, (g, wv)) in got.iter().zip(&want).enumerate() {
+        assert!((g - wv).abs() < 1e-4, "cell {i}: {g} vs {wv}");
+    }
+}
+
+#[test]
+fn e2e_kmeans_through_pjrt_matches_reference() {
+    let Some(k) = engine() else { return };
+    let (reg, main) = myrmics::apps::kmeans::myrmics();
+    // 1024 points over 4 bands -> 256 points/band == KMEANS_POINTS, k=4.
+    let p = myrmics::apps::kmeans::KmParams {
+        points: 1024,
+        k: 4,
+        iters: 3,
+        bands: 4,
+        groups: 2,
+        real_data: true,
+    };
+    let mut plat = Platform::build_with(PlatformConfig::hierarchical(8), reg, main, |w| {
+        w.app = Some(Box::new(p));
+        w.kernels = Some(k);
+    });
+    plat.run(Some(1 << 44));
+    let w = plat.world();
+    assert!(w.kernels.as_ref().unwrap().n_compiled() >= 1);
+    let st = w.app_ref::<myrmics::apps::kmeans::KmState>();
+    let got = w.store.get_f32(st.centroids).unwrap();
+    let pts = gen_points(1024, 17);
+    let mut want = pts[..4 * 3].to_vec();
+    for _ in 0..3 {
+        want = kmeans_step_reference(&pts, &want, 4);
+    }
+    for (i, (g, wv)) in got.iter().zip(&want).enumerate() {
+        assert!((g - wv).abs() < 1e-2, "centroid {i}: {g} vs {wv}");
+    }
+}
