@@ -1,12 +1,24 @@
-//! L3 hot-path microbenchmarks (wallclock) backing EXPERIMENTS.md Perf.
+//! L3 hot-path benchmarks (wallclock) backing EXPERIMENTS.md Perf.
 //!
 //! Hand-rolled harness (criterion is not vendored): each case runs for a
 //! fixed wall budget and reports ns/op plus, for whole-simulation cases,
-//! simulated events per host second — the simulator's throughput metric.
+//! *simulated events per host second* — the simulator's throughput metric
+//! and the regression gate for the zero-allocation hot-path work (every
+//! perf PR is judged against the numbers this emits).
+//!
+//! Every case is recorded into `BENCH_hotpath.json` next to the working
+//! directory as `[{"case", "ns_per_op", "events_per_sec"}, ...]` so the
+//! perf trajectory is machine-readable across PRs.
+//!
+//! Modes:
+//!   cargo bench --bench hotpath              full run (~10 s)
+//!   cargo bench --bench hotpath -- --smoke   1 iteration per case (CI:
+//!                                            exercises the JSON emitter
+//!                                            without burning minutes)
 
 use std::time::Instant;
 
-use myrmics::apps::synthetic::{independent, SynthParams};
+use myrmics::apps::synthetic::{empty_chain, independent, SynthParams};
 use myrmics::config::PlatformConfig;
 use myrmics::dep::node::DepNode;
 use myrmics::experiments::bench::{run_myrmics, BenchKind, Scaling};
@@ -15,28 +27,106 @@ use myrmics::memory::trie::Trie;
 use myrmics::platform::Platform;
 use myrmics::task::descriptor::Access;
 
-fn time<F: FnMut() -> u64>(label: &str, mut f: F) {
-    // Warm up once, then measure.
-    let _ = f();
+struct Record {
+    case: String,
+    ns_per_op: f64,
+    events_per_sec: f64,
+}
+
+/// Run `f` repeatedly for `budget_ms` (at least once), where `f` returns
+/// the number of ops it performed. Returns (ns/op, iterations).
+fn time(label: &str, budget_ms: u128, out: &mut Vec<Record>, mut f: impl FnMut() -> u64) {
+    // Warm up once, then measure — except in smoke mode (budget 0), where
+    // each case must run exactly once.
+    if budget_ms > 0 {
+        let _ = f();
+    }
     let start = Instant::now();
     let mut iters = 0u64;
     let mut work = 0u64;
-    while start.elapsed().as_millis() < 600 {
+    loop {
         work += f();
         iters += 1;
+        if start.elapsed().as_millis() >= budget_ms {
+            break;
+        }
     }
     let elapsed = start.elapsed();
     let ns_per = elapsed.as_nanos() as f64 / work.max(1) as f64;
     println!(
-        "{label:<44} {:>10.1} ns/op  ({iters} runs, {work} ops, {:.2?})",
-        ns_per, elapsed
+        "{label:<44} {ns_per:>10.1} ns/op  ({iters} runs, {work} ops, {elapsed:.2?})"
     );
+    out.push(Record { case: label.to_string(), ns_per_op: ns_per, events_per_sec: 0.0 });
+}
+
+/// Whole-simulation throughput case: run the platform-under-test for
+/// `budget_ms` of host time, reporting simulated events per host second.
+/// Only `Platform::run` is timed — construction cost is not part of the
+/// per-event metric the regression gate is defined over.
+fn sim_case(
+    label: &'static str,
+    budget_ms: u128,
+    out: &mut Vec<Record>,
+    mut build: impl FnMut() -> Platform,
+) {
+    // Warm-up run (page in code, fill allocator pools) — skipped in smoke
+    // mode (budget 0), where each case must run exactly once.
+    if budget_ms > 0 {
+        let mut p = build();
+        p.run(Some(1 << 46));
+    }
+    let mut timed = std::time::Duration::ZERO;
+    let mut events = 0u64;
+    let mut runs = 0u32;
+    loop {
+        let mut plat = build();
+        let t0 = Instant::now();
+        plat.run(Some(1 << 46));
+        timed += t0.elapsed();
+        events += plat.world().gstats.events_processed;
+        runs += 1;
+        if timed.as_millis() >= budget_ms {
+            break;
+        }
+    }
+    let secs = timed.as_secs_f64();
+    let eps = if secs > 0.0 { events as f64 / secs } else { 0.0 };
+    let ns_per_event = if events > 0 { secs * 1e9 / events as f64 } else { 0.0 };
+    println!("{label:<44} {eps:>12.0} events/s ({runs} runs, {events} events)");
+    out.push(Record { case: label.to_string(), ns_per_op: ns_per_event, events_per_sec: eps });
+}
+
+fn emit_json(records: &[Record]) {
+    let mut s = String::from("[\n");
+    for (i, r) in records.iter().enumerate() {
+        s.push_str(&format!(
+            "  {{\"case\": \"{}\", \"ns_per_op\": {:.3}, \"events_per_sec\": {:.1}}}{}\n",
+            r.case,
+            r.ns_per_op,
+            r.events_per_sec,
+            if i + 1 < records.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("]\n");
+    let path = "BENCH_hotpath.json";
+    match std::fs::write(path, &s) {
+        Ok(()) => println!("\nwrote {path} ({} cases)", records.len()),
+        Err(e) => eprintln!("\nfailed to write {path}: {e}"),
+    }
 }
 
 fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke")
+        || std::env::var("HOTPATH_SMOKE").is_ok();
+    // In smoke mode each case runs exactly once (budget 0 => first
+    // iteration already exceeds it).
+    let micro_ms: u128 = if smoke { 0 } else { 600 };
+    let sim_ms: u128 = if smoke { 0 } else { 1500 };
+    let mut records: Vec<Record> = Vec::new();
+
     println!("== L3 hot paths ==");
 
-    time("trie insert+get+remove (512 keys)", || {
+    time("trie insert+get+remove (512 keys)", micro_ms, &mut records, || {
         let mut t = Trie::new();
         for k in 0..512u64 {
             t.insert(k * 7919 % 4096, k);
@@ -52,16 +142,18 @@ fn main() {
         1536
     });
 
-    time("dep queue enqueue/grant/pop (64 entries)", || {
+    time("dep queue enqueue/grant/pop (64 entries)", micro_ms, &mut records, || {
         let anc = |_a: TaskId, _t: TaskId| false;
         let mut n = DepNode::new(NodeId::Region(RegionId(1)), None, 0);
+        let mut actions = Vec::new();
         for i in 0..64 {
             n.enqueue(TaskId(i), 0, Access::Write, n.id, &anc);
         }
         let mut ops = 64;
         while !n.queue.is_empty() {
-            let acts = n.collect_ready(&anc);
-            ops += acts.len() as u64;
+            actions.clear();
+            n.collect_ready_into(&anc, &mut actions);
+            ops += actions.len() as u64;
             let t = n.queue.front().unwrap().task;
             n.pop_task(t, 0);
             ops += 1;
@@ -69,7 +161,7 @@ fn main() {
         ops
     });
 
-    time("slab alloc/free cycle (256 objs)", || {
+    time("slab alloc/free cycle (256 objs)", micro_ms, &mut records, || {
         use myrmics::memory::addr::{GlobalPages, PagePool};
         use myrmics::memory::slab::SlabPool;
         let mut s = SlabPool::new();
@@ -85,43 +177,79 @@ fn main() {
         512
     });
 
-    println!("\n== whole-simulation throughput (events / host second) ==");
-    for (label, workers, tasks) in
-        [("independent 64w x 512 tasks", 64usize, 512usize), ("independent 256w x 1024", 256, 1024)]
-    {
-        let start = Instant::now();
-        let mut events = 0u64;
-        let mut runs = 0u32;
-        while start.elapsed().as_millis() < 1500 {
-            let (reg, main) = independent();
-            let mut plat =
-                Platform::build_with(PlatformConfig::hierarchical(workers), reg, main, |w| {
-                    w.app = Some(Box::new(SynthParams {
-                        n_tasks: tasks,
-                        task_cycles: 1_000_000,
-                        ..Default::default()
-                    }));
-                });
-            plat.run(Some(1 << 46));
-            events += plat.world().gstats.events_processed;
-            runs += 1;
+    time("next_hop traversal (depth-4 tree)", micro_ms, &mut records, || {
+        use myrmics::config::HierarchySpec;
+        use myrmics::memory::region::Memory;
+        use myrmics::sched::hierarchy::HierarchyMap;
+        let h = HierarchyMap::build(8, &HierarchySpec::flat());
+        let mut m = Memory::new(h.n_scheds);
+        let a = m.ralloc(RegionId::ROOT, 0, &h);
+        let b = m.ralloc(a, 0, &h);
+        let c = m.ralloc(b, 0, &h);
+        let o = m.alloc(64, c);
+        let target = NodeId::Object(o);
+        let mut ops = 0u64;
+        for _ in 0..256 {
+            let mut at = NodeId::Region(a);
+            while at != target {
+                at = m.next_hop(at, target).expect("descends");
+                ops += 1;
+            }
+            std::hint::black_box(at);
         }
-        let eps = events as f64 / start.elapsed().as_secs_f64();
-        println!("{label:<44} {eps:>12.0} events/s ({runs} runs)");
+        ops
+    });
+
+    println!("\n== whole-simulation throughput (events / host second) ==");
+    // Fig-7a shape: serialized empty tasks through one scheduler — the
+    // purest per-task runtime-overhead path (spawn, dep, pack, place,
+    // dispatch, done with no parallelism to hide behind).
+    sim_case("fig7a empty chain 1w x 1000 tasks", sim_ms, &mut records, || {
+        let (reg, main) = empty_chain();
+        Platform::build_with(PlatformConfig::flat(1), reg, main, |w| {
+            w.app = Some(Box::new(SynthParams { n_tasks: 1000, ..Default::default() }));
+        })
+    });
+    // Fig-7b shape: independent tasks over a scheduler hierarchy — the
+    // throughput case the ≥25%-per-PR target tracks.
+    sim_case("fig7 independent 64w x 512 tasks", sim_ms, &mut records, || {
+        let (reg, main) = independent();
+        Platform::build_with(PlatformConfig::hierarchical(64), reg, main, |w| {
+            w.app = Some(Box::new(SynthParams {
+                n_tasks: 512,
+                task_cycles: 1_000_000,
+                ..Default::default()
+            }));
+        })
+    });
+    sim_case("fig7 independent 256w x 1024 tasks", sim_ms, &mut records, || {
+        let (reg, main) = independent();
+        Platform::build_with(PlatformConfig::hierarchical(256), reg, main, |w| {
+            w.app = Some(Box::new(SynthParams {
+                n_tasks: 1024,
+                task_cycles: 1_000_000,
+                ..Default::default()
+            }));
+        })
+    });
+
+    if !smoke {
+        println!("\n== end-to-end benchmark sims (host wall time) ==");
+        for (bench, w) in
+            [(BenchKind::Jacobi, 128), (BenchKind::Bitonic, 128), (BenchKind::Kmeans, 128)]
+        {
+            let start = Instant::now();
+            let (t, eng) = run_myrmics(bench, w, Scaling::Strong, true, None);
+            let wall = start.elapsed();
+            println!(
+                "{:<20} {w:>4} workers: sim {:>12} cycles, {:>8} events, host {:.2?}",
+                bench.name(),
+                t,
+                eng.world.gstats.events_processed,
+                wall
+            );
+        }
     }
 
-    println!("\n== end-to-end benchmark sims (host wall time) ==");
-    for (bench, w) in [(BenchKind::Jacobi, 128), (BenchKind::Bitonic, 128), (BenchKind::Kmeans, 128)]
-    {
-        let start = Instant::now();
-        let (t, eng) = run_myrmics(bench, w, Scaling::Strong, true, None);
-        let wall = start.elapsed();
-        println!(
-            "{:<20} {w:>4} workers: sim {:>12} cycles, {:>8} events, host {:.2?}",
-            bench.name(),
-            t,
-            eng.world.gstats.events_processed,
-            wall
-        );
-    }
+    emit_json(&records);
 }

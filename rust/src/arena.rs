@@ -1,0 +1,196 @@
+//! Generational slot arena: dense, index-addressed storage for hot runtime
+//! state.
+//!
+//! The simulator's per-event path looks up dependency nodes and task
+//! entries millions of times per second; backing them with hash maps puts
+//! a hash + probe on every grant/re-evaluation step. A [`SlotArena`] keeps
+//! entries in one contiguous `Vec` so a lookup is a bounds check and an
+//! array index, freed slots are recycled through a free list (no steady-
+//! state allocation), and each slot carries a *generation* so a stale
+//! handle held across a free/reuse cycle is detected instead of silently
+//! aliasing the new occupant.
+
+/// Handle into a [`SlotArena`]: slot index + the generation it was
+/// allocated under. `SlotId::NONE` is the canonical "no slot" sentinel
+/// (useful for dense side tables that map external ids to slots).
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub struct SlotId {
+    pub idx: u32,
+    pub gen: u32,
+}
+
+impl SlotId {
+    pub const NONE: SlotId = SlotId { idx: u32::MAX, gen: u32::MAX };
+
+    #[inline]
+    pub fn is_none(self) -> bool {
+        self.idx == u32::MAX
+    }
+}
+
+struct Slot<T> {
+    gen: u32,
+    val: Option<T>,
+}
+
+/// A generational slot arena. Insertion reuses the most recently freed
+/// slot (LIFO, cache-warm); while nothing is ever removed, slot indices
+/// are handed out densely in insertion order (0, 1, 2, ...), which lets
+/// insert-only users (the task table) treat the slot index itself as the
+/// external id.
+pub struct SlotArena<T> {
+    slots: Vec<Slot<T>>,
+    free: Vec<u32>,
+    live: usize,
+}
+
+impl<T> Default for SlotArena<T> {
+    fn default() -> Self {
+        SlotArena { slots: Vec::new(), free: Vec::new(), live: 0 }
+    }
+}
+
+impl<T> SlotArena<T> {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn with_capacity(cap: usize) -> Self {
+        SlotArena { slots: Vec::with_capacity(cap), free: Vec::new(), live: 0 }
+    }
+
+    /// Number of live entries.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.live
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.live == 0
+    }
+
+    /// Total slots ever allocated (live + free). For insert-only arenas
+    /// this equals `len()` and is the next dense index.
+    #[inline]
+    pub fn capacity_used(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn insert(&mut self, val: T) -> SlotId {
+        self.live += 1;
+        if let Some(idx) = self.free.pop() {
+            let slot = &mut self.slots[idx as usize];
+            debug_assert!(slot.val.is_none());
+            slot.val = Some(val);
+            SlotId { idx, gen: slot.gen }
+        } else {
+            let idx = self.slots.len() as u32;
+            self.slots.push(Slot { gen: 0, val: Some(val) });
+            SlotId { idx, gen: 0 }
+        }
+    }
+
+    #[inline]
+    pub fn get(&self, id: SlotId) -> Option<&T> {
+        match self.slots.get(id.idx as usize) {
+            Some(s) if s.gen == id.gen => s.val.as_ref(),
+            _ => None,
+        }
+    }
+
+    #[inline]
+    pub fn get_mut(&mut self, id: SlotId) -> Option<&mut T> {
+        match self.slots.get_mut(id.idx as usize) {
+            Some(s) if s.gen == id.gen => s.val.as_mut(),
+            _ => None,
+        }
+    }
+
+    /// Index-only access for insert-only arenas where the dense index is
+    /// the external id (generations are all zero in that regime).
+    #[inline]
+    pub fn get_dense(&self, idx: usize) -> Option<&T> {
+        self.slots.get(idx).and_then(|s| s.val.as_ref())
+    }
+
+    #[inline]
+    pub fn get_dense_mut(&mut self, idx: usize) -> Option<&mut T> {
+        self.slots.get_mut(idx).and_then(|s| s.val.as_mut())
+    }
+
+    /// Free the slot, bumping its generation so outstanding handles go
+    /// stale. Returns the value if the handle was live.
+    pub fn remove(&mut self, id: SlotId) -> Option<T> {
+        let slot = self.slots.get_mut(id.idx as usize)?;
+        if slot.gen != id.gen || slot.val.is_none() {
+            return None;
+        }
+        let val = slot.val.take();
+        slot.gen = slot.gen.wrapping_add(1);
+        self.free.push(id.idx);
+        self.live -= 1;
+        val
+    }
+
+    /// Iterate live entries in slot order.
+    pub fn iter(&self) -> impl Iterator<Item = &T> {
+        self.slots.iter().filter_map(|s| s.val.as_ref())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn insert_only_is_dense() {
+        let mut a = SlotArena::new();
+        for i in 0..100u32 {
+            let id = a.insert(i);
+            assert_eq!(id.idx, i);
+            assert_eq!(id.gen, 0);
+        }
+        assert_eq!(a.len(), 100);
+        assert_eq!(a.get_dense(42), Some(&42));
+        assert_eq!(a.capacity_used(), 100);
+    }
+
+    #[test]
+    fn remove_recycles_lifo_and_bumps_generation() {
+        let mut a = SlotArena::new();
+        let x = a.insert("x");
+        let y = a.insert("y");
+        assert_eq!(a.remove(x), Some("x"));
+        assert_eq!(a.len(), 1);
+        // Stale handle is rejected.
+        assert_eq!(a.get(x), None);
+        assert_eq!(a.remove(x), None);
+        // Reuse the freed slot with a new generation.
+        let z = a.insert("z");
+        assert_eq!(z.idx, x.idx);
+        assert_eq!(z.gen, x.gen + 1);
+        assert_eq!(a.get(z), Some(&"z"));
+        assert_eq!(a.get(y), Some(&"y"));
+        assert_eq!(a.len(), 2);
+    }
+
+    #[test]
+    fn get_mut_and_iter() {
+        let mut a = SlotArena::new();
+        let ids: Vec<SlotId> = (0..5).map(|i| a.insert(i)).collect();
+        a.remove(ids[2]);
+        *a.get_mut(ids[4]).unwrap() = 40;
+        let live: Vec<i32> = a.iter().copied().collect();
+        assert_eq!(live, vec![0, 1, 3, 40]);
+    }
+
+    #[test]
+    fn none_sentinel() {
+        assert!(SlotId::NONE.is_none());
+        let mut a: SlotArena<u8> = SlotArena::new();
+        assert_eq!(a.get(SlotId::NONE), None);
+        let id = a.insert(1);
+        assert!(!id.is_none());
+    }
+}

@@ -1,18 +1,29 @@
 //! Dependency-forest state and path/anchor computations (paper V-D).
 
-use crate::fxmap::FxHashMap;
+use crate::arena::{SlotArena, SlotId};
 use crate::ids::NodeId;
 use crate::memory::region::Memory;
 use crate::task::descriptor::{Access, TaskArg};
 
 use super::node::DepNode;
 
-/// All live dependency nodes, keyed by node id. Each node is *owned* by
-/// one scheduler (`DepNode::owner`); scheduler logic only mutates nodes it
-/// owns — cross-owner steps travel as NoC messages.
+/// All live dependency nodes. Each node is *owned* by one scheduler
+/// (`DepNode::owner`); scheduler logic only mutates nodes it owns —
+/// cross-owner steps travel as NoC messages.
+///
+/// Storage is a generational [`SlotArena`] addressed through two dense
+/// side tables (region id -> slot, object id -> slot). Region and object
+/// ids are handed out by [`Memory`] from incrementing counters, so the
+/// side tables are flat `Vec`s and a lookup on the grant/re-evaluation
+/// path is two array indexes — no hashing (the `FxHashMap` this replaces
+/// was the hottest map in whole-run profiles).
 #[derive(Default)]
 pub struct DepState {
-    nodes: FxHashMap<NodeId, DepNode>,
+    nodes: SlotArena<DepNode>,
+    /// RegionId.0 -> arena slot (SlotId::NONE when absent).
+    region_slot: Vec<SlotId>,
+    /// ObjectId.0 -> arena slot (SlotId::NONE when absent).
+    object_slot: Vec<SlotId>,
 }
 
 impl DepState {
@@ -20,31 +31,64 @@ impl DepState {
         Self::default()
     }
 
+    #[inline]
+    fn slot_of(&self, id: NodeId) -> SlotId {
+        let (table, key) = match id {
+            NodeId::Region(r) => (&self.region_slot, r.0),
+            NodeId::Object(o) => (&self.object_slot, o.0),
+        };
+        table.get(key as usize).copied().unwrap_or(SlotId::NONE)
+    }
+
+    #[inline]
+    fn slot_entry(&mut self, id: NodeId) -> &mut SlotId {
+        let (table, key) = match id {
+            NodeId::Region(r) => (&mut self.region_slot, r.0),
+            NodeId::Object(o) => (&mut self.object_slot, o.0),
+        };
+        let key = key as usize;
+        if key >= table.len() {
+            table.resize(key + 1, SlotId::NONE);
+        }
+        &mut table[key]
+    }
+
+    #[inline]
     pub fn get(&self, id: NodeId) -> Option<&DepNode> {
-        self.nodes.get(&id)
+        self.nodes.get(self.slot_of(id))
     }
 
+    #[inline]
     pub fn get_mut(&mut self, id: NodeId) -> Option<&mut DepNode> {
-        self.nodes.get_mut(&id)
+        let slot = self.slot_of(id);
+        self.nodes.get_mut(slot)
     }
 
+    #[inline]
     pub fn contains(&self, id: NodeId) -> bool {
-        self.nodes.contains_key(&id)
+        self.nodes.get(self.slot_of(id)).is_some()
     }
 
     /// Get or lazily create the node, deriving parent/owner from the
     /// memory metadata (both are frozen into the node so teardown works
     /// after the region is freed).
     pub fn node_mut(&mut self, id: NodeId, mem: &Memory) -> &mut DepNode {
-        self.nodes.entry(id).or_insert_with(|| {
+        let slot = self.slot_of(id);
+        if self.nodes.get(slot).is_none() {
             let parent = mem.parent_of(id);
             let owner = mem.owner(id);
-            DepNode::new(id, parent, owner)
-        })
+            let slot = self.nodes.insert(DepNode::new(id, parent, owner));
+            *self.slot_entry(id) = slot;
+            return self.nodes.get_mut(slot).expect("freshly inserted node");
+        }
+        self.nodes.get_mut(slot).expect("checked live above")
     }
 
     pub fn remove(&mut self, id: NodeId) -> Option<DepNode> {
-        self.nodes.remove(&id)
+        let slot = self.slot_of(id);
+        let node = self.nodes.remove(slot)?;
+        *self.slot_entry(id) = SlotId::NONE;
+        Some(node)
     }
 
     pub fn len(&self) -> usize {
@@ -58,7 +102,7 @@ impl DepState {
     /// Mark a node dying (region freed while draining) or remove it
     /// immediately if it is already idle.
     pub fn retire(&mut self, id: NodeId) {
-        let remove = match self.nodes.get_mut(&id) {
+        let remove = match self.get_mut(id) {
             None => false,
             Some(n) => {
                 if n.queue.is_empty() && n.cr == 0 && n.cw == 0 && n.waiters.is_empty() {
@@ -70,7 +114,7 @@ impl DepState {
             }
         };
         if remove {
-            self.nodes.remove(&id);
+            self.remove(id);
         }
     }
 }

@@ -26,8 +26,9 @@ use std::collections::{BTreeMap, VecDeque};
 use crate::ids::{Cycles, NodeId, TaskId};
 use crate::task::descriptor::Access;
 
-/// One queued argument instance.
-#[derive(Clone, Debug)]
+/// One queued argument instance. `Copy`: five words, no heap — the queue
+/// re-scan copies entries out instead of cloning.
+#[derive(Clone, Copy, Debug)]
 pub struct DepEntry {
     pub task: TaskId,
     /// Argument index within the task's descriptor.
@@ -214,11 +215,24 @@ impl DepNode {
 
     /// Re-scan the queue in order, granting / resuming everything that is
     /// no longer blocked. Stops at the first entry that must keep waiting.
+    /// Allocating wrapper around [`DepNode::collect_ready_into`].
     pub fn collect_ready(
         &mut self,
         is_ancestor: &dyn Fn(TaskId, TaskId) -> bool,
     ) -> Vec<ReadyAction> {
         let mut out = Vec::new();
+        self.collect_ready_into(is_ancestor, &mut out);
+        out
+    }
+
+    /// Like [`DepNode::collect_ready`] but appends into a caller-owned
+    /// buffer (the scheduler keeps a small pool of these so the per-event
+    /// re-evaluation path allocates nothing in the steady state).
+    pub fn collect_ready_into(
+        &mut self,
+        is_ancestor: &dyn Fn(TaskId, TaskId) -> bool,
+        out: &mut Vec<ReadyAction>,
+    ) {
         let mut i = 0;
         while i < self.queue.len() {
             if self.queue[i].granted {
@@ -226,7 +240,7 @@ impl DepNode {
                 continue;
             }
             // Blocked by anything ahead?
-            let e = self.queue[i].clone();
+            let e = self.queue[i];
             let blocked = self.queue.iter().take(i).any(|ahead| {
                 !(ahead.granted
                     && (is_ancestor(ahead.task, e.task) || ahead.mode.compatible(e.mode)))
@@ -254,7 +268,6 @@ impl DepNode {
                 });
             }
         }
-        out
     }
 
     /// Queue empty and no live descendants: the subtree is quiescent.

@@ -18,6 +18,7 @@
 
 pub mod api;
 pub mod apps;
+pub mod arena;
 pub mod config;
 pub mod dep;
 pub mod experiments;

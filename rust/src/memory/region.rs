@@ -31,6 +31,10 @@ pub struct Region {
     /// Owning scheduler index.
     pub owner: usize,
     pub level_hint: i32,
+    /// Depth in the region tree (root = 0). Cached at creation so the
+    /// dependency traversal can compute next-hop/path-length queries in
+    /// O(depth) without building path vectors.
+    pub depth: u32,
     pub pool: SlabPool,
 }
 
@@ -60,6 +64,9 @@ pub struct Memory {
     pub rid_owner: Trie<usize>,
     /// Address -> object map for pack/locate (base address keyed).
     addr_map: BTreeMap<u64, ObjectId>,
+    /// Reusable DFS stack for the iterative subtree walks
+    /// ([`Memory::set_producer`]); avoids per-call allocation.
+    walk_stack: Vec<RegionId>,
 }
 
 impl Memory {
@@ -76,6 +83,7 @@ impl Memory {
             region_load: vec![0; n_scheds],
             rid_owner: Trie::new(),
             addr_map: BTreeMap::new(),
+            walk_stack: Vec::new(),
         };
         m.regions.insert(
             RegionId::ROOT,
@@ -86,6 +94,7 @@ impl Memory {
                 objects: Vec::new(),
                 owner: 0,
                 level_hint: 0,
+                depth: 0,
                 pool: SlabPool::new(),
             },
         );
@@ -140,6 +149,7 @@ impl Memory {
         }
         let id = RegionId(self.next_rid);
         self.next_rid += 1;
+        let depth = self.region(parent).depth + 1;
         self.regions.insert(
             id,
             Region {
@@ -149,6 +159,7 @@ impl Memory {
                 objects: Vec::new(),
                 owner,
                 level_hint: lvl,
+                depth,
                 pool: SlabPool::new(),
             },
         );
@@ -262,8 +273,62 @@ impl Memory {
         }
     }
 
+    /// Depth of a node in the region/object tree (root region = 0; an
+    /// object sits one level below its region). Cached, O(1).
+    #[inline]
+    pub fn depth_of(&self, n: NodeId) -> u32 {
+        match n {
+            NodeId::Region(r) => self.region(r).depth,
+            NodeId::Object(o) => self.region(self.object(o).region).depth + 1,
+        }
+    }
+
+    /// The immediate child of `anchor` on the path down to `target`
+    /// (`target` itself when it is a direct child). `None` when `anchor`
+    /// is not a strict ancestor of `target`. O(depth), allocation-free —
+    /// this is the traversal step the dependency engine takes per hop,
+    /// replacing the `path_down` vector it used to build per hop.
+    pub fn next_hop(&self, anchor: NodeId, target: NodeId) -> Option<NodeId> {
+        if anchor == target {
+            return None;
+        }
+        let da = self.depth_of(anchor);
+        let dt = self.depth_of(target);
+        if dt <= da {
+            return None;
+        }
+        let mut cur = target;
+        for _ in 0..(dt - da - 1) {
+            cur = self.parent_of(cur)?;
+        }
+        (self.parent_of(cur) == Some(anchor)).then_some(cur)
+    }
+
+    /// Number of nodes on the inclusive chain `[anchor, ..., target]`
+    /// (1 when `anchor == target`); `None` if `anchor` is not an
+    /// ancestor-or-self of `target`. Depth arithmetic only — used for
+    /// traversal cost accounting without materializing the path.
+    pub fn path_len(&self, anchor: NodeId, target: NodeId) -> Option<usize> {
+        if anchor == target {
+            return Some(1);
+        }
+        let da = self.depth_of(anchor);
+        let dt = self.depth_of(target);
+        if dt <= da {
+            return None;
+        }
+        // Verify ancestry by walking up target's chain to anchor's level.
+        let mut cur = target;
+        for _ in 0..(dt - da) {
+            cur = self.parent_of(cur)?;
+        }
+        (cur == anchor).then_some((dt - da + 1) as usize)
+    }
+
     /// Chain `[anchor, ..., target]` walking region parents up from
     /// `target`; `None` if `anchor` is not an ancestor-or-self of `target`.
+    /// Allocates; kept for tests and offline tooling — hot paths use
+    /// [`Memory::next_hop`] / [`Memory::path_len`].
     pub fn path_down(&self, anchor: NodeId, target: NodeId) -> Option<Vec<NodeId>> {
         let mut chain = vec![target];
         let mut cur = target;
@@ -276,20 +341,30 @@ impl Memory {
     }
 
     /// Record `worker` as last producer of every object under `n`.
+    /// Iterative preorder walk over a reusable stack — no recursion, no
+    /// per-call `children`/`objects` clones.
     pub fn set_producer(&mut self, n: NodeId, worker: CoreId) {
         match n {
             NodeId::Object(o) => self.object_mut(o).last_producer = Some(worker),
-            NodeId::Region(r) => {
-                let (objs, kids) = {
-                    let reg = self.region(r);
-                    (reg.objects.clone(), reg.children.clone())
-                };
-                for o in objs {
-                    self.object_mut(o).last_producer = Some(worker);
+            NodeId::Region(r0) => {
+                let mut stack = std::mem::take(&mut self.walk_stack);
+                stack.clear();
+                stack.push(r0);
+                while let Some(r) = stack.pop() {
+                    let reg = self.regions.get(&r).expect("set_producer on dead region");
+                    for &o in &reg.objects {
+                        // Disjoint field borrows: `reg` holds `self.regions`,
+                        // the objects live in `self.objects`.
+                        self.objects
+                            .get_mut(&o)
+                            .unwrap_or_else(|| panic!("no object {o}"))
+                            .last_producer = Some(worker);
+                    }
+                    for &k in reg.children.iter().rev() {
+                        stack.push(k);
+                    }
                 }
-                for k in kids {
-                    self.set_producer(NodeId::Region(k), worker);
-                }
+                self.walk_stack = stack;
             }
         }
     }
@@ -297,41 +372,60 @@ impl Memory {
     /// Pack the portion of `n`'s subtree owned by `n`'s owner: returns the
     /// coalesced local ranges plus the roots of subregions owned by other
     /// schedulers (each continues as a remote PackReq).
+    ///
+    /// Allocating convenience wrapper around [`Memory::collect_pack_into`]
+    /// (tests and cold paths).
     pub fn collect_pack(&self, n: NodeId) -> (Vec<ProducerRange>, Vec<RegionId>) {
-        let mut raw: Vec<(u64, u64, Option<CoreId>)> = Vec::new();
+        let mut scratch = PackScratch::default();
+        let mut out = Vec::new();
         let mut remote = Vec::new();
+        self.collect_pack_into(n, &mut scratch, &mut out, &mut remote);
+        (out, remote)
+    }
+
+    /// Scratch-buffer variant of [`Memory::collect_pack`]: appends the
+    /// coalesced local ranges to `out` and the remote subregion roots to
+    /// `remote` (neither is cleared — callers accumulate across several
+    /// arguments). `scratch` is reused between calls so the steady state
+    /// performs no allocation.
+    pub fn collect_pack_into(
+        &self,
+        n: NodeId,
+        scratch: &mut PackScratch,
+        out: &mut Vec<ProducerRange>,
+        remote: &mut Vec<RegionId>,
+    ) {
+        scratch.raw.clear();
         match n {
             NodeId::Object(o) => {
                 let obj = self.object(o);
-                raw.push((obj.addr, size_class(obj.size), obj.last_producer));
+                scratch.raw.push((obj.addr, size_class(obj.size), obj.last_producer));
             }
-            NodeId::Region(r) => {
-                let owner = self.region(r).owner;
-                self.collect_region(r, owner, &mut raw, &mut remote);
-            }
-        }
-        (coalesce(raw), remote)
-    }
-
-    fn collect_region(
-        &self,
-        r: RegionId,
-        owner: usize,
-        raw: &mut Vec<(u64, u64, Option<CoreId>)>,
-        remote: &mut Vec<RegionId>,
-    ) {
-        let reg = self.region(r);
-        for &o in &reg.objects {
-            let obj = self.object(o);
-            raw.push((obj.addr, size_class(obj.size), obj.last_producer));
-        }
-        for &c in &reg.children {
-            if self.region(c).owner == owner {
-                self.collect_region(c, owner, raw, remote);
-            } else {
-                remote.push(c);
+            NodeId::Region(r0) => {
+                let owner = self.region(r0).owner;
+                scratch.stack.clear();
+                scratch.stack.push(r0);
+                // Explicit preorder DFS; the owner check happens when a
+                // region is *visited*, so remote subregions are recorded in
+                // the same encounter order as the recursive version (which
+                // keeps the remote-PackReq message schedule identical).
+                while let Some(r) = scratch.stack.pop() {
+                    let reg = self.region(r);
+                    if reg.owner != owner {
+                        remote.push(r);
+                        continue;
+                    }
+                    for &o in &reg.objects {
+                        let obj = self.object(o);
+                        scratch.raw.push((obj.addr, size_class(obj.size), obj.last_producer));
+                    }
+                    for &c in reg.children.iter().rev() {
+                        scratch.stack.push(c);
+                    }
+                }
             }
         }
+        coalesce_into(&mut scratch.raw, out);
     }
 
     /// Number of live regions (including the root).
@@ -363,13 +457,27 @@ impl Memory {
     }
 }
 
-/// Merge adjacent ranges with the same producer (sorted by address).
-fn coalesce(mut raw: Vec<(u64, u64, Option<CoreId>)>) -> Vec<ProducerRange> {
+/// Reusable buffers for [`Memory::collect_pack_into`]: the raw
+/// (addr, bytes, producer) triples gathered from a subtree and the DFS
+/// stack that walks it. One per scheduler core keeps the pack path
+/// allocation-free after warm-up.
+#[derive(Default)]
+pub struct PackScratch {
+    raw: Vec<(u64, u64, Option<CoreId>)>,
+    stack: Vec<RegionId>,
+}
+
+/// Merge adjacent ranges with the same producer (sorted by address),
+/// appending to `out`. The append-only contract lets a caller accumulate
+/// several arguments' packs into one list without intermediate vectors;
+/// coalescing never merges across calls (each call starts a fresh run).
+fn coalesce_into(raw: &mut [(u64, u64, Option<CoreId>)], out: &mut Vec<ProducerRange>) {
     raw.sort_unstable_by_key(|&(a, _, _)| a);
-    let mut out: Vec<ProducerRange> = Vec::new();
-    for (addr, bytes, prod) in raw {
+    let start = out.len();
+    for &(addr, bytes, prod) in raw.iter() {
         let Some(p) = prod else { continue }; // never-produced: no transfer source
-        if let Some(last) = out.last_mut() {
+        if out.len() > start {
+            let last = out.last_mut().expect("non-empty run");
             if last.producer == p && last.addr + last.bytes == addr {
                 last.bytes += bytes;
                 continue;
@@ -377,7 +485,6 @@ fn coalesce(mut raw: Vec<(u64, u64, Option<CoreId>)>) -> Vec<ProducerRange> {
         }
         out.push(ProducerRange { producer: p, addr, bytes });
     }
-    out
 }
 
 #[cfg(test)]
@@ -445,6 +552,56 @@ mod tests {
         // Non-ancestor anchor.
         let c = m.ralloc(RegionId::ROOT, 0, &h);
         assert!(m.path_down(NodeId::Region(c), NodeId::Object(o)).is_none());
+    }
+
+    #[test]
+    fn next_hop_mirrors_path_down() {
+        let h = hier2();
+        let mut m = Memory::new(h.n_scheds);
+        let a = m.ralloc(RegionId::ROOT, 0, &h);
+        let b = m.ralloc(a, 1, &h);
+        let o = m.alloc(64, b);
+        // Depths are cached on creation.
+        assert_eq!(m.depth_of(NodeId::Region(RegionId::ROOT)), 0);
+        assert_eq!(m.depth_of(NodeId::Region(a)), 1);
+        assert_eq!(m.depth_of(NodeId::Region(b)), 2);
+        assert_eq!(m.depth_of(NodeId::Object(o)), 3);
+        // Hop-by-hop agrees with the full path.
+        let path = m.path_down(NodeId::Region(a), NodeId::Object(o)).unwrap();
+        let mut walked = vec![NodeId::Region(a)];
+        let mut at = NodeId::Region(a);
+        while at != NodeId::Object(o) {
+            at = m.next_hop(at, NodeId::Object(o)).expect("descends");
+            walked.push(at);
+        }
+        assert_eq!(walked, path);
+        assert_eq!(m.path_len(NodeId::Region(a), NodeId::Object(o)), Some(path.len()));
+    }
+
+    #[test]
+    fn next_hop_edge_cases() {
+        let h = hier2();
+        let mut m = Memory::new(h.n_scheds);
+        let a = m.ralloc(RegionId::ROOT, 0, &h);
+        let b = m.ralloc(a, 1, &h);
+        let o = m.alloc(64, b);
+        // anchor == target: no hop to take.
+        assert_eq!(m.next_hop(NodeId::Region(a), NodeId::Region(a)), None);
+        assert_eq!(m.path_len(NodeId::Region(a), NodeId::Region(a)), Some(1));
+        // Object leaf directly below the anchor region.
+        assert_eq!(m.next_hop(NodeId::Region(b), NodeId::Object(o)), Some(NodeId::Object(o)));
+        // Cross-owner boundary (a owned by top, b forced deeper): the
+        // structural query is owner-agnostic.
+        assert_ne!(m.region(a).owner, m.region(b).owner);
+        assert_eq!(m.next_hop(NodeId::Region(a), NodeId::Object(o)), Some(NodeId::Region(b)));
+        // Non-ancestor anchor: no path.
+        let c = m.ralloc(RegionId::ROOT, 0, &h);
+        assert_eq!(m.next_hop(NodeId::Region(c), NodeId::Object(o)), None);
+        assert_eq!(m.path_len(NodeId::Region(c), NodeId::Object(o)), None);
+        // Sibling at equal depth: depth guard rejects immediately.
+        assert_eq!(m.next_hop(NodeId::Region(c), NodeId::Region(a)), None);
+        // Anchor below target (inverted direction): rejected.
+        assert_eq!(m.next_hop(NodeId::Object(o), NodeId::Region(a)), None);
     }
 
     #[test]

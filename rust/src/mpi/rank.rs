@@ -115,6 +115,7 @@ impl MpiRank {
                     let src_core = self.core;
                     ctx.sim.push(at, dst, Event::Msg {
                         from: src_core,
+                        dst,
                         msg: Msg::MpiSend { src: src_core, tag, bytes },
                     });
                     self.pc += 1;
@@ -212,8 +213,9 @@ impl CoreLogic for MpiRank {
                 self.blocked = Blocked::No;
                 self.step(ctx);
             }
-            Event::Msg { from, msg: Msg::MpiSend { src, tag, bytes } } => {
+            Event::Msg { from, dst, msg: Msg::MpiSend { src, tag, bytes } } => {
                 debug_assert_eq!(from, src);
+                debug_assert_eq!(dst, self.core, "MPI send delivered to the wrong rank core");
                 let src_rank = self.rank_cores.iter().position(|&c| c == src).expect("rank core");
                 self.mailbox.entry((src_rank, tag)).or_default().push_back(bytes);
                 if self.blocked == (Blocked::Recv { from: src_rank, tag }) {

@@ -14,7 +14,7 @@
 
 use std::collections::VecDeque;
 
-use crate::ids::Cycles;
+use crate::ids::{CoreId, Cycles};
 use crate::noc::msg::Msg;
 
 /// One directed sender->receiver message channel.
@@ -23,8 +23,10 @@ pub struct Channel {
     /// Messages currently occupying receiver buffer slots (sent but not
     /// yet processed).
     pub in_flight: usize,
-    /// Sends blocked waiting for a credit: (enqueue time, message).
-    pub blocked: VecDeque<(Cycles, Msg)>,
+    /// Sends blocked waiting for a credit: (enqueue time, final
+    /// destination, message). The destination rides along so tree-routed
+    /// messages resume forwarding when the credit frees up.
+    pub blocked: VecDeque<(Cycles, CoreId, Msg)>,
 }
 
 impl Channel {
@@ -41,7 +43,7 @@ impl Channel {
     /// Return a credit after the receiver processed a message. If a
     /// blocked send is waiting, it immediately claims the credit and is
     /// returned for delivery.
-    pub fn release(&mut self) -> Option<(Cycles, Msg)> {
+    pub fn release(&mut self) -> Option<(Cycles, CoreId, Msg)> {
         debug_assert!(self.in_flight > 0, "credit release without in-flight message");
         self.in_flight = self.in_flight.saturating_sub(1);
         if let Some(queued) = self.blocked.pop_front() {
@@ -75,13 +77,13 @@ mod tests {
         let mut ch = Channel::default();
         assert!(ch.try_acquire(1));
         assert!(!ch.try_acquire(1));
-        ch.blocked.push_back((10, msg()));
-        ch.blocked.push_back((20, msg()));
-        let (t, _) = ch.release().expect("first blocked send should be released");
+        ch.blocked.push_back((10, CoreId(1), msg()));
+        ch.blocked.push_back((20, CoreId(1), msg()));
+        let (t, _, _) = ch.release().expect("first blocked send should be released");
         assert_eq!(t, 10);
         // Credit was immediately re-consumed by the blocked send.
         assert_eq!(ch.in_flight, 1);
-        let (t2, _) = ch.release().expect("second blocked send");
+        let (t2, _, _) = ch.release().expect("second blocked send");
         assert_eq!(t2, 20);
         assert!(ch.release().is_none());
         assert_eq!(ch.in_flight, 0);

@@ -2,10 +2,13 @@
 //!
 //! Cores exchange fixed-size (64-B) control messages strictly along the
 //! scheduler/worker tree (paper IV-b). Messages that must reach a
-//! non-adjacent core are wrapped in a [`Msg::Route`] envelope and forwarded
-//! hop by hop — each intermediate scheduler charges message-processing
-//! time, which is how the paper's "requests are forwarded to parent or
-//! child schedulers" cost materializes in the simulation.
+//! non-adjacent core carry their final destination in the delivery event
+//! (`Event::Msg::dst`) and are forwarded hop by hop — each intermediate
+//! scheduler charges message-processing time, which is how the paper's
+//! "requests are forwarded to parent or child schedulers" cost
+//! materializes in the simulation. (Earlier versions wrapped forwarded
+//! messages in a boxed `Msg::Route` envelope; the destination field moves
+//! the payload hop to hop with no heap traffic.)
 //!
 //! Payloads that would not fit 64 bytes on real hardware (task descriptors,
 //! pack range lists) model multi-message transfers: their `wire_msgs()`
@@ -68,9 +71,6 @@ pub enum Msg {
     WaitGranted { task: TaskId },
 
     // ------------------------------------------------------ sched <-> sched
-    /// Tree-forwarding envelope for a message whose handler is a
-    /// non-adjacent core.
-    Route { to: CoreId, inner: Box<Msg> },
     /// Delegate responsibility for a freshly spawned task one level down
     /// (paper V-E: "only when all its arguments are handled by this single
     /// child scheduler or its children"). Carries the spawn-rendezvous
@@ -135,7 +135,6 @@ impl Msg {
             Msg::SpawnReq { desc, .. } => 1 + desc.args.len() as u64 / 4,
             Msg::PackResp { ranges, .. } => 1 + ranges.len() as u64 / 4,
             Msg::WaitReq { nodes, .. } => 1 + nodes.len() as u64 / 8,
-            Msg::Route { inner, .. } => inner.wire_msgs(),
             // MPI payloads move over DMA; the message is the header.
             _ => 1,
         }
@@ -153,7 +152,6 @@ impl Msg {
             Msg::MemResp { .. } => "MemResp",
             Msg::Dispatch { .. } => "Dispatch",
             Msg::WaitGranted { .. } => "WaitGranted",
-            Msg::Route { .. } => "Route",
             Msg::Delegate { .. } => "Delegate",
             Msg::DepDescend { .. } => "DepDescend",
             Msg::DepSettled { .. } => "DepSettled",
@@ -196,15 +194,15 @@ mod tests {
     }
 
     #[test]
-    fn route_envelope_is_transparent() {
-        let inner = Msg::PackResp {
+    fn pack_resp_wire_cost_scales() {
+        let resp = Msg::PackResp {
             req: ReqId(1),
             ranges: (0..8)
                 .map(|i| ProducerRange { producer: CoreId(0), addr: i * 64, bytes: 64 })
                 .collect(),
         };
-        let wrapped = Msg::Route { to: CoreId(3), inner: Box::new(inner.clone()) };
-        assert_eq!(wrapped.wire_msgs(), inner.wire_msgs());
-        assert_eq!(wrapped.tag(), "Route");
+        // 8 ranges over 64-B frames: header + 2 continuation messages.
+        assert_eq!(resp.wire_msgs(), 3);
+        assert_eq!(resp.tag(), "PackResp");
     }
 }

@@ -172,7 +172,11 @@ impl Platform {
         }
         // Boot: deliver the main-task dispatch to the first worker.
         let top = eng.world.hier.top_core();
-        eng.sim.push(0, first_worker, Event::Msg { from: top, msg: Msg::Dispatch { task: main_task } });
+        eng.sim.push(
+            0,
+            first_worker,
+            Event::Msg { from: top, dst: first_worker, msg: Msg::Dispatch { task: main_task } },
+        );
         Platform { eng, main_task }
     }
 

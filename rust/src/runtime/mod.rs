@@ -3,7 +3,16 @@ pub mod engine;
 pub mod shapes;
 
 /// Smoke check used by tests/examples: can we bring up the PJRT client?
-pub fn smoke() -> anyhow::Result<String> {
-    let client = xla::PjRtClient::cpu()?;
+#[cfg(pjrt)]
+pub fn smoke() -> engine::Result<String> {
+    let client = xla::PjRtClient::cpu()
+        .map_err(|e| engine::KernelError(format!("create PJRT CPU client: {e}")))?;
     Ok(client.platform_name())
+}
+
+/// Stub smoke check: the PJRT client is unavailable without `--cfg pjrt`
+/// (vendored xla dependency).
+#[cfg(not(pjrt))]
+pub fn smoke() -> engine::Result<String> {
+    Err(engine::KernelError("built without `--cfg pjrt`".into()))
 }

@@ -12,12 +12,27 @@
 //!
 //! Everything that touches state owned by another scheduler leaves this
 //! core as a routed NoC message and is charged accordingly.
+//!
+//! # Hot-path discipline
+//!
+//! The per-event path (grant, traversal step, re-evaluation, pack,
+//! placement) performs **no steady-state heap allocation**: task
+//! descriptors are shared `Arc`s (escaping a borrow is a pointer bump,
+//! not an argument-vector copy), queue re-evaluation and pack walks run
+//! over pooled scratch buffers owned by this scheduler, placement scoring
+//! iterates the hierarchy in place instead of cloning candidate lists,
+//! and tree-forwarded messages move hop to hop without boxing (see
+//! `Event::Msg::dst`). Keep it that way — the simulator's throughput
+//! (events per host second, `cargo bench --bench hotpath`) is the
+//! regression gate.
 
-use std::collections::{BTreeMap, HashMap};
+use std::collections::BTreeMap;
 
 use crate::dep::node::ReadyAction;
+use crate::fxmap::FxHashMap;
 use crate::ids::{CoreId, NodeId, ReqId, TaskId};
 use crate::noc::msg::{MemOpKind, Msg, ProducerRange};
+use crate::memory::region::PackScratch;
 use crate::sched::scoring::{balance_score, locality_score, pick_best};
 use crate::sim::engine::{CoreLogic, Ctx};
 use crate::sim::event::Event;
@@ -39,16 +54,33 @@ pub struct SchedLogic {
     pub idx: usize,
     pub core: CoreId,
     next_req: u64,
-    packs: HashMap<ReqId, PackPending>,
+    packs: FxHashMap<ReqId, PackPending>,
     /// Spawn rendezvous: (spawner core, unsettled argument traversals).
-    spawns: HashMap<ReqId, (CoreId, usize)>,
+    spawns: FxHashMap<ReqId, (CoreId, usize)>,
     /// task -> outstanding wait-node count.
-    waits: HashMap<TaskId, usize>,
+    waits: FxHashMap<TaskId, usize>,
     /// Child-scheduler load estimates (from reports + eager increments).
     child_load: BTreeMap<usize, u64>,
     /// Worker load estimates (leaf schedulers).
     worker_load: BTreeMap<u32, u64>,
     last_reported: u64,
+    /// `MYRMICS_TRACE_TASK`, read once at construction (it used to be an
+    /// environment syscall on every single grant).
+    trace_task: Option<u64>,
+    // --- reusable scratch; per-scheduler so the steady state allocates
+    // --- nothing on the event path.
+    /// Pool of ready-action buffers for [`SchedLogic::reeval`] (a pool,
+    /// not a single buffer, because re-evaluation recurses through
+    /// quiescence propagation).
+    ready_pool: Vec<Vec<ReadyAction>>,
+    /// Argument-owner scratch for delegation checks.
+    owners_scratch: Vec<usize>,
+    /// Packing subtree-walk buffers.
+    pack_scratch: PackScratch,
+    /// Remote subregion roots from the last pack walk.
+    pack_remote: Vec<crate::ids::RegionId>,
+    /// Placement scoring candidates (locality, balance).
+    score_scratch: Vec<(u64, u64)>,
 }
 
 impl SchedLogic {
@@ -57,12 +89,20 @@ impl SchedLogic {
             idx,
             core,
             next_req: 1,
-            packs: HashMap::new(),
-            spawns: HashMap::new(),
-            waits: HashMap::new(),
+            packs: FxHashMap::default(),
+            spawns: FxHashMap::default(),
+            waits: FxHashMap::default(),
             child_load: BTreeMap::new(),
             worker_load: BTreeMap::new(),
             last_reported: 0,
+            trace_task: std::env::var("MYRMICS_TRACE_TASK")
+                .ok()
+                .and_then(|t| t.parse::<u64>().ok()),
+            ready_pool: Vec::new(),
+            owners_scratch: Vec::new(),
+            pack_scratch: PackScratch::default(),
+            pack_remote: Vec::new(),
+            score_scratch: Vec::new(),
         }
     }
 
@@ -73,18 +113,15 @@ impl SchedLogic {
     }
 
     /// Send `msg` towards `to`, forwarding along the tree; handle locally
-    /// if `to` is this core.
+    /// if `to` is this core. Forwarded messages carry their destination in
+    /// the delivery event, so no envelope allocation happens per hop.
     fn send_routed(&mut self, ctx: &mut Ctx<'_>, to: CoreId, msg: Msg) {
         if to == self.core {
             self.handle(ctx, self.core, msg);
             return;
         }
         let next = ctx.world.hier.route_next(self.idx, to);
-        if next == to {
-            ctx.send(to, msg);
-        } else {
-            ctx.send(next, Msg::Route { to, inner: Box::new(msg) });
-        }
+        ctx.send_via(next, to, msg);
     }
 
     fn sched_core(&self, ctx: &Ctx<'_>, idx: usize) -> CoreId {
@@ -125,15 +162,13 @@ impl SchedLogic {
     fn adopt_task(&mut self, ctx: &mut Ctx<'_>, task: TaskId, req: ReqId, origin: CoreId) {
         ctx.world.tasks.get_mut(task).resp = self.idx;
         let desc = ctx.world.tasks.get(task).desc.clone();
-        let owners: Vec<usize> = desc
-            .dep_args()
-            .map(|(_, a)| {
-                ctx.charge(ctx.sim.cost.sc_dep_locate);
-                ctx.world.mem.owner(a.node.unwrap())
-            })
-            .collect();
-        if !owners.is_empty() {
-            if let Some(child) = ctx.world.hier.child_covering(self.idx, &owners) {
+        self.owners_scratch.clear();
+        for (_, a) in desc.dep_args() {
+            ctx.charge(ctx.sim.cost.sc_dep_locate);
+            self.owners_scratch.push(ctx.world.mem.owner(a.node.unwrap()));
+        }
+        if !self.owners_scratch.is_empty() {
+            if let Some(child) = ctx.world.hier.child_covering(self.idx, &self.owners_scratch) {
                 ctx.world.tasks.get_mut(task).resp = child;
                 let to = self.sched_core(ctx, child);
                 self.send_routed(ctx, to, Msg::Delegate { task, req, origin });
@@ -167,35 +202,32 @@ impl SchedLogic {
     // ==================================================== dependency engine
 
     fn start_dep_analysis(&mut self, ctx: &mut Ctx<'_>, task: TaskId, req: ReqId, origin: CoreId) {
-        let entry = ctx.world.tasks.get(task);
-        if entry.deps_pending == 0 {
+        let deps_pending = ctx.world.tasks.get(task).deps_pending;
+        if deps_pending == 0 {
             self.send_routed(ctx, origin, Msg::SpawnAck { req });
             self.task_ready(ctx, task);
             return;
         }
-        self.spawns.insert(req, (origin, entry.deps_pending));
+        self.spawns.insert(req, (origin, deps_pending));
         let settle = Some((self.core, req));
-        let parent = entry.parent.expect("spawned task has a parent");
-        let parent_args = ctx.world.tasks.get(parent).desc.args.clone();
-        let desc = entry.desc.clone();
+        let (desc, parent) = {
+            let entry = ctx.world.tasks.get(task);
+            (entry.desc.clone(), entry.parent.expect("spawned task has a parent"))
+        };
+        let parent_desc = ctx.world.tasks.get(parent).desc.clone();
         for (i, a) in desc.dep_args() {
             let target = a.node.unwrap();
             let mode = a.access();
             // Locate the target and discover the path by following parent
             // pointers up to the parent task's argument (paper V-D).
             let anchor =
-                crate::dep::analysis::find_anchor(&parent_args, &ctx.world.mem, target, mode)
+                crate::dep::analysis::find_anchor(&parent_desc.args, &ctx.world.mem, target, mode)
                     .unwrap_or_else(|| {
                         panic!(
                             "task {task} arg {i} ({target}) is not covered by its parent's footprint"
                         )
                     });
-            let path_len = ctx
-                .world
-                .mem
-                .path_down(anchor, target)
-                .map(|p| p.len())
-                .unwrap_or(1);
+            let path_len = ctx.world.mem.path_len(anchor, target).unwrap_or(1);
             ctx.charge(
                 ctx.sim.cost.sc_dep_locate + ctx.sim.cost.sc_dep_path_step * path_len as u64,
             );
@@ -222,7 +254,8 @@ impl SchedLogic {
         }
     }
 
-    /// Downward traversal from `at` towards `target` (paper Fig 5a).
+    /// Downward traversal from `at` towards `target` (paper Fig 5a). Each
+    /// hop is a cached-depth `next_hop` query — no path vectors.
     #[allow(clippy::too_many_arguments)]
     fn descend(
         &mut self,
@@ -252,8 +285,7 @@ impl SchedLogic {
                 self.reeval(ctx, at);
                 return;
             }
-            let path = w.mem.path_down(at, target).expect("target below current node");
-            let next = path[1];
+            let next = w.mem.next_hop(at, target).expect("target below current node");
             let tasks = &w.tasks;
             let can_pass = node.can_pass(task, mode, &|a, t| tasks.is_ancestor(a, t));
             if can_pass {
@@ -289,13 +321,19 @@ impl SchedLogic {
     /// Re-evaluate a node after any state change: grant/resume entries,
     /// satisfy waiters, propagate quiescence.
     fn reeval(&mut self, ctx: &mut Ctx<'_>, at: NodeId) {
-        let actions = {
+        // Pooled buffer: re-evaluation can recurse (quiescence reports
+        // re-evaluate the parent node), so each nesting level takes its
+        // own buffer; the pool caps out at the max nesting depth.
+        let mut actions = self.ready_pool.pop().unwrap_or_default();
+        actions.clear();
+        {
             let w = &mut *ctx.world;
-            let Some(node) = w.dep.get_mut(at) else { return };
-            let tasks = &w.tasks;
-            node.collect_ready(&|a, t| tasks.is_ancestor(a, t))
-        };
-        for act in actions {
+            if let Some(node) = w.dep.get_mut(at) {
+                let tasks = &w.tasks;
+                node.collect_ready_into(&|a, t| tasks.is_ancestor(a, t), &mut actions);
+            }
+        }
+        for act in actions.drain(..) {
             match act {
                 ReadyAction::Grant { task, arg } => {
                     ctx.charge(ctx.sim.cost.sc_grant);
@@ -314,8 +352,7 @@ impl SchedLogic {
                 ReadyAction::Resume { task, arg, mode, target } => {
                     // The instance moves below this node.
                     let w = &mut *ctx.world;
-                    let path = w.mem.path_down(at, target).expect("resume path");
-                    let next = path[1];
+                    let next = w.mem.next_hop(at, target).expect("resume path");
                     let node = w.dep.node_mut(at, &w.mem);
                     node.note_descent(next, mode);
                     let next_owner = w.mem.owner(next);
@@ -341,28 +378,24 @@ impl SchedLogic {
                 }
             }
         }
-        // Waiters (sys_wait).
-        let satisfied: Vec<TaskId> = {
+        self.ready_pool.push(actions);
+        // Waiters (sys_wait): scan in order, releasing satisfied ones.
+        // The node state a wait depends on (queue, counters) is not
+        // touched by `wait_node_ok`, so releasing in place preserves the
+        // same release order as a snapshot-then-release scan.
+        let mut wi = 0;
+        loop {
             let Some(node) = ctx.world.dep.get_mut(at) else { return };
-            let ok: Vec<bool> = node
-                .waiters
-                .iter()
-                .map(|&(t, m)| node_wait_ok(&ctx.world.tasks, t, m, node))
-                .collect();
-            let mut done = Vec::new();
-            let mut i = 0;
-            node.waiters.retain(|&(t, _)| {
-                let keep = !ok[i];
-                if !keep {
-                    done.push(t);
-                }
-                i += 1;
-                keep
-            });
-            done
-        };
-        for t in satisfied {
-            self.wait_node_ok(ctx, t, at);
+            if wi >= node.waiters.len() {
+                break;
+            }
+            let (t, m) = node.waiters[wi];
+            if node.wait_satisfied(t, m) {
+                node.waiters.remove(wi);
+                self.wait_node_ok(ctx, t, at);
+            } else {
+                wi += 1;
+            }
         }
         // Quiescence propagation with the parent-counter race protocol.
         self.maybe_quiesce(ctx, at);
@@ -433,12 +466,15 @@ impl SchedLogic {
         }
     }
 
-    fn on_arg_granted(&mut self, ctx: &mut Ctx<'_>, task: TaskId, _arg: usize) {
-        if let Ok(t) = std::env::var("MYRMICS_TRACE_TASK") {
-            if t.parse::<u64>() == Ok(task.0) {
-                eprintln!("[{}] t{} arg {} granted ({:?})", ctx.now(), task.0, _arg,
-                    ctx.world.tasks.get(task).desc.args[_arg].node);
-            }
+    fn on_arg_granted(&mut self, ctx: &mut Ctx<'_>, task: TaskId, arg: usize) {
+        if self.trace_task == Some(task.0) {
+            eprintln!(
+                "[{}] t{} arg {} granted ({:?})",
+                ctx.now(),
+                task.0,
+                arg,
+                ctx.world.tasks.get(task).desc.args[arg].node
+            );
         }
         let entry = ctx.world.tasks.get_mut(task);
         debug_assert!(entry.deps_pending > 0);
@@ -458,7 +494,11 @@ impl SchedLogic {
             entry.ready_at = now;
         }
         let desc = ctx.world.tasks.get(task).desc.clone();
-        let mut acc: Vec<ProducerRange> = Vec::new();
+        // Accumulate into the entry's own (empty) pack vector: re-packing
+        // after the task retires would reuse its capacity, and the final
+        // move into the entry is free.
+        let mut acc: Vec<ProducerRange> = std::mem::take(&mut ctx.world.tasks.get_mut(task).pack);
+        acc.clear();
         let mut outstanding = 0usize;
         let req = self.fresh_req();
         for (_, a) in desc.dep_args() {
@@ -469,22 +509,19 @@ impl SchedLogic {
             }
             let node = a.node.unwrap();
             if ctx.world.mem.owner(node) == self.idx {
-                let (ranges, remote) = ctx.world.mem.collect_pack(node);
+                let before = acc.len();
+                self.pack_remote.clear();
+                ctx.world.mem.collect_pack_into(
+                    node,
+                    &mut self.pack_scratch,
+                    &mut acc,
+                    &mut self.pack_remote,
+                );
                 ctx.charge(
                     ctx.sim.cost.sc_pack_base
-                        + ctx.sim.cost.sc_pack_per_range * ranges.len() as u64,
+                        + ctx.sim.cost.sc_pack_per_range * (acc.len() - before) as u64,
                 );
-                acc.extend(ranges);
-                for r in remote {
-                    outstanding += 1;
-                    let owner = ctx.world.mem.owner(NodeId::Region(r));
-                    let to = self.sched_core(ctx, owner);
-                    self.send_routed(
-                        ctx,
-                        to,
-                        Msg::PackReq { req, node: NodeId::Region(r), reply_to: self.core },
-                    );
-                }
+                outstanding += self.send_pack_reqs(ctx, req);
             } else {
                 outstanding += 1;
                 let owner = ctx.world.mem.owner(node);
@@ -502,29 +539,53 @@ impl SchedLogic {
     }
 
     fn on_pack_req(&mut self, ctx: &mut Ctx<'_>, req: ReqId, node: NodeId, reply_to: CoreId) {
-        let (ranges, remote) = ctx.world.mem.collect_pack(node);
+        // The ranges leave this core inside a PackResp message (or wait in
+        // a pending aggregation), so they need an owned vector; the walk
+        // itself runs over reusable scratch.
+        let mut ranges: Vec<ProducerRange> = Vec::new();
+        self.pack_remote.clear();
+        ctx.world.mem.collect_pack_into(
+            node,
+            &mut self.pack_scratch,
+            &mut ranges,
+            &mut self.pack_remote,
+        );
         ctx.charge(
             ctx.sim.cost.sc_pack_base + ctx.sim.cost.sc_pack_per_range * ranges.len() as u64,
         );
-        if remote.is_empty() {
+        if self.pack_remote.is_empty() {
             self.send_routed(ctx, reply_to, Msg::PackResp { req, ranges });
             return;
         }
         let nested = self.fresh_req();
-        let outstanding = remote.len();
+        let outstanding = self.pack_remote.len();
         self.packs.insert(
             nested,
             PackPending { task: None, reply: Some((req, reply_to)), outstanding, acc: ranges },
         );
-        for r in remote {
+        let sent = self.send_pack_reqs(ctx, nested);
+        debug_assert_eq!(sent, outstanding);
+    }
+
+    /// Forward a `PackReq` tagged `req` to the owner of every remote
+    /// subregion root the last pack walk gathered into `pack_remote`.
+    /// Returns how many were sent. (The list is `mem::take`n so it stays
+    /// unborrowed across `send_routed`, then put back to keep its
+    /// capacity.)
+    fn send_pack_reqs(&mut self, ctx: &mut Ctx<'_>, req: ReqId) -> usize {
+        let remote = std::mem::take(&mut self.pack_remote);
+        for &r in &remote {
             let owner = ctx.world.mem.owner(NodeId::Region(r));
             let to = self.sched_core(ctx, owner);
             self.send_routed(
                 ctx,
                 to,
-                Msg::PackReq { req: nested, node: NodeId::Region(r), reply_to: self.core },
+                Msg::PackReq { req, node: NodeId::Region(r), reply_to: self.core },
             );
         }
+        let n = remote.len();
+        self.pack_remote = remote;
+        n
     }
 
     fn on_pack_resp(&mut self, ctx: &mut Ctx<'_>, req: ReqId, ranges: Vec<ProducerRange>) {
@@ -547,52 +608,53 @@ impl SchedLogic {
 
     /// Hierarchical placement descent (paper V-E): children subtrees are
     /// scored; at leaf level a worker is picked and the task dispatched.
+    /// The task's pack list is borrowed via `mem::take` (and restored) and
+    /// candidates are scored in place — no clones of pack/children/worker
+    /// vectors.
     fn place(&mut self, ctx: &mut Ctx<'_>, task: TaskId) {
         ctx.world.tasks.get_mut(task).state = TaskState::Placing;
-        let pack = ctx.world.tasks.get(task).pack.clone();
+        let pack = std::mem::take(&mut ctx.world.tasks.get_mut(task).pack);
         let p_loc = ctx.world.cfg.policy.p_locality;
-        let children = ctx.world.hier.children[self.idx].clone();
-        if !children.is_empty() {
-            let cands: Vec<(u64, u64)> = children
-                .iter()
-                .map(|&c| {
-                    let members = ctx.world.hier.subtree_workers(c);
-                    let l = locality_score(&pack, members);
-                    let cap = 2 * members.len() as u64;
-                    let b = balance_score(*self.child_load.get(&c).unwrap_or(&0), cap);
-                    (l, b)
-                })
-                .collect();
+        let n_children = ctx.world.hier.children[self.idx].len();
+        if n_children > 0 {
+            self.score_scratch.clear();
+            for &c in &ctx.world.hier.children[self.idx] {
+                let members = ctx.world.hier.subtree_workers(c);
+                let l = locality_score(&pack, members);
+                let cap = 2 * members.len() as u64;
+                let b = balance_score(*self.child_load.get(&c).unwrap_or(&0), cap);
+                self.score_scratch.push((l, b));
+            }
             ctx.charge(
                 ctx.sim.cost.sc_score_base
-                    + ctx.sim.cost.sc_score_per_child * children.len() as u64,
+                    + ctx.sim.cost.sc_score_per_child * n_children as u64,
             );
-            let chosen = children[pick_best(p_loc, &cands)];
+            let chosen = ctx.world.hier.children[self.idx][pick_best(p_loc, &self.score_scratch)];
             *self.child_load.entry(chosen).or_insert(0) += 1; // eager estimate
+            ctx.world.tasks.get_mut(task).pack = pack;
             let to = self.sched_core(ctx, chosen);
             self.send_routed(ctx, to, Msg::ScheduleDown { task });
             return;
         }
         // Leaf: pick a worker.
-        let workers = ctx.world.hier.leaf_workers[self.idx].clone();
-        assert!(!workers.is_empty(), "leaf scheduler {} has no workers", self.idx);
-        let cands: Vec<(u64, u64)> = workers
-            .iter()
-            .map(|&w| {
-                let l = locality_score(&pack, std::slice::from_ref(&w));
-                let b = balance_score(*self.worker_load.get(&w.0).unwrap_or(&0), 2);
-                (l, b)
-            })
-            .collect();
+        let n_workers = ctx.world.hier.leaf_workers[self.idx].len();
+        assert!(n_workers > 0, "leaf scheduler {} has no workers", self.idx);
+        self.score_scratch.clear();
+        for &w in &ctx.world.hier.leaf_workers[self.idx] {
+            let l = locality_score(&pack, std::slice::from_ref(&w));
+            let b = balance_score(*self.worker_load.get(&w.0).unwrap_or(&0), 2);
+            self.score_scratch.push((l, b));
+        }
         ctx.charge(
-            ctx.sim.cost.sc_score_base + ctx.sim.cost.sc_score_per_child * workers.len() as u64,
+            ctx.sim.cost.sc_score_base + ctx.sim.cost.sc_score_per_child * n_workers as u64,
         );
-        let w = workers[pick_best(p_loc, &cands)];
+        let w = ctx.world.hier.leaf_workers[self.idx][pick_best(p_loc, &self.score_scratch)];
         *self.worker_load.entry(w.0).or_insert(0) += 1; // eager estimate
         {
             let entry = ctx.world.tasks.get_mut(task);
             entry.worker = Some(w);
             entry.state = TaskState::Dispatched;
+            entry.pack = pack;
         }
         // New last producer for write arguments (paper V-E).
         let desc = ctx.world.tasks.get(task).desc.clone();
@@ -710,8 +772,7 @@ impl SchedLogic {
         let satisfied = {
             let w = &mut *ctx.world;
             let n = w.dep.node_mut(node, &w.mem);
-            let tasks = &w.tasks;
-            if node_wait_ok(tasks, task, mode, n) {
+            if n.wait_satisfied(task, mode) {
                 true
             } else {
                 n.waiters.push((task, mode));
@@ -801,18 +862,6 @@ impl SchedLogic {
 
     pub fn handle(&mut self, ctx: &mut Ctx<'_>, _from: CoreId, msg: Msg) {
         match msg {
-            Msg::Route { to, inner } => {
-                if to == self.core {
-                    self.handle(ctx, _from, *inner);
-                } else {
-                    let next = ctx.world.hier.route_next(self.idx, to);
-                    if next == to {
-                        ctx.send(to, *inner);
-                    } else {
-                        ctx.send(next, Msg::Route { to, inner });
-                    }
-                }
-            }
             Msg::SpawnReq { req, origin, parent, desc } => {
                 self.on_spawn(ctx, req, origin, parent, desc)
             }
@@ -845,23 +894,21 @@ impl SchedLogic {
     }
 }
 
-/// Is `task`'s wait satisfied at `node`? (Free function to keep borrow
-/// scopes tight.)
-fn node_wait_ok(
-    tasks: &crate::task::table::TaskTable,
-    task: TaskId,
-    mode: Access,
-    node: &crate::dep::node::DepNode,
-) -> bool {
-    let _ = tasks;
-    node.wait_satisfied(task, mode)
-}
-
 impl CoreLogic for SchedLogic {
     fn on_event(&mut self, ctx: &mut Ctx<'_>, ev: Event) {
         match ev {
             Event::Boot => {}
-            Event::Msg { from, msg } => self.handle(ctx, from, msg),
+            Event::Msg { from, dst, msg } => {
+                if dst == self.core {
+                    self.handle(ctx, from, msg);
+                } else {
+                    // Intermediate tree hop: forward towards the final
+                    // destination. The payload moves — no envelope, no
+                    // allocation.
+                    let next = ctx.world.hier.route_next(self.idx, dst);
+                    ctx.send_via(next, dst, msg);
+                }
+            }
             Event::DmaDone { .. } | Event::Timer(_) | Event::Wake => {}
         }
     }

@@ -102,13 +102,18 @@ impl WorkerLogic {
     /// Order DMA groups for the first (up to) two unprepped queued tasks —
     /// the paper's double-buffering window.
     fn maybe_prep(&mut self, ctx: &mut Ctx<'_>) {
-        let window: Vec<TaskId> = self.ready.iter().take(2).copied().collect();
-        for t in window {
+        for wi in 0..2 {
+            let Some(&t) = self.ready.get(wi) else { break };
             if self.fetch.contains_key(&t) {
                 continue;
             }
-            let pack = ctx.world.tasks.get(t).pack.clone();
-            let transfers: Vec<Transfer> = pack
+            // Borrow the pack list in place (shared borrows of disjoint
+            // Ctx fields) instead of cloning it per prep.
+            let transfers: Vec<Transfer> = ctx
+                .world
+                .tasks
+                .get(t)
+                .pack
                 .iter()
                 .filter(|r| r.producer != self.core)
                 .map(|r| Transfer {
@@ -232,37 +237,45 @@ impl CoreLogic for WorkerLogic {
     fn on_event(&mut self, ctx: &mut Ctx<'_>, ev: Event) {
         match ev {
             Event::Boot => {}
-            Event::Msg { from: _, msg } => match msg {
-                Msg::Dispatch { task } => {
-                    ctx.charge(ctx.sim.cost.wk_dispatch_handle);
-                    self.ready.push_back(task);
-                    self.maybe_prep(ctx);
-                    self.maybe_start(ctx);
-                    self.report_load(ctx);
-                }
-                Msg::SpawnAck { req } => self.resume(ctx, Waiting::SpawnAck(req)),
-                Msg::MemResp { req } => self.resume(ctx, Waiting::Rpc(req)),
-                Msg::WaitGranted { task } => {
-                    // Re-run the body at the next phase; its new ops replace
-                    // the old list. The task resumes once the core is free.
-                    let Some(run) = self.suspended.get_mut(&task) else { return };
-                    if run.waiting != Waiting::WaitGrant {
-                        return;
+            // Workers are always the final destination — the tree never
+            // routes *through* a worker.
+            Event::Msg { dst, msg, .. } => {
+                debug_assert_eq!(dst, self.core, "through-traffic delivered to a worker");
+                match msg {
+                    Msg::Dispatch { task } => {
+                        ctx.charge(ctx.sim.cost.wk_dispatch_handle);
+                        self.ready.push_back(task);
+                        self.maybe_prep(ctx);
+                        self.maybe_start(ctx);
+                        self.report_load(ctx);
                     }
-                    run.phase += 1;
-                    let phase = run.phase;
-                    ctx.world.tasks.get_mut(task).phase = phase;
-                    ctx.charge(ctx.sim.cost.wk_dispatch_handle);
-                    let ops = run_task_body(ctx.world, ctx.registry, task, self.core, phase);
-                    let run = self.suspended.get_mut(&task).unwrap();
-                    run.ops = ops;
-                    run.idx = 0;
-                    run.waiting = Waiting::None;
-                    self.resumable.push_back(task);
-                    self.maybe_start(ctx);
+                    Msg::SpawnAck { req } => self.resume(ctx, Waiting::SpawnAck(req)),
+                    Msg::MemResp { req } => self.resume(ctx, Waiting::Rpc(req)),
+                    Msg::WaitGranted { task } => {
+                        // Re-run the body at the next phase; its new ops
+                        // replace the old list. The task resumes once the
+                        // core is free.
+                        let Some(run) = self.suspended.get_mut(&task) else { return };
+                        if run.waiting != Waiting::WaitGrant {
+                            return;
+                        }
+                        run.phase += 1;
+                        let phase = run.phase;
+                        ctx.world.tasks.get_mut(task).phase = phase;
+                        ctx.charge(ctx.sim.cost.wk_dispatch_handle);
+                        let ops = run_task_body(ctx.world, ctx.registry, task, self.core, phase);
+                        let run = self.suspended.get_mut(&task).unwrap();
+                        run.ops = ops;
+                        run.idx = 0;
+                        run.waiting = Waiting::None;
+                        self.resumable.push_back(task);
+                        self.maybe_start(ctx);
+                    }
+                    other => {
+                        panic!("worker {} got unexpected message {}", self.core, other.tag())
+                    }
                 }
-                other => panic!("worker {} got unexpected message {}", self.core, other.tag()),
-            },
+            }
             Event::DmaDone { group } => {
                 ctx.charge(ctx.sim.cost.wk_msg_proc);
                 if let Some(t) = self.groups.remove(&group) {

@@ -103,9 +103,9 @@ impl SimState {
         self.metas.iter().map(|m| m.busy_until).max().unwrap_or(0).max(self.now)
     }
 
-    fn deliver_msg(&mut self, t_send: Cycles, from: CoreId, to: CoreId, msg: Msg) {
-        let lat = self.cost.msg_latency(self.topo.hops(from, to));
-        self.push(t_send + lat, to, Event::Msg { from, msg });
+    fn deliver_msg(&mut self, t_send: Cycles, from: CoreId, hop: CoreId, dst: CoreId, msg: Msg) {
+        let lat = self.cost.msg_latency(self.topo.hops(from, hop));
+        self.push(t_send + lat, hop, Event::Msg { from, dst, msg });
     }
 }
 
@@ -150,23 +150,32 @@ impl<'a> Ctx<'a> {
         self.charged_task += self.sim.cost.charge_on(kind, mb_cycles);
     }
 
-    /// Send a control message. Charges sender-side push cost, consumes a
-    /// channel credit (or queues the send if the peer's buffer is full) and
-    /// schedules delivery after the wire latency.
+    /// Send a control message directly to `to`. Charges sender-side push
+    /// cost, consumes a channel credit (or queues the send if the peer's
+    /// buffer is full) and schedules delivery after the wire latency.
     pub fn send(&mut self, to: CoreId, msg: Msg) {
+        self.send_via(to, to, msg);
+    }
+
+    /// Send a control message whose final destination is `dst`, delivered
+    /// to the adjacent tree hop `next` (which forwards it on if it is not
+    /// the destination). This is the allocation-free replacement for the
+    /// old boxed `Msg::Route` envelope: the payload is moved, never
+    /// re-heaped, across hops.
+    pub fn send_via(&mut self, next: CoreId, dst: CoreId, msg: Msg) {
         let wires = msg.wire_msgs();
         self.charge(self.sim.cost.msg_send * wires);
         let st = &mut self.sim.stats[self.core.idx()];
         st.msgs_sent += wires;
         st.msg_bytes_sent += wires * self.sim.cost.msg_bytes;
         let t_send = self.start + self.charged_rt + self.charged_task;
-        let key = (self.core.0, to.0);
+        let key = (self.core.0, next.0);
         let cap = self.sim.channel_capacity;
         let ch = self.sim.channels.entry(key).or_default();
         if ch.try_acquire(cap) {
-            self.sim.deliver_msg(t_send, self.core, to, msg);
+            self.sim.deliver_msg(t_send, self.core, next, dst, msg);
         } else {
-            ch.blocked.push_back((t_send, msg));
+            ch.blocked.push_back((t_send, dst, msg));
         }
     }
 
@@ -299,7 +308,7 @@ impl Engine {
             // Message bookkeeping the handler should not have to repeat:
             // credit return, receive stats, receiver processing cost.
             let mut init_charge = 0;
-            if let Event::Msg { from, msg } = &q.ev {
+            if let Event::Msg { from, msg, .. } = &q.ev {
                 let wires = msg.wire_msgs();
                 let st = &mut self.sim.stats[ci];
                 st.msgs_recv += wires;
@@ -312,10 +321,10 @@ impl Engine {
                 let key = (from.0, q.core.0);
                 if let Some(ch) = self.sim.channels.get_mut(&key) {
                     let released = ch.release();
-                    if let Some((t_blocked, blocked_msg)) = released {
+                    if let Some((t_blocked, blocked_dst, blocked_msg)) = released {
                         let stall = q.t.saturating_sub(t_blocked);
                         self.sim.stats[from.idx()].credit_stall += stall;
-                        self.sim.deliver_msg(q.t, *from, q.core, blocked_msg);
+                        self.sim.deliver_msg(q.t, *from, q.core, blocked_dst, blocked_msg);
                     }
                 }
             }
@@ -323,7 +332,7 @@ impl Engine {
             if self.sim.trace {
                 let tag = match &q.ev {
                     Event::Boot => "Boot".to_string(),
-                    Event::Msg { from, msg } => format!("Msg({}) from {from}", msg.tag()),
+                    Event::Msg { from, msg, .. } => format!("Msg({}) from {from}", msg.tag()),
                     Event::DmaDone { group } => format!("DmaDone({group})"),
                     Event::Timer(k) => format!("Timer({k:?})"),
                     Event::Wake => "Wake".to_string(),
@@ -377,7 +386,7 @@ mod tests {
         fn on_event(&mut self, ctx: &mut Ctx<'_>, ev: Event) {
             self.seen += 1;
             ctx.charge(self.work);
-            if let Event::Msg { from, msg: Msg::SpawnAck { req } } = ev {
+            if let Event::Msg { from, msg: Msg::SpawnAck { req }, .. } = ev {
                 if req.0 < 5 {
                     ctx.send(from, Msg::SpawnAck { req: ReqId(req.0 + 1) });
                 }
@@ -404,7 +413,7 @@ mod tests {
     #[test]
     fn ping_pong_advances_time() {
         let mut eng = tiny_engine(2, 100);
-        eng.sim.push(0, CoreId(0), Event::Msg { from: CoreId(1), msg: Msg::SpawnAck { req: ReqId(0) } });
+        eng.sim.push(0, CoreId(0), Event::Msg { from: CoreId(1), dst: CoreId(0), msg: Msg::SpawnAck { req: ReqId(0) } });
         let end = eng.run(None);
         // 6 messages processed (req 0..=5), each with latency + processing.
         assert!(end > 6 * 100);
@@ -427,7 +436,7 @@ mod tests {
     #[test]
     fn time_limit_stops_run() {
         let mut eng = tiny_engine(2, 100);
-        eng.sim.push(0, CoreId(0), Event::Msg { from: CoreId(1), msg: Msg::SpawnAck { req: ReqId(0) } });
+        eng.sim.push(0, CoreId(0), Event::Msg { from: CoreId(1), dst: CoreId(0), msg: Msg::SpawnAck { req: ReqId(0) } });
         let end = eng.run(Some(250));
         assert!(end <= 250);
     }
@@ -489,7 +498,7 @@ mod tests {
         let run = || {
             let mut eng = tiny_engine(2, 100);
             eng.sim
-                .push(0, CoreId(0), Event::Msg { from: CoreId(1), msg: Msg::SpawnAck { req: ReqId(0) } });
+                .push(0, CoreId(0), Event::Msg { from: CoreId(1), dst: CoreId(0), msg: Msg::SpawnAck { req: ReqId(0) } });
             let t = eng.run(None);
             (t, eng.world.gstats.msgs_total, eng.sim.stats[0].busy_runtime)
         };

@@ -21,8 +21,12 @@ pub enum Event {
     Boot,
     /// An incoming control message (after wire latency). The engine
     /// auto-charges receiver-side processing cost and handles the channel
-    /// credit return before the handler runs.
-    Msg { from: CoreId, msg: Msg },
+    /// credit return before the handler runs. `dst` is the final
+    /// destination: when it differs from the receiving core, the receiver
+    /// is an intermediate hop on the scheduler tree and must forward the
+    /// message (this replaces the old boxed `Msg::Route` envelope — the
+    /// payload moves hop to hop without touching the heap).
+    Msg { from: CoreId, dst: CoreId, msg: Msg },
     /// A previously ordered DMA group completed.
     DmaDone { group: u64 },
     /// Self-scheduled timer.

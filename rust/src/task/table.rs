@@ -6,6 +6,9 @@
 //! the only core that mutates it (the worker running the task mutates only
 //! through messages to that scheduler).
 
+use std::sync::Arc;
+
+use crate::arena::SlotArena;
 use crate::ids::{CoreId, Cycles, TaskId};
 use crate::noc::msg::ProducerRange;
 use crate::task::descriptor::TaskDesc;
@@ -30,7 +33,11 @@ pub enum TaskState {
 #[derive(Debug)]
 pub struct TaskEntry {
     pub id: TaskId,
-    pub desc: TaskDesc,
+    /// Shared descriptor: the scheduler lifecycle (spawn -> ready -> place
+    /// -> done) reads it from several borrow scopes, so it is reference-
+    /// counted — "cloning" it to escape a borrow is a pointer bump, not a
+    /// deep copy of the argument vector.
+    pub desc: Arc<TaskDesc>,
     pub parent: Option<TaskId>,
     /// Responsible scheduler index.
     pub resp: usize,
@@ -50,10 +57,13 @@ pub struct TaskEntry {
     pub done_at: Cycles,
 }
 
-/// Arena of all tasks ever created in a run (ids are dense indices).
+/// Arena of all tasks ever created in a run. The table is insert-only, so
+/// the [`SlotArena`] hands out dense slot indices in spawn order and the
+/// slot index *is* the task id — `get`/`get_mut` on the grant path are a
+/// bounds check and an array index.
 #[derive(Default)]
 pub struct TaskTable {
-    tasks: Vec<TaskEntry>,
+    tasks: SlotArena<TaskEntry>,
 }
 
 impl TaskTable {
@@ -68,11 +78,11 @@ impl TaskTable {
         resp: usize,
         now: Cycles,
     ) -> TaskId {
-        let id = TaskId(self.tasks.len() as u64);
+        let id = TaskId(self.tasks.capacity_used() as u64);
         let deps_pending = desc.n_dep_args();
-        self.tasks.push(TaskEntry {
+        let slot = self.tasks.insert(TaskEntry {
             id,
-            desc,
+            desc: Arc::new(desc),
             parent,
             resp,
             state: TaskState::DepWait,
@@ -85,15 +95,18 @@ impl TaskTable {
             started_at: 0,
             done_at: 0,
         });
+        debug_assert_eq!(slot.idx as u64, id.0, "insert-only table stays dense");
         id
     }
 
+    #[inline]
     pub fn get(&self, t: TaskId) -> &TaskEntry {
-        &self.tasks[t.0 as usize]
+        self.tasks.get_dense(t.0 as usize).unwrap_or_else(|| panic!("no task {t}"))
     }
 
+    #[inline]
     pub fn get_mut(&mut self, t: TaskId) -> &mut TaskEntry {
-        &mut self.tasks[t.0 as usize]
+        self.tasks.get_dense_mut(t.0 as usize).unwrap_or_else(|| panic!("no task {t}"))
     }
 
     pub fn len(&self) -> usize {

@@ -1,0 +1,142 @@
+//! Determinism regression gate for the zero-allocation hot-path refactor.
+//!
+//! The simulator must be a pure function of its configuration: final
+//! virtual time and every global counter must replay bit-identically.
+//! These tests pin fig7-style runs (the workloads the hotpath bench
+//! drives) so any refactor of the dependency traversal, packing, routing
+//! or scheduler state that changes the event schedule — even by one
+//! message reordering — fails loudly instead of silently shifting the
+//! numbers every later perf PR is judged against.
+//!
+//! Limitation: run-to-run replay catches nondeterminism, not behavior
+//! drift *across* refactors (a deterministic schedule change shifts both
+//! runs identically). The PR-1 build container has no Rust toolchain, so
+//! seed golden values could not be captured; first session with cargo:
+//! run these, record each Fingerprint as a `const` golden, and assert
+//! against it so later refactors are held to bit-identical schedules.
+
+use myrmics::apps::synthetic::{empty_chain, hier_empty, independent, SynthParams};
+use myrmics::config::PlatformConfig;
+use myrmics::platform::Platform;
+
+/// Everything that must replay bit-identically.
+#[derive(PartialEq, Eq, Debug)]
+struct Fingerprint {
+    final_time: u64,
+    events: u64,
+    msgs: u64,
+    tasks_spawned: u64,
+    tasks_completed: u64,
+    dep_boundary_msgs: u64,
+    dma_transfers: u64,
+}
+
+fn run_independent(workers: usize, n_tasks: usize) -> Fingerprint {
+    let (reg, main) = independent();
+    let mut plat = Platform::build_with(PlatformConfig::hierarchical(workers), reg, main, |w| {
+        w.app = Some(Box::new(SynthParams {
+            n_tasks,
+            task_cycles: 100_000,
+            ..Default::default()
+        }));
+    });
+    let t = plat.run(Some(1 << 44));
+    let g = &plat.world().gstats;
+    Fingerprint {
+        final_time: t,
+        events: g.events_processed,
+        msgs: g.msgs_total,
+        tasks_spawned: g.tasks_spawned,
+        tasks_completed: g.tasks_completed,
+        dep_boundary_msgs: g.dep_boundary_msgs,
+        dma_transfers: g.dma_transfers,
+    }
+}
+
+fn run_empty_chain(n_tasks: usize) -> Fingerprint {
+    let (reg, main) = empty_chain();
+    let mut plat = Platform::build_with(PlatformConfig::flat(1), reg, main, |w| {
+        w.app = Some(Box::new(SynthParams { n_tasks, ..Default::default() }));
+    });
+    let t = plat.run(Some(1 << 44));
+    let g = &plat.world().gstats;
+    Fingerprint {
+        final_time: t,
+        events: g.events_processed,
+        msgs: g.msgs_total,
+        tasks_spawned: g.tasks_spawned,
+        tasks_completed: g.tasks_completed,
+        dep_boundary_msgs: g.dep_boundary_msgs,
+        dma_transfers: g.dma_transfers,
+    }
+}
+
+/// fig7b shape (independent tasks over a hierarchy): two runs must agree
+/// on the final cycle count and every global counter, and the run must
+/// actually complete all its tasks.
+#[test]
+fn fig7_independent_replays_bit_identically() {
+    let a = run_independent(16, 64);
+    let b = run_independent(16, 64);
+    assert_eq!(a, b, "fig7-style run must replay bit-identically");
+    assert_eq!(a.tasks_spawned, 65, "main + 64 children");
+    assert_eq!(a.tasks_completed, 65);
+    assert!(a.final_time > 0);
+    assert!(a.events > 0);
+}
+
+/// fig7a shape (serialized empty tasks, one worker): the pure runtime-
+/// overhead path must also replay bit-identically.
+#[test]
+fn fig7_empty_chain_replays_bit_identically() {
+    let a = run_empty_chain(200);
+    let b = run_empty_chain(200);
+    assert_eq!(a, b);
+    assert_eq!(a.tasks_completed, 201);
+}
+
+/// Larger hierarchy: more schedulers, more tree routing, more boundary
+/// crossings — the paths the routing/arena refactor touches hardest.
+#[test]
+fn fig7_wide_hierarchy_replays_bit_identically() {
+    let a = run_independent(64, 256);
+    let b = run_independent(64, 256);
+    assert_eq!(a, b);
+    assert_eq!(a.tasks_completed, 257);
+}
+
+/// Nested-region workload (fig12b shape): regions distributed across
+/// scheduler owners, so the traversal genuinely crosses ownership
+/// boundaries and the quiescence/parent-counter protocol runs.
+#[test]
+fn hier_empty_replays_bit_identically() {
+    let run = || {
+        let (reg, main) = hier_empty();
+        // 64 workers => 1 top + 4 leaf schedulers, so level-1 regions land
+        // on leaf owners and traversals cross ownership boundaries.
+        let mut plat =
+            Platform::build_with(PlatformConfig::hierarchical(64), reg, main, |w| {
+                w.app = Some(Box::new(SynthParams {
+                    domains: 8,
+                    per_domain: 4,
+                    task_cycles: 10_000,
+                    ..Default::default()
+                }));
+            });
+        let t = plat.run(Some(1 << 44));
+        let g = &plat.world().gstats;
+        (
+            t,
+            g.events_processed,
+            g.msgs_total,
+            g.tasks_spawned,
+            g.tasks_completed,
+            g.dep_boundary_msgs,
+        )
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a, b);
+    assert_eq!(a.3, a.4, "all spawned tasks complete");
+    assert!(a.5 > 0, "nested regions must exercise cross-owner traversal");
+}
