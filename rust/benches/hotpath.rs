@@ -18,13 +18,16 @@
 
 use std::time::Instant;
 
-use myrmics::apps::synthetic::{empty_chain, independent, SynthParams};
-use myrmics::config::PlatformConfig;
+use myrmics::apps::jacobi;
+use myrmics::apps::synthetic::{empty_chain, hier_empty, independent, SynthParams};
+use myrmics::config::{HierarchySpec, PlatformConfig};
 use myrmics::dep::node::DepNode;
 use myrmics::experiments::bench::{run_myrmics, BenchKind, Scaling};
 use myrmics::ids::{NodeId, RegionId, TaskId};
 use myrmics::memory::trie::Trie;
+use myrmics::mpi::runner::build_mpi;
 use myrmics::platform::Platform;
+use myrmics::sim::engine::Engine;
 use myrmics::task::descriptor::Access;
 
 struct Record {
@@ -59,31 +62,33 @@ fn time(label: &str, budget_ms: u128, out: &mut Vec<Record>, mut f: impl FnMut()
     out.push(Record { case: label.to_string(), ns_per_op: ns_per, events_per_sec: 0.0 });
 }
 
-/// Whole-simulation throughput case: run the platform-under-test for
+/// Whole-simulation throughput case: run the engine-under-test for
 /// `budget_ms` of host time, reporting simulated events per host second.
-/// Only `Platform::run` is timed — construction cost is not part of the
-/// per-event metric the regression gate is defined over.
+/// `build` returns a ready-to-run engine (a built `Platform`'s `.eng`, or
+/// a pre-booted [`build_mpi`] engine) — only the event loop is timed;
+/// construction cost is not part of the per-event metric the regression
+/// gate is defined over.
 fn sim_case(
     label: &'static str,
     budget_ms: u128,
     out: &mut Vec<Record>,
-    mut build: impl FnMut() -> Platform,
+    mut build: impl FnMut() -> Engine,
 ) {
     // Warm-up run (page in code, fill allocator pools) — skipped in smoke
     // mode (budget 0), where each case must run exactly once.
     if budget_ms > 0 {
-        let mut p = build();
-        p.run(Some(1 << 46));
+        let mut eng = build();
+        eng.run(Some(1 << 46));
     }
     let mut timed = std::time::Duration::ZERO;
     let mut events = 0u64;
     let mut runs = 0u32;
     loop {
-        let mut plat = build();
+        let mut eng = build();
         let t0 = Instant::now();
-        plat.run(Some(1 << 46));
+        eng.run(Some(1 << 46));
         timed += t0.elapsed();
-        events += plat.world().gstats.events_processed;
+        events += eng.world.gstats.events_processed;
         runs += 1;
         if timed.as_millis() >= budget_ms {
             break;
@@ -209,6 +214,7 @@ fn main() {
         Platform::build_with(PlatformConfig::flat(1), reg, main, |w| {
             w.app = Some(Box::new(SynthParams { n_tasks: 1000, ..Default::default() }));
         })
+        .eng
     });
     // Fig-7b shape: independent tasks over a scheduler hierarchy — the
     // throughput case the ≥25%-per-PR target tracks.
@@ -221,6 +227,7 @@ fn main() {
                 ..Default::default()
             }));
         })
+        .eng
     });
     sim_case("fig7 independent 256w x 1024 tasks", sim_ms, &mut records, || {
         let (reg, main) = independent();
@@ -231,6 +238,36 @@ fn main() {
                 ..Default::default()
             }));
         })
+        .eng
+    });
+    // Fig-8/12b shape: nested regions over a *deep* (3-level) scheduler
+    // tree — spawns, grants and quiescence all hop-forward along the tree,
+    // exercising the routed-message path and the per-sender channel tables
+    // rather than the flat fig7 fan-out. Geometry mirrors fig12's VI-E
+    // setup (fanout 6: 64 workers -> 11 leaves under 2 mids, one domain
+    // region per leaf-level scheduler).
+    sim_case("fig8 hier_empty 64w deep tree (3 lvls)", sim_ms, &mut records, || {
+        let (reg, main) = hier_empty();
+        let cfg = PlatformConfig::new(
+            64,
+            HierarchySpec { scheds_per_level: vec![1, 2, 11] },
+        );
+        Platform::build_with(cfg, reg, main, |w| {
+            w.app = Some(Box::new(SynthParams {
+                domains: 11,
+                per_domain: 8,
+                domain_level: 2,
+                task_cycles: 100_000,
+                ..Default::default()
+            }));
+        })
+        .eng
+    });
+    // MPI baseline: the rank runner's send/recv/collective machinery over
+    // the same event core (DMA-delivered payloads, no credit channels).
+    sim_case("mpi jacobi 64 ranks x 6 iters", sim_ms, &mut records, || {
+        let p = jacobi::JacobiParams::modeled(8192, 6, 128, 1);
+        build_mpi(jacobi::mpi_programs(&p, 64), &PlatformConfig::flat(1))
     });
 
     if !smoke {

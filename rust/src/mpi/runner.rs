@@ -8,11 +8,11 @@ use crate::platform::World;
 use crate::sim::engine::{Engine, SimState};
 use crate::task::registry::Registry;
 
-/// Run `programs` (one per rank) on the NoC simulation. Ranks map to
-/// consecutive MicroBlaze cores on the mesh (matching the hand placement
-/// of paper VI-B). Returns the finished engine (final time in
-/// `eng.sim.now`).
-pub fn run_mpi(programs: Vec<Vec<MpiOp>>, cfg: &PlatformConfig) -> Engine {
+/// Assemble (but do not run) an MPI simulation from per-rank programs.
+/// Ranks map to consecutive MicroBlaze cores on the mesh (matching the
+/// hand placement of paper VI-B). Boot events are queued; the caller runs
+/// the engine — the split lets the bench harness time only the event loop.
+pub fn build_mpi(programs: Vec<Vec<MpiOp>>, cfg: &PlatformConfig) -> Engine {
     let n = programs.len();
     assert!(n >= 1);
     let kinds = vec![CoreKind::MicroBlaze; n];
@@ -27,6 +27,13 @@ pub fn run_mpi(programs: Vec<Vec<MpiOp>>, cfg: &PlatformConfig) -> Engine {
         eng.set_logic(rank_cores[i], Box::new(MpiRank::new(i, rank_cores.clone(), prog)));
     }
     eng.boot();
+    eng
+}
+
+/// Run `programs` (one per rank) to completion. Returns the finished
+/// engine (final time in `eng.sim.now`).
+pub fn run_mpi(programs: Vec<Vec<MpiOp>>, cfg: &PlatformConfig) -> Engine {
+    let mut eng = build_mpi(programs, cfg);
     eng.run(Some(1 << 44));
     eng.sim.now = eng.sim.horizon();
     eng

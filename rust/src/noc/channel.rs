@@ -16,6 +16,7 @@ use std::collections::VecDeque;
 
 use crate::ids::{CoreId, Cycles};
 use crate::noc::msg::Msg;
+use crate::noc::topology::Topology;
 
 /// One directed sender->receiver message channel.
 #[derive(Debug, Default)]
@@ -43,15 +44,100 @@ impl Channel {
     /// Return a credit after the receiver processed a message. If a
     /// blocked send is waiting, it immediately claims the credit and is
     /// returned for delivery.
+    ///
+    /// A release with no in-flight message is a no-op: pre-seeded tree
+    /// channels (see [`ChannelTables`]) exist before any send, and a few
+    /// paths (platform boot, mini-MPI data delivery) inject `Event::Msg`
+    /// directly without consuming a credit.
     pub fn release(&mut self) -> Option<(Cycles, CoreId, Msg)> {
-        debug_assert!(self.in_flight > 0, "credit release without in-flight message");
-        self.in_flight = self.in_flight.saturating_sub(1);
+        if self.in_flight == 0 {
+            debug_assert!(self.blocked.is_empty(), "blocked sends on an idle channel");
+            return None;
+        }
+        self.in_flight -= 1;
         if let Some(queued) = self.blocked.pop_front() {
             self.in_flight += 1;
             Some(queued)
         } else {
             None
         }
+    }
+}
+
+/// "No channel" sentinel in [`ChannelTables::index`].
+const NO_CHANNEL: u32 = u32::MAX;
+
+/// All directed channels of the platform — the replacement for the old
+/// global `FxHashMap<(u32, u32), Channel>`, which put a hash + probe on
+/// every message send *and* every receive.
+///
+/// Layout: a flat `n x n` index of `u32` slot numbers into one pooled
+/// `Vec<Channel>`, so both the send path (`entry`) and the credit-return
+/// path (`get_mut`) are a single multiply-add and one load — strictly
+/// O(1) even for the flat-512 configuration where one scheduler core
+/// exchanges messages with every worker (a per-sender peer *list* would
+/// make that bottleneck core scan hundreds of entries per message).
+/// Channels themselves are allocated on first use, densely, in
+/// first-touch order — `Platform::build` pre-seeds the scheduler-tree
+/// links so the hot edges sit contiguously at the front of the pool.
+///
+/// The index costs 4 bytes per core pair (~1 MB for the 520-core
+/// prototype platform). If core counts ever grow past a few thousand,
+/// revisit with a per-sender dense sub-index allocated on first send.
+#[derive(Debug, Default)]
+pub struct ChannelTables {
+    n: usize,
+    index: Vec<u32>,
+    chans: Vec<Channel>,
+}
+
+impl ChannelTables {
+    /// Table for `n_cores` senders. `degree_hint` (typically
+    /// [`Topology::max_degree`] plus tree-link headroom) pre-sizes the
+    /// channel pool so steady state never reallocates.
+    pub fn new(n_cores: usize, degree_hint: usize) -> Self {
+        ChannelTables {
+            n: n_cores,
+            index: vec![NO_CHANNEL; n_cores * n_cores],
+            chans: Vec::with_capacity(n_cores.saturating_mul(degree_hint).min(1 << 16)),
+        }
+    }
+
+    /// The `src -> dst` channel, created empty on first use.
+    pub fn entry(&mut self, src: CoreId, dst: CoreId) -> &mut Channel {
+        let key = src.idx() * self.n + dst.idx();
+        let mut i = self.index[key];
+        if i == NO_CHANNEL {
+            i = self.chans.len() as u32;
+            assert!(i < NO_CHANNEL, "channel pool overflow");
+            self.index[key] = i;
+            self.chans.push(Channel::default());
+        }
+        &mut self.chans[i as usize]
+    }
+
+    /// The `src -> dst` channel if it exists (release path: never creates).
+    pub fn get_mut(&mut self, src: CoreId, dst: CoreId) -> Option<&mut Channel> {
+        let i = self.index[src.idx() * self.n + dst.idx()];
+        if i == NO_CHANNEL {
+            None
+        } else {
+            Some(&mut self.chans[i as usize])
+        }
+    }
+
+    /// Materialize the `src -> dst` channel up front so a known-hot link
+    /// (a scheduler tree edge) gets a slot near the front of the pool,
+    /// keeping the hot working set contiguous.
+    pub fn preseed(&mut self, src: CoreId, dst: CoreId) {
+        let _ = self.entry(src, dst);
+    }
+
+    /// Channel-pool sizing hint for a platform on `topo`: mesh degree
+    /// plus headroom for the tree links (parent + children/workers beyond
+    /// the mesh neighbors).
+    pub fn degree_hint(topo: &Topology) -> usize {
+        topo.max_degree() + 2
     }
 }
 
@@ -70,6 +156,50 @@ mod tests {
         assert!(ch.try_acquire(2));
         assert!(!ch.try_acquire(2));
         assert_eq!(ch.in_flight, 2);
+    }
+
+    #[test]
+    fn idle_release_is_noop() {
+        let mut ch = Channel::default();
+        assert!(ch.release().is_none());
+        assert_eq!(ch.in_flight, 0);
+    }
+
+    #[test]
+    fn tables_isolate_directed_pairs() {
+        let mut t = ChannelTables::new(4, 2);
+        assert!(t.entry(CoreId(0), CoreId(1)).try_acquire(1));
+        // Reverse direction is a distinct channel with its own credits.
+        assert!(t.entry(CoreId(1), CoreId(0)).try_acquire(1));
+        // Same direction again: out of credits.
+        assert!(!t.entry(CoreId(0), CoreId(1)).try_acquire(1));
+        // Release path never creates channels.
+        assert!(t.get_mut(CoreId(2), CoreId(3)).is_none());
+        assert!(t.get_mut(CoreId(0), CoreId(1)).is_some());
+    }
+
+    #[test]
+    fn preseed_materializes_link_without_credits() {
+        let mut t = ChannelTables::new(2, 4);
+        t.preseed(CoreId(0), CoreId(1));
+        let ch = t.get_mut(CoreId(0), CoreId(1)).expect("preseeded");
+        assert_eq!(ch.in_flight, 0);
+        // A release on the pre-seeded, never-used link is a no-op.
+        assert!(ch.release().is_none());
+    }
+
+    #[test]
+    fn high_degree_sender_stays_o1() {
+        // Flat-512 shape: one scheduler talking to hundreds of workers.
+        let mut t = ChannelTables::new(513, 8);
+        for w in 1..513u32 {
+            assert!(t.entry(CoreId(0), CoreId(w)).try_acquire(8));
+        }
+        for w in 1..513u32 {
+            let ch = t.get_mut(CoreId(0), CoreId(w)).expect("created above");
+            assert_eq!(ch.in_flight, 1);
+            assert!(ch.release().is_none());
+        }
     }
 
     #[test]

@@ -77,6 +77,21 @@ impl Topology {
         self.max_hops
     }
 
+    /// Maximum number of directly adjacent mesh slots any core can have
+    /// (up to 2 per axis, fewer on degenerate dimensions). Sizes the
+    /// per-core channel tables ([`crate::noc::channel::ChannelTables`]).
+    pub fn max_degree(&self) -> usize {
+        let (dx, dy, dz) = self.dims;
+        [dx, dy, dz]
+            .iter()
+            .map(|&d| match d {
+                0 | 1 => 0,
+                2 => 1,
+                _ => 2,
+            })
+            .sum()
+    }
+
     /// The slot nearest the mesh center — used to place the top-level
     /// scheduler so its average distance to everyone is minimal.
     pub fn center_slot(&self) -> usize {
@@ -154,6 +169,13 @@ mod tests {
         for i in 0..512 {
             assert!(t.hops(center, CoreId(i)) <= t.max_hops() / 2 + 2);
         }
+    }
+
+    #[test]
+    fn max_degree_by_shape() {
+        assert_eq!(Topology::new(512).max_degree(), 6); // 8x8x8
+        assert_eq!(Topology::new(1).max_degree(), 0);
+        assert_eq!(Topology::new(2).max_degree(), 1); // 2x1x1
     }
 
     #[test]

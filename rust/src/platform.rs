@@ -130,12 +130,28 @@ impl Platform {
                 }
             })
             .collect();
-        let sim = SimState::new(
+        let mut sim = SimState::new(
             kinds,
             Topology::new(n_cores),
             cfg.cost.clone(),
             cfg.channel_capacity,
         );
+        // Pre-seed the channel table with the scheduler-tree links
+        // (parent <-> child, leaf <-> worker): messages flow strictly
+        // along the tree, so these hot edges get contiguous slots at the
+        // front of the channel pool before any dynamic peer appears.
+        for s in 0..world.hier.n_scheds {
+            let sc = world.hier.sched_core(s);
+            if let Some(p) = world.hier.parent[s] {
+                let pc = world.hier.sched_core(p);
+                sim.preseed_channel(sc, pc);
+                sim.preseed_channel(pc, sc);
+            }
+            for &w in &world.hier.leaf_workers[s] {
+                sim.preseed_channel(sc, w);
+                sim.preseed_channel(w, sc);
+            }
+        }
 
         // Main task: holds the root region read-write, responsible
         // scheduler = top level, dispatched to worker 0.

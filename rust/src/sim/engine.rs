@@ -8,19 +8,24 @@
 //! is what makes saturated schedulers slow the system down, Fig 9/12),
 //! charges per-operation cycle costs from the [`CostModel`], and models the
 //! NoC: wire latencies, per-peer credit-flow buffers and DMA groups.
-
-use std::collections::BinaryHeap;
-
-use crate::fxmap::FxHashMap;
+//!
+//! The per-event loop is constant-time end to end: events come off a
+//! hierarchical timing wheel ([`crate::sim::wheel`]) instead of a binary
+//! heap, channel credits live in a flat `(src, dst)`-indexed table
+//! instead of a hashed map, busy-core drains are side-heap markers that
+//! never re-enter the global queue, and the run horizon is maintained
+//! incrementally instead of scanned. See `docs/sim-engine.md` for the
+//! event core's layout and the determinism contract.
 
 use crate::config::{CoreKind, CostModel};
 use crate::ids::{CoreId, Cycles};
-use crate::noc::channel::Channel;
+use crate::noc::channel::ChannelTables;
 use crate::noc::dma::{group_completion, Transfer};
 use crate::noc::msg::Msg;
 use crate::noc::topology::Topology;
 use crate::platform::World;
-use crate::sim::event::{Event, Queued, TimerKind};
+use crate::sim::event::{Event, TimerKind};
+use crate::sim::wheel::{EventQ, Popped};
 use crate::stats::metrics::CoreStats;
 use crate::task::registry::Registry;
 
@@ -33,10 +38,10 @@ pub struct CoreMeta {
     /// running tasks", paper V-E).
     pub busy_until: Cycles,
     /// Events deferred while the core was busy, in arrival order. Drained
-    /// one per [`Event::Wake`] — O(1) per deferral instead of re-heaping
-    /// every deferred event each time `busy_until` advances.
+    /// one per wake marker ([`crate::sim::wheel::Popped::Wake`]) — O(1)
+    /// per deferral, and the drain never re-enters the global wheel.
     pending: std::collections::VecDeque<Event>,
-    /// A Wake event is already scheduled for this core.
+    /// A wake marker is already scheduled for this core.
     wake_scheduled: bool,
 }
 
@@ -44,13 +49,18 @@ pub struct CoreMeta {
 pub struct SimState {
     pub now: Cycles,
     seq: u64,
-    queue: BinaryHeap<Queued>,
+    queue: EventQ,
     pub metas: Vec<CoreMeta>,
     pub stats: Vec<CoreStats>,
     pub topo: Topology,
     pub cost: CostModel,
     pub channel_capacity: usize,
-    channels: FxHashMap<(u32, u32), Channel>,
+    channels: ChannelTables,
+    /// Largest `busy_until` ever reached, maintained incrementally so
+    /// [`SimState::horizon`] is O(1) instead of a scan over all cores.
+    /// Valid because a core's `busy_until` never moves backwards: handlers
+    /// only run once the core is idle, at `t >= busy_until`.
+    max_busy: Cycles,
     dma_seq: u64,
     /// Print an event trace (debugging aid).
     pub trace: bool,
@@ -64,10 +74,11 @@ impl SimState {
         channel_capacity: usize,
     ) -> Self {
         let n = kinds.len();
+        let channels = ChannelTables::new(n, ChannelTables::degree_hint(&topo));
         SimState {
             now: 0,
             seq: 0,
-            queue: BinaryHeap::new(),
+            queue: EventQ::new(),
             metas: kinds
                 .into_iter()
                 .map(|kind| CoreMeta {
@@ -81,7 +92,8 @@ impl SimState {
             topo,
             cost,
             channel_capacity,
-            channels: FxHashMap::default(),
+            channels,
+            max_busy: 0,
             dma_seq: 0,
             trace: false,
         }
@@ -95,12 +107,28 @@ impl SimState {
     pub fn push(&mut self, t: Cycles, core: CoreId, ev: Event) {
         let seq = self.seq;
         self.seq += 1;
-        self.queue.push(Queued { t, seq, core, ev });
+        self.queue.push(t, seq, core, ev);
+    }
+
+    /// Enqueue a busy-core drain marker. Consumes a sequence number like
+    /// any event so the merged pop order (and hence every downstream
+    /// tie-break) is identical to the old single-queue engine.
+    fn push_wake(&mut self, t: Cycles, core: CoreId) {
+        let seq = self.seq;
+        self.seq += 1;
+        self.queue.push_wake(t, seq, core);
     }
 
     /// Latest point in virtual time any core is busy until (>= `now`).
+    /// O(1): maintained as events complete.
     pub fn horizon(&self) -> Cycles {
-        self.metas.iter().map(|m| m.busy_until).max().unwrap_or(0).max(self.now)
+        self.max_busy.max(self.now)
+    }
+
+    /// Materialize the `src -> dst` credit channel up front so a known-hot
+    /// link (scheduler tree edge) sits first in the sender's peer table.
+    pub fn preseed_channel(&mut self, src: CoreId, dst: CoreId) {
+        self.channels.preseed(src, dst);
     }
 
     fn deliver_msg(&mut self, t_send: Cycles, from: CoreId, hop: CoreId, dst: CoreId, msg: Msg) {
@@ -169,13 +197,13 @@ impl<'a> Ctx<'a> {
         st.msgs_sent += wires;
         st.msg_bytes_sent += wires * self.sim.cost.msg_bytes;
         let t_send = self.start + self.charged_rt + self.charged_task;
-        let key = (self.core.0, next.0);
         let cap = self.sim.channel_capacity;
-        let ch = self.sim.channels.entry(key).or_default();
-        if ch.try_acquire(cap) {
+        if self.sim.channels.entry(self.core, next).try_acquire(cap) {
             self.sim.deliver_msg(t_send, self.core, next, dst, msg);
         } else {
-            ch.blocked.push_back((t_send, dst, msg));
+            // Cold path: out of credits; re-find the channel (the borrow
+            // cannot span `deliver_msg` above) and park the send.
+            self.sim.channels.entry(self.core, next).blocked.push_back((t_send, dst, msg));
         }
     }
 
@@ -255,89 +283,101 @@ impl Engine {
     /// Run until the event queue drains, `world.done` is set, or the
     /// optional time limit is exceeded. Returns the final virtual time.
     pub fn run(&mut self, limit: Option<Cycles>) -> Cycles {
-        while let Some(q) = self.sim.queue.pop() {
+        while let Some(popped) = self.sim.queue.pop() {
             if self.world.done {
                 break;
             }
+            let (p_t, core) = match &popped {
+                Popped::Ev(q) => (q.t, q.core),
+                Popped::Wake { t, core, .. } => (*t, *core),
+            };
             if let Some(lim) = limit {
-                if q.t > lim {
+                if p_t > lim {
                     self.sim.now = lim;
                     break;
                 }
             }
-            let ci = q.core.idx();
-            let is_wake = matches!(q.ev, Event::Wake);
-            {
-                let meta = &mut self.sim.metas[ci];
-                if !is_wake && (meta.busy_until > q.t || !meta.pending.is_empty()) {
-                    // Core occupied (or draining earlier deferrals): park
-                    // the event in arrival order behind a single waker.
-                    meta.pending.push_back(q.ev);
-                    if !meta.wake_scheduled {
-                        meta.wake_scheduled = true;
-                        let at = meta.busy_until.max(q.t);
-                        self.sim.push(at, q.core, Event::Wake);
+            let ci = core.idx();
+            let (t, ev) = match popped {
+                Popped::Ev(q) => {
+                    let meta = &mut self.sim.metas[ci];
+                    if meta.busy_until > q.t || !meta.pending.is_empty() {
+                        // Core occupied (or draining earlier deferrals):
+                        // park the event in arrival order behind a single
+                        // drain marker ("workers do not interrupt running
+                        // tasks", paper V-E). The marker goes to the wake
+                        // side-heap, not back into the wheel.
+                        meta.pending.push_back(q.ev);
+                        let arm = if meta.wake_scheduled {
+                            None
+                        } else {
+                            meta.wake_scheduled = true;
+                            Some(meta.busy_until.max(q.t))
+                        };
+                        if let Some(at) = arm {
+                            self.sim.push_wake(at, core);
+                        }
+                        continue;
                     }
-                    continue;
+                    (q.t, q.ev)
                 }
-            }
-            let ev = if is_wake {
-                let meta = &mut self.sim.metas[ci];
-                meta.wake_scheduled = false;
-                if meta.busy_until > q.t {
-                    // Re-extended meanwhile: re-arm.
-                    if !meta.pending.is_empty() {
-                        meta.wake_scheduled = true;
-                        let at = meta.busy_until;
-                        self.sim.push(at, q.core, Event::Wake);
+                Popped::Wake { t, .. } => {
+                    let meta = &mut self.sim.metas[ci];
+                    meta.wake_scheduled = false;
+                    if meta.busy_until > t {
+                        // Re-extended meanwhile: re-arm.
+                        let arm = if meta.pending.is_empty() {
+                            None
+                        } else {
+                            meta.wake_scheduled = true;
+                            Some(meta.busy_until)
+                        };
+                        if let Some(at) = arm {
+                            self.sim.push_wake(at, core);
+                        }
+                        continue;
                     }
-                    continue;
+                    match meta.pending.pop_front() {
+                        Some(ev) => (t, ev),
+                        None => continue,
+                    }
                 }
-                match meta.pending.pop_front() {
-                    Some(ev) => ev,
-                    None => continue,
-                }
-            } else {
-                q.ev
             };
-            let q = Queued { t: q.t, seq: q.seq, core: q.core, ev };
-            debug_assert!(q.t >= self.sim.now, "time went backwards");
-            self.sim.now = q.t;
+            debug_assert!(t >= self.sim.now, "time went backwards");
+            self.sim.now = t;
             self.world.gstats.events_processed += 1;
 
             // Message bookkeeping the handler should not have to repeat:
             // credit return, receive stats, receiver processing cost.
             let mut init_charge = 0;
-            if let Event::Msg { from, msg, .. } = &q.ev {
+            if let Event::Msg { from, msg, .. } = &ev {
                 let wires = msg.wire_msgs();
                 let st = &mut self.sim.stats[ci];
                 st.msgs_recv += wires;
                 st.msg_bytes_recv += wires * self.sim.cost.msg_bytes;
                 self.world.gstats.msgs_total += wires;
-                let hops = self.sim.topo.hops(*from, q.core);
+                let hops = self.sim.topo.hops(*from, core);
                 let proc = self.sim.cost.msg_proc(hops, self.sim.topo.max_hops()) * wires;
                 init_charge = self.sim.cost.charge_on(self.sim.metas[ci].kind, proc);
                 // Return the credit; a blocked send may claim it.
-                let key = (from.0, q.core.0);
-                if let Some(ch) = self.sim.channels.get_mut(&key) {
-                    let released = ch.release();
-                    if let Some((t_blocked, blocked_dst, blocked_msg)) = released {
-                        let stall = q.t.saturating_sub(t_blocked);
-                        self.sim.stats[from.idx()].credit_stall += stall;
-                        self.sim.deliver_msg(q.t, *from, q.core, blocked_dst, blocked_msg);
-                    }
+                let released =
+                    self.sim.channels.get_mut(*from, core).and_then(|ch| ch.release());
+                if let Some((t_blocked, blocked_dst, blocked_msg)) = released {
+                    let stall = t.saturating_sub(t_blocked);
+                    self.sim.stats[from.idx()].credit_stall += stall;
+                    self.sim.deliver_msg(t, *from, core, blocked_dst, blocked_msg);
                 }
             }
 
             if self.sim.trace {
-                let tag = match &q.ev {
+                let tag = match &ev {
                     Event::Boot => "Boot".to_string(),
                     Event::Msg { from, msg, .. } => format!("Msg({}) from {from}", msg.tag()),
                     Event::DmaDone { group } => format!("DmaDone({group})"),
                     Event::Timer(k) => format!("Timer({k:?})"),
                     Event::Wake => "Wake".to_string(),
                 };
-                eprintln!("[{:>12}] {} <- {}", q.t, q.core, tag);
+                eprintln!("[{t:>12}] {core} <- {tag}");
             }
 
             let mut logic = self.logic[ci].take().expect("event for core without logic");
@@ -345,21 +385,31 @@ impl Engine {
                 sim: &mut self.sim,
                 world: &mut self.world,
                 registry: &self.registry,
-                core: q.core,
-                start: q.t,
+                core,
+                start: t,
                 charged_rt: init_charge,
                 charged_task: 0,
             };
-            logic.on_event(&mut ctx, q.ev);
+            logic.on_event(&mut ctx, ev);
             let (rt, tk) = (ctx.charged_rt, ctx.charged_task);
             self.logic[ci] = Some(logic);
-            let meta = &mut self.sim.metas[ci];
-            meta.busy_until = q.t + rt + tk;
-            // More deferred work waiting: re-arm the waker.
-            if !meta.pending.is_empty() && !meta.wake_scheduled {
-                meta.wake_scheduled = true;
-                let at = meta.busy_until;
-                self.sim.push(at, q.core, Event::Wake);
+            let busy = t + rt + tk;
+            self.sim.metas[ci].busy_until = busy;
+            if busy > self.sim.max_busy {
+                self.sim.max_busy = busy;
+            }
+            // More deferred work waiting: re-arm the drain marker.
+            let rearm = {
+                let meta = &mut self.sim.metas[ci];
+                if !meta.pending.is_empty() && !meta.wake_scheduled {
+                    meta.wake_scheduled = true;
+                    true
+                } else {
+                    false
+                }
+            };
+            if rearm {
+                self.sim.push_wake(busy, core);
             }
             let st = &mut self.sim.stats[ci];
             st.busy_task += tk;
@@ -431,6 +481,37 @@ mod tests {
         assert_eq!(end, 1000);
         assert_eq!(eng.sim.metas[0].busy_until, 2000);
         assert_eq!(eng.sim.stats[0].busy_runtime, 2000);
+        // The incrementally maintained horizon matches.
+        assert_eq!(eng.sim.horizon(), 2000);
+    }
+
+    #[test]
+    fn far_future_timer_exercises_overflow_heap() {
+        // 40 M cycles is beyond the wheel span (2^24): the second timer
+        // parks in the far heap and refills the wheel lazily.
+        let mut eng = tiny_engine(1, 10);
+        eng.sim.push(0, CoreId(0), Event::Timer(TimerKind::Custom(0)));
+        eng.sim.push(40_000_000, CoreId(0), Event::Timer(TimerKind::Custom(1)));
+        let end = eng.run(None);
+        assert_eq!(end, 40_000_000);
+        assert_eq!(eng.sim.stats[0].busy_runtime, 20);
+        assert_eq!(eng.sim.horizon(), 40_000_010);
+    }
+
+    #[test]
+    fn deferred_drain_matches_wake_timing_with_later_traffic() {
+        // A busy core with a parked event plus later traffic: the drain
+        // marker (t=1000) must deliver the parked event before the t=1500
+        // one, and both must run back-to-back off the busy cursor.
+        let mut eng = tiny_engine(1, 1000);
+        eng.sim.push(0, CoreId(0), Event::Timer(TimerKind::Custom(0)));
+        eng.sim.push(10, CoreId(0), Event::Timer(TimerKind::Custom(1)));
+        eng.sim.push(1500, CoreId(0), Event::Timer(TimerKind::Custom(2)));
+        eng.run(None);
+        // t=0 runs to 1000; drain at 1000 runs deferral to 2000; the
+        // t=1500 event is deferred behind it and runs 2000..3000.
+        assert_eq!(eng.sim.metas[0].busy_until, 3000);
+        assert_eq!(eng.sim.stats[0].busy_runtime, 3000);
     }
 
     #[test]

@@ -45,6 +45,22 @@ pub struct Queued {
     pub ev: Event,
 }
 
+// Hot-path size budgets. Every queued event occupies a timing-wheel slab
+// slot (`sim::wheel`) that is copied on push/cascade/pop, millions of
+// times per run; `Queued` must stay within 2 cache lines (128 B) or every
+// queue operation pays extra memory traffic. The budgets compose: Event's
+// 104 B plus Queued's 24 B key header (t, seq, core + padding) is exactly
+// the 128-B ceiling. The usual offender is a new `Msg` variant with
+// inline payload — box or index large payloads instead (`ProducerRange`
+// lists already do this via `Vec`). If a legitimate change needs more,
+// re-budget BOTH asserts here WITH a hotpath-bench measurement
+// (ROADMAP.md Performance section).
+const _: () = assert!(std::mem::size_of::<Event>() <= 104, "Event grew past its hot-path budget");
+const _: () = assert!(
+    std::mem::size_of::<Queued>() <= 128,
+    "Queued must stay within two cache lines"
+);
+
 impl PartialEq for Queued {
     fn eq(&self, other: &Self) -> bool {
         self.t == other.t && self.seq == other.seq

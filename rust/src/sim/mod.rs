@@ -2,3 +2,4 @@
 pub mod engine;
 pub mod event;
 pub mod rng;
+pub mod wheel;

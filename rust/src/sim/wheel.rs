@@ -1,0 +1,572 @@
+//! Deterministic hierarchical timing wheel — the simulator's event queue.
+//!
+//! The paper's schedulers are "event-based servers" with nothing hashed or
+//! logarithmic on the critical path; the simulator that models them should
+//! hold itself to the same bar. This queue replaces the old global
+//! `BinaryHeap<Queued>` (O(log n) per push/pop) with:
+//!
+//! * **Three wheel levels** of 256 power-of-two time buckets each
+//!   (8 bits/level, [`SPAN_BITS`] = 24 bits ≈ 16.7 M cycles of horizon).
+//!   A push files the event by the highest differing bit block between its
+//!   time and the cursor; a pop pulls the head of the current tick's
+//!   bucket. Both are O(1); an event cascades to a lower level at most
+//!   twice over its lifetime.
+//! * **A far heap** for events beyond the wheel span (multi-million-cycle
+//!   task timers, DMA completions of huge transfers). It holds only
+//!   `(t, seq, node)` keys — payloads stay in the node slab — and refills
+//!   the wheel lazily when the cursor enters a new 2^24-cycle epoch.
+//! * **A wake side-heap** for the engine's busy-core drain markers. A
+//!   deferred event parks in the core's local FIFO and its waker lives
+//!   here, so draining a busy core never round-trips through the global
+//!   wheel at all. Wakes still consume global sequence numbers, so the
+//!   merged pop order is bit-identical to the single-heap engine.
+//! * **A node slab with an intrusive free list**: bucket membership is a
+//!   `next` index chain through the slab, so steady-state push/pop
+//!   performs no heap allocation (the slab grows to the high-water mark of
+//!   outstanding events and is then reused forever) — the hot-path
+//!   invariant of ROADMAP.md's Performance section.
+//!
+//! # Determinism contract
+//!
+//! Pops are globally ordered by `(t, seq)` exactly like the old binary
+//! heap: `seq` is unique and monotone, buckets are FIFO chains, and
+//! cascades/refills preserve relative order of equal-time events (they
+//! re-append in the order the chain or heap yields, which is seq order for
+//! equal `t`). `tests/determinism.rs` and `tests/wheel_determinism.rs`
+//! pin this. See `docs/sim-engine.md` for the full contract.
+//!
+//! # Invariants (established in `advance`, relied on everywhere)
+//!
+//! 1. Every wheel-resident event shares the cursor's epoch
+//!    (`t >> SPAN_BITS == cur >> SPAN_BITS`); far-heap events are in
+//!    strictly later epochs, hence strictly later than all wheel events.
+//! 2. Level-0 events share the cursor's 256-tick block, so a level-0
+//!    bucket holds exactly one tick and its FIFO chain is already in
+//!    `(t, seq)` order.
+//! 3. The cursor only enters a block by cascading that block's bucket
+//!    first, so equal-time events always land in the same chain in seq
+//!    order (a later push can never file "below" an earlier equal-time
+//!    event).
+//! 4. `push` times never precede the cursor: the engine only pushes at or
+//!    after the time of the event it is processing, and the cursor is
+//!    bounded by the pending wake minimum while one exists.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use crate::ids::{CoreId, Cycles};
+use crate::sim::event::{Event, Queued};
+
+/// log2 of the bucket count per level.
+const BITS: u32 = 8;
+/// Buckets per level.
+const SLOTS: usize = 1 << BITS;
+/// Mask selecting a level-0 bucket index.
+const SLOT_MASK: u64 = (SLOTS as u64) - 1;
+/// Wheel levels; beyond them events overflow to the far heap.
+const LEVELS: usize = 3;
+/// Total wheel span in bits: events within `2^SPAN_BITS` cycles of the
+/// cursor's epoch base live in the wheel.
+const SPAN_BITS: u32 = BITS * LEVELS as u32;
+
+/// Null link in the node slab.
+const NIL: u32 = u32::MAX;
+
+/// One queued event in the slab. `next` chains bucket membership (or the
+/// free list once popped). Roughly two cache lines: `Queued`'s fields
+/// (budgeted by the const asserts in `sim::event`) plus the `u32` link.
+struct Node {
+    t: Cycles,
+    seq: u64,
+    core: CoreId,
+    ev: Event,
+    next: u32,
+}
+
+/// Head/tail of one bucket's FIFO chain.
+#[derive(Clone, Copy)]
+struct Slot {
+    head: u32,
+    tail: u32,
+}
+
+impl Slot {
+    const EMPTY: Slot = Slot { head: NIL, tail: NIL };
+}
+
+/// 256-bit occupancy bitmap: which buckets of a level are non-empty.
+/// `next_from` is a couple of word scans — this is what makes "find the
+/// next event tick" O(1) instead of a 256-slot walk.
+#[derive(Clone, Copy, Default)]
+struct Occupancy {
+    words: [u64; SLOTS / 64],
+}
+
+impl Occupancy {
+    #[inline]
+    fn set(&mut self, i: usize) {
+        self.words[i >> 6] |= 1u64 << (i & 63);
+    }
+
+    #[inline]
+    fn clear(&mut self, i: usize) {
+        self.words[i >> 6] &= !(1u64 << (i & 63));
+    }
+
+    /// Smallest set bit with index >= `from`, if any.
+    #[inline]
+    fn next_from(&self, from: usize) -> Option<usize> {
+        let mut wi = from >> 6;
+        if wi >= self.words.len() {
+            return None;
+        }
+        let mut word = self.words[wi] & (!0u64 << (from & 63));
+        loop {
+            if word != 0 {
+                return Some((wi << 6) + word.trailing_zeros() as usize);
+            }
+            wi += 1;
+            if wi == self.words.len() {
+                return None;
+            }
+            word = self.words[wi];
+        }
+    }
+}
+
+/// Far-future event key: `(t, seq, node index)`; the payload stays in the
+/// node slab. Wrapped in [`Reverse`] so `BinaryHeap` (a max-heap) pops
+/// the earliest `(t, seq)`.
+type FarEntry = (Cycles, u64, u32);
+
+/// Busy-core drain marker key: `(t, seq, core)` (see `Engine::run`).
+type WakeEntry = (Cycles, u64, CoreId);
+
+/// What a [`EventQ::pop`] yielded: a real event, or a busy-core drain
+/// marker (the engine turns the latter into one deferred-event delivery).
+pub enum Popped {
+    Ev(Queued),
+    Wake { t: Cycles, seq: u64, core: CoreId },
+}
+
+/// The simulator's event queue: hierarchical timing wheel + far heap +
+/// wake side-heap. See the module docs for the determinism contract.
+pub struct EventQ {
+    nodes: Vec<Node>,
+    /// Free-list head into `nodes`.
+    free: u32,
+    /// Cursor: lower bound on every queued event's time (and exactly the
+    /// tick of the level-0 bucket about to be popped after `advance`).
+    cur: Cycles,
+    /// Events currently resident in wheel buckets (not far, not wakes).
+    in_wheel: usize,
+    /// `LEVELS * SLOTS` bucket chains, level-major.
+    slots: Vec<Slot>,
+    occ: [Occupancy; LEVELS],
+    far: BinaryHeap<Reverse<FarEntry>>,
+    wakes: BinaryHeap<Reverse<WakeEntry>>,
+}
+
+/// Which wheel level `t` files under, relative to cursor `cur`
+/// (`None` = beyond the span, go to the far heap).
+#[inline]
+fn level_for(cur: Cycles, t: Cycles) -> Option<usize> {
+    let x = cur ^ t;
+    if x >> SPAN_BITS != 0 {
+        None
+    } else if x >> (2 * BITS) != 0 {
+        Some(2)
+    } else if x >> BITS != 0 {
+        Some(1)
+    } else {
+        Some(0)
+    }
+}
+
+impl Default for EventQ {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl EventQ {
+    pub fn new() -> Self {
+        EventQ {
+            nodes: Vec::new(),
+            free: NIL,
+            cur: 0,
+            in_wheel: 0,
+            slots: vec![Slot::EMPTY; LEVELS * SLOTS],
+            occ: [Occupancy::default(); LEVELS],
+            far: BinaryHeap::new(),
+            wakes: BinaryHeap::new(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.in_wheel + self.far.len() + self.wakes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Enqueue an event. `seq` must be globally unique and monotone (the
+    /// engine's single counter) — it is the determinism tie-breaker.
+    pub fn push(&mut self, t: Cycles, seq: u64, core: CoreId, ev: Event) {
+        debug_assert!(t >= self.cur, "push at {t} behind cursor {}", self.cur);
+        let node = self.alloc(t, seq, core, ev);
+        match level_for(self.cur, t) {
+            Some(level) => self.link(level, node),
+            None => self.far.push(Reverse((t, seq, node))),
+        }
+    }
+
+    /// Enqueue a busy-core drain marker. Never touches the wheel or the
+    /// slab — wakes live in their own (tiny) heap, keyed like events so
+    /// the merged pop order is the old single-queue order.
+    pub fn push_wake(&mut self, t: Cycles, seq: u64, core: CoreId) {
+        self.wakes.push(Reverse((t, seq, core)));
+    }
+
+    /// Dequeue the globally earliest `(t, seq)` item.
+    pub fn pop(&mut self) -> Option<Popped> {
+        let bound = self.wakes.peek().map(|Reverse(w)| w.0);
+        let ev_key = if self.advance(bound) {
+            let head = self.slots[(self.cur & SLOT_MASK) as usize].head;
+            let n = &self.nodes[head as usize];
+            debug_assert_eq!(n.t, self.cur);
+            Some((n.t, n.seq))
+        } else {
+            None
+        };
+        let wake_key = self.wakes.peek().map(|Reverse(w)| (w.0, w.1));
+        match (ev_key, wake_key) {
+            (None, None) => None,
+            (Some(_), None) => Some(self.pop_event()),
+            (None, Some(_)) => Some(self.pop_wake()),
+            (Some(e), Some(w)) => {
+                if e < w {
+                    Some(self.pop_event())
+                } else {
+                    Some(self.pop_wake())
+                }
+            }
+        }
+    }
+
+    // ---------------------------------------------------------- internals
+
+    fn alloc(&mut self, t: Cycles, seq: u64, core: CoreId, ev: Event) -> u32 {
+        if self.free != NIL {
+            let i = self.free;
+            let n = &mut self.nodes[i as usize];
+            self.free = n.next;
+            n.t = t;
+            n.seq = seq;
+            n.core = core;
+            n.ev = ev;
+            n.next = NIL;
+            i
+        } else {
+            assert!(self.nodes.len() < NIL as usize, "event queue slab overflow");
+            self.nodes.push(Node { t, seq, core, ev, next: NIL });
+            (self.nodes.len() - 1) as u32
+        }
+    }
+
+    /// Unlink a node's payload and return it to the free list. The parked
+    /// `Event::Wake` placeholder keeps freed slots from pinning message
+    /// payloads (descriptors, range lists) alive.
+    fn release(&mut self, i: u32) -> Queued {
+        let n = &mut self.nodes[i as usize];
+        let ev = std::mem::replace(&mut n.ev, Event::Wake);
+        let q = Queued { t: n.t, seq: n.seq, core: n.core, ev };
+        n.next = self.free;
+        self.free = i;
+        q
+    }
+
+    /// Append `node` to its bucket at `level` (bucket index = the level's
+    /// bit-block of the node's time).
+    fn link(&mut self, level: usize, node: u32) {
+        let t = self.nodes[node as usize].t;
+        let s = ((t >> (BITS * level as u32)) & SLOT_MASK) as usize;
+        let slot = &mut self.slots[level * SLOTS + s];
+        if slot.head == NIL {
+            slot.head = node;
+            slot.tail = node;
+            self.occ[level].set(s);
+        } else {
+            let tail = slot.tail;
+            slot.tail = node;
+            self.nodes[tail as usize].next = node;
+        }
+        self.in_wheel += 1;
+    }
+
+    /// Re-file every event of bucket `(level, s)` one or two levels down,
+    /// preserving chain (= seq) order. Called with the cursor already set
+    /// to the bucket's block start.
+    fn cascade(&mut self, level: usize, s: usize) {
+        let idx = level * SLOTS + s;
+        let mut node = self.slots[idx].head;
+        self.slots[idx] = Slot::EMPTY;
+        self.occ[level].clear(s);
+        while node != NIL {
+            let next = self.nodes[node as usize].next;
+            self.nodes[node as usize].next = NIL;
+            self.in_wheel -= 1;
+            let t = self.nodes[node as usize].t;
+            let l = level_for(self.cur, t).expect("cascaded event within span");
+            debug_assert!(l < level);
+            self.link(l, node);
+            node = next;
+        }
+    }
+
+    /// Position the cursor on the earliest event tick, cascading and
+    /// refilling as needed. Returns false if there is no event at all, or
+    /// none at or before `bound` (the pending-wake minimum). Every step
+    /// checks its candidate time against `bound` *before* moving the
+    /// cursor, so while cascades along the way may advance it, the cursor
+    /// never passes `bound` — a wake due first is never overtaken, and a
+    /// push at the drained wake's time stays legal (invariant 4).
+    fn advance(&mut self, bound: Option<Cycles>) -> bool {
+        let beyond = |t: Cycles| bound.is_some_and(|b| t > b);
+        loop {
+            if self.in_wheel > 0 {
+                // Level 0: buckets are single ticks of the cursor's block.
+                let base = (self.cur & SLOT_MASK) as usize;
+                if let Some(s) = self.occ[0].next_from(base) {
+                    let t0 = (self.cur & !SLOT_MASK) | s as u64;
+                    if beyond(t0) {
+                        return false;
+                    }
+                    self.cur = t0;
+                    return true;
+                }
+                // Level 1: every occupied bucket is strictly ahead of the
+                // cursor's level-1 block; the smallest index is earliest.
+                if let Some(s1) = self.occ[1].next_from(0) {
+                    let block = (self.cur & !((1u64 << (2 * BITS)) - 1)) | ((s1 as u64) << BITS);
+                    if beyond(block) {
+                        return false;
+                    }
+                    self.cur = block;
+                    self.cascade(1, s1);
+                    continue;
+                }
+                // Level 2 likewise.
+                if let Some(s2) = self.occ[2].next_from(0) {
+                    let block =
+                        (self.cur & !((1u64 << SPAN_BITS) - 1)) | ((s2 as u64) << (2 * BITS));
+                    if beyond(block) {
+                        return false;
+                    }
+                    self.cur = block;
+                    self.cascade(2, s2);
+                    continue;
+                }
+                unreachable!("wheel count positive but no occupied bucket");
+            }
+            // Wheel empty: jump the cursor to the far heap's minimum and
+            // pull its whole epoch in (each far event re-files exactly
+            // once — this is the lazy refill).
+            let Some(far_t) = self.far.peek().map(|Reverse(e)| e.0) else {
+                return false;
+            };
+            if beyond(far_t) {
+                return false;
+            }
+            self.cur = far_t;
+            while let Some(&Reverse((t, _, _))) = self.far.peek() {
+                if (t ^ self.cur) >> SPAN_BITS != 0 {
+                    break;
+                }
+                let Reverse((t, _, node)) = self.far.pop().expect("peeked entry");
+                let level = level_for(self.cur, t).expect("same epoch");
+                self.link(level, node);
+            }
+        }
+    }
+
+    /// Pop the head of the cursor's level-0 bucket (valid directly after
+    /// `advance` returned true).
+    fn pop_event(&mut self) -> Popped {
+        let s = (self.cur & SLOT_MASK) as usize;
+        let slot = &mut self.slots[s];
+        let i = slot.head;
+        debug_assert_ne!(i, NIL);
+        let next = self.nodes[i as usize].next;
+        slot.head = next;
+        if next == NIL {
+            slot.tail = NIL;
+            self.occ[0].clear(s);
+        }
+        self.in_wheel -= 1;
+        Popped::Ev(self.release(i))
+    }
+
+    fn pop_wake(&mut self) -> Popped {
+        let Reverse((t, seq, core)) = self.wakes.pop().expect("wake heap non-empty");
+        Popped::Wake { t, seq, core }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key(p: Popped) -> (Cycles, u64, bool) {
+        match p {
+            Popped::Ev(q) => (q.t, q.seq, false),
+            Popped::Wake { t, seq, .. } => (t, seq, true),
+        }
+    }
+
+    fn push_ev(q: &mut EventQ, t: Cycles, seq: u64) {
+        q.push(t, seq, CoreId(0), Event::Boot);
+    }
+
+    #[test]
+    fn pops_in_time_order_across_levels() {
+        let mut q = EventQ::new();
+        // One event per level of the wheel plus one far-heap event.
+        for (seq, t) in [(0u64, 300_000u64), (1, 3), (2, 70_000), (3, 40_000_000), (4, 260)] {
+            push_ev(&mut q, t, seq);
+        }
+        let order: Vec<Cycles> = std::iter::from_fn(|| q.pop().map(|p| key(p).0)).collect();
+        assert_eq!(order, vec![3, 260, 70_000, 300_000, 40_000_000]);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn same_tick_ties_pop_in_seq_order() {
+        let mut q = EventQ::new();
+        // Same tick pushed out of nothing — seq order must hold, including
+        // for ties that start out at an upper level and cascade down.
+        for seq in 0..5u64 {
+            push_ev(&mut q, 100_000, seq);
+        }
+        for seq in 5..8u64 {
+            push_ev(&mut q, 0, seq);
+        }
+        let keys: Vec<(Cycles, u64, bool)> =
+            std::iter::from_fn(|| q.pop().map(key)).collect();
+        assert_eq!(
+            keys,
+            vec![
+                (0, 5, false),
+                (0, 6, false),
+                (0, 7, false),
+                (100_000, 0, false),
+                (100_000, 1, false),
+                (100_000, 2, false),
+                (100_000, 3, false),
+                (100_000, 4, false),
+            ]
+        );
+    }
+
+    #[test]
+    fn far_heap_refills_lazily() {
+        let mut q = EventQ::new();
+        // Two epochs beyond the span, interleaved pushes.
+        push_ev(&mut q, 50_000_000, 0);
+        push_ev(&mut q, 10, 1);
+        push_ev(&mut q, 50_000_001, 2);
+        push_ev(&mut q, 34_000_000, 3);
+        let order: Vec<(Cycles, u64, bool)> =
+            std::iter::from_fn(|| q.pop().map(key)).collect();
+        assert_eq!(
+            order,
+            vec![(10, 1, false), (34_000_000, 3, false), (50_000_000, 0, false), (50_000_001, 2, false)]
+        );
+    }
+
+    #[test]
+    fn wakes_merge_by_seq_and_never_stall_cursor() {
+        let mut q = EventQ::new();
+        push_ev(&mut q, 100, 0);
+        q.push_wake(50, 1, CoreId(7));
+        // Wake at t=50 must come out before the event at t=100, and the
+        // cursor must not have run past 50: a push at 60 afterwards (as the
+        // engine does from the drained handler) must still be accepted and
+        // ordered correctly.
+        assert_eq!(key(q.pop().unwrap()), (50, 1, true));
+        push_ev(&mut q, 60, 2);
+        assert_eq!(key(q.pop().unwrap()), (60, 2, false));
+        assert_eq!(key(q.pop().unwrap()), (100, 0, false));
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn wake_ties_with_event_resolve_by_seq() {
+        let mut q = EventQ::new();
+        push_ev(&mut q, 10, 0);
+        q.push_wake(10, 1, CoreId(1));
+        push_ev(&mut q, 10, 2);
+        assert_eq!(key(q.pop().unwrap()), (10, 0, false));
+        assert_eq!(key(q.pop().unwrap()), (10, 1, true));
+        assert_eq!(key(q.pop().unwrap()), (10, 2, false));
+    }
+
+    #[test]
+    fn slab_is_reused_after_drain() {
+        let mut q = EventQ::new();
+        for round in 0..4u64 {
+            for i in 0..64u64 {
+                push_ev(&mut q, round * 1000 + i, round * 64 + i);
+            }
+            for _ in 0..64 {
+                assert!(q.pop().is_some());
+            }
+        }
+        // All four rounds fit in the slab allocated for the first.
+        assert_eq!(q.nodes.len(), 64);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn interleaved_push_pop_keeps_global_order() {
+        // Engine-like usage: every pop may push new events at or after the
+        // popped time.
+        let mut q = EventQ::new();
+        let mut seq = 0u64;
+        for i in 0..8u64 {
+            push_ev(&mut q, i * 17, seq);
+            seq += 1;
+        }
+        let mut last = 0;
+        let mut popped = 0;
+        while let Some(p) = q.pop() {
+            let (t, _, _) = key(p);
+            assert!(t >= last);
+            last = t;
+            popped += 1;
+            if seq < 40 {
+                push_ev(&mut q, t + 1 + (seq % 3) * 90_000, seq);
+                seq += 1;
+            }
+        }
+        assert_eq!(popped, 40);
+        assert!(last > 0, "time advanced over the run");
+    }
+
+    #[test]
+    fn occupancy_next_from() {
+        let mut o = Occupancy::default();
+        assert_eq!(o.next_from(0), None);
+        o.set(3);
+        o.set(64);
+        o.set(255);
+        assert_eq!(o.next_from(0), Some(3));
+        assert_eq!(o.next_from(3), Some(3));
+        assert_eq!(o.next_from(4), Some(64));
+        assert_eq!(o.next_from(65), Some(255));
+        assert_eq!(o.next_from(255), Some(255));
+        o.clear(255);
+        assert_eq!(o.next_from(65), None);
+    }
+}

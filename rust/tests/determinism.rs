@@ -15,8 +15,10 @@
 //! run these, record each Fingerprint as a `const` golden, and assert
 //! against it so later refactors are held to bit-identical schedules.
 
+use myrmics::apps::jacobi;
 use myrmics::apps::synthetic::{empty_chain, hier_empty, independent, SynthParams};
 use myrmics::config::PlatformConfig;
+use myrmics::mpi::runner::run_mpi;
 use myrmics::platform::Platform;
 
 /// Everything that must replay bit-identically.
@@ -103,6 +105,25 @@ fn fig7_wide_hierarchy_replays_bit_identically() {
     let b = run_independent(64, 256);
     assert_eq!(a, b);
     assert_eq!(a.tasks_completed, 257);
+}
+
+/// The MPI baseline rides the same event core (timing wheel, wake-marker
+/// deferrals, DMA-delivered payloads without credit channels): its runs
+/// must replay bit-identically too.
+#[test]
+fn mpi_baseline_replays_bit_identically() {
+    let run = || {
+        let p = jacobi::JacobiParams::modeled(1024, 3, 32, 1);
+        let eng = run_mpi(jacobi::mpi_programs(&p, 16), &PlatformConfig::flat(1));
+        assert!(eng.world.done, "all ranks must finish");
+        let g = &eng.world.gstats;
+        (eng.sim.now, g.events_processed, g.msgs_total, g.dma_transfers)
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a, b, "MPI baseline must replay bit-identically");
+    assert!(a.0 > 0);
+    assert!(a.3 > 0, "jacobi ranks exchange halos over DMA");
 }
 
 /// Nested-region workload (fig12b shape): regions distributed across

@@ -1,0 +1,146 @@
+//! Differential determinism gate for the timing-wheel event queue.
+//!
+//! The wheel (`sim::wheel::EventQ`) replaced the engine's global
+//! `BinaryHeap<Queued>`; the determinism contract (docs/sim-engine.md)
+//! says its pop order must be *exactly* the heap's `(t, seq)` total order
+//! — same-tick ties by sequence number, wake markers merged by their own
+//! consumed sequence numbers, far-future events surfacing in order after
+//! the lazy epoch refill. These properties drive both structures with the
+//! same randomized streams (engine-shaped: pushes never precede the last
+//! popped time) and assert identical pop sequences.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use myrmics::ids::CoreId;
+use myrmics::sim::event::Event;
+use myrmics::sim::wheel::{EventQ, Popped};
+use myrmics::testutil::prop::{check, Gen};
+
+/// (t, seq, is_wake, core) — the full pop-order key plus payload identity.
+type Key = (u64, u64, bool, u32);
+
+/// Time deltas skewed over every wheel regime: same tick, level-0/1/2
+/// distances, and past-the-span far-heap jumps (the wheel span is 2^24).
+fn delta(g: &mut Gen) -> u64 {
+    match g.usize_in(0, 4) {
+        0 => 0,
+        1 => g.u64_in(1, 255),
+        2 => g.u64_in(256, (1 << 16) - 1),
+        3 => g.u64_in(1 << 16, (1 << 24) - 1),
+        _ => g.u64_in(1 << 24, 1 << 27),
+    }
+}
+
+fn pop_key(p: Popped) -> Key {
+    match p {
+        Popped::Ev(q) => (q.t, q.seq, false, q.core.0),
+        Popped::Wake { t, seq, core } => (t, seq, true, core.0),
+    }
+}
+
+/// Drive wheel + reference with a random interleaving of pushes and pops,
+/// then drain both; every pop must match the reference exactly.
+fn run_stream(g: &mut Gen, wake_ratio: u64) {
+    let mut q = EventQ::new();
+    let mut reference: BinaryHeap<Reverse<Key>> = BinaryHeap::new();
+    let mut seq = 0u64;
+    let mut now = 0u64;
+    let ops = g.usize_in(20, 300);
+    for _ in 0..ops {
+        if reference.is_empty() || g.usize_in(0, 2) > 0 {
+            for _ in 0..g.usize_in(1, 6) {
+                let t = now + delta(g);
+                let core = CoreId(g.u64_in(0, 15) as u32);
+                if wake_ratio > 0 && g.u64_in(1, wake_ratio) == 1 {
+                    q.push_wake(t, seq, core);
+                    reference.push(Reverse((t, seq, true, core.0)));
+                } else {
+                    q.push(t, seq, core, Event::Boot);
+                    reference.push(Reverse((t, seq, false, core.0)));
+                }
+                seq += 1;
+            }
+        } else {
+            let Reverse(expect) = reference.pop().expect("reference non-empty");
+            let got = pop_key(q.pop().expect("wheel must match reference occupancy"));
+            assert_eq!(got, expect, "pop order diverged from the reference heap");
+            now = got.0;
+        }
+    }
+    while let Some(Reverse(expect)) = reference.pop() {
+        let got = pop_key(q.pop().expect("wheel must drain with the reference"));
+        assert_eq!(got, expect, "drain order diverged from the reference heap");
+        now = got.0;
+    }
+    assert!(q.pop().is_none(), "wheel must be empty when the reference is");
+    assert!(q.is_empty());
+    let _ = now;
+}
+
+#[test]
+fn wheel_matches_reference_heap() {
+    check("wheel vs reference heap", 96, |g| run_stream(g, 0));
+}
+
+#[test]
+fn wheel_matches_reference_heap_with_wakes() {
+    // Roughly 1 in 4 entries is a wake marker: exercises the side-heap
+    // merge and the bounded cursor advance around pending wakes.
+    check("wheel vs reference heap (wakes)", 96, |g| run_stream(g, 4));
+}
+
+#[test]
+fn same_tick_bursts_preserve_seq_order() {
+    // Heavy tie pressure: many events on few distinct ticks, including
+    // ticks that start out above level 0 and must cascade in order.
+    check("same-tick burst ordering", 64, |g| {
+        let mut q = EventQ::new();
+        let mut reference: BinaryHeap<Reverse<Key>> = BinaryHeap::new();
+        let ticks: Vec<u64> = (0..g.u64_in(1, 4))
+            .map(|_| g.u64_in(0, 1 << 25))
+            .collect();
+        for seq in 0..g.u64_in(8, 64) {
+            let t = *g.pick(&ticks);
+            q.push(t, seq, CoreId(0), Event::Boot);
+            reference.push(Reverse((t, seq, false, 0)));
+        }
+        while let Some(Reverse(expect)) = reference.pop() {
+            assert_eq!(pop_key(q.pop().expect("wheel drains")), expect);
+        }
+        assert!(q.pop().is_none());
+    });
+}
+
+#[test]
+fn far_future_refill_preserves_order_across_epochs() {
+    // Streams biased to far-heap jumps: every pop crosses epochs often,
+    // exercising the lazy refill repeatedly.
+    check("epoch refill ordering", 64, |g| {
+        let mut q = EventQ::new();
+        let mut reference: BinaryHeap<Reverse<Key>> = BinaryHeap::new();
+        let mut now = 0u64;
+        let mut seq = 0u64;
+        for _ in 0..g.usize_in(4, 12) {
+            for _ in 0..g.usize_in(1, 8) {
+                // Mostly-far pushes plus a few near ones.
+                let t = if g.bool() {
+                    now + g.u64_in(1 << 24, 1 << 28)
+                } else {
+                    now + g.u64_in(0, 1000)
+                };
+                q.push(t, seq, CoreId(0), Event::Boot);
+                reference.push(Reverse((t, seq, false, 0)));
+                seq += 1;
+            }
+            let Reverse(expect) = reference.pop().expect("pushed above");
+            let got = pop_key(q.pop().expect("wheel matches"));
+            assert_eq!(got, expect);
+            now = got.0;
+        }
+        let _ = now;
+        while let Some(Reverse(expect)) = reference.pop() {
+            assert_eq!(pop_key(q.pop().expect("wheel drains")), expect);
+        }
+    });
+}
