@@ -20,7 +20,7 @@ use std::time::Instant;
 
 use myrmics::apps::jacobi;
 use myrmics::apps::synthetic::{empty_chain, hier_empty, independent, SynthParams};
-use myrmics::config::{HierarchySpec, PlatformConfig};
+use myrmics::config::{HierarchySpec, PlatformConfig, PolicyCfg};
 use myrmics::dep::node::DepNode;
 use myrmics::experiments::bench::{run_myrmics, BenchKind, Scaling};
 use myrmics::ids::{NodeId, RegionId, TaskId};
@@ -102,17 +102,16 @@ fn sim_case(
 }
 
 fn emit_json(records: &[Record]) {
-    let mut s = String::from("[\n");
-    for (i, r) in records.iter().enumerate() {
-        s.push_str(&format!(
-            "  {{\"case\": \"{}\", \"ns_per_op\": {:.3}, \"events_per_sec\": {:.1}}}{}\n",
-            r.case,
-            r.ns_per_op,
-            r.events_per_sec,
-            if i + 1 < records.len() { "," } else { "" }
-        ));
-    }
-    s.push_str("]\n");
+    let objs: Vec<String> = records
+        .iter()
+        .map(|r| {
+            format!(
+                "{{\"case\": \"{}\", \"ns_per_op\": {:.3}, \"events_per_sec\": {:.1}}}",
+                r.case, r.ns_per_op, r.events_per_sec
+            )
+        })
+        .collect();
+    let s = myrmics::experiments::json_array(&objs);
     let path = "BENCH_hotpath.json";
     match std::fs::write(path, &s) {
         Ok(()) => println!("\nwrote {path} ({} cases)", records.len()),
@@ -182,6 +181,40 @@ fn main() {
         512
     });
 
+    // The placement seam itself: one 8-way child choice per op, per
+    // policy, over a 16-range pack. Keeps the policy layer's dispatch +
+    // dense-table cost visible in BENCH_hotpath.json. Hierarchy and pack
+    // are built once outside the timed closure so the measurement is the
+    // choice path, not construction.
+    {
+        use myrmics::noc::msg::ProducerRange;
+        use myrmics::sched::hierarchy::HierarchyMap;
+        use myrmics::sched::policy::Placer;
+        let hier = HierarchyMap::build(64, &HierarchySpec::two_level(8));
+        let pack: Vec<ProducerRange> = (0..16)
+            .map(|i| ProducerRange {
+                producer: hier.subtree_workers(hier.children[0][i % 8])[i / 8],
+                addr: (i as u64) * 4096,
+                bytes: 4096,
+            })
+            .collect();
+        for cfg in [
+            PolicyCfg::locality_balance(10),
+            PolicyCfg::round_robin(),
+            PolicyCfg::power_of_two(),
+        ] {
+            let label = format!("place choose 8-way ({})", cfg.name());
+            let mut placer = Placer::new(&cfg, &hier, 0, 42);
+            time(&label, micro_ms, &mut records, || {
+                for _ in 0..256 {
+                    let (c, _) = placer.choose_child(&hier, 0, &pack);
+                    std::hint::black_box(c);
+                }
+                256
+            });
+        }
+    }
+
     time("next_hop traversal (depth-4 tree)", micro_ms, &mut records, || {
         use myrmics::config::HierarchySpec;
         use myrmics::memory::region::Memory;
@@ -240,6 +273,28 @@ fn main() {
         })
         .eng
     });
+    // The same fig7 throughput shape under the non-default placement
+    // policies: whole-simulation policy cost (and any schedule-quality
+    // effect on event counts) lands in BENCH_hotpath.json next to the
+    // default-policy case above.
+    for (label, policy) in [
+        ("fig7 independent 64w x 512 tasks (rr)", PolicyCfg::round_robin()),
+        ("fig7 independent 64w x 512 tasks (p2c)", PolicyCfg::power_of_two()),
+    ] {
+        sim_case(label, sim_ms, &mut records, move || {
+            let (reg, main) = independent();
+            let mut cfg = PlatformConfig::hierarchical(64);
+            cfg.policy = policy;
+            Platform::build_with(cfg, reg, main, |w| {
+                w.app = Some(Box::new(SynthParams {
+                    n_tasks: 512,
+                    task_cycles: 1_000_000,
+                    ..Default::default()
+                }));
+            })
+            .eng
+        });
+    }
     // Fig-8/12b shape: nested regions over a *deep* (3-level) scheduler
     // tree — spawns, grants and quiescence all hop-forward along the tree,
     // exercising the routed-message path and the per-sender channel tables

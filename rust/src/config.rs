@@ -30,21 +30,62 @@ pub enum CoreKind {
     CortexA9,
 }
 
-/// The scheduling policy bias of paper VI-D: `T = p*L + (100-p)*B` where
-/// `L` is the locality score and `B` the load-balance score, both
-/// normalized to 0..=1024.
+/// Which placement policy drives the hierarchical scheduling descent
+/// (paper V-E). Dispatched as an enum in `sched::policy` so the placement
+/// path stays allocation-free and branch-predictable.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum PolicyKind {
+    /// The paper's policy: blend a locality score `L` with a load-balance
+    /// score `B` as `T = p*L + (100-p)*B` (VI-D).
+    LocalityBalance,
+    /// Ignore scores entirely; rotate through candidates in index order.
+    RoundRobin,
+    /// Randomized power-of-two-choices: sample two distinct candidates
+    /// with the run's deterministic RNG and take the lighter-loaded one.
+    PowerOfTwoChoices,
+}
+
+/// Placement-policy configuration: a tagged policy [`kind`](PolicyCfg::kind)
+/// plus its parameters. Only [`PolicyKind::LocalityBalance`] reads
+/// `p_locality`; randomized policies derive their RNG from
+/// [`PlatformConfig::seed`], never from host entropy.
 #[derive(Clone, Copy, Debug)]
-pub struct Policy {
+pub struct PolicyCfg {
+    pub kind: PolicyKind,
     /// Percentage weight for the locality score (0..=100). The paper finds
     /// a good trade-off at 0.1-0.3 locality weight, i.e. `p` in 10..30.
     pub p_locality: u32,
 }
 
-impl Default for Policy {
+impl PolicyCfg {
+    /// The paper policy with an explicit locality weight.
+    pub fn locality_balance(p_locality: u32) -> Self {
+        PolicyCfg { kind: PolicyKind::LocalityBalance, p_locality }
+    }
+
+    pub fn round_robin() -> Self {
+        PolicyCfg { kind: PolicyKind::RoundRobin, ..Self::default() }
+    }
+
+    pub fn power_of_two() -> Self {
+        PolicyCfg { kind: PolicyKind::PowerOfTwoChoices, ..Self::default() }
+    }
+
+    /// Stable policy name used in sweep reports and JSON output.
+    pub fn name(&self) -> &'static str {
+        match self.kind {
+            PolicyKind::LocalityBalance => "locality-balance",
+            PolicyKind::RoundRobin => "round-robin",
+            PolicyKind::PowerOfTwoChoices => "p2c",
+        }
+    }
+}
+
+impl Default for PolicyCfg {
     fn default() -> Self {
         // Paper VI-D: "a good trade-off ... lies in the range of assigning
         // a 0.7-0.9 load-balance weight and a 0.3-0.1 locality weight".
-        Policy { p_locality: 10 }
+        PolicyCfg { kind: PolicyKind::LocalityBalance, p_locality: 10 }
     }
 }
 
@@ -293,7 +334,7 @@ pub struct PlatformConfig {
     /// setup); if false they are MicroBlaze (paper VI-E homogeneous setup).
     pub hetero: bool,
     pub cost: CostModel,
-    pub policy: Policy,
+    pub policy: PolicyCfg,
     /// Per-peer software message buffer capacity (credit-flow system).
     pub channel_capacity: usize,
     /// A worker/scheduler reports load upstream when its load changed by
@@ -310,7 +351,7 @@ impl PlatformConfig {
             hierarchy,
             hetero: true,
             cost: CostModel::default(),
-            policy: Policy::default(),
+            policy: PolicyCfg::default(),
             channel_capacity: 8,
             load_report_threshold: 1,
             seed: 0xB5EED,
@@ -400,6 +441,20 @@ mod tests {
         assert_eq!(HierarchySpec::paper_leaves(64), 4);
         assert_eq!(HierarchySpec::paper_leaves(128), 7);
         assert_eq!(HierarchySpec::paper_leaves(512), 7);
+    }
+
+    #[test]
+    fn policy_cfg_defaults_and_names() {
+        let d = PolicyCfg::default();
+        assert_eq!(d.kind, PolicyKind::LocalityBalance);
+        assert_eq!(d.p_locality, 10);
+        assert_eq!(d.name(), "locality-balance");
+        assert_eq!(PolicyCfg::locality_balance(30).p_locality, 30);
+        assert_eq!(PolicyCfg::round_robin().name(), "round-robin");
+        assert_eq!(PolicyCfg::power_of_two().name(), "p2c");
+        // Randomized/rotating policies keep the default blend parameter so
+        // switching back to LocalityBalance is a one-field change.
+        assert_eq!(PolicyCfg::round_robin().p_locality, 10);
     }
 
     #[test]

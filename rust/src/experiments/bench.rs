@@ -8,7 +8,7 @@
 //! minimum and grows the problem with the worker count.
 
 use crate::apps::{barnes_hut, bitonic, jacobi, kmeans, matmul, raytrace};
-use crate::config::{HierarchySpec, PlatformConfig};
+use crate::config::{HierarchySpec, PlatformConfig, PolicyCfg};
 use crate::ids::Cycles;
 use crate::mpi::runner::run_mpi;
 use crate::platform::Platform;
@@ -96,21 +96,22 @@ fn groups_for(workers: usize) -> usize {
     HierarchySpec::paper_leaves(workers).max(1)
 }
 
-/// Build + run the Myrmics variant; returns (time, engine).
+/// Build + run the Myrmics variant; returns (time, engine). `policy`
+/// overrides the default placement policy (`None` = paper default).
 pub fn run_myrmics(
     bench: BenchKind,
     workers: usize,
     scaling: Scaling,
     hier: bool,
-    p_locality: Option<u32>,
+    policy: Option<PolicyCfg>,
 ) -> (Cycles, Engine) {
     let mut cfg = if hier {
         PlatformConfig::hierarchical(workers)
     } else {
         PlatformConfig::flat(workers)
     };
-    if let Some(p) = p_locality {
-        cfg.policy.p_locality = p;
+    if let Some(p) = policy {
+        cfg.policy = p;
     }
     let g = groups_for(workers);
     let weak = scaling == Scaling::Weak;

@@ -2,11 +2,14 @@
 //! CLI binary: runs the selected experiments and prints paper-style rows.
 
 use super::bench::{BenchKind, Scaling};
-use super::{fig11, fig12, fig7, fig8, fig9};
+use super::{fig11, fig12, fig7, fig8, fig9, policy};
 
-/// `args`: experiment names (empty = all) plus optional `--quick`.
+/// `args`: experiment names (empty = all) plus optional `--quick` /
+/// `--smoke` (smoke applies to the `policy` sweep: 1 policy × 1 tiny
+/// workload, for CI emitter checks).
 pub fn run(args: &[String]) {
     let quick = args.iter().any(|a| a == "--quick");
+    let smoke = args.iter().any(|a| a == "--smoke");
     let picks: Vec<&str> =
         args.iter().filter(|a| !a.starts_with("--")).map(|s| s.as_str()).collect();
     let want = |name: &str| picks.is_empty() || picks.contains(&name);
@@ -80,9 +83,12 @@ pub fn run(args: &[String]) {
         let pts = fig12::fig12b(wc, &[1, 2, 3], 8);
         fig12::print_fig12b(&pts, wc);
     }
+    if want("policy") {
+        policy::run(quick, smoke);
+    }
 }
 
 pub const EXPERIMENTS: &[&str] = &[
     "fig7a", "fig7b", "fig8-strong", "fig8-weak", "overhead", "fig9", "fig10", "fig11",
-    "fig12a", "fig12b",
+    "fig12a", "fig12b", "policy",
 ];

@@ -8,6 +8,7 @@
 
 use super::bench::{run_myrmics, BenchKind, Scaling};
 use super::summarize;
+use crate::config::PolicyCfg;
 
 #[derive(Clone, Debug)]
 pub struct PolicyPoint {
@@ -34,7 +35,8 @@ pub const PAPER_CONFIGS: [(BenchKind, usize, bool); 3] = [
 pub fn sweep(bench: BenchKind, workers: usize, hier: bool, ps: &[u32]) -> PolicySweep {
     let mut raw = Vec::new();
     for &p in ps {
-        let (t, eng) = run_myrmics(bench, workers, Scaling::Strong, hier, Some(p));
+        let (t, eng) =
+            run_myrmics(bench, workers, Scaling::Strong, hier, Some(PolicyCfg::locality_balance(p)));
         let s = summarize(&eng, t);
         raw.push((p, t as f64, s.balance, s.total_dma_bytes as f64));
     }

@@ -11,6 +11,7 @@ pub mod fig12;
 pub mod fig7;
 pub mod fig8;
 pub mod fig9;
+pub mod policy;
 
 use crate::ids::Cycles;
 use crate::sim::engine::Engine;
@@ -90,6 +91,22 @@ pub fn summarize(eng: &Engine, time: Cycles) -> Summary {
         balance,
         total_dma_bytes: total_dma,
     }
+}
+
+/// Render pre-formatted JSON object strings as one JSON array document
+/// (two-space indent, no trailing comma, trailing newline). Shared by the
+/// machine-readable report emitters (`experiments::policy`, the hotpath
+/// bench) so the array framing cannot drift between them; callers remain
+/// responsible for their rows containing no characters needing escaping.
+pub fn json_array(rows: &[String]) -> String {
+    let mut s = String::from("[\n");
+    for (i, r) in rows.iter().enumerate() {
+        s.push_str("  ");
+        s.push_str(r);
+        s.push_str(if i + 1 < rows.len() { ",\n" } else { "\n" });
+    }
+    s.push_str("]\n");
+    s
 }
 
 /// Format cycles as M/K for table output.

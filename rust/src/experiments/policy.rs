@@ -1,0 +1,254 @@
+//! Placement-policy sweep: every pluggable policy × locality weight over
+//! fig7/fig8-shaped workloads, with a machine-readable JSON report.
+//!
+//! Where fig11 reproduces the paper's VI-D locality/balance trade-off on
+//! the application benchmarks, this experiment exercises the *policy seam*
+//! itself (`sched::policy`): the same synthetic workloads the hotpath
+//! bench drives — `independent` (fig7b: one spawner fans out over a
+//! hierarchy) and `hier_empty` (fig8/12b: nested regions over a deep
+//! tree) — are run under every [`PolicyCfg`] variant, so a new policy
+//! only needs a config constructor to show up in the comparison.
+//!
+//! Output: paper-style rows on stdout plus `POLICY_sweep.json`
+//! (`[{workload, workers, policy, p_locality, time, balance_pct,
+//! dma_bytes, msg_bytes, events, tasks}]`) so the policy trajectory is
+//! machine-comparable across PRs. CI smoke-runs the emitter (1 policy ×
+//! 1 tiny workload) so it cannot rot.
+
+use crate::apps::synthetic::{hier_empty, independent, SynthParams};
+use crate::config::{HierarchySpec, PlatformConfig, PolicyCfg};
+use crate::ids::Cycles;
+use crate::platform::Platform;
+
+use super::summarize;
+
+/// One (workload, policy) measurement.
+#[derive(Clone, Debug)]
+pub struct PolicyRow {
+    pub workload: &'static str,
+    pub workers: usize,
+    pub policy: &'static str,
+    pub p_locality: u32,
+    pub time: Cycles,
+    pub balance_pct: f64,
+    pub dma_bytes: u64,
+    pub msg_bytes: u64,
+    pub events: u64,
+    pub tasks: u64,
+}
+
+/// Workload shapes the sweep runs (≥ 2 per the experiment contract).
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Shape {
+    /// fig7b: independent tasks fanned out over a two-level hierarchy —
+    /// placement quality shows up as load balance.
+    Fig7Independent,
+    /// fig8/12b: nested regions over a deep (3-level) tree — placement
+    /// interacts with delegation and tree routing.
+    Fig8Deep,
+}
+
+impl Shape {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Shape::Fig7Independent => "fig7-independent",
+            Shape::Fig8Deep => "fig8-deep",
+        }
+    }
+}
+
+/// Run one workload shape under one policy.
+pub fn run_one(shape: Shape, workers: usize, tasks: usize, policy: PolicyCfg) -> PolicyRow {
+    let (mut cfg, reg, main, params) = match shape {
+        Shape::Fig7Independent => {
+            let (reg, main) = independent();
+            // Explicit two-level tree (not `hierarchical`, which
+            // degenerates to flat under 32 workers): child-level placement
+            // must be exercised at every sweep size.
+            let leaves = 4.min(workers.max(2));
+            (
+                PlatformConfig::new(workers, HierarchySpec::two_level(leaves)),
+                reg,
+                main,
+                SynthParams { n_tasks: tasks, task_cycles: 200_000, ..Default::default() },
+            )
+        }
+        Shape::Fig8Deep => {
+            let (reg, main) = hier_empty();
+            let cfg = PlatformConfig::new(
+                workers,
+                HierarchySpec { scheds_per_level: vec![1, 2, 4] },
+            );
+            (
+                cfg,
+                reg,
+                main,
+                SynthParams {
+                    domains: 4,
+                    per_domain: tasks.div_ceil(4),
+                    domain_level: 2,
+                    task_cycles: 50_000,
+                    ..Default::default()
+                },
+            )
+        }
+    };
+    cfg.policy = policy;
+    let mut plat = Platform::build_with(cfg, reg, main, |w| {
+        w.app = Some(Box::new(params));
+    });
+    let t = plat.run(Some(1 << 44));
+    let s = summarize(&plat.eng, t);
+    let g = &plat.eng.world.gstats;
+    PolicyRow {
+        workload: shape.name(),
+        workers,
+        policy: policy.name(),
+        p_locality: policy.p_locality,
+        time: t,
+        balance_pct: s.balance,
+        dma_bytes: s.total_dma_bytes,
+        msg_bytes: g.msgs_total * plat.eng.sim.cost.msg_bytes,
+        events: g.events_processed,
+        tasks: g.tasks_completed,
+    }
+}
+
+/// The policy set a full sweep compares: the paper blend at several
+/// locality weights, plus the rotating and randomized baselines.
+pub fn sweep_policies() -> Vec<PolicyCfg> {
+    vec![
+        PolicyCfg::locality_balance(0),
+        PolicyCfg::locality_balance(10),
+        PolicyCfg::locality_balance(30),
+        PolicyCfg::locality_balance(100),
+        PolicyCfg::round_robin(),
+        PolicyCfg::power_of_two(),
+    ]
+}
+
+/// Run the sweep. `quick` shrinks the workloads; `smoke` runs exactly one
+/// policy on one tiny workload (CI: exercises the emitter in seconds).
+pub fn run(quick: bool, smoke: bool) -> Vec<PolicyRow> {
+    let mut rows = Vec::new();
+    if smoke {
+        rows.push(run_one(Shape::Fig7Independent, 8, 32, PolicyCfg::default()));
+    } else {
+        let (workers, tasks) = if quick { (16, 64) } else { (64, 512) };
+        for shape in [Shape::Fig7Independent, Shape::Fig8Deep] {
+            for policy in sweep_policies() {
+                rows.push(run_one(shape, workers, tasks, policy));
+            }
+        }
+    }
+    print_rows(&rows);
+    match emit_json(&rows, "POLICY_sweep.json") {
+        Ok(()) => println!("wrote POLICY_sweep.json ({} rows)", rows.len()),
+        Err(e) => eprintln!("failed to write POLICY_sweep.json: {e}"),
+    }
+    rows
+}
+
+pub fn print_rows(rows: &[PolicyRow]) {
+    println!("Policy sweep — placement policies over fig7/fig8 workload shapes");
+    println!(
+        "{:<18} {:>4} {:<18} {:>6} {:>12} {:>9} {:>12} {:>8}",
+        "workload", "w", "policy", "p_loc", "time", "balance%", "DMA bytes", "tasks"
+    );
+    for r in rows {
+        // Only the blend policy is parameterized by the locality weight.
+        let p = if r.policy == "locality-balance" { r.p_locality.to_string() } else { "-".into() };
+        println!(
+            "{:<18} {:>4} {:<18} {:>6} {:>12} {:>9.1} {:>12} {:>8}",
+            r.workload, r.workers, r.policy, p, r.time, r.balance_pct, r.dma_bytes, r.tasks
+        );
+    }
+    println!();
+}
+
+/// Serialize rows as a JSON array (no external deps — field values are
+/// numbers and fixed identifier strings, so no escaping is needed).
+pub fn to_json(rows: &[PolicyRow]) -> String {
+    let objs: Vec<String> = rows
+        .iter()
+        .map(|r| {
+            // Only the blend policy is parameterized by the locality
+            // weight; for the others the field is inert — emit null so
+            // consumers cannot mistake it for a real sweep coordinate.
+            let p_loc = if r.policy == "locality-balance" {
+                r.p_locality.to_string()
+            } else {
+                "null".to_string()
+            };
+            format!(
+                "{{\"workload\": \"{}\", \"workers\": {}, \"policy\": \"{}\", \
+                 \"p_locality\": {}, \"time\": {}, \"balance_pct\": {:.2}, \
+                 \"dma_bytes\": {}, \"msg_bytes\": {}, \"events\": {}, \"tasks\": {}}}",
+                r.workload,
+                r.workers,
+                r.policy,
+                p_loc,
+                r.time,
+                r.balance_pct,
+                r.dma_bytes,
+                r.msg_bytes,
+                r.events,
+                r.tasks,
+            )
+        })
+        .collect();
+    super::json_array(&objs)
+}
+
+pub fn emit_json(rows: &[PolicyRow], path: &str) -> std::io::Result<()> {
+    std::fs::write(path, to_json(rows))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_policy_completes_both_shapes() {
+        for shape in [Shape::Fig7Independent, Shape::Fig8Deep] {
+            for policy in sweep_policies() {
+                let r = run_one(shape, 8, 16, policy);
+                assert!(r.tasks > 0, "{}/{} completed no tasks", r.workload, r.policy);
+                assert!(r.time > 0);
+                assert!(r.events > 0);
+            }
+        }
+    }
+
+    #[test]
+    fn round_robin_balances_independent_tasks() {
+        // Equal-size independent tasks: strict rotation spreads them at
+        // least as evenly as anything else on a tiny run.
+        let rr = run_one(Shape::Fig7Independent, 8, 64, PolicyCfg::round_robin());
+        assert!(rr.balance_pct > 50.0, "round-robin balance {:.1}%", rr.balance_pct);
+    }
+
+    #[test]
+    fn p2c_replays_bit_identically() {
+        let a = run_one(Shape::Fig7Independent, 8, 32, PolicyCfg::power_of_two());
+        let b = run_one(Shape::Fig7Independent, 8, 32, PolicyCfg::power_of_two());
+        assert_eq!(a.time, b.time, "randomized policy must be seed-deterministic");
+        assert_eq!(a.events, b.events);
+        assert_eq!(a.msg_bytes, b.msg_bytes);
+    }
+
+    #[test]
+    fn json_shape_is_stable() {
+        let rows = vec![run_one(Shape::Fig7Independent, 8, 8, PolicyCfg::default())];
+        let j = to_json(&rows);
+        assert!(j.starts_with("[\n"));
+        assert!(j.trim_end().ends_with(']'));
+        for key in
+            ["\"workload\"", "\"policy\"", "\"p_locality\"", "\"time\"", "\"balance_pct\""]
+        {
+            assert!(j.contains(key), "missing {key} in {j}");
+        }
+        // Exactly one row, no trailing comma.
+        assert_eq!(j.matches("{\"workload\"").count(), 1);
+    }
+}

@@ -327,8 +327,12 @@ impl Memory {
 
     /// Chain `[anchor, ..., target]` walking region parents up from
     /// `target`; `None` if `anchor` is not an ancestor-or-self of `target`.
-    /// Allocates; kept for tests and offline tooling — hot paths use
-    /// [`Memory::next_hop`] / [`Memory::path_len`].
+    /// Allocates a path vector per call — exactly the hot-path shape PR 1
+    /// removed — so it is compiled only into test builds as a reference
+    /// oracle for [`Memory::next_hop`] / [`Memory::path_len`]. Production
+    /// code cannot link against it, which keeps the per-hop path builder
+    /// from being silently reintroduced.
+    #[cfg(test)]
     pub fn path_down(&self, anchor: NodeId, target: NodeId) -> Option<Vec<NodeId>> {
         let mut chain = vec![target];
         let mut cur = target;

@@ -178,7 +178,8 @@ impl Platform {
         // Wire logic.
         for s in 0..eng.world.hier.n_scheds {
             let core = eng.world.hier.sched_core(s);
-            eng.set_logic(core, Box::new(SchedLogic::new(s, core)));
+            let logic = Box::new(SchedLogic::new(s, core, &eng.world.hier, &eng.world.cfg));
+            eng.set_logic(core, logic);
         }
         for s in 0..eng.world.hier.n_scheds {
             for w in eng.world.hier.leaf_workers[s].clone() {

@@ -11,8 +11,6 @@
 //! applies on the prototype. Non-leaf schedulers are placed after all
 //! worker blocks.
 
-use std::collections::HashMap;
-
 use crate::config::HierarchySpec;
 use crate::ids::CoreId;
 
@@ -43,8 +41,10 @@ pub struct HierarchyMap {
     subtree_workers: Vec<Vec<CoreId>>,
     /// Core id -> role.
     role: Vec<Role>,
-    /// Worker core id -> its leaf scheduler index.
-    worker_leaf: HashMap<u32, usize>,
+    /// Core id -> leaf scheduler index serving it (`usize::MAX` for
+    /// scheduler cores). Dense: `route_next` probes this per forwarded
+    /// hop, so it must stay an index, not a hash lookup.
+    worker_leaf: Vec<usize>,
 }
 
 impl HierarchyMap {
@@ -96,14 +96,14 @@ impl HierarchyMap {
         let mut role = Vec::with_capacity(n_cores);
         let mut sched_cores = vec![CoreId(0); n_scheds];
         let mut leaf_workers: Vec<Vec<CoreId>> = vec![Vec::new(); n_scheds];
-        let mut worker_leaf = HashMap::new();
+        let mut worker_leaf = vec![usize::MAX; n_cores];
         let mut wi = 0usize;
         for &l in &leaves {
             sched_cores[l] = CoreId(role.len() as u32);
             role.push(Role::Sched(l));
             for _ in 0..leaf_worker_counts[l] {
                 let c = CoreId(role.len() as u32);
-                worker_leaf.insert(c.0, l);
+                worker_leaf[c.idx()] = l;
                 leaf_workers[l].push(c);
                 role.push(Role::Worker(wi));
                 wi += 1;
@@ -174,9 +174,12 @@ impl HierarchyMap {
         self.sched_cores[0]
     }
 
-    /// The leaf scheduler index serving a worker core.
+    /// The leaf scheduler index serving a worker core. O(1) dense index —
+    /// on the per-hop routing path.
     pub fn leaf_of_worker(&self, c: CoreId) -> usize {
-        *self.worker_leaf.get(&c.0).expect("not a worker core")
+        let l = self.worker_leaf[c.idx()];
+        assert!(l != usize::MAX, "not a worker core");
+        l
     }
 
     pub fn is_leaf(&self, idx: usize) -> bool {
@@ -230,6 +233,24 @@ impl HierarchyMap {
         }
         let p = self.parent[from_idx].expect("target not in tree and no parent");
         self.sched_cores[p]
+    }
+
+    /// The child of `anc` on the ancestry path to scheduler `idx`
+    /// (`Some(idx)` when `idx` is a direct child). `None` when `idx == anc`
+    /// or `idx` is outside `anc`'s subtree. O(depth), allocation-free —
+    /// the load tracker uses this to attribute a completion to the child
+    /// subtree it was placed into.
+    pub fn child_towards(&self, anc: usize, mut idx: usize) -> Option<usize> {
+        if idx == anc {
+            return None;
+        }
+        loop {
+            match self.parent[idx] {
+                Some(p) if p == anc => return Some(idx),
+                Some(p) => idx = p,
+                None => return None,
+            }
+        }
     }
 
     /// For delegation: the child of `idx` whose subtree contains all of
@@ -337,6 +358,84 @@ mod tests {
         assert_eq!(h.child_covering(1, &[3]), Some(3));
         assert_eq!(h.child_covering(0, &[0]), None);
         assert_eq!(h.child_covering(0, &[]), None);
+    }
+
+    #[test]
+    fn routing_outside_the_subtree_goes_up() {
+        let h = HierarchyMap::build(36, &HierarchySpec::multi_level(3, 2));
+        // Tree: 0 -> (1,2); 1 -> (3,4); 2 -> (5,6).
+        let w_far = h.leaf_workers[6][0];
+        // From leaf 3, a worker under leaf 6 is outside the whole level-1
+        // subtree: the next hop is leaf 3's parent (mid 1), not a child.
+        assert_eq!(h.route_next(3, w_far), h.sched_core(1));
+        // From mid 1 it is still outside: up again to the top.
+        assert_eq!(h.route_next(1, w_far), h.sched_core(0));
+        // From the top the route descends the covering child chain.
+        assert_eq!(h.route_next(0, w_far), h.sched_core(2));
+        assert_eq!(h.route_next(2, w_far), h.sched_core(6));
+        assert_eq!(h.route_next(6, w_far), w_far);
+        // A foreign *scheduler core* target routes the same way.
+        assert_eq!(h.route_next(3, h.sched_core(5)), h.sched_core(1));
+    }
+
+    #[test]
+    fn routing_single_child_chain() {
+        // Degenerate 3-level chain: every level has exactly one scheduler.
+        let h = HierarchyMap::build(4, &HierarchySpec { scheds_per_level: vec![1, 1, 1] });
+        assert_eq!(h.n_scheds, 3);
+        assert_eq!(h.children[0], vec![1]);
+        assert_eq!(h.children[1], vec![2]);
+        let w = h.leaf_workers[2][0];
+        // Downward: each hop is the single child.
+        assert_eq!(h.route_next(0, w), h.sched_core(1));
+        assert_eq!(h.route_next(1, w), h.sched_core(2));
+        assert_eq!(h.route_next(2, w), w);
+        // Upward from the bottom towards the top core.
+        assert_eq!(h.route_next(2, h.top_core()), h.sched_core(1));
+        assert_eq!(h.route_next(1, h.top_core()), h.sched_core(0));
+    }
+
+    #[test]
+    fn routing_top_core_targets() {
+        let h = HierarchyMap::build(32, &HierarchySpec::two_level(2));
+        // Self-target: route_next returns the target itself.
+        assert_eq!(h.route_next(0, h.top_core()), h.top_core());
+        assert_eq!(h.route_next(1, h.sched_core(1)), h.sched_core(1));
+        // From a leaf, the top core is the parent hop.
+        assert_eq!(h.route_next(1, h.top_core()), h.top_core());
+        assert_eq!(h.route_next(2, h.top_core()), h.top_core());
+    }
+
+    #[test]
+    fn child_towards_walks_the_ancestry() {
+        let h = HierarchyMap::build(36, &HierarchySpec::multi_level(3, 2));
+        // Tree: 0 -> (1,2); 1 -> (3,4); 2 -> (5,6).
+        assert_eq!(h.child_towards(0, 3), Some(1));
+        assert_eq!(h.child_towards(0, 6), Some(2));
+        assert_eq!(h.child_towards(0, 1), Some(1));
+        assert_eq!(h.child_towards(1, 4), Some(4));
+        // Not in the subtree / self: no child to attribute.
+        assert_eq!(h.child_towards(1, 5), None);
+        assert_eq!(h.child_towards(0, 0), None);
+        assert_eq!(h.child_towards(3, 0), None);
+    }
+
+    #[test]
+    fn child_covering_edge_cases() {
+        let h = HierarchyMap::build(36, &HierarchySpec::multi_level(3, 2));
+        // Owners spanning two level-1 subtrees: no single cover.
+        assert_eq!(h.child_covering(0, &[4, 6]), None);
+        // Deep owner: the level-1 child covering a leaf two levels down.
+        assert_eq!(h.child_covering(0, &[6]), Some(2));
+        // A leaf has no children: never a cover.
+        assert_eq!(h.child_covering(3, &[3]), None);
+        // The parent itself among the owners can never be covered.
+        assert_eq!(h.child_covering(0, &[0, 3]), None);
+        // Single-child chain: the only child covers everything below it.
+        let c = HierarchyMap::build(4, &HierarchySpec { scheds_per_level: vec![1, 1, 1] });
+        assert_eq!(c.child_covering(0, &[2]), Some(1));
+        assert_eq!(c.child_covering(1, &[2]), Some(2));
+        assert_eq!(c.child_covering(2, &[2]), None);
     }
 
     #[test]

@@ -1,5 +1,7 @@
-//! Hierarchical scheduling: the tree, scheduler/worker logic, scoring.
+//! Hierarchical scheduling: the tree, scheduler/worker logic, the
+//! pluggable placement-policy layer and its scoring primitives.
 pub mod hierarchy;
+pub mod policy;
 pub mod scheduler;
 pub mod scoring;
 pub mod worker;

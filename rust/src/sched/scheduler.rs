@@ -7,8 +7,14 @@
 //! * the dependency traversal, grants, quiescence propagation and the
 //!   parent-counter race protocol (V-D),
 //! * packing with reentrant pending state (V-E),
-//! * hierarchical placement with locality/load-balance scoring (V-E, VI-D),
 //! * the memory-API service path and load-report aggregation (V-C).
+//!
+//! The placement *decision* — which child subtree or worker a ready task
+//! goes to, and the load estimates that inform it — is not made here: it
+//! lives behind the [`Placer`] seam in [`crate::sched::policy`]. This
+//! module only speaks the protocol (what messages to send once the policy
+//! has chosen), so placement strategies can be swept and extended without
+//! touching the traversal or packing state machines.
 //!
 //! Everything that touches state owned by another scheduler leaves this
 //! core as a routed NoC message and is charged accordingly.
@@ -19,21 +25,22 @@
 //! placement) performs **no steady-state heap allocation**: task
 //! descriptors are shared `Arc`s (escaping a borrow is a pointer bump,
 //! not an argument-vector copy), queue re-evaluation and pack walks run
-//! over pooled scratch buffers owned by this scheduler, placement scoring
-//! iterates the hierarchy in place instead of cloning candidate lists,
+//! over pooled scratch buffers owned by this scheduler, placement runs
+//! over the policy layer's dense load tables and reusable scoring scratch
+//! (no hash/tree probes, enum dispatch only — see `sched::policy`),
 //! and tree-forwarded messages move hop to hop without boxing (see
 //! `Event::Msg::dst`). Keep it that way — the simulator's throughput
 //! (events per host second, `cargo bench --bench hotpath`) is the
 //! regression gate.
 
-use std::collections::BTreeMap;
-
+use crate::config::PlatformConfig;
 use crate::dep::node::ReadyAction;
 use crate::fxmap::FxHashMap;
 use crate::ids::{CoreId, NodeId, ReqId, TaskId};
 use crate::noc::msg::{MemOpKind, Msg, ProducerRange};
 use crate::memory::region::PackScratch;
-use crate::sched::scoring::{balance_score, locality_score, pick_best};
+use crate::sched::hierarchy::HierarchyMap;
+use crate::sched::policy::Placer;
 use crate::sim::engine::{CoreLogic, Ctx};
 use crate::sim::event::Event;
 use crate::task::descriptor::{Access, TaskDesc};
@@ -59,10 +66,9 @@ pub struct SchedLogic {
     spawns: FxHashMap<ReqId, (CoreId, usize)>,
     /// task -> outstanding wait-node count.
     waits: FxHashMap<TaskId, usize>,
-    /// Child-scheduler load estimates (from reports + eager increments).
-    child_load: BTreeMap<usize, u64>,
-    /// Worker load estimates (leaf schedulers).
-    worker_load: BTreeMap<u32, u64>,
+    /// Placement policy + dense load estimates (the policy seam; see
+    /// [`crate::sched::policy`]).
+    placer: Placer,
     last_reported: u64,
     /// `MYRMICS_TRACE_TASK`, read once at construction (it used to be an
     /// environment syscall on every single grant).
@@ -79,12 +85,10 @@ pub struct SchedLogic {
     pack_scratch: PackScratch,
     /// Remote subregion roots from the last pack walk.
     pack_remote: Vec<crate::ids::RegionId>,
-    /// Placement scoring candidates (locality, balance).
-    score_scratch: Vec<(u64, u64)>,
 }
 
 impl SchedLogic {
-    pub fn new(idx: usize, core: CoreId) -> Self {
+    pub fn new(idx: usize, core: CoreId, hier: &HierarchyMap, cfg: &PlatformConfig) -> Self {
         SchedLogic {
             idx,
             core,
@@ -92,8 +96,7 @@ impl SchedLogic {
             packs: FxHashMap::default(),
             spawns: FxHashMap::default(),
             waits: FxHashMap::default(),
-            child_load: BTreeMap::new(),
-            worker_load: BTreeMap::new(),
+            placer: Placer::new(&cfg.policy, hier, idx, cfg.seed),
             last_reported: 0,
             trace_task: std::env::var("MYRMICS_TRACE_TASK")
                 .ok()
@@ -102,8 +105,13 @@ impl SchedLogic {
             owners_scratch: Vec::new(),
             pack_scratch: PackScratch::default(),
             pack_remote: Vec::new(),
-            score_scratch: Vec::new(),
         }
+    }
+
+    /// Placement state (load estimates, policy) — read-only view for
+    /// diagnostics and the load-drift regression tests.
+    pub fn placer(&self) -> &Placer {
+        &self.placer
     }
 
     fn fresh_req(&mut self) -> ReqId {
@@ -606,50 +614,32 @@ impl SchedLogic {
 
     // ============================================================ placement
 
-    /// Hierarchical placement descent (paper V-E): children subtrees are
-    /// scored; at leaf level a worker is picked and the task dispatched.
-    /// The task's pack list is borrowed via `mem::take` (and restored) and
-    /// candidates are scored in place — no clones of pack/children/worker
-    /// vectors.
+    /// Hierarchical placement descent (paper V-E): the configured policy
+    /// picks a child subtree, or a worker at leaf level, and the task is
+    /// forwarded/dispatched accordingly. The task's pack list is borrowed
+    /// via `mem::take` (and restored); candidate scoring, eager load
+    /// bookkeeping and any policy randomness live in [`Placer`].
     fn place(&mut self, ctx: &mut Ctx<'_>, task: TaskId) {
         ctx.world.tasks.get_mut(task).state = TaskState::Placing;
         let pack = std::mem::take(&mut ctx.world.tasks.get_mut(task).pack);
-        let p_loc = ctx.world.cfg.policy.p_locality;
-        let n_children = ctx.world.hier.children[self.idx].len();
-        if n_children > 0 {
-            self.score_scratch.clear();
-            for &c in &ctx.world.hier.children[self.idx] {
-                let members = ctx.world.hier.subtree_workers(c);
-                let l = locality_score(&pack, members);
-                let cap = 2 * members.len() as u64;
-                let b = balance_score(*self.child_load.get(&c).unwrap_or(&0), cap);
-                self.score_scratch.push((l, b));
-            }
+        if !ctx.world.hier.children[self.idx].is_empty() {
+            let (chosen, scored) = self.placer.choose_child(&ctx.world.hier, self.idx, &pack);
             ctx.charge(
-                ctx.sim.cost.sc_score_base
-                    + ctx.sim.cost.sc_score_per_child * n_children as u64,
+                ctx.sim.cost.sc_score_base + ctx.sim.cost.sc_score_per_child * scored,
             );
-            let chosen = ctx.world.hier.children[self.idx][pick_best(p_loc, &self.score_scratch)];
-            *self.child_load.entry(chosen).or_insert(0) += 1; // eager estimate
             ctx.world.tasks.get_mut(task).pack = pack;
             let to = self.sched_core(ctx, chosen);
             self.send_routed(ctx, to, Msg::ScheduleDown { task });
             return;
         }
         // Leaf: pick a worker.
-        let n_workers = ctx.world.hier.leaf_workers[self.idx].len();
-        assert!(n_workers > 0, "leaf scheduler {} has no workers", self.idx);
-        self.score_scratch.clear();
-        for &w in &ctx.world.hier.leaf_workers[self.idx] {
-            let l = locality_score(&pack, std::slice::from_ref(&w));
-            let b = balance_score(*self.worker_load.get(&w.0).unwrap_or(&0), 2);
-            self.score_scratch.push((l, b));
-        }
-        ctx.charge(
-            ctx.sim.cost.sc_score_base + ctx.sim.cost.sc_score_per_child * n_workers as u64,
+        assert!(
+            !ctx.world.hier.leaf_workers[self.idx].is_empty(),
+            "leaf scheduler {} has no workers",
+            self.idx
         );
-        let w = ctx.world.hier.leaf_workers[self.idx][pick_best(p_loc, &self.score_scratch)];
-        *self.worker_load.entry(w.0).or_insert(0) += 1; // eager estimate
+        let (w, scored) = self.placer.choose_worker(&ctx.world.hier, self.idx, &pack);
+        ctx.charge(ctx.sim.cost.sc_score_base + ctx.sim.cost.sc_score_per_child * scored);
         {
             let entry = ctx.world.tasks.get_mut(task);
             entry.worker = Some(w);
@@ -679,15 +669,20 @@ impl SchedLogic {
         let resp = ctx.world.tasks.get(task).resp;
         if resp != self.idx {
             // Leaf on the worker's path: refresh the local load estimate,
-            // then forward to the responsible scheduler.
-            if let Some(w) = ctx.world.tasks.get(task).worker {
-                if let Some(l) = self.worker_load.get_mut(&w.0) {
-                    *l = l.saturating_sub(1);
-                }
-                self.report_up(ctx);
+            // then forward to the responsible scheduler. The forward goes
+            // out *before* the load report so upstream schedulers apply
+            // their eager-estimate decay first and the authoritative
+            // report (which already reflects this completion) lands last —
+            // decay-then-overwrite never double-counts.
+            let known_worker = ctx.world.tasks.get(task).worker;
+            if let Some(w) = known_worker {
+                self.placer.worker_done(w);
             }
             let to = self.sched_core(ctx, resp);
             self.send_routed(ctx, to, Msg::TaskDone { task });
+            if known_worker.is_some() {
+                self.report_up(ctx);
+            }
             return;
         }
         ctx.charge(ctx.sim.cost.sc_task_done);
@@ -696,10 +691,18 @@ impl SchedLogic {
             let entry = ctx.world.tasks.get_mut(task);
             entry.state = TaskState::Done;
             entry.done_at = now;
-            if let Some(w) = entry.worker {
-                if let Some(l) = self.worker_load.get_mut(&w.0) {
-                    *l = l.saturating_sub(1);
-                }
+        }
+        // Undo the eager load estimate from `place()`: at a leaf the unit
+        // went to the worker itself; at an inner scheduler it went to the
+        // child subtree the task descended into. (The decay mirrors the
+        // worker-level refresh — previously inner schedulers leaked their
+        // eager increments until the next child load report, so estimates
+        // drifted upward whenever reports were throttled.)
+        if let Some(w) = ctx.world.tasks.get(task).worker {
+            if ctx.world.hier.is_leaf(self.idx) {
+                self.placer.worker_done(w);
+            } else {
+                self.placer.child_done(&ctx.world.hier, self.idx, w);
             }
         }
         ctx.world.gstats.tasks_completed += 1;
@@ -833,21 +836,17 @@ impl SchedLogic {
     fn on_load_report(&mut self, ctx: &mut Ctx<'_>, from: CoreId, load: u64) {
         ctx.charge(ctx.sim.cost.sc_load_report);
         match ctx.world.hier.sched_idx(from) {
-            Some(s) => {
-                self.child_load.insert(s, load);
-            }
-            None => {
-                self.worker_load.insert(from.0, load);
-            }
+            Some(s) => self.placer.child_report(s, load),
+            None => self.placer.worker_report(from, load),
         }
         self.report_up(ctx);
     }
 
     /// Re-aggregate and report upstream when the load changed by at least
-    /// the configured threshold (paper V-C).
+    /// the configured threshold (paper V-C). The aggregate is the
+    /// tracker's incrementally maintained total — O(1), no table scan.
     fn report_up(&mut self, ctx: &mut Ctx<'_>) {
-        let my_load: u64 =
-            self.worker_load.values().sum::<u64>() + self.child_load.values().sum::<u64>();
+        let my_load = self.placer.total();
         let thr = ctx.world.cfg.load_report_threshold;
         if my_load.abs_diff(self.last_reported) >= thr {
             if let Some(p) = ctx.world.hier.parent[self.idx] {
@@ -895,6 +894,10 @@ impl SchedLogic {
 }
 
 impl CoreLogic for SchedLogic {
+    fn as_any(&self) -> Option<&dyn std::any::Any> {
+        Some(self)
+    }
+
     fn on_event(&mut self, ctx: &mut Ctx<'_>, ev: Event) {
         match ev {
             Event::Boot => {}
@@ -905,6 +908,19 @@ impl CoreLogic for SchedLogic {
                     // Intermediate tree hop: forward towards the final
                     // destination. The payload moves — no envelope, no
                     // allocation.
+                    //
+                    // A forwarded TaskDone always climbs from the worker's
+                    // leaf towards the responsible scheduler — the reverse
+                    // of the ScheduleDown descent — so this scheduler
+                    // eagerly bumped the child subtree the task went into
+                    // and must decay it here, or mid-level estimates leak
+                    // until the next child load report (see
+                    // `Placer::child_done`).
+                    if let Msg::TaskDone { task } = &msg {
+                        if let Some(w) = ctx.world.tasks.get(*task).worker {
+                            self.placer.child_done(&ctx.world.hier, self.idx, w);
+                        }
+                    }
                     let next = ctx.world.hier.route_next(self.idx, dst);
                     ctx.send_via(next, dst, msg);
                 }

@@ -1,4 +1,6 @@
-//! Locality / load-balance scoring (paper V-E, evaluated in VI-D).
+//! Locality / load-balance scoring primitives (paper V-E, evaluated in
+//! VI-D) — the arithmetic behind the `LocalityBalance` placement policy
+//! in [`crate::sched::policy`].
 //!
 //! When a dependency-free task is placed, each candidate subtree (child
 //! scheduler, or worker at leaf level) gets a locality score `L` — how many

@@ -249,6 +249,12 @@ impl<'a> Ctx<'a> {
 /// Logic driving one simulated core.
 pub trait CoreLogic {
     fn on_event(&mut self, ctx: &mut Ctx<'_>, ev: Event);
+
+    /// Downcast hook for diagnostics and tests (e.g. inspecting a
+    /// scheduler's load estimates after a run). Default: not downcastable.
+    fn as_any(&self) -> Option<&dyn std::any::Any> {
+        None
+    }
 }
 
 /// The assembled simulator: state + world + per-core logic.
@@ -269,6 +275,12 @@ impl Engine {
 
     pub fn set_logic(&mut self, core: CoreId, l: Box<dyn CoreLogic>) {
         self.logic[core.idx()] = Some(l);
+    }
+
+    /// Borrow a core's logic, if any (diagnostics/tests; see
+    /// [`CoreLogic::as_any`] for downcasting to a concrete logic type).
+    pub fn logic_of(&self, core: CoreId) -> Option<&dyn CoreLogic> {
+        self.logic.get(core.idx()).and_then(|l| l.as_deref())
     }
 
     /// Schedule [`Event::Boot`] for every core with logic at t=0.

@@ -1,0 +1,119 @@
+//! Regression gate for eager load-estimate accounting (paper V-C/V-E).
+//!
+//! `place()` bumps an eager load estimate for the chosen child subtree /
+//! worker. Those bumps must be undone when tasks complete (`TaskDone`
+//! decay at the responsible scheduler, worker refresh at the leaf) — not
+//! only overwritten by upstream load reports. Before the policy-layer
+//! refactor, an inner scheduler never decayed its child estimates, so
+//! with throttled reports they drifted upward forever and placement
+//! slowly starved the "loaded" subtrees.
+//!
+//! The test disables load reports entirely (threshold = u64::MAX): after
+//! a run completes, every scheduler's estimates must have drained back to
+//! exactly zero through the decay path alone — on a 2-level hierarchy the
+//! decay fully mirrors the bumps (top: child slots, leaves: worker slots).
+
+use myrmics::apps::synthetic::{independent, SynthParams};
+use myrmics::config::{HierarchySpec, PlatformConfig};
+use myrmics::platform::Platform;
+use myrmics::sched::scheduler::SchedLogic;
+use myrmics::sim::engine::Engine;
+
+/// Downcast a scheduler core's logic and return its load-estimate state
+/// as (total, child_loads, worker_loads).
+fn sched_loads(eng: &Engine, idx: usize) -> (u64, Vec<u64>, Vec<u64>) {
+    let core = eng.world.hier.sched_core(idx);
+    let logic = eng.logic_of(core).expect("scheduler core has logic");
+    let sched = logic
+        .as_any()
+        .and_then(|a| a.downcast_ref::<SchedLogic>())
+        .expect("scheduler core logic is SchedLogic");
+    let loads = &sched.placer().loads;
+    (loads.total(), loads.child_loads().to_vec(), loads.worker_loads().to_vec())
+}
+
+#[test]
+fn estimates_drain_to_zero_without_load_reports() {
+    let (reg, main) = independent();
+    let mut cfg = PlatformConfig::new(16, HierarchySpec::two_level(4));
+    // No load reports ever: the decay path must balance the books alone.
+    cfg.load_report_threshold = u64::MAX;
+    let mut plat = Platform::build_with(cfg, reg, main, |w| {
+        w.app = Some(Box::new(SynthParams {
+            n_tasks: 48,
+            task_cycles: 100_000,
+            ..Default::default()
+        }));
+    });
+    plat.run(Some(1 << 44));
+    let g = &plat.world().gstats;
+    assert_eq!(g.tasks_completed, 49, "main + 48 children must complete");
+
+    let n_scheds = plat.eng.world.hier.n_scheds;
+    for s in 0..n_scheds {
+        let (total, children, workers) = sched_loads(&plat.eng, s);
+        assert_eq!(
+            total, 0,
+            "scheduler {s} leaked load estimates: total {total}, \
+             children {children:?}, workers {workers:?}"
+        );
+        assert!(children.iter().all(|&l| l == 0), "scheduler {s} child drift: {children:?}");
+        assert!(workers.iter().all(|&l| l == 0), "scheduler {s} worker drift: {workers:?}");
+    }
+}
+
+/// Three-level hierarchy, reports disabled: `TaskDone` travels worker →
+/// leaf → mid → top, so the mid-level schedulers only see it as a
+/// *forwarded* hop — the forward-path decay must balance their books too
+/// (before the fix, mid-level estimates leaked every placement forever).
+#[test]
+fn estimates_drain_on_three_levels_without_reports() {
+    let (reg, main) = independent();
+    let mut cfg = PlatformConfig::new(16, HierarchySpec::multi_level(3, 2));
+    cfg.load_report_threshold = u64::MAX;
+    let mut plat = Platform::build_with(cfg, reg, main, |w| {
+        w.app = Some(Box::new(SynthParams {
+            n_tasks: 40,
+            task_cycles: 100_000,
+            ..Default::default()
+        }));
+    });
+    plat.run(Some(1 << 44));
+    assert_eq!(plat.world().gstats.tasks_completed, 41);
+    for s in 0..plat.eng.world.hier.n_scheds {
+        let (total, children, workers) = sched_loads(&plat.eng, s);
+        assert_eq!(
+            total, 0,
+            "scheduler {s} leaked load estimates: total {total}, \
+             children {children:?}, workers {workers:?}"
+        );
+    }
+}
+
+/// Same shape with reports enabled (default threshold): the combination
+/// of decays and authoritative reports must also leave no residue once
+/// everything has completed and the queue has quiesced.
+#[test]
+fn estimates_stay_bounded_with_reports() {
+    let (reg, main) = independent();
+    let cfg = PlatformConfig::new(16, HierarchySpec::two_level(4));
+    let mut plat = Platform::build_with(cfg, reg, main, |w| {
+        w.app = Some(Box::new(SynthParams {
+            n_tasks: 48,
+            task_cycles: 100_000,
+            ..Default::default()
+        }));
+    });
+    plat.run(Some(1 << 44));
+    // In-flight load reports may still be queued when the run cuts off at
+    // completion, so totals need not be exactly zero everywhere — but no
+    // estimate may exceed what was ever simultaneously outstanding, and
+    // the decay path must keep the top's view near-drained (the old drift
+    // bug left it at ~n_tasks here).
+    let (total, children, workers) = sched_loads(&plat.eng, 0);
+    assert!(
+        total <= 4,
+        "top-level estimates did not drain: total {total}, \
+         children {children:?}, workers {workers:?}"
+    );
+}
