@@ -20,9 +20,10 @@ use std::time::Instant;
 
 use myrmics::apps::jacobi;
 use myrmics::apps::synthetic::{empty_chain, hier_empty, independent, SynthParams};
+use myrmics::apps::workload_api::workload;
 use myrmics::config::{HierarchySpec, PlatformConfig, PolicyCfg};
 use myrmics::dep::node::DepNode;
-use myrmics::experiments::bench::{run_myrmics, BenchKind, Scaling};
+use myrmics::experiments::bench::{run_myrmics, Scaling};
 use myrmics::ids::{NodeId, RegionId, TaskId};
 use myrmics::memory::trie::Trie;
 use myrmics::mpi::runner::build_mpi;
@@ -328,7 +329,7 @@ fn main() {
     if !smoke {
         println!("\n== end-to-end benchmark sims (host wall time) ==");
         for (bench, w) in
-            [(BenchKind::Jacobi, 128), (BenchKind::Bitonic, 128), (BenchKind::Kmeans, 128)]
+            [(workload("jacobi"), 128), (workload("bitonic"), 128), (workload("kmeans"), 128)]
         {
             let start = Instant::now();
             let (t, eng) = run_myrmics(bench, w, Scaling::Strong, true, None);

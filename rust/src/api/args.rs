@@ -1,0 +1,270 @@
+//! Typed task-argument extraction.
+//!
+//! The wire format of a spawned task is the paper's Fig 4 surface: a
+//! function-table index plus a flat `[TaskArg]` list of flagged
+//! `(node, value)` pairs. Task bodies, however, should not be indexing
+//! that list positionally (`val_arg(3)`) and keeping the spawn-site order
+//! in sync by hand — that is the closed-world, error-prone part of the
+//! original API. Instead a body unpacks its arguments once, as a typed
+//! tuple:
+//!
+//! ```ignore
+//! let (r, halo, iter): (RegionArg, ObjArg, u64) = ctx.args();
+//! ```
+//!
+//! Each tuple element consumes one (or more, for [`Rest`]) wire
+//! arguments, in order. In debug builds every element checks the
+//! argument's `TYPE_*` flag bits (an `ObjArg` must be a non-SAFE object
+//! argument, a `u64` must be SAFE, …) and the tuple as a whole checks
+//! arity — a spawn site and a body that disagree about the argument list
+//! panic at the first execution instead of silently mis-reading ids. In
+//! release builds extraction compiles down to plain indexed reads — with
+//! one carve-out: [`Rest`] collects its tail into a `Vec`, so it
+//! allocates once per body invocation that uses it (task bodies run once
+//! per dispatch and already allocate freely; the no-allocation invariant
+//! covers the simulator's per-event paths and the spawn path, not body
+//! internals).
+//!
+//! Element types:
+//!
+//! * [`ObjArg`] (= [`ObjectId`]) — a non-SAFE object argument, any access
+//!   mode.
+//! * [`RegionArg`] (= [`RegionId`]) — a `TYPE_REGION_ARG` argument.
+//! * `u64` / `usize` — a SAFE by-value scalar.
+//! * [`OptObj`] — either an object argument or the SAFE sentinel `0`
+//!   ("no object"), and also tolerates the argument being absent
+//!   entirely (a trailing optional). Used for e.g. a stencil neighbour
+//!   that the first/last band does not have.
+//! * `Option<T>` — `None` if the argument list ended, otherwise `T`.
+//! * [`Rest<T>`] — all remaining arguments, each extracted as `T`. Must
+//!   be the last tuple element.
+
+use crate::ids::{ObjectId, RegionId};
+use crate::task::descriptor::TaskArg;
+
+/// Typed view of a non-SAFE object argument.
+pub type ObjArg = ObjectId;
+/// Typed view of a region argument.
+pub type RegionArg = RegionId;
+
+/// One tuple element: consume argument(s) at `*cursor`, advancing it.
+pub trait FromArg: Sized {
+    fn from_arg(args: &[TaskArg], cursor: &mut usize) -> Self;
+}
+
+fn take<'a>(args: &'a [TaskArg], cursor: &mut usize) -> &'a TaskArg {
+    let a = &args[*cursor];
+    *cursor += 1;
+    a
+}
+
+impl FromArg for ObjectId {
+    fn from_arg(args: &[TaskArg], cursor: &mut usize) -> Self {
+        let i = *cursor;
+        let a = take(args, cursor);
+        debug_assert!(
+            !a.is_safe() && !a.is_region() && a.node.is_some(),
+            "arg {i} is not an object argument (flags {:#x})",
+            a.flags
+        );
+        ObjectId(a.value)
+    }
+}
+
+impl FromArg for RegionId {
+    fn from_arg(args: &[TaskArg], cursor: &mut usize) -> Self {
+        let i = *cursor;
+        let a = take(args, cursor);
+        debug_assert!(a.is_region(), "arg {i} is not a region argument (flags {:#x})", a.flags);
+        RegionId(a.value)
+    }
+}
+
+impl FromArg for u64 {
+    fn from_arg(args: &[TaskArg], cursor: &mut usize) -> Self {
+        let i = *cursor;
+        let a = take(args, cursor);
+        debug_assert!(
+            a.is_safe(),
+            "arg {i} is not a SAFE by-value argument (flags {:#x})",
+            a.flags
+        );
+        a.value
+    }
+}
+
+impl FromArg for usize {
+    fn from_arg(args: &[TaskArg], cursor: &mut usize) -> Self {
+        u64::from_arg(args, cursor) as usize
+    }
+}
+
+/// An object argument that may be "none": the spawn site passed either a
+/// real object or the SAFE sentinel `0` (see
+/// [`SpawnBuilder::obj_opt`](crate::api::spawn::SpawnBuilder::obj_opt)),
+/// or omitted the trailing argument entirely.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub struct OptObj(pub Option<ObjectId>);
+
+impl OptObj {
+    pub fn get(self) -> Option<ObjectId> {
+        self.0
+    }
+
+    pub fn is_none(self) -> bool {
+        self.0.is_none()
+    }
+}
+
+impl FromArg for OptObj {
+    fn from_arg(args: &[TaskArg], cursor: &mut usize) -> Self {
+        if *cursor >= args.len() {
+            return OptObj(None);
+        }
+        let i = *cursor;
+        let a = take(args, cursor);
+        if a.is_safe() {
+            debug_assert_eq!(a.value, 0, "arg {i}: SAFE optional-object sentinel must be 0");
+            OptObj(None)
+        } else {
+            debug_assert!(
+                !a.is_region() && a.node.is_some(),
+                "arg {i} is neither an object nor the SAFE 0 sentinel (flags {:#x})",
+                a.flags
+            );
+            OptObj(Some(ObjectId(a.value)))
+        }
+    }
+}
+
+impl<T: FromArg> FromArg for Option<T> {
+    fn from_arg(args: &[TaskArg], cursor: &mut usize) -> Self {
+        if *cursor >= args.len() {
+            None
+        } else {
+            Some(T::from_arg(args, cursor))
+        }
+    }
+}
+
+/// All remaining arguments, each extracted as `T`. Must be the last
+/// tuple element (anything after it fails the arity check).
+#[derive(Clone, Debug)]
+pub struct Rest<T>(pub Vec<T>);
+
+impl<T> std::ops::Deref for Rest<T> {
+    type Target = [T];
+    fn deref(&self) -> &[T] {
+        &self.0
+    }
+}
+
+impl<T: FromArg> FromArg for Rest<T> {
+    fn from_arg(args: &[TaskArg], cursor: &mut usize) -> Self {
+        let mut out = Vec::with_capacity(args.len() - *cursor);
+        while *cursor < args.len() {
+            out.push(T::from_arg(args, cursor));
+        }
+        Rest(out)
+    }
+}
+
+/// A full argument tuple. Implemented for tuples of [`FromArg`] elements
+/// up to arity 10; extraction is positional and, in debug builds, checks
+/// that the tuple consumed the argument list exactly.
+pub trait FromTaskArgs: Sized {
+    fn from_task_args(args: &[TaskArg]) -> Self;
+}
+
+macro_rules! impl_from_task_args {
+    ($($t:ident),+) => {
+        impl<$($t: FromArg),+> FromTaskArgs for ($($t,)+) {
+            fn from_task_args(args: &[TaskArg]) -> Self {
+                let mut cursor = 0usize;
+                let out = ($($t::from_arg(args, &mut cursor),)+);
+                debug_assert_eq!(
+                    cursor,
+                    args.len(),
+                    "task body extracted {cursor} of {} wire arguments",
+                    args.len()
+                );
+                out
+            }
+        }
+    };
+}
+
+impl_from_task_args!(A);
+impl_from_task_args!(A, B);
+impl_from_task_args!(A, B, C);
+impl_from_task_args!(A, B, C, D);
+impl_from_task_args!(A, B, C, D, E);
+impl_from_task_args!(A, B, C, D, E, F);
+impl_from_task_args!(A, B, C, D, E, F, G);
+impl_from_task_args!(A, B, C, D, E, F, G, H);
+impl_from_task_args!(A, B, C, D, E, F, G, H, I);
+impl_from_task_args!(A, B, C, D, E, F, G, H, I, J);
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn extracts_mixed_tuple() {
+        let args = vec![
+            TaskArg::region_inout(RegionId(3)),
+            TaskArg::obj_in(ObjectId(7)),
+            TaskArg::val(42),
+        ];
+        let (r, o, v): (RegionArg, ObjArg, u64) = FromTaskArgs::from_task_args(&args);
+        assert_eq!(r, RegionId(3));
+        assert_eq!(o, ObjectId(7));
+        assert_eq!(v, 42);
+    }
+
+    #[test]
+    fn opt_obj_accepts_object_sentinel_and_absent() {
+        let args = vec![TaskArg::obj_in(ObjectId(9)), TaskArg::val(0)];
+        let (a, b, c): (OptObj, OptObj, OptObj) = FromTaskArgs::from_task_args(&args);
+        assert_eq!(a.get(), Some(ObjectId(9)));
+        assert_eq!(b.get(), None);
+        assert_eq!(c.get(), None);
+    }
+
+    #[test]
+    fn rest_collects_tail() {
+        let args = vec![
+            TaskArg::val(1),
+            TaskArg::obj_in(ObjectId(4)),
+            TaskArg::obj_in(ObjectId(5)),
+            TaskArg::obj_in(ObjectId(6)),
+        ];
+        let (v, rest): (u64, Rest<ObjArg>) = FromTaskArgs::from_task_args(&args);
+        assert_eq!(v, 1);
+        assert_eq!(rest.0, vec![ObjectId(4), ObjectId(5), ObjectId(6)]);
+    }
+
+    #[test]
+    fn trailing_option_is_none_when_absent() {
+        let args = vec![TaskArg::val(8)];
+        let (v, tail): (u64, Option<ObjArg>) = FromTaskArgs::from_task_args(&args);
+        assert_eq!(v, 8);
+        assert!(tail.is_none());
+    }
+
+    #[test]
+    #[cfg_attr(not(debug_assertions), ignore = "debug-only check")]
+    #[should_panic(expected = "wire arguments")]
+    fn arity_mismatch_panics_in_debug() {
+        let args = vec![TaskArg::val(1), TaskArg::val(2), TaskArg::val(3)];
+        let _: (u64, u64) = FromTaskArgs::from_task_args(&args);
+    }
+
+    #[test]
+    #[cfg_attr(not(debug_assertions), ignore = "debug-only check")]
+    #[should_panic(expected = "not a region argument")]
+    fn flag_mismatch_panics_in_debug() {
+        let args = vec![TaskArg::obj_in(ObjectId(1))];
+        let _: (RegionArg,) = FromTaskArgs::from_task_args(&args);
+    }
+}

@@ -16,11 +16,35 @@
 //! `sys_wait` splits a body into phases: the body is re-invoked with
 //! `phase() + 1` once the waited subtrees quiesce, so code after a wait
 //! sees data its children produced.
+//!
+//! # Typed layer over the Fig-4 wire format
+//!
+//! The paper's `sys_spawn(idx, args, types)` names tasks by a raw
+//! function-table index and passes untyped flagged argument arrays. That
+//! wire format is preserved unchanged ([`TaskDesc`] `{func, args}`), but
+//! application code never touches it directly:
+//!
+//! * spawning goes through the chained [`SpawnBuilder`] —
+//!   `ctx.spawn_task(f).reg_inout(r).notransfer().val(i).submit()` —
+//!   which stages arguments in a pooled scratch buffer and lowers to a
+//!   byte-identical `TaskDesc` on submit;
+//! * bodies unpack their arguments with the typed extractor —
+//!   `let (r, o, i): (RegionArg, ObjArg, u64) = ctx.args();` — which
+//!   flag/arity-checks in debug builds (see [`crate::api::args`]);
+//! * waiting goes through [`WaitBuilder`] (`ctx.wait_on()`), which only
+//!   admits dependency nodes, never SAFE by-value scalars.
+//!
+//! See `docs/app-api.md` for the full tour and how to add a workload.
 
+use std::sync::Arc;
+
+use crate::api::args::FromTaskArgs;
+use crate::api::spawn::{SpawnBuilder, WaitBuilder};
 use crate::ids::{Cycles, NodeId, ObjectId, RegionId, TaskId};
 use crate::noc::msg::MemOpKind;
 use crate::platform::World;
 use crate::task::descriptor::{Access, TaskArg, TaskDesc};
+use crate::task::registry::TaskRef;
 
 /// One step of a task's timing replay.
 #[derive(Clone, Debug)]
@@ -42,8 +66,13 @@ pub struct TaskCtx<'w> {
     pub task: TaskId,
     pub worker: crate::ids::CoreId,
     phase: u32,
-    args: Vec<TaskArg>,
+    /// The task's own descriptor (shared with the task table — no copy).
+    desc: Arc<TaskDesc>,
     ops: Vec<TaskOp>,
+    /// Pooled assembly buffer for [`SpawnBuilder`]: grows to the widest
+    /// argument list once, then spawning is allocation-free up to the
+    /// final exact-sized `TaskDesc` vector.
+    pub(crate) spawn_scratch: Vec<TaskArg>,
 }
 
 impl<'w> TaskCtx<'w> {
@@ -52,9 +81,9 @@ impl<'w> TaskCtx<'w> {
         task: TaskId,
         worker: crate::ids::CoreId,
         phase: u32,
-        args: Vec<TaskArg>,
+        desc: Arc<TaskDesc>,
     ) -> Self {
-        TaskCtx { world, task, worker, phase, args, ops: Vec::new() }
+        TaskCtx { world, task, worker, phase, desc, ops: Vec::new(), spawn_scratch: Vec::new() }
     }
 
     pub fn into_ops(self) -> Vec<TaskOp> {
@@ -68,30 +97,21 @@ impl<'w> TaskCtx<'w> {
 
     // ------------------------------------------------------------ arguments
 
+    /// Unpack the task's arguments as a typed tuple (see
+    /// [`crate::api::args`]). Debug builds check flags and arity against
+    /// the wire descriptor; release builds are plain reads.
+    pub fn args<T: FromTaskArgs>(&self) -> T {
+        T::from_task_args(&self.desc.args)
+    }
+
+    /// Wire-level argument count (typed bodies rarely need this).
     pub fn n_args(&self) -> usize {
-        self.args.len()
+        self.desc.args.len()
     }
 
+    /// Wire-level view of one argument (typed bodies rarely need this).
     pub fn arg(&self, i: usize) -> &TaskArg {
-        &self.args[i]
-    }
-
-    /// Value of a SAFE by-value argument.
-    pub fn val_arg(&self, i: usize) -> u64 {
-        self.args[i].value
-    }
-
-    pub fn region_arg(&self, i: usize) -> RegionId {
-        debug_assert!(self.args[i].is_region(), "arg {i} is not a region");
-        RegionId(self.args[i].value)
-    }
-
-    pub fn obj_arg(&self, i: usize) -> ObjectId {
-        debug_assert!(
-            !self.args[i].is_region() && self.args[i].node.is_some(),
-            "arg {i} is not an object"
-        );
-        ObjectId(self.args[i].value)
+        &self.desc.args[i]
     }
 
     // ---------------------------------------------------- memory management
@@ -156,20 +176,45 @@ impl<'w> TaskCtx<'w> {
 
     // ------------------------------------------------------ task management
 
-    /// `sys_spawn(idx, args, types)`.
-    pub fn spawn(&mut self, func: usize, args: Vec<TaskArg>) {
-        self.ops.push(TaskOp::Spawn(TaskDesc::new(func, args)));
+    /// `sys_spawn`, typed: start a chained [`SpawnBuilder`] for task `f`.
+    /// Chain argument methods in wire order, then call `submit()`.
+    pub fn spawn_task(&mut self, f: TaskRef) -> SpawnBuilder<'_, 'w> {
+        SpawnBuilder::new(self, f)
     }
 
-    /// `sys_wait(args, types)`: suspend until the listed arguments are
-    /// again exclusively available to this task. The body should return
-    /// right after calling this; it will be re-invoked with `phase()+1`.
+    /// `sys_wait`, typed: start a chained [`WaitBuilder`]. The body should
+    /// return right after the builder's `wait()`; it will be re-invoked
+    /// with `phase() + 1`.
+    pub fn wait_on(&mut self) -> WaitBuilder<'_, 'w> {
+        WaitBuilder::new(self)
+    }
+
+    /// Wire-level `sys_wait(args, types)`: suspend until the listed
+    /// arguments are again exclusively available to this task.
+    ///
+    /// Contract: every entry must be a dependency-carrying argument. SAFE
+    /// by-value arguments have no dependency node and cannot be waited on
+    /// — passing one is a bug (debug builds assert; release builds skip
+    /// it). Prefer [`TaskCtx::wait_on`], which makes the mistake
+    /// unrepresentable.
     pub fn wait(&mut self, args: &[TaskArg]) {
+        debug_assert!(
+            args.iter().all(|a| !a.is_safe()),
+            "SAFE by-value argument in a sys_wait list (no dependency node to wait on)"
+        );
         let nodes: Vec<(NodeId, Access)> = args
             .iter()
             .filter(|a| !a.is_safe())
             .map(|a| (a.node.expect("wait arg without node"), a.access()))
             .collect();
+        self.ops.push(TaskOp::Wait(nodes));
+    }
+
+    pub(crate) fn push_spawn(&mut self, desc: TaskDesc) {
+        self.ops.push(TaskOp::Spawn(desc));
+    }
+
+    pub(crate) fn push_wait(&mut self, nodes: Vec<(NodeId, Access)>) {
         self.ops.push(TaskOp::Wait(nodes));
     }
 
@@ -213,6 +258,7 @@ mod tests {
     use super::*;
     use crate::config::PlatformConfig;
     use crate::task::descriptor::TaskDesc;
+    use crate::task::registry::TaskRef;
 
     fn world() -> World {
         World::new(PlatformConfig::hierarchical(32))
@@ -220,7 +266,8 @@ mod tests {
 
     fn mkctx(w: &mut World) -> TaskCtx<'_> {
         let t = w.tasks.create(TaskDesc::new(0, vec![]), None, 0, 0);
-        TaskCtx::new(w, t, crate::ids::CoreId(1), 0, vec![])
+        let desc = w.tasks.get(t).desc.clone();
+        TaskCtx::new(w, t, crate::ids::CoreId(1), 0, desc)
     }
 
     #[test]
@@ -232,7 +279,7 @@ mod tests {
         let objs = ctx.balloc(64, r, 10);
         ctx.free(o);
         ctx.compute(1000);
-        ctx.spawn(0, vec![TaskArg::obj_in(objs[0])]);
+        ctx.spawn_task(TaskRef::from_index(0)).obj_in(objs[0]).submit();
         let ops = ctx.into_ops();
         assert_eq!(ops.len(), 6);
         assert!(matches!(ops[0], TaskOp::Rpc { op: MemOpKind::Ralloc, .. }));
@@ -260,19 +307,31 @@ mod tests {
     }
 
     #[test]
-    fn wait_collects_dep_nodes_only() {
+    fn wait_builder_collects_dep_nodes() {
+        let mut w = world();
+        let mut ctx = mkctx(&mut w);
+        let r = ctx.ralloc(RegionId::ROOT, 0);
+        let o = ctx.alloc(64, r);
+        ctx.wait_on().reg_inout(r).obj_in(o).wait();
+        let ops = ctx.into_ops();
+        match &ops[2] {
+            TaskOp::Wait(nodes) => {
+                assert_eq!(nodes.len(), 2);
+                assert_eq!(nodes[0], (NodeId::Region(r), Access::Write));
+                assert_eq!(nodes[1], (NodeId::Object(o), Access::Read));
+            }
+            other => panic!("expected Wait, got {other:?}"),
+        }
+    }
+
+    #[test]
+    #[cfg_attr(not(debug_assertions), ignore = "debug-only check")]
+    #[should_panic(expected = "SAFE by-value argument in a sys_wait list")]
+    fn slice_wait_with_safe_arg_panics_in_debug() {
         let mut w = world();
         let mut ctx = mkctx(&mut w);
         let r = ctx.ralloc(RegionId::ROOT, 0);
         ctx.wait(&[TaskArg::region_inout(r), TaskArg::val(7)]);
-        let ops = ctx.into_ops();
-        match &ops[1] {
-            TaskOp::Wait(nodes) => {
-                assert_eq!(nodes.len(), 1);
-                assert_eq!(nodes[0], (NodeId::Region(r), Access::Write));
-            }
-            other => panic!("expected Wait, got {other:?}"),
-        }
     }
 
     #[test]

@@ -1,2 +1,5 @@
-//! The Myrmics application API (paper Fig 4).
+//! The Myrmics application API (paper Fig 4): the wire-faithful task
+//! context plus the typed spawn/args layer that lowers to it.
+pub mod args;
 pub mod ctx;
+pub mod spawn;

@@ -1,0 +1,175 @@
+//! Typed spawn and wait builders.
+//!
+//! `sys_spawn` on the wire is untyped (paper Fig 4: function-table index
+//! plus flagged `(args, types)` arrays); the builder is the typed layer
+//! that *lowers to* that format without exposing it. A task body spawns a
+//! child through a chained builder:
+//!
+//! ```ignore
+//! ctx.spawn_task(band_task)
+//!     .reg_inout(group).notransfer()
+//!     .obj_in(halo)
+//!     .val(iter)
+//!     .submit();
+//! ```
+//!
+//! Every builder method appends exactly the [`TaskArg`] the corresponding
+//! wire constructor would have produced (`obj_in(o)` ==
+//! `TaskArg::obj_in(o)`, bit for bit — pinned by `tests/api_roundtrip.rs`),
+//! so the resulting `TaskDesc` is byte-identical to a hand-assembled one.
+//! Arguments are staged in a scratch buffer pooled inside the
+//! [`TaskCtx`], so a body spawning many children reallocates nothing in
+//! steady state; `submit` performs the single exact-sized allocation the
+//! wire `TaskDesc` itself owns.
+//!
+//! [`WaitBuilder`] is the `sys_wait` counterpart. Its contract differs
+//! from the raw `TaskCtx::wait` slice API in one important way: SAFE
+//! by-value arguments have no dependency node and therefore *cannot be
+//! waited on* — the builder only offers object/region methods, making the
+//! mistake unrepresentable (the slice API debug-asserts instead).
+
+use crate::ids::{NodeId, ObjectId, RegionId};
+use crate::task::descriptor::{Access, TaskArg, TaskDesc};
+use crate::task::registry::TaskRef;
+
+use super::ctx::TaskCtx;
+
+/// Chained builder for one `sys_spawn`. Created by
+/// [`TaskCtx::spawn_task`]; dropped without [`submit`](Self::submit), it
+/// spawns nothing.
+pub struct SpawnBuilder<'c, 'w> {
+    ctx: &'c mut TaskCtx<'w>,
+    func: usize,
+}
+
+impl<'c, 'w> SpawnBuilder<'c, 'w> {
+    pub(crate) fn new(ctx: &'c mut TaskCtx<'w>, func: TaskRef) -> Self {
+        // A previous builder may have been abandoned mid-chain; its staged
+        // args must not leak into this spawn.
+        ctx.spawn_scratch.clear();
+        SpawnBuilder { ctx, func: func.index() }
+    }
+
+    fn push(self, arg: TaskArg) -> Self {
+        self.ctx.spawn_scratch.push(arg);
+        self
+    }
+
+    /// Object argument, read-only access.
+    pub fn obj_in(self, o: ObjectId) -> Self {
+        self.push(TaskArg::obj_in(o))
+    }
+
+    /// Object argument, write-only access.
+    pub fn obj_out(self, o: ObjectId) -> Self {
+        self.push(TaskArg::obj_out(o))
+    }
+
+    /// Object argument, read-write access.
+    pub fn obj_inout(self, o: ObjectId) -> Self {
+        self.push(TaskArg::obj_inout(o))
+    }
+
+    /// Optional object argument: `Some(o)` is `obj_in(o)`, `None` is the
+    /// SAFE sentinel `0`. The body-side counterpart is
+    /// [`OptObj`](crate::api::args::OptObj).
+    pub fn obj_opt(self, o: Option<ObjectId>) -> Self {
+        match o {
+            Some(o) => self.obj_in(o),
+            None => self.val(0),
+        }
+    }
+
+    /// Region argument, read-only access.
+    pub fn reg_in(self, r: RegionId) -> Self {
+        self.push(TaskArg::region_in(r))
+    }
+
+    /// Region argument, read-write access.
+    pub fn reg_inout(self, r: RegionId) -> Self {
+        self.push(TaskArg::region_inout(r))
+    }
+
+    /// SAFE by-value scalar (no dependency analysis, no transfer).
+    pub fn val(self, v: u64) -> Self {
+        self.push(TaskArg::val(v))
+    }
+
+    /// Mark the *most recently added* argument NOTRANSFER: dependency
+    /// semantics apply but no DMA is performed (paper V-A — tasks that
+    /// only spawn subtasks over a region).
+    pub fn notransfer(self) -> Self {
+        let last = self
+            .ctx
+            .spawn_scratch
+            .last_mut()
+            .expect("notransfer() before any argument");
+        debug_assert!(!last.is_safe(), "notransfer() on a SAFE by-value argument");
+        last.flags |= crate::task::descriptor::TYPE_NOTRANSFER_ARG;
+        self
+    }
+
+    /// Wire-level escape hatch: append a pre-built [`TaskArg`] verbatim.
+    pub fn arg(self, a: TaskArg) -> Self {
+        self.push(a)
+    }
+
+    /// Lower to the Fig-4 wire format and record the spawn. The staged
+    /// arguments become the `TaskDesc`'s exact-sized `args` vector; the
+    /// pooled scratch buffer is retained for the body's next spawn.
+    pub fn submit(self) {
+        let args: Vec<TaskArg> = self.ctx.spawn_scratch.as_slice().to_vec();
+        self.ctx.spawn_scratch.clear();
+        let desc = TaskDesc::new(self.func, args);
+        self.ctx.push_spawn(desc);
+    }
+}
+
+/// Chained builder for one `sys_wait`. Created by [`TaskCtx::wait_on`].
+///
+/// Contract: a wait list names *dependency nodes* (objects or regions)
+/// the suspended task wants exclusive/shared access to again. SAFE
+/// by-value arguments have no node and are not expressible here. The
+/// body should return right after [`wait`](Self::wait); it is re-invoked
+/// with `phase() + 1` once the waited subtrees quiesce.
+pub struct WaitBuilder<'c, 'w> {
+    ctx: &'c mut TaskCtx<'w>,
+    nodes: Vec<(NodeId, Access)>,
+}
+
+impl<'c, 'w> WaitBuilder<'c, 'w> {
+    pub(crate) fn new(ctx: &'c mut TaskCtx<'w>) -> Self {
+        WaitBuilder { ctx, nodes: Vec::new() }
+    }
+
+    fn push(mut self, node: NodeId, access: Access) -> Self {
+        self.nodes.push((node, access));
+        self
+    }
+
+    /// Wait to re-acquire `o` read-write.
+    pub fn obj_inout(self, o: ObjectId) -> Self {
+        self.push(NodeId::Object(o), Access::Write)
+    }
+
+    /// Wait to re-acquire `o` read-only.
+    pub fn obj_in(self, o: ObjectId) -> Self {
+        self.push(NodeId::Object(o), Access::Read)
+    }
+
+    /// Wait to re-acquire region `r` read-write.
+    pub fn reg_inout(self, r: RegionId) -> Self {
+        self.push(NodeId::Region(r), Access::Write)
+    }
+
+    /// Wait to re-acquire region `r` read-only.
+    pub fn reg_in(self, r: RegionId) -> Self {
+        self.push(NodeId::Region(r), Access::Read)
+    }
+
+    /// Record the `sys_wait`. The body should return immediately after.
+    pub fn wait(self) {
+        debug_assert!(!self.nodes.is_empty(), "sys_wait with an empty wait list");
+        self.ctx.push_wait(self.nodes);
+    }
+}

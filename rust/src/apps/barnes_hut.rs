@@ -16,12 +16,18 @@
 //! `sys_wait`s and frees the per-iteration regions. Exercises dynamic
 //! regions, `sys_rfree` of draining subtrees, and wait/resume.
 
+use std::any::Any;
+
+use crate::api::args::{ObjArg, RegionArg, Rest};
 use crate::api::ctx::TaskCtx;
 use crate::apps::workload::{bh_build_cycles, bh_force_cycles};
+use crate::apps::workload_api::{
+    app_state, check_task_counts, groups_for, Scaling, Workload,
+};
 use crate::ids::{ObjectId, RegionId};
 use crate::mpi::rank::MpiOp;
-use crate::task::descriptor::TaskArg;
-use crate::task::registry::Registry;
+use crate::platform::World;
+use crate::task::registry::{Registry, TaskRef};
 
 #[derive(Clone, Debug)]
 pub struct BhParams {
@@ -49,8 +55,16 @@ fn band_group(p: &BhParams, b: usize) -> usize {
     b * p.groups / p.bands
 }
 
-/// Build one iteration's tasks; returns the wait list.
-fn spawn_iteration(ctx: &mut TaskCtx<'_>) -> Vec<TaskArg> {
+/// The iteration spawner's task handles (captured by `bh_main`).
+#[derive(Clone, Copy)]
+struct BhTasks {
+    build: TaskRef,
+    summary: TaskRef,
+    force: TaskRef,
+}
+
+/// Build one iteration's tasks, then `sys_wait` on everything it writes.
+fn spawn_iteration(ctx: &mut TaskCtx<'_>, tasks: BhTasks) {
     let (p, bodies, band_sizes, group_regions) = {
         let st = ctx.world.app_ref::<BhState>();
         (st.p.clone(), st.bodies.clone(), st.band_sizes.clone(), st.group_regions.clone())
@@ -74,62 +88,67 @@ fn spawn_iteration(ctx: &mut TaskCtx<'_>) -> Vec<TaskArg> {
     }
     // Build tasks: bodies -> octree (tree region inout).
     for b in 0..p.bands {
-        ctx.spawn(
-            0,
-            vec![
-                TaskArg::obj_in(bodies[b]),
-                TaskArg::region_inout(tree_regions[b]),
-                TaskArg::val(b as u64),
-            ],
-        );
+        ctx.spawn_task(tasks.build)
+            .obj_in(bodies[b])
+            .reg_inout(tree_regions[b])
+            .val(b as u64)
+            .submit();
     }
     // Summary task: reads every tree (all-to-all flavour).
-    let mut args = vec![TaskArg::obj_out(summary)];
+    let mut spawn = ctx.spawn_task(tasks.summary).obj_out(summary);
     for b in 0..p.bands {
-        args.push(TaskArg::region_in(tree_regions[b]));
+        spawn = spawn.reg_in(tree_regions[b]);
     }
-    ctx.spawn(1, args);
+    spawn.submit();
     // Force tasks: own tree + ring neighbours + summary; update bodies.
     for b in 0..p.bands {
-        let mut args = vec![
-            TaskArg::obj_inout(bodies[b]),
-            TaskArg::region_in(tree_regions[b]),
-            TaskArg::obj_in(summary),
-            TaskArg::val(b as u64),
-        ];
+        let mut spawn = ctx
+            .spawn_task(tasks.force)
+            .obj_inout(bodies[b])
+            .reg_in(tree_regions[b])
+            .obj_in(summary)
+            .val(b as u64);
         if p.bands > 1 {
-            args.push(TaskArg::region_in(tree_regions[(b + p.bands - 1) % p.bands]));
-            args.push(TaskArg::region_in(tree_regions[(b + 1) % p.bands]));
+            spawn = spawn
+                .reg_in(tree_regions[(b + p.bands - 1) % p.bands])
+                .reg_in(tree_regions[(b + 1) % p.bands]);
         }
-        ctx.spawn(2, args);
+        spawn.submit();
     }
     // Wait on the persistent body objects + the summary: everything the
     // iteration writes.
-    let mut wait_args: Vec<TaskArg> =
-        bodies.iter().map(|&o| TaskArg::obj_inout(o)).collect();
-    wait_args.push(TaskArg::obj_inout(summary));
-    wait_args
+    let mut wait = ctx.wait_on();
+    for &o in &bodies {
+        wait = wait.obj_inout(o);
+    }
+    wait.obj_inout(summary).wait();
 }
 
-pub fn myrmics() -> (Registry, usize) {
-    let mut reg = Registry::new();
-
-    // fn 0: build octree for a band.
-    reg.register("bh_build", |ctx: &mut TaskCtx<'_>| {
-        let b = ctx.val_arg(2) as usize;
+/// Register the Barnes-Hut task bodies; returns the main task's handle.
+fn register_tasks(reg: &mut Registry) -> TaskRef {
+    // Build octree for a band.
+    let build = reg.register("bh_build", |ctx: &mut TaskCtx<'_>| {
+        let (_bodies, _tree, b): (ObjArg, RegionArg, usize) = ctx.args();
         let n = ctx.world.app_ref::<BhState>().band_sizes[b] as u64;
         ctx.compute(bh_build_cycles(n));
     });
 
-    // fn 1: summarize all trees (multipole summary).
-    reg.register("bh_summary", |ctx: &mut TaskCtx<'_>| {
+    // Summarize all trees (multipole summary).
+    let summary = reg.register("bh_summary", |ctx: &mut TaskCtx<'_>| {
+        let (_summary, _trees): (ObjArg, Rest<RegionArg>) = ctx.args();
         let bands = ctx.world.app_ref::<BhState>().p.bands as u64;
         ctx.compute(bands * 3_000);
     });
 
-    // fn 2: force + integrate for a band.
-    reg.register("bh_force", |ctx: &mut TaskCtx<'_>| {
-        let b = ctx.val_arg(3) as usize;
+    // Force + integrate for a band.
+    let force = reg.register("bh_force", |ctx: &mut TaskCtx<'_>| {
+        let (_own, _tree, _summary, b, _neighbours): (
+            ObjArg,
+            RegionArg,
+            ObjArg,
+            usize,
+            Rest<RegionArg>,
+        ) = ctx.args();
         let (n, total) = {
             let st = ctx.world.app_ref::<BhState>();
             (st.band_sizes[b] as u64, st.p.bodies as u64)
@@ -137,8 +156,10 @@ pub fn myrmics() -> (Registry, usize) {
         ctx.compute(bh_force_cycles(n, total));
     });
 
-    // fn 3: main — iteration loop through sys_wait phases.
-    let main = reg.register("bh_main", |ctx: &mut TaskCtx<'_>| {
+    let tasks = BhTasks { build, summary, force };
+
+    // Main — iteration loop through sys_wait phases.
+    reg.register("bh_main", move |ctx: &mut TaskCtx<'_>| {
         let phase = ctx.phase() as usize;
         if phase == 0 {
             let p = ctx.world.app_ref::<BhParams>().clone();
@@ -185,10 +206,15 @@ pub fn myrmics() -> (Registry, usize) {
             (st.iters_done, st.p.iters)
         };
         if iters_done < iters {
-            let wait_args = spawn_iteration(ctx);
-            ctx.wait(&wait_args);
+            spawn_iteration(ctx, tasks);
         }
-    });
+    })
+}
+
+/// Build the Myrmics Barnes-Hut app. Returns (registry, main task).
+pub fn myrmics() -> (Registry, TaskRef) {
+    let mut reg = Registry::new();
+    let main = register_tasks(&mut reg);
     (reg, main)
 }
 
@@ -231,6 +257,58 @@ pub fn mpi_programs(p: &BhParams, ranks: usize) -> Vec<Vec<MpiOp>> {
         .collect()
 }
 
+/// The Barnes-Hut [`Workload`] (paper VI-B sizing).
+pub struct BarnesHut;
+
+const ITERS: usize = 3;
+
+fn sized(workers: usize, scaling: Scaling, groups: usize) -> BhParams {
+    let bands = (2 * workers).max(2);
+    let bodies = if scaling == Scaling::Weak { bands * 4096 } else { 1 << 20 };
+    BhParams { bodies, bands, groups: groups.min(bands), iters: ITERS }
+}
+
+impl Workload for BarnesHut {
+    fn name(&self) -> &'static str {
+        "barnes-hut"
+    }
+
+    /// The paper stops at 128 workers "due to memory constraints".
+    fn valid_workers(&self, workers: usize) -> bool {
+        workers <= 128
+    }
+
+    fn register(&self, reg: &mut Registry) -> TaskRef {
+        register_tasks(reg)
+    }
+
+    fn params_for(&self, workers: usize, scaling: Scaling) -> Box<dyn Any> {
+        Box::new(sized(workers, scaling, groups_for(workers)))
+    }
+
+    fn mpi_programs(&self, ranks: usize, scaling: Scaling) -> Vec<Vec<MpiOp>> {
+        mpi_programs(&sized(ranks, scaling, 1), ranks)
+    }
+
+    fn verify(&self, world: &World) -> Result<(), String> {
+        let st = app_state::<BhState>(world)?;
+        let p = &st.p;
+        // main + iters * (bands builds + 1 summary + bands forces)
+        check_task_counts(world, 1 + (p.iters * (2 * p.bands + 1)) as u64)?;
+        // Every per-iteration tree region was freed: only the root and
+        // the persistent group regions remain.
+        let want_regions = 1 + p.groups;
+        if world.mem.n_regions() != want_regions {
+            return Err(format!(
+                "per-iteration regions leaked: {} regions live, expected {}",
+                world.mem.n_regions(),
+                want_regions
+            ));
+        }
+        Ok(())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -252,6 +330,7 @@ mod tests {
         // All per-iteration tree regions freed (24 would leak over 3
         // iterations otherwise): only root + the 2 group regions remain.
         assert_eq!(w.mem.n_regions(), 1 + 2);
+        BarnesHut.verify(w).unwrap();
     }
 
     #[test]
@@ -264,6 +343,7 @@ mod tests {
         plat.run(Some(1 << 44));
         let w = plat.world();
         assert_eq!(w.gstats.tasks_completed, w.gstats.tasks_spawned);
+        BarnesHut.verify(w).unwrap();
     }
 
     #[test]

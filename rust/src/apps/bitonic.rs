@@ -12,12 +12,18 @@
 //! spawned by main. This is the paper's worst-scaling benchmark: the task
 //! count per pass is high and the schedulers saturate (Fig 9a).
 
+use std::any::Any;
+
+use crate::api::args::{ObjArg, RegionArg};
 use crate::api::ctx::TaskCtx;
 use crate::apps::workload::{merge_cycles, sort_cycles};
+use crate::apps::workload_api::{
+    app_state, check_task_counts, groups_for, Scaling, Workload,
+};
 use crate::ids::{ObjectId, RegionId};
 use crate::mpi::rank::MpiOp;
-use crate::task::descriptor::TaskArg;
-use crate::task::registry::Registry;
+use crate::platform::World;
+use crate::task::registry::{Registry, TaskRef};
 
 #[derive(Clone, Debug)]
 pub struct BitonicParams {
@@ -67,46 +73,46 @@ fn merge_split(a: &mut Vec<u32>, b: &mut Vec<u32>, asc: bool) {
     }
 }
 
-pub fn myrmics() -> (Registry, usize) {
-    let mut reg = Registry::new();
-
-    // fn 0: local sort — inout buf, val i.
-    reg.register("bt_sort", |ctx: &mut TaskCtx<'_>| {
+/// Register the bitonic task bodies; returns the main task's handle.
+/// (Bodies are registered dependencies-first so each spawner can capture
+/// its children's `TaskRef`s.)
+fn register_tasks(reg: &mut Registry) -> TaskRef {
+    // Local sort — inout buf, val i.
+    let sort = reg.register("bt_sort", |ctx: &mut TaskCtx<'_>| {
+        let (buf, _i): (ObjArg, u64) = ctx.args();
         let (m, real) = {
             let st = ctx.world.app_ref::<BitonicState>();
             (st.p.m, st.p.real_data)
         };
         ctx.compute(sort_cycles(m as u64));
         if real {
-            let o = ctx.obj_arg(0);
-            let mut v = ctx.read_u32(o);
+            let mut v = ctx.read_u32(buf);
             v.sort_unstable();
-            ctx.write_u32(o, &v);
+            ctx.write_u32(buf, &v);
         }
     });
 
-    // fn 1: merge-split pair — inout buf_lo, inout buf_hi, val asc.
-    reg.register("bt_pair", |ctx: &mut TaskCtx<'_>| {
+    // Merge-split pair — inout buf_lo, inout buf_hi, val asc.
+    let pair = reg.register("bt_pair", |ctx: &mut TaskCtx<'_>| {
+        let (lo, hi, asc): (ObjArg, ObjArg, u64) = ctx.args();
         let (m, real) = {
             let st = ctx.world.app_ref::<BitonicState>();
             (st.p.m, st.p.real_data)
         };
         ctx.compute(merge_cycles(2 * m as u64));
         if real {
-            let (oa, ob) = (ctx.obj_arg(0), ctx.obj_arg(1));
-            let mut a = ctx.read_u32(oa);
-            let mut b = ctx.read_u32(ob);
-            merge_split(&mut a, &mut b, ctx.val_arg(2) != 0);
-            ctx.write_u32(oa, &a);
-            ctx.write_u32(ob, &b);
+            let mut a = ctx.read_u32(lo);
+            let mut b = ctx.read_u32(hi);
+            merge_split(&mut a, &mut b, asc != 0);
+            ctx.write_u32(lo, &a);
+            ctx.write_u32(hi, &b);
         }
     });
 
-    // fn 2: per-group pass driver — spawns the group's intra-group pairs.
-    reg.register("bt_pass", |ctx: &mut TaskCtx<'_>| {
-        let g = ctx.val_arg(1) as usize;
-        let k = ctx.val_arg(2) as u32;
-        let j = ctx.val_arg(3) as u32;
+    // Per-group pass driver — spawns the group's intra-group pairs.
+    let pass = reg.register("bt_pass", move |ctx: &mut TaskCtx<'_>| {
+        let (_group_reg, g, k, j): (RegionArg, usize, u64, u64) = ctx.args();
+        let (k, j) = (k as u32, j as u32);
         let (blocks, groups, bufs) = {
             let st = ctx.world.app_ref::<BitonicState>();
             (st.p.blocks, st.p.groups, st.bufs.clone())
@@ -116,20 +122,29 @@ pub fn myrmics() -> (Registry, usize) {
             let partner = i ^ (1 << j);
             if partner > i {
                 let asc = (i >> k) & 1 == 0;
-                ctx.spawn(
-                    1,
-                    vec![
-                        TaskArg::obj_inout(bufs[i]),
-                        TaskArg::obj_inout(bufs[partner]),
-                        TaskArg::val(asc as u64),
-                    ],
-                );
+                ctx.spawn_task(pair)
+                    .obj_inout(bufs[i])
+                    .obj_inout(bufs[partner])
+                    .val(asc as u64)
+                    .submit();
             }
         }
     });
 
-    // fn 3: main.
-    let main = reg.register("bt_main", |ctx: &mut TaskCtx<'_>| {
+    // Per-group local-sort driver.
+    let sortgrp = reg.register("bt_sortgrp", move |ctx: &mut TaskCtx<'_>| {
+        let (_group_reg, g): (RegionArg, usize) = ctx.args();
+        let (blocks, groups, bufs) = {
+            let st = ctx.world.app_ref::<BitonicState>();
+            (st.p.blocks, st.p.groups, st.bufs.clone())
+        };
+        let gs = blocks / groups;
+        for i in (g * gs)..((g + 1) * gs) {
+            ctx.spawn_task(sort).obj_inout(bufs[i]).val(i as u64).submit();
+        }
+    });
+
+    reg.register("bt_main", move |ctx: &mut TaskCtx<'_>| {
         let p = ctx.world.app_ref::<BitonicParams>().clone();
         assert!(p.blocks.is_power_of_two() && p.groups.is_power_of_two());
         assert!(p.groups <= p.blocks);
@@ -153,25 +168,24 @@ pub fn myrmics() -> (Registry, usize) {
             Some(Box::new(BitonicState { p: p.clone(), bufs: bufs.clone(), group_regions: group_regions.clone() }));
         // Local sorts, via per-group drivers (hierarchical spawn).
         for (g, &gr) in group_regions.iter().enumerate() {
-            ctx.spawn(
-                4,
-                vec![TaskArg::region_inout(gr).notransfer(), TaskArg::val(g as u64)],
-            );
+            ctx.spawn_task(sortgrp)
+                .reg_inout(gr)
+                .notransfer()
+                .val(g as u64)
+                .submit();
         }
         // Merge passes.
         for (k, j) in passes(p.blocks) {
             if (1usize << j) < gs {
                 // Intra-group: delegate to per-group pass drivers.
                 for (g, &gr) in group_regions.iter().enumerate() {
-                    ctx.spawn(
-                        2,
-                        vec![
-                            TaskArg::region_inout(gr).notransfer(),
-                            TaskArg::val(g as u64),
-                            TaskArg::val(k as u64),
-                            TaskArg::val(j as u64),
-                        ],
-                    );
+                    ctx.spawn_task(pass)
+                        .reg_inout(gr)
+                        .notransfer()
+                        .val(g as u64)
+                        .val(k as u64)
+                        .val(j as u64)
+                        .submit();
                 }
             } else {
                 // Cross-group pairs: spawned flat from main.
@@ -179,33 +193,22 @@ pub fn myrmics() -> (Registry, usize) {
                     let partner = i ^ (1usize << j);
                     if partner > i {
                         let asc = (i >> k) & 1 == 0;
-                        ctx.spawn(
-                            1,
-                            vec![
-                                TaskArg::obj_inout(bufs[i]),
-                                TaskArg::obj_inout(bufs[partner]),
-                                TaskArg::val(asc as u64),
-                            ],
-                        );
+                        ctx.spawn_task(pair)
+                            .obj_inout(bufs[i])
+                            .obj_inout(bufs[partner])
+                            .val(asc as u64)
+                            .submit();
                     }
                 }
             }
         }
-    });
+    })
+}
 
-    // fn 4: per-group local-sort driver.
-    reg.register("bt_sortgrp", |ctx: &mut TaskCtx<'_>| {
-        let g = ctx.val_arg(1) as usize;
-        let (blocks, groups, bufs) = {
-            let st = ctx.world.app_ref::<BitonicState>();
-            (st.p.blocks, st.p.groups, st.bufs.clone())
-        };
-        let gs = blocks / groups;
-        for i in (g * gs)..((g + 1) * gs) {
-            ctx.spawn(0, vec![TaskArg::obj_inout(bufs[i]), TaskArg::val(i as u64)]);
-        }
-    });
-
+/// Build the Myrmics bitonic sort. Returns (registry, main task).
+pub fn myrmics() -> (Registry, TaskRef) {
+    let mut reg = Registry::new();
+    let main = register_tasks(&mut reg);
     (reg, main)
 }
 
@@ -238,6 +241,67 @@ pub fn mpi_programs(p: &BitonicParams, ranks: usize) -> Vec<Vec<MpiOp>> {
         .collect()
 }
 
+/// The bitonic-sort [`Workload`] (paper VI-B sizing).
+pub struct Bitonic;
+
+fn sized(workers: usize, scaling: Scaling, groups: usize) -> BitonicParams {
+    let blocks = (2 * workers).next_power_of_two();
+    let m = if scaling == Scaling::Weak { 4096 } else { (1usize << 22) / blocks };
+    BitonicParams {
+        blocks,
+        m: m.max(64),
+        groups: groups.next_power_of_two().min(blocks),
+        real_data: false,
+    }
+}
+
+impl Workload for Bitonic {
+    fn name(&self) -> &'static str {
+        "bitonic"
+    }
+
+    fn valid_workers(&self, workers: usize) -> bool {
+        workers.is_power_of_two()
+    }
+
+    fn register(&self, reg: &mut Registry) -> TaskRef {
+        register_tasks(reg)
+    }
+
+    fn params_for(&self, workers: usize, scaling: Scaling) -> Box<dyn Any> {
+        Box::new(sized(workers, scaling, groups_for(workers)))
+    }
+
+    fn mpi_programs(&self, ranks: usize, scaling: Scaling) -> Vec<Vec<MpiOp>> {
+        mpi_programs(&sized(ranks, scaling, 1), ranks)
+    }
+
+    fn verify(&self, world: &World) -> Result<(), String> {
+        let st = app_state::<BitonicState>(world)?;
+        let p = &st.p;
+        let gs = p.blocks / p.groups;
+        // main + sort drivers + sorts, then per pass: either (drivers +
+        // intra pairs) or the flat cross-group pairs — blocks/2 pairs
+        // either way.
+        let mut want = (1 + p.groups + p.blocks) as u64;
+        for (_k, j) in passes(p.blocks) {
+            if (1usize << j) < gs {
+                want += (p.groups + p.blocks / 2) as u64;
+            } else {
+                want += (p.blocks / 2) as u64;
+            }
+        }
+        check_task_counts(world, want)?;
+        if p.real_data {
+            let out = read_result(world);
+            if out.windows(2).any(|w| w[0] > w[1]) {
+                return Err("sequence not sorted".into());
+            }
+        }
+        Ok(())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -261,6 +325,7 @@ mod tests {
         plat.run(Some(1 << 44));
         let w = plat.world();
         assert_eq!(w.gstats.tasks_completed, w.gstats.tasks_spawned);
+        Bitonic.verify(w).unwrap();
         let out = read_result(w);
         assert_eq!(out.len(), 512);
         for win in out.windows(2) {
@@ -278,6 +343,7 @@ mod tests {
         plat.run(Some(1 << 44));
         let w = plat.world();
         assert_eq!(w.gstats.tasks_completed, w.gstats.tasks_spawned);
+        Bitonic.verify(w).unwrap();
     }
 
     #[test]

@@ -20,12 +20,18 @@
 //! **MPI baseline.** Classic halo exchange: each rank sends its edge rows
 //! to both neighbours, receives theirs, computes its band.
 
+use std::any::Any;
+
+use crate::api::args::{ObjArg, OptObj, RegionArg, Rest};
 use crate::api::ctx::TaskCtx;
 use crate::apps::workload::jacobi_cycles;
+use crate::apps::workload_api::{
+    app_state, check_close, check_task_counts, groups_for, Scaling, Workload,
+};
 use crate::ids::{ObjectId, RegionId};
 use crate::mpi::rank::MpiOp;
-use crate::task::descriptor::TaskArg;
-use crate::task::registry::Registry;
+use crate::platform::World;
+use crate::task::registry::{Registry, TaskRef};
 
 #[derive(Clone, Debug)]
 pub struct JacobiParams {
@@ -104,22 +110,25 @@ pub fn jacobi_init(n: usize) -> Vec<f32> {
     t
 }
 
-// Argument layout of a band task (see module docs).
-const A_TOP: usize = 0;
-const A_INT: usize = 1;
-const A_BOT: usize = 2;
-const A_OUT_TOP: usize = 3;
-const A_OUT_INT: usize = 4;
-const A_OUT_BOT: usize = 5;
-const A_BAND: usize = 6;
-const A_NB_UP: usize = 7; // in: bottom edge of band b-1 (value 0 = none)
-
-/// Build the Myrmics Jacobi app. Returns (registry, main_fn).
-pub fn myrmics() -> (Registry, usize) {
-    let mut reg = Registry::new();
-
-    let _band_task = reg.register("jacobi_band", |ctx: &mut TaskCtx<'_>| {
-        let b = ctx.val_arg(A_BAND) as usize;
+/// Register the Jacobi task bodies; returns the main task's handle.
+///
+/// Band-task wire layout (what the typed tuple below lowers from/to):
+/// `in` X top/interior/bot, `out` Y top/interior/bot, band index, the
+/// upstream neighbour's X bottom edge (SAFE 0 for band 0), and — only if
+/// a downstream neighbour exists — its X top edge.
+fn register_tasks(reg: &mut Registry) -> TaskRef {
+    let band_task = reg.register("jacobi_band", |ctx: &mut TaskCtx<'_>| {
+        let (x_top, x_int, x_bot, y_top, y_int, y_bot, b, up, dn): (
+            ObjArg,
+            ObjArg,
+            ObjArg,
+            ObjArg,
+            ObjArg,
+            ObjArg,
+            usize,
+            OptObj,
+            OptObj,
+        ) = ctx.args();
         let (rows, n, real) = {
             let st = ctx.world.app_ref::<JacobiState>();
             (st.rows[b], st.p.n, st.p.real_data)
@@ -130,25 +139,23 @@ pub fn myrmics() -> (Registry, usize) {
         }
         // Assemble the local band plus halo rows, run the stencil, write Y.
         let mut rows_in: Vec<f32> = Vec::with_capacity((rows + 2) * n);
-        let halo_up = if ctx.val_arg(A_NB_UP) != 0 {
-            ctx.read_f32(ctx.obj_arg(A_NB_UP))
-        } else {
-            vec![0.0; n] // unused: band 0's top edge is the fixed border
+        let halo_up = match up.get() {
+            Some(o) => ctx.read_f32(o),
+            None => vec![0.0; n], // unused: band 0's top edge is the fixed border
         };
         rows_in.extend_from_slice(&halo_up);
-        for i in [A_TOP, A_INT, A_BOT] {
-            rows_in.extend(ctx.read_f32(ctx.obj_arg(i)));
+        for o in [x_top, x_int, x_bot] {
+            rows_in.extend(ctx.read_f32(o));
         }
-        let halo_dn = if ctx.n_args() > A_NB_UP + 1 && ctx.val_arg(A_NB_UP + 1) != 0 {
-            ctx.read_f32(ctx.obj_arg(A_NB_UP + 1))
-        } else {
-            vec![0.0; n]
+        let halo_dn = match dn.get() {
+            Some(o) => ctx.read_f32(o),
+            None => vec![0.0; n],
         };
         rows_in.extend_from_slice(&halo_dn);
         debug_assert_eq!(rows_in.len(), (rows + 2) * n);
 
-        let first_band = ctx.val_arg(A_NB_UP) == 0;
-        let last_band = !(ctx.n_args() > A_NB_UP + 1 && ctx.val_arg(A_NB_UP + 1) != 0);
+        let first_band = up.is_none();
+        let last_band = dn.is_none();
         let mut out = vec![0f32; rows * n];
         // Kernel path (PJRT, L1 Pallas) or pure-rust fallback.
         let used_kernel = if ctx.real_compute() {
@@ -186,51 +193,50 @@ pub fn myrmics() -> (Registry, usize) {
                 }
             }
         }
-        let o_top = ctx.obj_arg(A_OUT_TOP);
-        let o_int = ctx.obj_arg(A_OUT_INT);
-        let o_bot = ctx.obj_arg(A_OUT_BOT);
-        ctx.write_f32(o_top, &out[..n]);
-        ctx.write_f32(o_int, &out[n..(rows - 1) * n]);
-        ctx.write_f32(o_bot, &out[(rows - 1) * n..]);
+        ctx.write_f32(y_top, &out[..n]);
+        ctx.write_f32(y_int, &out[n..(rows - 1) * n]);
+        ctx.write_f32(y_bot, &out[(rows - 1) * n..]);
     });
 
     let group_task = reg.register("jacobi_group", move |ctx: &mut TaskCtx<'_>| {
-        let g = ctx.val_arg(1) as usize;
-        let parity = ctx.val_arg(2) as usize;
+        let (_group_reg, g, parity, _halo_y, _halo_x, _cross): (
+            RegionArg,
+            usize,
+            usize,
+            RegionArg,
+            RegionArg,
+            Rest<ObjArg>,
+        ) = ctx.args();
         let (bands, n_bands) = {
             let st = ctx.world.app_ref::<JacobiState>();
             (st.group_bands(g), st.p.bands)
         };
         for b in bands {
-            let (x, y) = {
+            let (x, y, up, dn) = {
                 let st = ctx.world.app_ref::<JacobiState>();
-                (st.bufs[parity % 2][b], st.bufs[(parity + 1) % 2][b])
+                let up = if b > 0 { Some(st.bufs[parity % 2][b - 1].bot) } else { None };
+                let dn =
+                    if b + 1 < n_bands { Some(st.bufs[parity % 2][b + 1].top) } else { None };
+                (st.bufs[parity % 2][b], st.bufs[(parity + 1) % 2][b], up, dn)
             };
-            let mut args = vec![
-                TaskArg::obj_in(x.top),
-                TaskArg::obj_in(x.interior),
-                TaskArg::obj_in(x.bot),
-                TaskArg::obj_out(y.top),
-                TaskArg::obj_out(y.interior),
-                TaskArg::obj_out(y.bot),
-                TaskArg::val(b as u64),
-            ];
-            if b > 0 {
-                let up = ctx.world.app_ref::<JacobiState>().bufs[parity % 2][b - 1];
-                args.push(TaskArg::obj_in(up.bot));
-            } else {
-                args.push(TaskArg::val(0));
+            let mut spawn = ctx
+                .spawn_task(band_task)
+                .obj_in(x.top)
+                .obj_in(x.interior)
+                .obj_in(x.bot)
+                .obj_out(y.top)
+                .obj_out(y.interior)
+                .obj_out(y.bot)
+                .val(b as u64)
+                .obj_opt(up);
+            if let Some(o) = dn {
+                spawn = spawn.obj_in(o);
             }
-            if b + 1 < n_bands {
-                let dn = ctx.world.app_ref::<JacobiState>().bufs[parity % 2][b + 1];
-                args.push(TaskArg::obj_in(dn.top));
-            }
-            ctx.spawn(0, args); // band_task is fn 0
+            spawn.submit();
         }
     });
-    debug_assert_eq!(group_task, 1);
 
-    let main = reg.register("jacobi_main", move |ctx: &mut TaskCtx<'_>| {
+    reg.register("jacobi_main", move |ctx: &mut TaskCtx<'_>| {
         let p = ctx.world.app_ref::<JacobiParams>().clone();
         assert!(p.bands * 3 <= p.n, "bands too fine for n");
         assert!(p.groups <= p.bands);
@@ -280,40 +286,59 @@ pub fn myrmics() -> (Registry, usize) {
                 ctx.write_f32(o.bot, &band[(rows - 1) * p.n..]);
             }
         }
-        let groups = st.group_bands(0).len(); // touch to validate
-        let _ = groups;
         ctx.world.app = Some(Box::new(st));
         // Spawn all iterations in program order; the dependency queues
         // chain them correctly.
         for it in 0..p.iters {
             let parity = it % 2;
             for g in 0..p.groups {
-                let st = ctx.world.app_ref::<JacobiState>();
-                let mut args = vec![
-                    TaskArg::region_inout(group_regions[g]).notransfer(),
-                    TaskArg::val(g as u64),
-                    TaskArg::val(parity as u64),
+                let (halo_y, halo_x, cross_up, cross_dn) = {
+                    let st = ctx.world.app_ref::<JacobiState>();
+                    let gb = st.group_bands(g);
+                    let cross_up = match gb.first() {
+                        Some(&first) if first > 0 => Some(st.bufs[parity][first - 1].bot),
+                        _ => None,
+                    };
+                    let cross_dn = match gb.last() {
+                        Some(&last) if last + 1 < p.bands => Some(st.bufs[parity][last + 1].top),
+                        _ => None,
+                    };
+                    (
+                        st.halo_regions[(parity + 1) % 2][g],
+                        st.halo_regions[parity][g],
+                        cross_up,
+                        cross_dn,
+                    )
+                };
+                let mut spawn = ctx
+                    .spawn_task(group_task)
+                    .reg_inout(group_regions[g])
+                    .notransfer()
+                    .val(g as u64)
+                    .val(parity as u64)
                     // Children write the Y-parity halo of this group and
                     // read the X-parity one.
-                    TaskArg::region_inout(st.halo_regions[(parity + 1) % 2][g]).notransfer(),
-                    TaskArg::region_in(st.halo_regions[parity][g]).notransfer(),
-                ];
+                    .reg_inout(halo_y)
+                    .notransfer()
+                    .reg_in(halo_x)
+                    .notransfer();
                 // Cross-group halo edges this group's bands will read.
-                let gb = st.group_bands(g);
-                if let Some(&first) = gb.first() {
-                    if first > 0 {
-                        args.push(TaskArg::obj_in(st.bufs[parity][first - 1].bot).notransfer());
-                    }
+                if let Some(o) = cross_up {
+                    spawn = spawn.obj_in(o).notransfer();
                 }
-                if let Some(&last) = gb.last() {
-                    if last + 1 < p.bands {
-                        args.push(TaskArg::obj_in(st.bufs[parity][last + 1].top).notransfer());
-                    }
+                if let Some(o) = cross_dn {
+                    spawn = spawn.obj_in(o).notransfer();
                 }
-                ctx.spawn(1, args); // group_task
+                spawn.submit();
             }
         }
-    });
+    })
+}
+
+/// Build the Myrmics Jacobi app. Returns (registry, main task).
+pub fn myrmics() -> (Registry, TaskRef) {
+    let mut reg = Registry::new();
+    let main = register_tasks(&mut reg);
     (reg, main)
 }
 
@@ -358,6 +383,49 @@ pub fn mpi_programs(p: &JacobiParams, ranks: usize) -> Vec<Vec<MpiOp>> {
             prog
         })
         .collect()
+}
+
+/// The Jacobi [`Workload`] (paper VI-B sizing).
+pub struct Jacobi;
+
+const ITERS: usize = 6;
+
+fn sized(workers: usize, scaling: Scaling) -> JacobiParams {
+    let bands = (2 * workers).max(2);
+    let n = if scaling == Scaling::Weak { bands * 10 } else { 8192.max(bands * 3) };
+    JacobiParams::modeled(n, ITERS, bands, groups_for(workers).min(bands))
+}
+
+impl Workload for Jacobi {
+    fn name(&self) -> &'static str {
+        "jacobi"
+    }
+
+    fn register(&self, reg: &mut Registry) -> TaskRef {
+        register_tasks(reg)
+    }
+
+    fn params_for(&self, workers: usize, scaling: Scaling) -> Box<dyn Any> {
+        Box::new(sized(workers, scaling))
+    }
+
+    fn mpi_programs(&self, ranks: usize, scaling: Scaling) -> Vec<Vec<MpiOp>> {
+        let mut p = sized(ranks, scaling);
+        p.groups = 1;
+        mpi_programs(&p, ranks)
+    }
+
+    fn verify(&self, world: &World) -> Result<(), String> {
+        let st = app_state::<JacobiState>(world)?;
+        let p = &st.p;
+        check_task_counts(world, 1 + (p.iters * (p.groups + p.bands)) as u64)?;
+        if p.real_data {
+            let got = read_result(world);
+            let want = jacobi_reference(p.n, p.iters, &jacobi_init(p.n));
+            check_close(&got, &want, 1e-4, "cell")?;
+        }
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -407,12 +475,16 @@ mod tests {
             w.app = Some(Box::new(p));
         });
         plat.run(Some(1 << 44));
+        // Find band tasks (by registered name) of iteration 0 and check
+        // some overlap.
+        let band_fn = (0..plat.eng.registry.len())
+            .find(|&i| plat.eng.registry.name(i) == "jacobi_band")
+            .unwrap();
         let w = plat.world();
-        // Find band tasks (func 0) of iteration 0 and check some overlap.
         let spans: Vec<(u64, u64)> = w
             .tasks
             .iter()
-            .filter(|e| e.desc.func == 0)
+            .filter(|e| e.desc.func == band_fn)
             .take(8)
             .map(|e| (e.started_at, e.done_at))
             .collect();

@@ -10,12 +10,18 @@
 //! The main task drives iterations with `sys_wait` on the centroid object
 //! — exercising the suspend/resume path of the API.
 
+use std::any::Any;
+
+use crate::api::args::{ObjArg, RegionArg, Rest};
 use crate::api::ctx::TaskCtx;
 use crate::apps::workload::kmeans_assign_cycles;
+use crate::apps::workload_api::{
+    app_state, check_close, check_task_counts, groups_for, Scaling, Workload,
+};
 use crate::ids::{ObjectId, RegionId};
 use crate::mpi::rank::MpiOp;
-use crate::task::descriptor::TaskArg;
-use crate::task::registry::Registry;
+use crate::platform::World;
+use crate::task::registry::{Registry, TaskRef};
 
 #[derive(Clone, Debug)]
 pub struct KmParams {
@@ -120,20 +126,27 @@ fn merge_partials(acc: &mut [f32], part: &[f32]) {
     }
 }
 
-pub fn myrmics() -> (Registry, usize) {
-    let mut reg = Registry::new();
+/// The per-iteration spawner's task handles (captured by `km_main`).
+#[derive(Clone, Copy)]
+struct KmTasks {
+    group: TaskRef,
+    group_reduce: TaskRef,
+    global_reduce: TaskRef,
+}
 
-    // fn 0: assign — in centroids, in band, out partial, val band_idx.
+/// Register the K-Means task bodies; returns the main task's handle.
+fn register_tasks(reg: &mut Registry) -> TaskRef {
+    // Assign — in centroids, in band, out partial, val band_idx.
     let assign = reg.register("km_assign", |ctx: &mut TaskCtx<'_>| {
-        let b = ctx.val_arg(3) as usize;
+        let (cent, band, partial, b): (ObjArg, ObjArg, ObjArg, usize) = ctx.args();
         let (npts, k, real) = {
             let st = ctx.world.app_ref::<KmState>();
             (st.band_sizes[b], st.p.k, st.p.real_data)
         };
         ctx.compute(kmeans_assign_cycles(npts as u64, k as u64));
         if real {
-            let pts = ctx.read_f32(ctx.obj_arg(1));
-            let cents = ctx.read_f32(ctx.obj_arg(0));
+            let pts = ctx.read_f32(band);
+            let cents = ctx.read_f32(cent);
             // Kernel path when the AOT shape matches, else rust fallback
             // (results are identical; see python/tests).
             let mut part: Option<Vec<f32>> = None;
@@ -150,46 +163,43 @@ pub fn myrmics() -> (Registry, usize) {
                 }
             }
             let part = part.unwrap_or_else(|| assign_partial(&pts, &cents, k));
-            let o = ctx.obj_arg(2);
-            ctx.write_f32(o, &part);
-        }
-    });
-    debug_assert_eq!(assign, 0);
-
-    // fn 1: group-reduce — in partials of the group's bands, out group buf.
-    reg.register("km_group_reduce", |ctx: &mut TaskCtx<'_>| {
-        let g = ctx.val_arg(0) as usize;
-        let (k, n_in, real) = {
-            let st = ctx.world.app_ref::<KmState>();
-            let n_in = (0..st.p.bands).filter(|&b| band_group(&st.p, b) == g).count();
-            (st.p.k, n_in, st.p.real_data)
-        };
-        ctx.compute((n_in as u64) * (k as u64) * 40);
-        if real {
-            let mut acc = vec![0f32; k * 4];
-            for i in 0..n_in {
-                let part = ctx.read_f32(ctx.obj_arg(2 + i));
-                merge_partials(&mut acc, &part);
-            }
-            let o = ctx.obj_arg(1);
-            ctx.write_f32(o, &acc);
+            ctx.write_f32(partial, &part);
         }
     });
 
-    // fn 2: global reduce — in group bufs, inout centroids.
-    reg.register("km_global_reduce", |ctx: &mut TaskCtx<'_>| {
-        let (k, groups, real) = {
+    // Group-reduce — val group, out group buf, in the group's partials.
+    let group_reduce = reg.register("km_group_reduce", |ctx: &mut TaskCtx<'_>| {
+        let (_g, out, parts): (u64, ObjArg, Rest<ObjArg>) = ctx.args();
+        let (k, real) = {
             let st = ctx.world.app_ref::<KmState>();
-            (st.p.k, st.p.groups, st.p.real_data)
+            (st.p.k, st.p.real_data)
         };
-        ctx.compute((groups as u64) * (k as u64) * 40 + 2_000);
+        ctx.compute((parts.len() as u64) * (k as u64) * 40);
         if real {
             let mut acc = vec![0f32; k * 4];
-            for i in 0..groups {
-                let part = ctx.read_f32(ctx.obj_arg(1 + i));
+            for &p in parts.iter() {
+                let part = ctx.read_f32(p);
                 merge_partials(&mut acc, &part);
             }
-            let old = ctx.read_f32(ctx.obj_arg(0));
+            ctx.write_f32(out, &acc);
+        }
+    });
+
+    // Global reduce — inout centroids, in the group buffers.
+    let global_reduce = reg.register("km_global_reduce", |ctx: &mut TaskCtx<'_>| {
+        let (cent, parts): (ObjArg, Rest<ObjArg>) = ctx.args();
+        let (k, real) = {
+            let st = ctx.world.app_ref::<KmState>();
+            (st.p.k, st.p.real_data)
+        };
+        ctx.compute((parts.len() as u64) * (k as u64) * 40 + 2_000);
+        if real {
+            let mut acc = vec![0f32; k * 4];
+            for &p in parts.iter() {
+                let part = ctx.read_f32(p);
+                merge_partials(&mut acc, &part);
+            }
+            let old = ctx.read_f32(cent);
             let mut cents = vec![0f32; k * 3];
             for c in 0..k {
                 let n = acc[c * 4 + 3];
@@ -198,14 +208,14 @@ pub fn myrmics() -> (Registry, usize) {
                         if n == 0.0 { old[c * 3 + j] } else { acc[c * 4 + j] / n };
                 }
             }
-            let o = ctx.obj_arg(0);
-            ctx.write_f32(o, &cents);
+            ctx.write_f32(cent, &cents);
         }
     });
 
-    // fn 3: per-iteration group driver (spawns the group's assign tasks).
-    reg.register("km_group", |ctx: &mut TaskCtx<'_>| {
-        let g = ctx.val_arg(1) as usize;
+    // Per-iteration group driver (spawns the group's assign tasks).
+    let group = reg.register("km_group", move |ctx: &mut TaskCtx<'_>| {
+        let (_group_reg, g, _cent_nt, _reduce_reg): (RegionArg, usize, ObjArg, RegionArg) =
+            ctx.args();
         let st = ctx.world.app_ref::<KmState>();
         let p = st.p.clone();
         let cent = st.centroids;
@@ -214,22 +224,21 @@ pub fn myrmics() -> (Registry, usize) {
             .map(|b| (st.bands[b], st.partials[b], b))
             .collect();
         for (band, partial, b) in plan {
-            ctx.spawn(
-                0,
-                vec![
-                    TaskArg::obj_in(cent),
-                    TaskArg::obj_in(band),
-                    TaskArg::obj_out(partial),
-                    TaskArg::val(b as u64),
-                ],
-            );
+            ctx.spawn_task(assign)
+                .obj_in(cent)
+                .obj_in(band)
+                .obj_out(partial)
+                .val(b as u64)
+                .submit();
         }
     });
 
-    // fn 4: main — setup, then per iteration: group drivers, group
-    // reduces, one global reduce; sys_wait on the centroids between
-    // iterations (main re-reads them to drive the next phase).
-    let main = reg.register("km_main", |ctx: &mut TaskCtx<'_>| {
+    let tasks = KmTasks { group, group_reduce, global_reduce };
+
+    // Main — setup, then per iteration: group drivers, group reduces, one
+    // global reduce; sys_wait on the centroids between iterations (main
+    // re-reads them to drive the next phase).
+    reg.register("km_main", move |ctx: &mut TaskCtx<'_>| {
         let phase = ctx.phase() as usize;
         if phase == 0 {
             let p = ctx.world.app_ref::<KmParams>().clone();
@@ -279,26 +288,32 @@ pub fn myrmics() -> (Registry, usize) {
             ctx.world.app = Some(Box::new(st));
             // Stash the region handles for the spawner below.
             let regions = (group_regions, reduce_regions);
-            spawn_iteration(ctx, &regions);
+            spawn_iteration(ctx, &regions, tasks);
             ctx.world.app_mut::<KmState>().regions = Some(regions);
-            let st = ctx.world.app_ref::<KmState>();
-            ctx.wait(&[TaskArg::obj_inout(st.centroids)]);
+            let centroids = ctx.world.app_ref::<KmState>().centroids;
+            ctx.wait_on().obj_inout(centroids).wait();
             return;
         }
         let iters = ctx.world.app_ref::<KmState>().p.iters;
         if phase < iters {
             let regions = ctx.world.app_ref::<KmState>().regions.clone().unwrap();
-            spawn_iteration(ctx, &regions);
-            let st = ctx.world.app_ref::<KmState>();
-            ctx.wait(&[TaskArg::obj_inout(st.centroids)]);
+            spawn_iteration(ctx, &regions, tasks);
+            let centroids = ctx.world.app_ref::<KmState>().centroids;
+            ctx.wait_on().obj_inout(centroids).wait();
         }
-    });
+    })
+}
+
+/// Build the Myrmics K-Means app. Returns (registry, main task).
+pub fn myrmics() -> (Registry, TaskRef) {
+    let mut reg = Registry::new();
+    let main = register_tasks(&mut reg);
     (reg, main)
 }
 
 type Regions = (Vec<RegionId>, Vec<RegionId>);
 
-fn spawn_iteration(ctx: &mut TaskCtx<'_>, regions: &Regions) {
+fn spawn_iteration(ctx: &mut TaskCtx<'_>, regions: &Regions, tasks: KmTasks) {
     let (group_regions, reduce_regions) = regions;
     let (p, centroids, partials, group_partials) = {
         let st = ctx.world.app_ref::<KmState>();
@@ -306,32 +321,35 @@ fn spawn_iteration(ctx: &mut TaskCtx<'_>, regions: &Regions) {
     };
     // Group drivers spawn the assign tasks near their data.
     for g in 0..p.groups {
-        ctx.spawn(
-            3,
-            vec![
-                TaskArg::region_inout(group_regions[g]).notransfer(),
-                TaskArg::val(g as u64),
-                TaskArg::obj_in(centroids).notransfer(),
-                TaskArg::region_inout(reduce_regions[g]).notransfer(),
-            ],
-        );
+        ctx.spawn_task(tasks.group)
+            .reg_inout(group_regions[g])
+            .notransfer()
+            .val(g as u64)
+            .obj_in(centroids)
+            .notransfer()
+            .reg_inout(reduce_regions[g])
+            .notransfer()
+            .submit();
     }
     // Per-group reductions.
     for g in 0..p.groups {
-        let mut args = vec![TaskArg::val(g as u64), TaskArg::obj_out(group_partials[g])];
+        let mut spawn = ctx
+            .spawn_task(tasks.group_reduce)
+            .val(g as u64)
+            .obj_out(group_partials[g]);
         for b in 0..p.bands {
             if band_group(&p, b) == g {
-                args.push(TaskArg::obj_in(partials[b]));
+                spawn = spawn.obj_in(partials[b]);
             }
         }
-        ctx.spawn(1, args);
+        spawn.submit();
     }
     // Global reduction into the centroids.
-    let mut args = vec![TaskArg::obj_inout(centroids)];
+    let mut spawn = ctx.spawn_task(tasks.global_reduce).obj_inout(centroids);
     for g in 0..p.groups {
-        args.push(TaskArg::obj_in(group_partials[g]));
+        spawn = spawn.obj_in(group_partials[g]);
     }
-    ctx.spawn(2, args);
+    spawn.submit();
 }
 
 /// MPI baseline: assign + allreduce of (sums, counts) per iteration.
@@ -347,6 +365,56 @@ pub fn mpi_programs(p: &KmParams, ranks: usize) -> Vec<Vec<MpiOp>> {
             prog
         })
         .collect()
+}
+
+/// The K-Means [`Workload`] (paper VI-B sizing).
+pub struct Kmeans;
+
+const ITERS: usize = 4;
+
+fn sized(workers: usize, scaling: Scaling, groups: usize) -> KmParams {
+    let bands = (2 * workers).max(2);
+    let points = if scaling == Scaling::Weak { bands * 8192 } else { 1 << 23 };
+    KmParams { points, k: 16, iters: ITERS, bands, groups: groups.min(bands), real_data: false }
+}
+
+impl Workload for Kmeans {
+    fn name(&self) -> &'static str {
+        "kmeans"
+    }
+
+    fn register(&self, reg: &mut Registry) -> TaskRef {
+        register_tasks(reg)
+    }
+
+    fn params_for(&self, workers: usize, scaling: Scaling) -> Box<dyn Any> {
+        Box::new(sized(workers, scaling, groups_for(workers)))
+    }
+
+    fn mpi_programs(&self, ranks: usize, scaling: Scaling) -> Vec<Vec<MpiOp>> {
+        mpi_programs(&sized(ranks, scaling, 1), ranks)
+    }
+
+    fn verify(&self, world: &World) -> Result<(), String> {
+        let st = app_state::<KmState>(world)?;
+        let p = &st.p;
+        // main + iters * (group drivers + assigns + group reduces + 1
+        // global reduce)
+        check_task_counts(world, 1 + (p.iters * (2 * p.groups + p.bands + 1)) as u64)?;
+        if p.real_data {
+            let got = world
+                .store
+                .get_f32(st.centroids)
+                .ok_or_else(|| "centroids never written".to_string())?;
+            let pts = gen_points(p.points, 17);
+            let mut want = pts[..p.k * 3].to_vec();
+            for _ in 0..p.iters {
+                want = kmeans_step_reference(&pts, &want, p.k);
+            }
+            check_close(&got, &want, 1e-3, "centroid")?;
+        }
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -371,6 +439,7 @@ mod tests {
         let expect = 1 + 3 * (2 + 6 + 2 + 1);
         assert_eq!(w.gstats.tasks_spawned, expect as u64);
         assert_eq!(w.gstats.tasks_completed, w.gstats.tasks_spawned);
+        Kmeans.verify(w).unwrap();
     }
 
     #[test]
@@ -392,6 +461,7 @@ mod tests {
         for (i, (g, w)) in got.iter().zip(&want).enumerate() {
             assert!((g - w).abs() < 1e-3, "centroid {i}: got {g}, want {w}");
         }
+        Kmeans.verify(plat.world()).unwrap();
     }
 
     #[test]

@@ -12,12 +12,18 @@
 //! (B row blocks); a per-(row, phase) group task holds `R_i` inout and
 //! `T_k` in (both NOTRANSFER) and spawns the row's block tasks.
 
+use std::any::Any;
+
+use crate::api::args::{ObjArg, RegionArg};
 use crate::api::ctx::TaskCtx;
 use crate::apps::workload::matmul_cycles;
+use crate::apps::workload_api::{
+    app_state, check_close, check_task_counts, Scaling, Workload,
+};
 use crate::ids::{ObjectId, RegionId};
 use crate::mpi::rank::MpiOp;
-use crate::task::descriptor::TaskArg;
-use crate::task::registry::Registry;
+use crate::platform::World;
+use crate::task::registry::{Registry, TaskRef};
 
 #[derive(Clone, Debug)]
 pub struct MatmulParams {
@@ -66,18 +72,16 @@ fn block_of(m: &[f32], n: usize, s: usize, bi: usize, bj: usize) -> Vec<f32> {
     out
 }
 
-pub fn myrmics() -> (Registry, usize) {
-    let mut reg = Registry::new();
-
-    // fn 0: block task — inout C_ij, in A_ik, in B_kj, val s.
-    reg.register("mm_block", |ctx: &mut TaskCtx<'_>| {
-        let s = ctx.val_arg(3) as usize;
+/// Register the matmul task bodies; returns the main task's handle.
+fn register_tasks(reg: &mut Registry) -> TaskRef {
+    // Block task — inout C_ij, in A_ik, in B_kj, val s.
+    let block = reg.register("mm_block", |ctx: &mut TaskCtx<'_>| {
+        let (oc, oa, ob, s): (ObjArg, ObjArg, ObjArg, usize) = ctx.args();
         let real = ctx.world.app_ref::<MmState>().p.real_data;
         ctx.compute(matmul_cycles(s as u64, s as u64, s as u64));
         if real {
-            let a = ctx.read_f32(ctx.obj_arg(1));
-            let b = ctx.read_f32(ctx.obj_arg(2));
-            let oc = ctx.obj_arg(0);
+            let a = ctx.read_f32(oa);
+            let b = ctx.read_f32(ob);
             let mut c = ctx.read_f32(oc);
             let mut done = false;
             if ctx.real_compute() && (s, s, s) == crate::runtime::shapes::MATMUL_TILE {
@@ -107,30 +111,25 @@ pub fn myrmics() -> (Registry, usize) {
         }
     });
 
-    // fn 1: per-(row, phase) driver.
-    reg.register("mm_row_phase", |ctx: &mut TaskCtx<'_>| {
-        let i = ctx.val_arg(2) as usize;
-        let k = ctx.val_arg(3) as usize;
+    // Per-(row, phase) driver.
+    let row_phase = reg.register("mm_row_phase", move |ctx: &mut TaskCtx<'_>| {
+        let (_row_reg, _brow_reg, i, k): (RegionArg, RegionArg, usize, usize) = ctx.args();
         let st = ctx.world.app_ref::<MmState>();
         let p = st.p.p;
         let s = (st.p.n / p) as u64;
         let plan: Vec<(ObjectId, ObjectId, ObjectId)> =
             (0..p).map(|j| (st.c[i][j], st.a[i][k], st.b[k][j])).collect();
         for (c, a, b) in plan {
-            ctx.spawn(
-                0,
-                vec![
-                    TaskArg::obj_inout(c),
-                    TaskArg::obj_in(a),
-                    TaskArg::obj_in(b),
-                    TaskArg::val(s),
-                ],
-            );
+            ctx.spawn_task(block)
+                .obj_inout(c)
+                .obj_in(a)
+                .obj_in(b)
+                .val(s)
+                .submit();
         }
     });
 
-    // fn 2: main.
-    let main = reg.register("mm_main", |ctx: &mut TaskCtx<'_>| {
+    reg.register("mm_main", move |ctx: &mut TaskCtx<'_>| {
         let prm = ctx.world.app_ref::<MatmulParams>().clone();
         let p = prm.p;
         assert_eq!(prm.n % p, 0);
@@ -155,11 +154,12 @@ pub fn myrmics() -> (Registry, usize) {
         if prm.real_data {
             let am = gen_matrix(prm.n, 5);
             let bm = gen_matrix(prm.n, 6);
+            let zeros = vec![0f32; s * s];
             for i in 0..p {
                 for j in 0..p {
                     ctx.write_f32(a[i][j], &block_of(&am, prm.n, s, i, j));
                     ctx.write_f32(b[i][j], &block_of(&bm, prm.n, s, i, j));
-                    ctx.write_f32(c[i][j], &vec![0f32; s * s]);
+                    ctx.write_f32(c[i][j], &zeros);
                 }
             }
         }
@@ -173,18 +173,23 @@ pub fn myrmics() -> (Registry, usize) {
         }));
         for k in 0..p {
             for i in 0..p {
-                ctx.spawn(
-                    1,
-                    vec![
-                        TaskArg::region_inout(row_regions[i]).notransfer(),
-                        TaskArg::region_in(brow_regions[k]).notransfer(),
-                        TaskArg::val(i as u64),
-                        TaskArg::val(k as u64),
-                    ],
-                );
+                ctx.spawn_task(row_phase)
+                    .reg_inout(row_regions[i])
+                    .notransfer()
+                    .reg_in(brow_regions[k])
+                    .notransfer()
+                    .val(i as u64)
+                    .val(k as u64)
+                    .submit();
             }
         }
-    });
+    })
+}
+
+/// Build the Myrmics matmul. Returns (registry, main task).
+pub fn myrmics() -> (Registry, TaskRef) {
+    let mut reg = Registry::new();
+    let main = register_tasks(&mut reg);
     (reg, main)
 }
 
@@ -263,6 +268,53 @@ pub fn mpi_programs(prm: &MatmulParams, ranks: usize) -> Vec<Vec<MpiOp>> {
         .collect()
 }
 
+/// The matmul [`Workload`] (paper VI-B sizing).
+pub struct Matmul;
+
+fn sized(workers: usize, scaling: Scaling) -> MatmulParams {
+    let p_grid = ((workers as f64).sqrt().round() as usize).max(1);
+    let n = if scaling == Scaling::Weak { 64 * p_grid } else { 1024 };
+    MatmulParams { n, p: p_grid, real_data: false }
+}
+
+impl Workload for Matmul {
+    fn name(&self) -> &'static str {
+        "matmul"
+    }
+
+    /// Square grids only (the paper: power-of-4 core counts).
+    fn valid_workers(&self, workers: usize) -> bool {
+        let p = (workers as f64).sqrt().round() as usize;
+        p * p == workers
+    }
+
+    fn register(&self, reg: &mut Registry) -> TaskRef {
+        register_tasks(reg)
+    }
+
+    fn params_for(&self, workers: usize, scaling: Scaling) -> Box<dyn Any> {
+        Box::new(sized(workers, scaling))
+    }
+
+    fn mpi_programs(&self, ranks: usize, scaling: Scaling) -> Vec<Vec<MpiOp>> {
+        mpi_programs(&sized(ranks, scaling), ranks)
+    }
+
+    fn verify(&self, world: &World) -> Result<(), String> {
+        let st = app_state::<MmState>(world)?;
+        let p = st.p.p;
+        // main + p*p drivers + p^3 block tasks
+        check_task_counts(world, (1 + p * p + p * p * p) as u64)?;
+        if st.p.real_data {
+            let got = read_result(world);
+            let want =
+                matmul_reference(&gen_matrix(st.p.n, 5), &gen_matrix(st.p.n, 6), st.p.n);
+            check_close(&got, &want, 1e-3, "cell")?;
+        }
+        Ok(())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -281,6 +333,7 @@ mod tests {
         assert_eq!(w.gstats.tasks_completed, w.gstats.tasks_spawned);
         // main + p*p drivers + p^3 block tasks
         assert_eq!(w.gstats.tasks_spawned as usize, 1 + 16 + 64);
+        Matmul.verify(w).unwrap();
         let got = read_result(w);
         let want = matmul_reference(&gen_matrix(32, 5), &gen_matrix(32, 6), 32);
         for (i, (g, wv)) in got.iter().zip(&want).enumerate() {
@@ -300,6 +353,7 @@ mod tests {
         plat.run(Some(1 << 44));
         let w = plat.world();
         assert_eq!(w.gstats.tasks_completed, w.gstats.tasks_spawned);
+        Matmul.verify(w).unwrap();
     }
 
     #[test]

@@ -10,3 +10,4 @@ pub mod matmul;
 pub mod raytrace;
 pub mod synthetic;
 pub mod workload;
+pub mod workload_api;

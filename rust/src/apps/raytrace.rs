@@ -6,12 +6,18 @@
 //! the scene profile (`workload::raytrace_line_cycles`), which is why
 //! workers are not fully busy at low core counts (paper VI-C).
 
+use std::any::Any;
+
+use crate::api::args::{ObjArg, RegionArg};
 use crate::api::ctx::TaskCtx;
 use crate::apps::workload::raytrace_line_cycles;
+use crate::apps::workload_api::{
+    app_state, check_task_counts, groups_for, Scaling, Workload,
+};
 use crate::ids::{ObjectId, RegionId};
 use crate::mpi::rank::MpiOp;
-use crate::task::descriptor::TaskArg;
-use crate::task::registry::Registry;
+use crate::platform::World;
+use crate::task::registry::{Registry, TaskRef};
 
 #[derive(Clone, Debug)]
 pub struct RayParams {
@@ -37,39 +43,34 @@ pub fn chunk_cycles(p: &RayParams, l0: usize, l1: usize) -> u64 {
         .sum()
 }
 
-pub fn myrmics() -> (Registry, usize) {
-    let mut reg = Registry::new();
-
+/// Register the raytracer task bodies; returns the main task's handle.
+fn register_tasks(reg: &mut Registry) -> TaskRef {
     let render = reg.register("ray_render", |ctx: &mut TaskCtx<'_>| {
-        let c = ctx.val_arg(2) as usize;
+        let (_scene, _chunk, c): (ObjArg, ObjArg, usize) = ctx.args();
         let p = ctx.world.app_ref::<RayState>().p.clone();
         let l0 = c * p.height / p.tasks;
         let l1 = (c + 1) * p.height / p.tasks;
         ctx.compute(chunk_cycles(&p, l0, l1));
     });
-    debug_assert_eq!(render, 0);
 
-    let _group = reg.register("ray_group", move |ctx: &mut TaskCtx<'_>| {
-        let g = ctx.val_arg(1) as usize;
+    let group = reg.register("ray_group", move |ctx: &mut TaskCtx<'_>| {
+        let (_group_reg, g, _scene_nt): (RegionArg, usize, ObjArg) = ctx.args();
         let (tasks, groups, scene, chunks) = {
             let st = ctx.world.app_ref::<RayState>();
             (st.p.tasks, st.p.groups, st.scene, st.chunks.clone())
         };
         for c in 0..tasks {
             if c * groups / tasks == g {
-                ctx.spawn(
-                    0,
-                    vec![
-                        TaskArg::obj_in(scene),
-                        TaskArg::obj_out(chunks[c]),
-                        TaskArg::val(c as u64),
-                    ],
-                );
+                ctx.spawn_task(render)
+                    .obj_in(scene)
+                    .obj_out(chunks[c])
+                    .val(c as u64)
+                    .submit();
             }
         }
     });
 
-    let main = reg.register("ray_main", move |ctx: &mut TaskCtx<'_>| {
+    reg.register("ray_main", move |ctx: &mut TaskCtx<'_>| {
         let p = ctx.world.app_ref::<RayParams>().clone();
         assert!(p.groups <= p.tasks);
         // Scene lives in the root region; one frame-chunk object per task,
@@ -87,18 +88,21 @@ pub fn myrmics() -> (Registry, usize) {
         }
         ctx.world.app = Some(Box::new(RayState { p: p.clone(), scene, chunks }));
         for g in 0..p.groups {
-            let st = ctx.world.app_ref::<RayState>();
-            let _ = st;
-            ctx.spawn(
-                1,
-                vec![
-                    TaskArg::region_inout(group_regions[g]).notransfer(),
-                    TaskArg::val(g as u64),
-                    TaskArg::obj_in(scene).notransfer(),
-                ],
-            );
+            ctx.spawn_task(group)
+                .reg_inout(group_regions[g])
+                .notransfer()
+                .val(g as u64)
+                .obj_in(scene)
+                .notransfer()
+                .submit();
         }
-    });
+    })
+}
+
+/// Build the Myrmics raytracer. Returns (registry, main task).
+pub fn myrmics() -> (Registry, TaskRef) {
+    let mut reg = Registry::new();
+    let main = register_tasks(&mut reg);
     (reg, main)
 }
 
@@ -134,6 +138,44 @@ pub fn mpi_programs(p: &RayParams, ranks: usize) -> Vec<Vec<MpiOp>> {
             prog
         })
         .collect()
+}
+
+/// The raytracing [`Workload`] (paper VI-B sizing).
+pub struct Raytrace;
+
+fn sized(workers: usize, scaling: Scaling, groups: usize) -> RayParams {
+    let tasks = (2 * workers).max(2);
+    let height = if scaling == Scaling::Weak { tasks * 2 } else { 2048.max(tasks * 2) };
+    RayParams {
+        width: 4096,
+        height,
+        tasks,
+        groups: groups.min(tasks),
+        scene_bytes: 64 * 1024,
+    }
+}
+
+impl Workload for Raytrace {
+    fn name(&self) -> &'static str {
+        "raytrace"
+    }
+
+    fn register(&self, reg: &mut Registry) -> TaskRef {
+        register_tasks(reg)
+    }
+
+    fn params_for(&self, workers: usize, scaling: Scaling) -> Box<dyn Any> {
+        Box::new(sized(workers, scaling, groups_for(workers)))
+    }
+
+    fn mpi_programs(&self, ranks: usize, scaling: Scaling) -> Vec<Vec<MpiOp>> {
+        mpi_programs(&sized(ranks, scaling, 1), ranks)
+    }
+
+    fn verify(&self, world: &World) -> Result<(), String> {
+        let st = app_state::<RayState>(world)?;
+        check_task_counts(world, 1 + (st.p.groups + st.p.tasks) as u64)
+    }
 }
 
 #[cfg(test)]

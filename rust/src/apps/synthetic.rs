@@ -7,10 +7,10 @@
 //! * [`hier_empty`] — Fig 12b: a hierarchy of small regions with empty
 //!   tasks, saturating the schedulers so deeper hierarchies pay off.
 
+use crate::api::args::{ObjArg, RegionArg};
 use crate::api::ctx::TaskCtx;
 use crate::ids::RegionId;
-use crate::task::descriptor::TaskArg;
-use crate::task::registry::Registry;
+use crate::task::registry::{Registry, TaskRef};
 
 /// Parameters read by the synthetic task bodies (installed as app state).
 pub struct SynthParams {
@@ -31,15 +31,15 @@ impl Default for SynthParams {
 
 /// Fig 7a: main spawns `n_tasks` empty tasks, all `inout` on the same
 /// object, from one worker through one scheduler. Returns (registry,
-/// main_fn).
-pub fn empty_chain() -> (Registry, usize) {
+/// main task).
+pub fn empty_chain() -> (Registry, TaskRef) {
     let mut reg = Registry::new();
     let empty = reg.register("empty", |_ctx: &mut TaskCtx<'_>| {});
     let main = reg.register("main", move |ctx: &mut TaskCtx<'_>| {
         let n = ctx.world.app_ref::<SynthParams>().n_tasks;
         let o = ctx.alloc(64, RegionId::ROOT);
         for _ in 0..n {
-            ctx.spawn(empty, vec![TaskArg::obj_inout(o)]);
+            ctx.spawn_task(empty).obj_inout(o).submit();
         }
     });
     (reg, main)
@@ -47,10 +47,10 @@ pub fn empty_chain() -> (Registry, usize) {
 
 /// Fig 7b / 12a: main spawns `n_tasks` tasks, each on its own object,
 /// each computing `task_cycles`.
-pub fn independent() -> (Registry, usize) {
+pub fn independent() -> (Registry, TaskRef) {
     let mut reg = Registry::new();
     let work = reg.register("work", |ctx: &mut TaskCtx<'_>| {
-        let cycles = ctx.val_arg(1);
+        let (_obj, cycles): (ObjArg, u64) = ctx.args();
         ctx.compute(cycles);
     });
     let main = reg.register("main", move |ctx: &mut TaskCtx<'_>| {
@@ -58,7 +58,7 @@ pub fn independent() -> (Registry, usize) {
         let (n, cycles) = (p.n_tasks, p.task_cycles);
         let objs = ctx.balloc(64, RegionId::ROOT, n);
         for o in objs {
-            ctx.spawn(work, vec![TaskArg::obj_inout(o), TaskArg::val(cycles)]);
+            ctx.spawn_task(work).obj_inout(o).val(cycles).submit();
         }
     });
     (reg, main)
@@ -72,23 +72,21 @@ pub fn independent() -> (Registry, usize) {
 /// an empty task per object. The fan-out parallelizes spawning and the
 /// nested regions distribute the dependency metadata across scheduler
 /// levels — which is what deeper hierarchies exploit.
-pub fn hier_empty() -> (Registry, usize) {
+pub fn hier_empty() -> (Registry, TaskRef) {
     let mut reg = Registry::new();
     let empty = reg.register("empty", |ctx: &mut TaskCtx<'_>| {
         let cycles = ctx.world.app_ref::<SynthParams>().task_cycles;
         ctx.compute(cycles);
     });
     let domain = reg.register("domain", move |ctx: &mut TaskCtx<'_>| {
-        let r = ctx.region_arg(0);
-        let k = ctx.val_arg(1) as usize;
+        let (r, k): (RegionArg, usize) = ctx.args();
         let objs = ctx.balloc(64, r, k);
         for o in objs {
-            ctx.spawn(empty, vec![TaskArg::obj_inout(o)]);
+            ctx.spawn_task(empty).obj_inout(o).submit();
         }
     });
     let mid = reg.register("mid", move |ctx: &mut TaskCtx<'_>| {
-        let g = ctx.region_arg(0);
-        let n_domains = ctx.val_arg(1) as usize;
+        let (g, n_domains): (RegionArg, usize) = ctx.args();
         let (k, lvl) = {
             let p = ctx.world.app_ref::<SynthParams>();
             (p.per_domain, p.domain_level)
@@ -97,10 +95,11 @@ pub fn hier_empty() -> (Registry, usize) {
             let r = ctx.ralloc(g, lvl);
             // The domain task only spawns subtasks: NOTRANSFER saves the
             // region DMA (paper V-A's stated use case).
-            ctx.spawn(
-                domain,
-                vec![TaskArg::region_inout(r).notransfer(), TaskArg::val(k as u64)],
-            );
+            ctx.spawn_task(domain)
+                .reg_inout(r)
+                .notransfer()
+                .val(k as u64)
+                .submit();
         }
     });
     let main = reg.register("main", move |ctx: &mut TaskCtx<'_>| {
@@ -113,10 +112,11 @@ pub fn hier_empty() -> (Registry, usize) {
                 continue;
             }
             let g = ctx.ralloc(RegionId::ROOT, 1);
-            ctx.spawn(
-                mid,
-                vec![TaskArg::region_inout(g).notransfer(), TaskArg::val(n_domains as u64)],
-            );
+            ctx.spawn_task(mid)
+                .reg_inout(g)
+                .notransfer()
+                .val(n_domains as u64)
+                .submit();
         }
     });
     (reg, main)

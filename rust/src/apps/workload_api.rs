@@ -1,0 +1,190 @@
+//! The unified `Workload` seam: every benchmark scenario behind one
+//! trait, enumerated from one table.
+//!
+//! Before this layer, adding a workload meant editing a 150-line `match`
+//! in `experiments/bench.rs` (plus its `valid_workers`/`iters`
+//! duplicates) and hand-syncing spawn-site argument order with body-site
+//! indices. Now a scenario is **one self-contained file** in `apps/`:
+//! implement [`Workload`], add the entry to [`all_workloads`], and every
+//! driver — fig8/9/11, the policy sweep, the benches, the CLI and the
+//! generic smoke test — picks it up through trait dispatch. See
+//! `docs/app-api.md` for a worked example.
+//!
+//! Sizing follows paper VI-B: strong scaling fixes the problem and
+//! decomposes into 2 tasks per worker per step with >= ~1 M-cycle minimum
+//! tasks at 512 workers; weak scaling fixes per-task size at the ~1 M
+//! minimum and grows the problem with the worker count. Each workload's
+//! `params_for` encodes its instance of that rule.
+
+use std::any::Any;
+use std::fmt;
+use std::ops::Deref;
+
+use crate::config::HierarchySpec;
+use crate::mpi::rank::MpiOp;
+use crate::platform::World;
+use crate::task::registry::{Registry, TaskRef};
+
+/// Problem-sizing mode (paper VI-B).
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Scaling {
+    Strong,
+    Weak,
+}
+
+/// One benchmark scenario, fully self-describing.
+///
+/// Implementations are unit structs (`pub struct Jacobi;`) living next
+/// to their task bodies, so `&'static dyn Workload` references are free.
+pub trait Workload {
+    /// CLI/report name (e.g. `"barnes-hut"`).
+    fn name(&self) -> &'static str;
+
+    /// Worker counts this workload supports (e.g. matmul needs square
+    /// grids). Default: all.
+    fn valid_workers(&self, workers: usize) -> bool {
+        let _ = workers;
+        true
+    }
+
+    /// Register the task bodies into `reg`; returns the main task's
+    /// typed handle.
+    fn register(&self, reg: &mut Registry) -> TaskRef;
+
+    /// Boxed parameter struct for a `(workers, scaling)` point, to be
+    /// installed as `world.app` before boot.
+    fn params_for(&self, workers: usize, scaling: Scaling) -> Box<dyn Any>;
+
+    /// The hand-tuned MPI baseline for the same problem size.
+    fn mpi_programs(&self, ranks: usize, scaling: Scaling) -> Vec<Vec<MpiOp>>;
+
+    /// Post-run check on the finished world: structural invariants
+    /// always, numeric results when the run carried real data.
+    fn verify(&self, world: &World) -> Result<(), String>;
+}
+
+/// Copyable handle to a workload: what drivers pass around and compare.
+#[derive(Clone, Copy)]
+pub struct WorkloadRef(pub &'static dyn Workload);
+
+impl Deref for WorkloadRef {
+    type Target = dyn Workload + 'static;
+    fn deref(&self) -> &Self::Target {
+        self.0
+    }
+}
+
+impl PartialEq for WorkloadRef {
+    fn eq(&self, other: &Self) -> bool {
+        self.0.name() == other.0.name()
+    }
+}
+
+impl Eq for WorkloadRef {}
+
+impl fmt::Debug for WorkloadRef {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Workload({})", self.0.name())
+    }
+}
+
+/// The single enumeration every driver derives its workload list from.
+/// Adding a scenario = implementing [`Workload`] in its own file and
+/// appending one entry here.
+pub fn all_workloads() -> [WorkloadRef; 6] {
+    [
+        WorkloadRef(&crate::apps::jacobi::Jacobi),
+        WorkloadRef(&crate::apps::raytrace::Raytrace),
+        WorkloadRef(&crate::apps::bitonic::Bitonic),
+        WorkloadRef(&crate::apps::kmeans::Kmeans),
+        WorkloadRef(&crate::apps::matmul::Matmul),
+        WorkloadRef(&crate::apps::barnes_hut::BarnesHut),
+    ]
+}
+
+/// Look a workload up by its CLI name; panics on an unknown name.
+pub fn workload(name: &str) -> WorkloadRef {
+    all_workloads()
+        .into_iter()
+        .find(|w| w.name() == name)
+        .unwrap_or_else(|| panic!("unknown workload {name:?}"))
+}
+
+/// Groups used by the app decompositions — the paper's leaf-scheduler
+/// count, so each leaf scheduler gets its own region subtree.
+pub fn groups_for(workers: usize) -> usize {
+    HierarchySpec::paper_leaves(workers).max(1)
+}
+
+/// Shared verify() helper: all spawned tasks completed and the spawn
+/// count matches the decomposition formula.
+pub fn check_task_counts(world: &World, want_spawned: u64) -> Result<(), String> {
+    let g = &world.gstats;
+    if g.tasks_spawned != want_spawned {
+        return Err(format!("spawned {} tasks, expected {}", g.tasks_spawned, want_spawned));
+    }
+    if g.tasks_completed != g.tasks_spawned {
+        return Err(format!(
+            "completed {} of {} spawned tasks",
+            g.tasks_completed, g.tasks_spawned
+        ));
+    }
+    Ok(())
+}
+
+/// Shared verify() helper: elementwise float comparison with an absolute
+/// tolerance. Errors on length mismatch and on any out-of-tolerance (or
+/// NaN) element.
+pub fn check_close(got: &[f32], want: &[f32], tol: f32, label: &str) -> Result<(), String> {
+    if got.len() != want.len() {
+        return Err(format!("{label}: got {} elements, want {}", got.len(), want.len()));
+    }
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        let d = (g - w).abs();
+        if d.is_nan() || d >= tol {
+            return Err(format!("{label} {i}: got {g}, want {w}"));
+        }
+    }
+    Ok(())
+}
+
+/// Downcast the finished world's app state, as a `Result` for verify().
+pub fn app_state<T: 'static>(world: &World) -> Result<&T, String> {
+    world
+        .app
+        .as_deref()
+        .and_then(|a| a.downcast_ref::<T>())
+        .ok_or_else(|| "app state missing or of the wrong type (main never ran?)".to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_names_are_unique_and_stable() {
+        let names: Vec<&str> = all_workloads().iter().map(|w| w.name()).collect();
+        assert_eq!(names, ["jacobi", "raytrace", "bitonic", "kmeans", "matmul", "barnes-hut"]);
+        let mut dedup = names.clone();
+        dedup.sort_unstable();
+        dedup.dedup();
+        assert_eq!(dedup.len(), names.len());
+    }
+
+    #[test]
+    fn lookup_by_name_round_trips() {
+        for w in all_workloads() {
+            assert_eq!(workload(w.name()), w);
+        }
+    }
+
+    #[test]
+    fn valid_worker_filters() {
+        assert!(workload("matmul").valid_workers(16));
+        assert!(!workload("matmul").valid_workers(32));
+        assert!(workload("bitonic").valid_workers(64));
+        assert!(!workload("bitonic").valid_workers(48));
+        assert!(!workload("barnes-hut").valid_workers(256));
+        assert!(workload("jacobi").valid_workers(48));
+    }
+}

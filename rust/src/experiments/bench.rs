@@ -1,36 +1,23 @@
-//! Unified benchmark driver: pick a kernel, a worker count, a scaling
+//! Unified benchmark driver: pick a workload, a worker count, a scaling
 //! mode and a runtime (Myrmics flat / hierarchical / MPI) and get a
 //! [`Summary`] back. This backs Figs 8, 9, 10 and 11.
 //!
-//! Sizing follows paper VI-B: strong scaling fixes the problem and
-//! decomposes into 2 tasks per worker per step with >= ~1 M-cycle minimum
-//! tasks at 512 workers; weak scaling fixes per-task size at the ~1 M
-//! minimum and grows the problem with the worker count.
+//! Workloads are trait objects from [`all_workloads`] — this driver holds
+//! **no per-benchmark knowledge**: sizing, registration, MPI baselines
+//! and validity filters all live behind the [`Workload`] seam in each
+//! app's own file (`apps/workload_api.rs`). Adding a scenario does not
+//! touch this module.
 
-use crate::apps::{barnes_hut, bitonic, jacobi, kmeans, matmul, raytrace};
-use crate::config::{HierarchySpec, PlatformConfig, PolicyCfg};
+use crate::config::{PlatformConfig, PolicyCfg};
 use crate::ids::Cycles;
 use crate::mpi::runner::run_mpi;
 use crate::platform::Platform;
 use crate::sim::engine::Engine;
+use crate::task::registry::Registry;
+
+pub use crate::apps::workload_api::{all_workloads, workload, Scaling, Workload, WorkloadRef};
 
 use super::{summarize, Summary};
-
-#[derive(Clone, Copy, PartialEq, Eq, Debug)]
-pub enum BenchKind {
-    Jacobi,
-    Raytrace,
-    Bitonic,
-    Kmeans,
-    Matmul,
-    BarnesHut,
-}
-
-#[derive(Clone, Copy, PartialEq, Eq, Debug)]
-pub enum Scaling {
-    Strong,
-    Weak,
-}
 
 #[derive(Clone, Copy, PartialEq, Eq, Debug)]
 pub enum System {
@@ -39,67 +26,10 @@ pub enum System {
     MyrmicsHier,
 }
 
-impl BenchKind {
-    pub fn all() -> [BenchKind; 6] {
-        [
-            BenchKind::Jacobi,
-            BenchKind::Raytrace,
-            BenchKind::Bitonic,
-            BenchKind::Kmeans,
-            BenchKind::Matmul,
-            BenchKind::BarnesHut,
-        ]
-    }
-
-    pub fn name(&self) -> &'static str {
-        match self {
-            BenchKind::Jacobi => "jacobi",
-            BenchKind::Raytrace => "raytrace",
-            BenchKind::Bitonic => "bitonic",
-            BenchKind::Kmeans => "kmeans",
-            BenchKind::Matmul => "matmul",
-            BenchKind::BarnesHut => "barnes-hut",
-        }
-    }
-
-    /// Worker counts each benchmark supports (matmul needs power-of-4
-    /// grids; bitonic power-of-2 blocks; Barnes-Hut stops at 128 in the
-    /// paper "due to memory constraints").
-    pub fn valid_workers(&self, w: usize) -> bool {
-        match self {
-            BenchKind::Matmul => {
-                let p = (w as f64).sqrt().round() as usize;
-                p * p == w
-            }
-            BenchKind::Bitonic => w.is_power_of_two(),
-            BenchKind::BarnesHut => w <= 128,
-            _ => true,
-        }
-    }
-
-    /// Benchmark iterations/steps (kept small: scaling shape, not length).
-    fn iters(&self) -> usize {
-        match self {
-            BenchKind::Jacobi => 6,
-            BenchKind::Raytrace => 1,
-            BenchKind::Bitonic => 1,
-            BenchKind::Kmeans => 4,
-            BenchKind::Matmul => 1,
-            BenchKind::BarnesHut => 3,
-        }
-    }
-}
-
-/// Groups used by the app decomposition — the paper's leaf-scheduler
-/// count, so each leaf scheduler gets its own region subtree.
-fn groups_for(workers: usize) -> usize {
-    HierarchySpec::paper_leaves(workers).max(1)
-}
-
 /// Build + run the Myrmics variant; returns (time, engine). `policy`
 /// overrides the default placement policy (`None` = paper default).
 pub fn run_myrmics(
-    bench: BenchKind,
+    bench: WorkloadRef,
     workers: usize,
     scaling: Scaling,
     hier: bool,
@@ -113,160 +43,26 @@ pub fn run_myrmics(
     if let Some(p) = policy {
         cfg.policy = p;
     }
-    let g = groups_for(workers);
-    let weak = scaling == Scaling::Weak;
-    let iters = bench.iters();
-    let w = workers;
-    match bench {
-        BenchKind::Jacobi => {
-            let bands = (2 * w).max(2);
-            let n = if weak { bands * 10 } else { 8192.max(bands * 3) };
-            let p = jacobi::JacobiParams::modeled(n, iters, bands, g.min(bands));
-            let (reg, main) = jacobi::myrmics();
-            let mut plat = Platform::build_with(cfg, reg, main, |world| {
-                world.app = Some(Box::new(p));
-            });
-            let t = plat.run(Some(1 << 46));
-            (t, plat.eng)
-        }
-        BenchKind::Raytrace => {
-            let tasks = (2 * w).max(2);
-            let height = if weak { tasks * 2 } else { 2048.max(tasks * 2) };
-            let p = raytrace::RayParams {
-                width: 4096,
-                height,
-                tasks,
-                groups: g.min(tasks),
-                scene_bytes: 64 * 1024,
-            };
-            let (reg, main) = raytrace::myrmics();
-            let mut plat = Platform::build_with(cfg, reg, main, |world| {
-                world.app = Some(Box::new(p));
-            });
-            let t = plat.run(Some(1 << 46));
-            (t, plat.eng)
-        }
-        BenchKind::Bitonic => {
-            let blocks = (2 * w).next_power_of_two();
-            let m = if weak { 4096 } else { (1usize << 22) / blocks };
-            let p = bitonic::BitonicParams {
-                blocks,
-                m: m.max(64),
-                groups: g.next_power_of_two().min(blocks),
-                real_data: false,
-            };
-            let (reg, main) = bitonic::myrmics();
-            let mut plat = Platform::build_with(cfg, reg, main, |world| {
-                world.app = Some(Box::new(p));
-            });
-            let t = plat.run(Some(1 << 46));
-            (t, plat.eng)
-        }
-        BenchKind::Kmeans => {
-            let bands = (2 * w).max(2);
-            let points = if weak { bands * 8192 } else { 1 << 23 };
-            let p = kmeans::KmParams {
-                points,
-                k: 16,
-                iters,
-                bands,
-                groups: g.min(bands),
-                real_data: false,
-            };
-            let (reg, main) = kmeans::myrmics();
-            let mut plat = Platform::build_with(cfg, reg, main, |world| {
-                world.app = Some(Box::new(p));
-            });
-            let t = plat.run(Some(1 << 46));
-            (t, plat.eng)
-        }
-        BenchKind::Matmul => {
-            let p_grid = ((w as f64).sqrt().round() as usize).max(1);
-            let n = if weak { 64 * p_grid } else { 1024 };
-            let p = matmul::MatmulParams { n, p: p_grid, real_data: false };
-            let (reg, main) = matmul::myrmics();
-            let mut plat = Platform::build_with(cfg, reg, main, |world| {
-                world.app = Some(Box::new(p));
-            });
-            let t = plat.run(Some(1 << 46));
-            (t, plat.eng)
-        }
-        BenchKind::BarnesHut => {
-            let bands = (2 * w).max(2);
-            let bodies = if weak { bands * 4096 } else { 1 << 20 };
-            let p = barnes_hut::BhParams { bodies, bands, groups: g.min(bands), iters };
-            let (reg, main) = barnes_hut::myrmics();
-            let mut plat = Platform::build_with(cfg, reg, main, |world| {
-                world.app = Some(Box::new(p));
-            });
-            let t = plat.run(Some(1 << 46));
-            (t, plat.eng)
-        }
-    }
+    let mut reg = Registry::new();
+    let main = bench.register(&mut reg);
+    let params = bench.params_for(workers, scaling);
+    let mut plat = Platform::build_with(cfg, reg, main, move |world| {
+        world.app = Some(params);
+    });
+    let t = plat.run(Some(1 << 46));
+    (t, plat.eng)
 }
 
 /// Build + run the MPI baseline; returns (time, engine).
-pub fn run_mpi_bench(bench: BenchKind, ranks: usize, scaling: Scaling) -> (Cycles, Engine) {
+pub fn run_mpi_bench(bench: WorkloadRef, ranks: usize, scaling: Scaling) -> (Cycles, Engine) {
     let cfg = PlatformConfig::flat(1);
-    let weak = scaling == Scaling::Weak;
-    let iters = bench.iters();
-    let progs = match bench {
-        BenchKind::Jacobi => {
-            let bands = (2 * ranks).max(2);
-            let n = if weak { bands * 10 } else { 8192.max(bands * 3) };
-            jacobi::mpi_programs(&jacobi::JacobiParams::modeled(n, iters, bands, 1), ranks)
-        }
-        BenchKind::Raytrace => {
-            let tasks = (2 * ranks).max(2);
-            let height = if weak { tasks * 2 } else { 2048.max(tasks * 2) };
-            raytrace::mpi_programs(
-                &raytrace::RayParams {
-                    width: 4096,
-                    height,
-                    tasks,
-                    groups: 1,
-                    scene_bytes: 64 * 1024,
-                },
-                ranks,
-            )
-        }
-        BenchKind::Bitonic => {
-            let blocks = (2 * ranks).next_power_of_two();
-            let m = if weak { 4096 } else { (1usize << 22) / blocks };
-            bitonic::mpi_programs(
-                &bitonic::BitonicParams { blocks, m: m.max(64), groups: 1, real_data: false },
-                ranks,
-            )
-        }
-        BenchKind::Kmeans => {
-            let bands = (2 * ranks).max(2);
-            let points = if weak { bands * 8192 } else { 1 << 23 };
-            kmeans::mpi_programs(
-                &kmeans::KmParams { points, k: 16, iters, bands, groups: 1, real_data: false },
-                ranks,
-            )
-        }
-        BenchKind::Matmul => {
-            let p_grid = ((ranks as f64).sqrt().round() as usize).max(1);
-            let n = if weak { 64 * p_grid } else { 1024 };
-            matmul::mpi_programs(&matmul::MatmulParams { n, p: p_grid, real_data: false }, ranks)
-        }
-        BenchKind::BarnesHut => {
-            let bands = (2 * ranks).max(2);
-            let bodies = if weak { bands * 4096 } else { 1 << 20 };
-            barnes_hut::mpi_programs(
-                &barnes_hut::BhParams { bodies, bands, groups: 1, iters },
-                ranks,
-            )
-        }
-    };
-    let eng = run_mpi(progs, &cfg);
+    let eng = run_mpi(bench.mpi_programs(ranks, scaling), &cfg);
     (eng.sim.now, eng)
 }
 
 /// Run any system and summarize.
 pub fn run_system(
-    bench: BenchKind,
+    bench: WorkloadRef,
     system: System,
     workers: usize,
     scaling: Scaling,
@@ -277,32 +73,4 @@ pub fn run_system(
         System::MyrmicsHier => run_myrmics(bench, workers, scaling, true, None),
     };
     summarize(&eng, t)
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    #[test]
-    fn every_bench_runs_on_every_system_small() {
-        for bench in BenchKind::all() {
-            let w = if bench == BenchKind::Matmul { 4 } else { 4 };
-            for sys in [System::Mpi, System::MyrmicsFlat, System::MyrmicsHier] {
-                let s = run_system(bench, sys, w, Scaling::Weak);
-                assert!(s.time > 0, "{:?}/{:?}", bench, sys);
-                if sys != System::Mpi {
-                    assert!(s.tasks_completed > 0, "{:?}/{:?}", bench, sys);
-                }
-            }
-        }
-    }
-
-    #[test]
-    fn valid_worker_filters() {
-        assert!(BenchKind::Matmul.valid_workers(16));
-        assert!(!BenchKind::Matmul.valid_workers(32));
-        assert!(BenchKind::Bitonic.valid_workers(64));
-        assert!(!BenchKind::Bitonic.valid_workers(48));
-        assert!(!BenchKind::BarnesHut.valid_workers(256));
-    }
 }

@@ -1,7 +1,7 @@
 //! Experiment driver shared by the `figures` bench and the `myrmics`
 //! CLI binary: runs the selected experiments and prints paper-style rows.
 
-use super::bench::{BenchKind, Scaling};
+use super::bench::{all_workloads, workload, Scaling};
 use super::{fig11, fig12, fig7, fig8, fig9, policy};
 
 /// `args`: experiment names (empty = all) plus optional `--quick` /
@@ -38,7 +38,7 @@ pub fn run(args: &[String]) {
             continue;
         }
         let mut all = Vec::new();
-        for bench in BenchKind::all() {
+        for bench in all_workloads() {
             let pts = fig8::scaling_curves(bench, scaling, workers);
             fig8::print_curves(&pts, scaling);
             all.extend(pts);
@@ -49,7 +49,7 @@ pub fn run(args: &[String]) {
     }
     if want("fig9") || want("fig10") {
         let wc: &[usize] = if quick { &[4, 16, 64] } else { &[4, 16, 64, 128, 256, 512] };
-        for bench in fig9::QUALITATIVE_BENCHES {
+        for bench in fig9::qualitative_benches() {
             let rows = fig9::breakdown(bench, wc);
             if want("fig9") {
                 fig9::print_breakdown(&rows);
@@ -62,9 +62,9 @@ pub fn run(args: &[String]) {
     if want("fig11") {
         let ps: &[u32] = if quick { &[100, 50, 20, 0] } else { &[100, 80, 60, 40, 20, 10, 0] };
         let configs = if quick {
-            vec![(BenchKind::Matmul, 16usize, false)]
+            vec![(workload("matmul"), 16usize, false)]
         } else {
-            fig11::PAPER_CONFIGS.to_vec()
+            fig11::paper_configs().to_vec()
         };
         for (bench, w, hier) in configs {
             fig11::print_sweep(&fig11::sweep(bench, w, hier, ps));

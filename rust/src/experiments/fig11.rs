@@ -6,7 +6,7 @@
 //! load balance and total DMA traffic, normalized to each experiment's
 //! maximum (percent, as in the figure).
 
-use super::bench::{run_myrmics, BenchKind, Scaling};
+use super::bench::{run_myrmics, workload, Scaling, WorkloadRef};
 use super::summarize;
 use crate::config::PolicyCfg;
 
@@ -20,19 +20,23 @@ pub struct PolicyPoint {
 
 #[derive(Clone, Debug)]
 pub struct PolicySweep {
-    pub bench: BenchKind,
+    pub bench: WorkloadRef,
     pub workers: usize,
     pub hier: bool,
     pub points: Vec<PolicyPoint>,
 }
 
-pub const PAPER_CONFIGS: [(BenchKind, usize, bool); 3] = [
-    (BenchKind::Matmul, 16, false), // paper uses 32; 16 keeps the square grid
-    (BenchKind::Jacobi, 128, true),
-    (BenchKind::Kmeans, 512, true),
-];
+/// The paper's three VI-D configurations, resolved from the workload
+/// table.
+pub fn paper_configs() -> [(WorkloadRef, usize, bool); 3] {
+    [
+        (workload("matmul"), 16, false), // paper uses 32; 16 keeps the square grid
+        (workload("jacobi"), 128, true),
+        (workload("kmeans"), 512, true),
+    ]
+}
 
-pub fn sweep(bench: BenchKind, workers: usize, hier: bool, ps: &[u32]) -> PolicySweep {
+pub fn sweep(bench: WorkloadRef, workers: usize, hier: bool, ps: &[u32]) -> PolicySweep {
     let mut raw = Vec::new();
     for &p in ps {
         let (t, eng) =
@@ -84,7 +88,7 @@ mod tests {
 
     #[test]
     fn locality_extreme_hurts_balance_and_time() {
-        let s = sweep(BenchKind::Kmeans, 16, true, &[100, 20, 0]);
+        let s = sweep(workload("kmeans"), 16, true, &[100, 20, 0]);
         let p100 = &s.points[0];
         let p20 = &s.points[1];
         // Pure locality: worse balance than the balanced policy.
@@ -95,7 +99,7 @@ mod tests {
 
     #[test]
     fn balance_extreme_moves_more_data() {
-        let s = sweep(BenchKind::Jacobi, 16, true, &[100, 0]);
+        let s = sweep(workload("jacobi"), 16, true, &[100, 0]);
         let p100 = &s.points[0];
         let p0 = &s.points[1];
         assert!(

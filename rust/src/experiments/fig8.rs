@@ -2,12 +2,12 @@
 //! MPI vs Myrmics-flat vs Myrmics-hierarchical; plus the VI-B headline
 //! overhead table (Myrmics 10-30% over MPI at well-scaling points).
 
-use super::bench::{run_system, BenchKind, Scaling, System};
+use super::bench::{run_system, Scaling, System, WorkloadRef};
 use crate::ids::Cycles;
 
 #[derive(Clone, Debug)]
 pub struct ScalePoint {
-    pub bench: BenchKind,
+    pub bench: WorkloadRef,
     pub system: System,
     pub workers: usize,
     pub time: Cycles,
@@ -20,7 +20,7 @@ pub const PAPER_WORKER_COUNTS: [usize; 7] = [1, 4, 16, 64, 128, 256, 512];
 
 /// Run one benchmark's scaling curves for all three systems.
 pub fn scaling_curves(
-    bench: BenchKind,
+    bench: WorkloadRef,
     scaling: Scaling,
     worker_counts: &[usize],
 ) -> Vec<ScalePoint> {
@@ -46,7 +46,7 @@ pub fn scaling_curves(
 /// The VI-B headline: Myrmics-vs-MPI overhead at each worker count.
 #[derive(Clone, Debug)]
 pub struct OverheadPoint {
-    pub bench: BenchKind,
+    pub bench: WorkloadRef,
     pub workers: usize,
     pub overhead_pct: f64,
 }
@@ -81,7 +81,7 @@ pub fn print_curves(points: &[ScalePoint], scaling: Scaling) {
         Scaling::Strong => "speedup",
         Scaling::Weak => "slowdown",
     };
-    let mut benches: Vec<BenchKind> = points.iter().map(|p| p.bench).collect();
+    let mut benches: Vec<WorkloadRef> = points.iter().map(|p| p.bench).collect();
     benches.dedup();
     for bench in benches {
         println!("Fig 8 ({label}) — {}", bench.name());
@@ -125,10 +125,11 @@ pub fn print_overheads(rows: &[OverheadPoint]) {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::apps::workload_api::workload;
 
     #[test]
     fn strong_scaling_shape_jacobi() {
-        let pts = scaling_curves(BenchKind::Jacobi, Scaling::Strong, &[1, 8, 32]);
+        let pts = scaling_curves(workload("jacobi"), Scaling::Strong, &[1, 8, 32]);
         // MPI scales near-perfectly.
         let mpi32 = pts
             .iter()
@@ -145,7 +146,7 @@ mod tests {
 
     #[test]
     fn overhead_in_paper_band_at_moderate_scale() {
-        let pts = scaling_curves(BenchKind::Raytrace, Scaling::Strong, &[1, 16]);
+        let pts = scaling_curves(workload("raytrace"), Scaling::Strong, &[1, 16]);
         let over = overhead_table(&pts);
         let at16 = over.iter().find(|o| o.workers == 16).unwrap();
         assert!(

@@ -2,21 +2,24 @@
 //! qualitative-study kernels: Bitonic (worst), K-Means (medium),
 //! Raytrace (best), on their strong-scaling hierarchical runs.
 
-use super::bench::{run_system, BenchKind, Scaling, System};
+use super::bench::{run_system, workload, Scaling, System, WorkloadRef};
 use super::Summary;
 
 #[derive(Clone, Debug)]
 pub struct BreakdownRow {
-    pub bench: BenchKind,
+    pub bench: WorkloadRef,
     pub workers: usize,
     pub n_scheds: usize,
     pub summary: Summary,
 }
 
-pub const QUALITATIVE_BENCHES: [BenchKind; 3] =
-    [BenchKind::Bitonic, BenchKind::Kmeans, BenchKind::Raytrace];
+/// The paper's qualitative-study kernels, resolved from the workload
+/// table.
+pub fn qualitative_benches() -> [WorkloadRef; 3] {
+    [workload("bitonic"), workload("kmeans"), workload("raytrace")]
+}
 
-pub fn breakdown(bench: BenchKind, worker_counts: &[usize]) -> Vec<BreakdownRow> {
+pub fn breakdown(bench: WorkloadRef, worker_counts: &[usize]) -> Vec<BreakdownRow> {
     worker_counts
         .iter()
         .filter(|&&w| bench.valid_workers(w))
@@ -28,7 +31,7 @@ pub fn breakdown(bench: BenchKind, worker_counts: &[usize]) -> Vec<BreakdownRow>
 }
 
 pub fn print_breakdown(rows: &[BreakdownRow]) {
-    let mut benches: Vec<BenchKind> = rows.iter().map(|r| r.bench).collect();
+    let mut benches: Vec<WorkloadRef> = rows.iter().map(|r| r.bench).collect();
     benches.dedup();
     for bench in benches {
         println!("Fig 9 — time breakdown: {}", bench.name());
@@ -53,7 +56,7 @@ pub fn print_breakdown(rows: &[BreakdownRow]) {
 }
 
 pub fn print_traffic(rows: &[BreakdownRow]) {
-    let mut benches: Vec<BenchKind> = rows.iter().map(|r| r.bench).collect();
+    let mut benches: Vec<WorkloadRef> = rows.iter().map(|r| r.bench).collect();
     benches.dedup();
     for bench in benches {
         println!("Fig 10 — traffic per core: {}", bench.name());
@@ -83,7 +86,7 @@ mod tests {
     #[test]
     fn raytrace_keeps_schedulers_idle() {
         // Paper: raytrace scheduler load is at worst ~6%.
-        let rows = breakdown(BenchKind::Raytrace, &[16]);
+        let rows = breakdown(workload("raytrace"), &[16]);
         assert!(rows[0].summary.sched_busy_frac < 0.25);
         // Workers actually do task work.
         assert!(rows[0].summary.worker_task_frac > 0.3);
@@ -91,8 +94,8 @@ mod tests {
 
     #[test]
     fn bitonic_loads_schedulers_more_than_raytrace() {
-        let bt = breakdown(BenchKind::Bitonic, &[16]);
-        let rt = breakdown(BenchKind::Raytrace, &[16]);
+        let bt = breakdown(workload("bitonic"), &[16]);
+        let rt = breakdown(workload("raytrace"), &[16]);
         assert!(
             bt[0].summary.sched_busy_frac > rt[0].summary.sched_busy_frac,
             "bitonic {:.3} vs raytrace {:.3}",
@@ -103,7 +106,7 @@ mod tests {
 
     #[test]
     fn scheduler_traffic_grows_with_workers() {
-        let rows = breakdown(BenchKind::Kmeans, &[4, 32]);
+        let rows = breakdown(workload("kmeans"), &[4, 32]);
         assert!(rows[1].summary.per_sched_msg_bytes > rows[0].summary.per_sched_msg_bytes);
     }
 }

@@ -1,8 +1,18 @@
 //! The `myrmics` launcher: run paper experiments or individual benchmark
-//! simulations from the command line.
+//! simulations from the command line. The benchmark list is enumerated
+//! from `all_workloads()` — there is no hand-kept name table to drift.
 
-use myrmics::experiments::bench::{run_mpi_bench, run_myrmics, BenchKind, Scaling};
+use myrmics::apps::workload_api::all_workloads;
+use myrmics::experiments::bench::{run_mpi_bench, run_myrmics, Scaling};
 use myrmics::experiments::{cli, summarize};
+
+fn bench_names() -> String {
+    all_workloads()
+        .iter()
+        .map(|w| w.name())
+        .collect::<Vec<_>>()
+        .join(" ")
+}
 
 fn usage() -> ! {
     eprintln!("myrmics — Myrmics runtime-system reproduction");
@@ -10,9 +20,10 @@ fn usage() -> ! {
     eprintln!("USAGE:");
     eprintln!("  myrmics exp [NAMES...] [--quick]   regenerate paper figures/tables");
     eprintln!("  myrmics run <bench> [OPTS]         run one benchmark simulation");
+    eprintln!("  myrmics bench --list               list the registered workloads");
     eprintln!();
     eprintln!("EXPERIMENTS: {}", cli::EXPERIMENTS.join(" "));
-    eprintln!("BENCHES:     jacobi raytrace bitonic kmeans matmul barnes-hut");
+    eprintln!("BENCHES:     {}", bench_names());
     eprintln!();
     eprintln!("run OPTS: --workers N (default 64)  --flat  --mpi  --weak");
     std::process::exit(2)
@@ -22,9 +33,17 @@ fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     match args.first().map(|s| s.as_str()) {
         Some("exp") => cli::run(&args[1..]),
+        Some("bench") => {
+            if args.get(1).map(|s| s.as_str()) != Some("--list") {
+                usage();
+            }
+            for w in all_workloads() {
+                println!("{}", w.name());
+            }
+        }
         Some("run") => {
             let name = args.get(1).cloned().unwrap_or_else(|| usage());
-            let bench = BenchKind::all()
+            let bench = all_workloads()
                 .into_iter()
                 .find(|b| b.name() == name)
                 .unwrap_or_else(|| usage());

@@ -28,7 +28,7 @@ use crate::sim::event::Event;
 use crate::sim::rng::Rng;
 use crate::stats::metrics::GlobalStats;
 use crate::task::descriptor::{TaskArg, TaskDesc};
-use crate::task::registry::Registry;
+use crate::task::registry::{Registry, TaskRef};
 use crate::task::table::{TaskState, TaskTable};
 
 /// Shared functional state of a run.
@@ -102,7 +102,7 @@ pub struct Platform {
 impl Platform {
     /// Build a platform: schedulers and workers in their tree, the main
     /// task pre-granted on the root region and dispatched to worker 0.
-    pub fn build(cfg: PlatformConfig, registry: Registry, main_fn: usize) -> Self {
+    pub fn build(cfg: PlatformConfig, registry: Registry, main_fn: TaskRef) -> Self {
         Self::build_with(cfg, registry, main_fn, |_| {})
     }
 
@@ -111,7 +111,7 @@ impl Platform {
     pub fn build_with(
         cfg: PlatformConfig,
         registry: Registry,
-        main_fn: usize,
+        main_fn: TaskRef,
         prime: impl FnOnce(&mut World),
     ) -> Self {
         let mut world = World::new(cfg.clone());
@@ -155,7 +155,7 @@ impl Platform {
 
         // Main task: holds the root region read-write, responsible
         // scheduler = top level, dispatched to worker 0.
-        let main_desc = TaskDesc::new(main_fn, vec![TaskArg::region_inout(RegionId::ROOT)]);
+        let main_desc = TaskDesc::new(main_fn.index(), vec![TaskArg::region_inout(RegionId::ROOT)]);
         let main_task = world.tasks.create(main_desc, None, 0, 0);
         world.gstats.tasks_spawned += 1;
         {
@@ -213,7 +213,7 @@ impl Platform {
     pub fn run_app(
         cfg: PlatformConfig,
         registry: Registry,
-        main_fn: usize,
+        main_fn: TaskRef,
         prime: impl FnOnce(&mut World),
     ) -> (Cycles, Engine) {
         let mut p = Platform::build_with(cfg, registry, main_fn, prime);
@@ -231,11 +231,11 @@ pub fn run_task_body(
     worker: CoreId,
     phase: u32,
 ) -> Vec<crate::api::ctx::TaskOp> {
-    let entry = world.tasks.get(task);
-    let func = entry.desc.func;
-    let args = entry.desc.args.clone();
-    let f = registry.get(func);
-    let mut tctx = TaskCtx::new(world, task, worker, phase, args);
+    // Share the descriptor with the task table (Arc bump) and borrow the
+    // body from the registry: the dispatch path allocates nothing.
+    let desc = world.tasks.get(task).desc.clone();
+    let f = registry.get(desc.func);
+    let mut tctx = TaskCtx::new(world, task, worker, phase, desc);
     f(&mut tctx);
     tctx.into_ops()
 }

@@ -4,6 +4,14 @@
 //! argument carries the dependency flags of the Myrmics API:
 //! `TYPE_IN_ARG`, `TYPE_OUT_ARG`, `TYPE_NOTRANSFER_ARG`, `TYPE_SAFE_ARG`,
 //! `TYPE_REGION_ARG`.
+//!
+//! This is the **wire format**: what travels in `SpawnReq` messages, what
+//! the dependency analysis walks, and what the paper's `sys_spawn(idx,
+//! args, types)` signature carries. Application code does not build it by
+//! hand — the typed layer (`api::spawn::SpawnBuilder` at spawn sites,
+//! `api::args` extraction in bodies, `TaskRef` instead of the raw `func`
+//! index) lowers to exactly these structs, byte for byte (pinned by
+//! `tests/api_roundtrip.rs`).
 
 use crate::ids::{NodeId, ObjectId, RegionId};
 
@@ -29,7 +37,7 @@ impl Access {
 }
 
 /// One task argument.
-#[derive(Clone, Debug)]
+#[derive(Clone, PartialEq, Eq, Debug)]
 pub struct TaskArg {
     /// The dependency node (object or region) — `None` for SAFE by-value
     /// arguments, which skip dependency analysis entirely.
@@ -105,10 +113,12 @@ impl TaskArg {
 }
 
 /// A task to be spawned: function-table index + arguments.
-#[derive(Clone, Debug)]
+#[derive(Clone, PartialEq, Eq, Debug)]
 pub struct TaskDesc {
     /// Index into the [`crate::task::registry::Registry`] function table
-    /// (the `idx` parameter of `sys_spawn`).
+    /// (the `idx` parameter of `sys_spawn`). Application code names tasks
+    /// by [`crate::task::registry::TaskRef`]; this raw index is the wire
+    /// lowering.
     pub func: usize,
     pub args: Vec<TaskArg>,
 }

@@ -1,15 +1,35 @@
 //! The task function table.
 //!
 //! `sys_spawn` names tasks by "an index to a table of function pointers"
-//! (paper V-A). Applications register their task bodies here before the
-//! platform boots; workers look bodies up by index when a dispatch
-//! arrives.
-
-use std::rc::Rc;
+//! (paper V-A) — that raw index remains the wire format inside
+//! [`TaskDesc`](crate::task::descriptor::TaskDesc). Application code,
+//! however, only ever sees the typed [`TaskRef`] handle returned by
+//! [`Registry::register`]: spawn sites pass it to
+//! `TaskCtx::spawn_task`, which lowers it back to the index. Workers look
+//! bodies up by index when a dispatch arrives.
 
 use crate::api::ctx::TaskCtx;
 
-pub type TaskFn = Rc<dyn Fn(&mut TaskCtx<'_>)>;
+pub type TaskFn = Box<dyn Fn(&mut TaskCtx<'_>)>;
+
+/// Typed handle to a registered task body. This is what spawn sites name
+/// tasks by; the underlying function-table index is the Fig-4 wire
+/// representation and stays out of application code.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub struct TaskRef(usize);
+
+impl TaskRef {
+    /// The wire-format function-table index (`TaskDesc::func`).
+    pub fn index(self) -> usize {
+        self.0
+    }
+
+    /// Wire-level escape hatch (dispatch internals and tests). Normal
+    /// code receives `TaskRef`s from [`Registry::register`].
+    pub fn from_index(idx: usize) -> Self {
+        TaskRef(idx)
+    }
+}
 
 #[derive(Default)]
 pub struct Registry {
@@ -21,14 +41,16 @@ impl Registry {
         Self::default()
     }
 
-    /// Register a task body; returns its function-table index.
-    pub fn register(&mut self, name: &str, f: impl Fn(&mut TaskCtx<'_>) + 'static) -> usize {
-        self.fns.push((name.to_string(), Rc::new(f)));
-        self.fns.len() - 1
+    /// Register a task body; returns its typed handle.
+    pub fn register(&mut self, name: &str, f: impl Fn(&mut TaskCtx<'_>) + 'static) -> TaskRef {
+        self.fns.push((name.to_string(), Box::new(f)));
+        TaskRef(self.fns.len() - 1)
     }
 
-    pub fn get(&self, idx: usize) -> TaskFn {
-        self.fns[idx].1.clone()
+    /// Borrow a body by wire index. Dispatch-path accessor: no clone, no
+    /// refcount traffic.
+    pub fn get(&self, idx: usize) -> &TaskFn {
+        &self.fns[idx].1
     }
 
     pub fn name(&self, idx: usize) -> &str {

@@ -1,0 +1,232 @@
+//! Round-trip pins for the typed spawn/args layer (PR 4).
+//!
+//! The typed builder and extractor must lower to / lift from the paper's
+//! Fig-4 wire format **byte-identically**: every builder method produces
+//! the exact `TaskArg {node, value, flags}` the wire constructors do
+//! (including the pinned flag bit values), and the extractor reads them
+//! back. Any drift here would silently change message sizes, dependency
+//! analysis, and the determinism fingerprints.
+
+use std::sync::Arc;
+
+use myrmics::api::args::{ObjArg, OptObj, RegionArg, Rest};
+use myrmics::api::ctx::{TaskCtx, TaskOp};
+use myrmics::config::PlatformConfig;
+use myrmics::ids::{NodeId, ObjectId, RegionId};
+use myrmics::platform::World;
+use myrmics::task::descriptor::{
+    Access, TaskArg, TaskDesc, TYPE_IN_ARG, TYPE_NOTRANSFER_ARG, TYPE_OUT_ARG, TYPE_REGION_ARG,
+    TYPE_SAFE_ARG,
+};
+use myrmics::task::registry::{Registry, TaskRef};
+
+fn world() -> World {
+    World::new(PlatformConfig::flat(4))
+}
+
+/// Build a ctx whose own descriptor is `args` (for extractor tests).
+fn ctx_with_args(w: &mut World, args: Vec<TaskArg>) -> TaskCtx<'_> {
+    let t = w.tasks.create(TaskDesc::new(0, args), None, 0, 0);
+    let desc = w.tasks.get(t).desc.clone();
+    TaskCtx::new(w, t, myrmics::ids::CoreId(1), 0, desc)
+}
+
+/// Run `build` against a fresh ctx and return the spawned wire descs.
+fn spawned(build: impl FnOnce(&mut TaskCtx<'_>)) -> Vec<TaskDesc> {
+    let mut w = world();
+    let t = w.tasks.create(TaskDesc::new(0, vec![]), None, 0, 0);
+    let desc = w.tasks.get(t).desc.clone();
+    let mut ctx = TaskCtx::new(&mut w, t, myrmics::ids::CoreId(1), 0, desc);
+    build(&mut ctx);
+    ctx.into_ops()
+        .into_iter()
+        .filter_map(|op| match op {
+            TaskOp::Spawn(d) => Some(d),
+            _ => None,
+        })
+        .collect()
+}
+
+#[test]
+fn builder_methods_match_wire_constructors_exactly() {
+    let o = ObjectId(7);
+    let r = RegionId(3);
+    let f = TaskRef::from_index(5);
+    let descs = spawned(|ctx| {
+        ctx.spawn_task(f)
+            .obj_in(o)
+            .obj_out(o)
+            .obj_inout(o)
+            .reg_in(r)
+            .reg_inout(r)
+            .val(42)
+            .obj_opt(Some(o))
+            .obj_opt(None)
+            .submit();
+    });
+    assert_eq!(descs.len(), 1);
+    let want = TaskDesc::new(
+        5,
+        vec![
+            TaskArg::obj_in(o),
+            TaskArg::obj_out(o),
+            TaskArg::obj_inout(o),
+            TaskArg::region_in(r),
+            TaskArg::region_inout(r),
+            TaskArg::val(42),
+            TaskArg::obj_in(o),
+            TaskArg::val(0),
+        ],
+    );
+    assert_eq!(descs[0], want);
+}
+
+#[test]
+fn notransfer_sets_the_bit_on_the_last_argument_only() {
+    let o = ObjectId(9);
+    let r = RegionId(2);
+    let descs = spawned(|ctx| {
+        ctx.spawn_task(TaskRef::from_index(0))
+            .reg_inout(r)
+            .notransfer()
+            .obj_in(o)
+            .submit();
+    });
+    let args = &descs[0].args;
+    assert_eq!(args[0], TaskArg::region_inout(r).notransfer());
+    assert_eq!(args[1], TaskArg::obj_in(o));
+    assert!(args[0].is_notransfer());
+    assert!(!args[1].is_notransfer());
+}
+
+#[test]
+fn flag_bits_are_the_paper_values() {
+    // The wire bits are load-bearing: pinned here *and* via the exact
+    // TaskArg each builder method emits.
+    assert_eq!(TYPE_IN_ARG, 1 << 0);
+    assert_eq!(TYPE_OUT_ARG, 1 << 1);
+    assert_eq!(TYPE_NOTRANSFER_ARG, 1 << 2);
+    assert_eq!(TYPE_SAFE_ARG, 1 << 3);
+    assert_eq!(TYPE_REGION_ARG, 1 << 4);
+    let o = ObjectId(1);
+    let r = RegionId(1);
+    assert_eq!(TaskArg::obj_in(o).flags, TYPE_IN_ARG);
+    assert_eq!(TaskArg::obj_out(o).flags, TYPE_OUT_ARG);
+    assert_eq!(TaskArg::obj_inout(o).flags, TYPE_IN_ARG | TYPE_OUT_ARG);
+    assert_eq!(TaskArg::region_in(r).flags, TYPE_IN_ARG | TYPE_REGION_ARG);
+    assert_eq!(TaskArg::region_inout(r).flags, TYPE_IN_ARG | TYPE_OUT_ARG | TYPE_REGION_ARG);
+    assert_eq!(TaskArg::val(3).flags, TYPE_SAFE_ARG);
+    assert_eq!(TaskArg::val(3).node, None);
+    assert_eq!(TaskArg::obj_in(o).node, Some(NodeId::Object(o)));
+    assert_eq!(TaskArg::region_in(r).node, Some(NodeId::Region(r)));
+}
+
+#[test]
+fn builder_scratch_is_reused_across_spawns() {
+    // Two spawns from one body: the second must not see the first's args.
+    let descs = spawned(|ctx| {
+        ctx.spawn_task(TaskRef::from_index(1)).obj_in(ObjectId(1)).val(10).submit();
+        ctx.spawn_task(TaskRef::from_index(2)).val(20).submit();
+    });
+    assert_eq!(descs.len(), 2);
+    assert_eq!(descs[0], TaskDesc::new(1, vec![TaskArg::obj_in(ObjectId(1)), TaskArg::val(10)]));
+    assert_eq!(descs[1], TaskDesc::new(2, vec![TaskArg::val(20)]));
+}
+
+#[test]
+fn abandoned_builder_leaks_nothing() {
+    let descs = spawned(|ctx| {
+        // Builder dropped without submit: nothing spawned, nothing staged.
+        let _ = ctx.spawn_task(TaskRef::from_index(1)).obj_in(ObjectId(1)).val(99);
+        ctx.spawn_task(TaskRef::from_index(2)).val(7).submit();
+    });
+    assert_eq!(descs.len(), 1);
+    assert_eq!(descs[0], TaskDesc::new(2, vec![TaskArg::val(7)]));
+}
+
+#[test]
+fn extractor_round_trips_what_the_builder_wrote() {
+    let mut w = world();
+    let args = vec![
+        TaskArg::region_inout(RegionId(4)).notransfer(),
+        TaskArg::obj_in(ObjectId(11)),
+        TaskArg::val(1234),
+        TaskArg::val(0),
+        TaskArg::obj_in(ObjectId(12)),
+        TaskArg::obj_in(ObjectId(13)),
+    ];
+    let ctx = ctx_with_args(&mut w, args);
+    let (r, o, v, none, rest): (RegionArg, ObjArg, u64, OptObj, Rest<ObjArg>) = ctx.args();
+    assert_eq!(r, RegionId(4));
+    assert_eq!(o, ObjectId(11));
+    assert_eq!(v, 1234);
+    assert_eq!(none.get(), None);
+    assert_eq!(rest.0, vec![ObjectId(12), ObjectId(13)]);
+}
+
+#[test]
+#[cfg_attr(not(debug_assertions), ignore = "debug-only check")]
+#[should_panic(expected = "wire arguments")]
+fn extractor_arity_mismatch_panics_in_debug() {
+    let mut w = world();
+    let ctx = ctx_with_args(&mut w, vec![TaskArg::val(1), TaskArg::val(2)]);
+    let _: (u64,) = ctx.args();
+}
+
+#[test]
+#[cfg_attr(not(debug_assertions), ignore = "debug-only check")]
+#[should_panic(expected = "not an object argument")]
+fn extractor_flag_mismatch_panics_in_debug() {
+    let mut w = world();
+    let ctx = ctx_with_args(&mut w, vec![TaskArg::region_in(RegionId(1))]);
+    let _: (ObjArg,) = ctx.args();
+}
+
+#[test]
+#[cfg_attr(not(debug_assertions), ignore = "debug-only check")]
+#[should_panic(expected = "not a SAFE by-value argument")]
+fn extractor_val_from_object_panics_in_debug() {
+    let mut w = world();
+    let ctx = ctx_with_args(&mut w, vec![TaskArg::obj_in(ObjectId(1))]);
+    let _: (u64,) = ctx.args();
+}
+
+#[test]
+fn wait_builder_lowers_to_wire_nodes() {
+    let mut w = world();
+    let mut ctx = ctx_with_args(&mut w, vec![]);
+    let o = ObjectId(6);
+    let r = RegionId(2);
+    ctx.wait_on().obj_inout(o).reg_in(r).wait();
+    let ops = ctx.into_ops();
+    match &ops[0] {
+        TaskOp::Wait(nodes) => {
+            assert_eq!(
+                nodes,
+                &vec![(NodeId::Object(o), Access::Write), (NodeId::Region(r), Access::Read)]
+            );
+        }
+        other => panic!("expected Wait, got {other:?}"),
+    }
+}
+
+#[test]
+fn registry_returns_dense_typed_handles() {
+    let mut reg = Registry::new();
+    let a = reg.register("a", |_| {});
+    let b = reg.register("b", |_| {});
+    assert_eq!(a.index(), 0);
+    assert_eq!(b.index(), 1);
+    assert_ne!(a, b);
+    assert_eq!(TaskRef::from_index(1), b);
+    assert_eq!(reg.name(b.index()), "b");
+    assert_eq!(reg.len(), 2);
+    // `get` borrows — calling through the borrow works.
+    let f = reg.get(a.index());
+    let mut w = world();
+    let t = w.tasks.create(TaskDesc::new(0, vec![]), None, 0, 0);
+    let desc: Arc<TaskDesc> = w.tasks.get(t).desc.clone();
+    let mut ctx = TaskCtx::new(&mut w, t, myrmics::ids::CoreId(1), 0, desc);
+    f(&mut ctx);
+    assert!(ctx.into_ops().is_empty());
+}

@@ -2,10 +2,10 @@
 //! of full platform runs, plus property-style sweeps over random task
 //! graphs (mini-prop harness; proptest is not vendored).
 
+use myrmics::api::args::{ObjArg, Rest};
 use myrmics::config::{HierarchySpec, PlatformConfig};
 use myrmics::ids::RegionId;
 use myrmics::platform::Platform;
-use myrmics::task::descriptor::TaskArg;
 use myrmics::task::registry::Registry;
 use myrmics::testutil::prop;
 
@@ -16,7 +16,7 @@ fn counter_chain_is_serialized() {
     for workers in [1usize, 4, 16] {
         let mut reg = Registry::new();
         let inc = reg.register("inc", |ctx| {
-            let o = ctx.obj_arg(0);
+            let (o,): (ObjArg,) = ctx.args();
             let v = ctx.read_u32(o)[0];
             ctx.compute(50_000);
             ctx.write_u32(o, &[v + 1]);
@@ -25,7 +25,7 @@ fn counter_chain_is_serialized() {
             let o = ctx.alloc(64, RegionId::ROOT);
             ctx.write_u32(o, &[0]);
             for _ in 0..40 {
-                ctx.spawn(inc, vec![TaskArg::obj_inout(o)]);
+                ctx.spawn_task(inc).obj_inout(o).submit();
             }
         });
         let mut p = Platform::build(PlatformConfig::hierarchical(workers), reg, main);
@@ -44,24 +44,22 @@ fn counter_chain_is_serialized() {
 fn readers_see_latest_write_and_overlap() {
     let mut reg = Registry::new();
     let write = reg.register("write", |ctx| {
-        let o = ctx.obj_arg(0);
-        let v = ctx.val_arg(1) as u32;
+        let (o, v): (ObjArg, u64) = ctx.args();
         ctx.compute(100_000);
-        ctx.write_u32(o, &[v]);
+        ctx.write_u32(o, &[v as u32]);
     });
     let read = reg.register("read", |ctx| {
-        let o = ctx.obj_arg(0);
-        let expect = ctx.val_arg(1) as u32;
+        let (o, expect): (ObjArg, u64) = ctx.args();
         ctx.compute(400_000);
-        assert_eq!(ctx.read_u32(o)[0], expect, "reader saw a stale value");
+        assert_eq!(ctx.read_u32(o)[0], expect as u32, "reader saw a stale value");
     });
     let main = reg.register("main", move |ctx| {
         let o = ctx.alloc(64, RegionId::ROOT);
         ctx.write_u32(o, &[0]);
         for round in 1..=4u64 {
-            ctx.spawn(write, vec![TaskArg::obj_inout(o), TaskArg::val(round)]);
+            ctx.spawn_task(write).obj_inout(o).val(round).submit();
             for _ in 0..6 {
-                ctx.spawn(read, vec![TaskArg::obj_in(o), TaskArg::val(round)]);
+                ctx.spawn_task(read).obj_in(o).val(round).submit();
             }
         }
     });
@@ -73,7 +71,7 @@ fn readers_see_latest_write_and_overlap() {
     let readers: Vec<(u64, u64)> = w
         .tasks
         .iter()
-        .filter(|e| e.desc.func == 1)
+        .filter(|e| e.desc.func == read.index())
         .take(6)
         .map(|e| (e.started_at, e.done_at))
         .collect();
@@ -97,17 +95,15 @@ fn prop_random_region_graphs_are_deterministic_and_complete() {
 
         let mut reg = Registry::new();
         let write = reg.register("w", |ctx| {
-            let o = ctx.obj_arg(0);
+            let (o, v): (ObjArg, u64) = ctx.args();
             ctx.compute(60_000);
-            let v = ctx.val_arg(1) as u32;
-            ctx.write_u32(o, &[v]);
+            ctx.write_u32(o, &[v as u32]);
         });
         let check = reg.register("check", |ctx| {
             ctx.compute(10_000);
-            let n = ctx.n_args();
-            for i in 1..n {
-                let o = ctx.obj_arg(i);
-                assert_eq!(ctx.read_u32(o)[0], i as u32, "missing write");
+            let (_tag, objs): (u64, Rest<ObjArg>) = ctx.args();
+            for (i, &o) in objs.iter().enumerate() {
+                assert_eq!(ctx.read_u32(o)[0], i as u32 + 1, "missing write");
             }
         });
         let main = reg.register("main", move |ctx| {
@@ -130,14 +126,15 @@ fn prop_random_region_graphs_are_deterministic_and_complete() {
                 let r = regions[(seed_tag as usize + i * 7) % regions.len()];
                 let o = ctx.alloc(64, r);
                 objs.push(o);
-                ctx.spawn(write, vec![TaskArg::obj_out(o), TaskArg::val(i as u64 + 1)]);
+                ctx.spawn_task(write).obj_out(o).val(i as u64 + 1).submit();
             }
-            // Reader over every object, ordered after all writers.
-            let args: Vec<TaskArg> = objs.iter().map(|&o| TaskArg::obj_in(o)).collect();
-            let mut full = vec![TaskArg::val(0)];
-            full.extend(args);
-            // Shift: check expects arg i -> value i, with arg 0 SAFE.
-            ctx.spawn(check, full);
+            // Reader over every object, ordered after all writers. The
+            // leading SAFE tag keeps the wire layout of the original test.
+            let mut spawn = ctx.spawn_task(check).val(0);
+            for &o in &objs {
+                spawn = spawn.obj_in(o);
+            }
+            spawn.submit();
         });
         let _ = (write, check);
         let mut p = Platform::build(PlatformConfig::hierarchical(workers), reg, main);

@@ -1,0 +1,62 @@
+//! Generic all-workloads smoke test (PR 4).
+//!
+//! Replaces the per-app copy-pasted "it completes" integration tests:
+//! every entry of `all_workloads()` — present and future — is run at a
+//! tiny size through the real `run_myrmics` driver on both hierarchies,
+//! must complete every task it spawned, and must pass its own
+//! `verify()`. A workload that is added to the table but broken (or
+//! registered wrong) fails this test; one that is *not* added to the
+//! table fails the enumeration pins below. CI runs this file as a named
+//! step.
+
+use myrmics::apps::workload_api::{all_workloads, Scaling};
+use myrmics::experiments::bench::{run_mpi_bench, run_myrmics};
+
+/// 4 workers is valid for every workload (square grid for matmul,
+/// power of two for bitonic, <= 128 for barnes-hut).
+const SMOKE_WORKERS: usize = 4;
+
+#[test]
+fn every_workload_completes_and_verifies_on_both_hierarchies() {
+    for w in all_workloads() {
+        assert!(
+            w.valid_workers(SMOKE_WORKERS),
+            "{}: smoke worker count must be valid",
+            w.name()
+        );
+        for hier in [false, true] {
+            let (t, eng) = run_myrmics(w, SMOKE_WORKERS, Scaling::Weak, hier, None);
+            assert!(t > 0, "{} (hier={hier}): no virtual time elapsed", w.name());
+            let g = &eng.world.gstats;
+            assert!(g.tasks_spawned > 1, "{} (hier={hier}): nothing spawned", w.name());
+            assert_eq!(
+                g.tasks_completed,
+                g.tasks_spawned,
+                "{} (hier={hier}): stalled",
+                w.name()
+            );
+            w.verify(&eng.world)
+                .unwrap_or_else(|e| panic!("{} (hier={hier}) verify failed: {e}", w.name()));
+        }
+    }
+}
+
+#[test]
+fn every_workload_has_an_mpi_baseline() {
+    for w in all_workloads() {
+        let (t, eng) = run_mpi_bench(w, SMOKE_WORKERS, Scaling::Weak);
+        assert!(t > 0, "{}: MPI baseline ran no virtual time", w.name());
+        assert!(eng.world.done, "{}: MPI ranks never finished", w.name());
+    }
+}
+
+#[test]
+fn table_is_complete() {
+    // The six paper benchmarks must all be enumerable — a workload
+    // silently dropped from the table is a broken build, not a quieter
+    // figure.
+    let names: Vec<&str> = all_workloads().iter().map(|w| w.name()).collect();
+    for want in ["jacobi", "raytrace", "bitonic", "kmeans", "matmul", "barnes-hut"] {
+        assert!(names.contains(&want), "workload {want} missing from all_workloads()");
+    }
+}
