@@ -19,9 +19,10 @@
 use std::time::Instant;
 
 use myrmics::apps::jacobi;
+use myrmics::apps::skew::{myrmics as skew_myrmics, SkewParams};
 use myrmics::apps::synthetic::{empty_chain, hier_empty, independent, SynthParams};
 use myrmics::apps::workload_api::workload;
-use myrmics::config::{HierarchySpec, PlatformConfig, PolicyCfg};
+use myrmics::config::{HierarchySpec, PlatformConfig, PolicyCfg, StealCfg};
 use myrmics::dep::node::DepNode;
 use myrmics::experiments::bench::{run_myrmics, Scaling};
 use myrmics::ids::{NodeId, RegionId, TaskId};
@@ -216,6 +217,25 @@ fn main() {
         }
     }
 
+    // The ready-queue layer work stealing migrates through: push (enqueue
+    // ready), pop-front (dispatch) and pop-back (steal) on one queue,
+    // built outside the closure so the timed path is pure steady-state
+    // slot reuse — zero allocation after the first iteration's warm-up.
+    {
+        use myrmics::sched::readyq::ReadyQ;
+        let mut q = ReadyQ::new();
+        time("readyq push/pop/migrate (256 tasks)", micro_ms, &mut records, move || {
+            for i in 0..256u64 {
+                q.push_back(TaskId(i));
+            }
+            for _ in 0..128 {
+                std::hint::black_box(q.pop_front());
+                std::hint::black_box(q.pop_back());
+            }
+            512
+        });
+    }
+
     time("next_hop traversal (depth-4 tree)", micro_ms, &mut records, || {
         use myrmics::config::HierarchySpec;
         use myrmics::memory::region::Memory;
@@ -296,6 +316,40 @@ fn main() {
             .eng
         });
     }
+    // The fig7 throughput shape with work stealing enabled: the ReadyQ
+    // dispatch path runs throttled (headroom checks, queue churn) and the
+    // steal protocol's request/deny chatter rides along — its whole-sim
+    // cost lands next to the default-policy case above.
+    sim_case("fig7 independent 64w x 512 tasks (steal)", sim_ms, &mut records, || {
+        let (reg, main) = independent();
+        let mut cfg = PlatformConfig::hierarchical(64);
+        cfg.policy.steal = StealCfg::on();
+        Platform::build_with(cfg, reg, main, |w| {
+            w.app = Some(Box::new(SynthParams {
+                n_tasks: 512,
+                task_cycles: 1_000_000,
+                ..Default::default()
+            }));
+        })
+        .eng
+    });
+    // The skewed-spawn adversary with stealing on: grants actually fire,
+    // so migration (pop-back, re-place, ScheduleDown) is exercised at
+    // whole-simulation scale.
+    sim_case("skew 64w x 256 tasks (steal)", sim_ms, &mut records, || {
+        let (reg, main) = skew_myrmics();
+        let mut cfg = PlatformConfig::hierarchical(64);
+        cfg.policy.steal = StealCfg::on();
+        Platform::build_with(cfg, reg, main, |w| {
+            w.app = Some(Box::new(SkewParams {
+                tasks: 256,
+                task_cycles: 500_000,
+                hot_pct: 90,
+                groups: 4,
+            }));
+        })
+        .eng
+    });
     // Fig-8/12b shape: nested regions over a *deep* (3-level) scheduler
     // tree — spawns, grants and quiescence all hop-forward along the tree,
     // exercising the routed-message path and the per-sender channel tables

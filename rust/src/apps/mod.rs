@@ -8,6 +8,7 @@ pub mod jacobi;
 pub mod kmeans;
 pub mod matmul;
 pub mod raytrace;
+pub mod skew;
 pub mod synthetic;
 pub mod workload;
 pub mod workload_api;

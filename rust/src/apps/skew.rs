@@ -1,0 +1,209 @@
+//! Skewed-spawn synthetic workload: the adversary work stealing exists
+//! for.
+//!
+//! One parent task creates `groups` region subtrees — pushed to leaf-level
+//! owners, so each group delegates to a distinct scheduler subtree — and
+//! then spawns independent compute tasks with a configurable *hot-spot
+//! fraction* aimed at group 0. Static placement (paper V-E) must follow
+//! the delegation: every hot task lands in the hot group's subtree and
+//! queues behind its few workers while the sibling subtrees idle. With
+//! stealing enabled (`StealCfg`), the schedulers above the hot leaf pull
+//! queued-ready tasks back out and re-place them towards the idle
+//! siblings, which is exactly the makespan gap the `steal` experiment
+//! measures.
+//!
+//! The MPI baseline hand-balances the same total work statically — the
+//! "hand-tuned MPI" bar the paper compares runtime scheduling against.
+
+use std::any::Any;
+
+use crate::api::args::ObjArg;
+use crate::api::ctx::TaskCtx;
+use crate::apps::workload_api::{
+    app_state, check_task_counts, groups_for, Scaling, Workload,
+};
+use crate::ids::RegionId;
+use crate::mpi::rank::MpiOp;
+use crate::platform::World;
+use crate::task::registry::{Registry, TaskRef};
+
+/// Deep enough to sink group regions to leaf-level owners on any tree the
+/// experiments build (levels are 0-indexed from the top; real trees stop
+/// descending at their leaves).
+const LEAF_LEVEL: i32 = 8;
+
+#[derive(Clone, Debug)]
+pub struct SkewParams {
+    /// Independent compute tasks spawned by main.
+    pub tasks: usize,
+    pub task_cycles: u64,
+    /// Percentage (0..=100) of tasks spawned into the hot group (group 0);
+    /// the remainder round-robins over the other groups.
+    pub hot_pct: u32,
+    /// Region subtrees (>= 1). Group 0 is the hot spot.
+    pub groups: usize,
+}
+
+impl SkewParams {
+    /// How many of `tasks` hit the hot group.
+    pub fn hot_tasks(&self) -> usize {
+        self.tasks * self.hot_pct as usize / 100
+    }
+}
+
+/// Register the task bodies; returns the main task's handle.
+fn register_tasks(reg: &mut Registry) -> TaskRef {
+    let work = reg.register("skew_work", |ctx: &mut TaskCtx<'_>| {
+        let (_obj, cycles): (ObjArg, u64) = ctx.args();
+        ctx.compute(cycles);
+    });
+    reg.register("skew_main", move |ctx: &mut TaskCtx<'_>| {
+        let p = ctx.world.app_ref::<SkewParams>().clone();
+        let groups = p.groups.max(1);
+        let mut regions = Vec::with_capacity(groups);
+        for _ in 0..groups {
+            regions.push(ctx.ralloc(RegionId::ROOT, LEAF_LEVEL));
+        }
+        let hot = p.hot_tasks();
+        for i in 0..p.tasks {
+            let g = if i < hot || groups == 1 {
+                0
+            } else {
+                // Cold remainder round-robins over groups 1..groups.
+                1 + (i - hot) % (groups - 1)
+            };
+            let o = ctx.alloc(64, regions[g]);
+            ctx.spawn_task(work).obj_inout(o).val(p.task_cycles).submit();
+        }
+    })
+}
+
+/// Build the Myrmics skew workload. Returns (registry, main task).
+pub fn myrmics() -> (Registry, TaskRef) {
+    let mut reg = Registry::new();
+    let main = register_tasks(&mut reg);
+    (reg, main)
+}
+
+/// MPI baseline: the hand-tuned programmer statically balances the same
+/// `tasks * task_cycles` total work across ranks — skew is a scheduling
+/// problem, not an algorithmic one, so the static decomposition is flat.
+pub fn mpi_programs(p: &SkewParams, ranks: usize) -> Vec<Vec<MpiOp>> {
+    (0..ranks)
+        .map(|r| {
+            let t0 = r * p.tasks / ranks;
+            let t1 = (r + 1) * p.tasks / ranks;
+            vec![MpiOp::Compute((t1 - t0) as u64 * p.task_cycles), MpiOp::Barrier]
+        })
+        .collect()
+}
+
+/// The skewed-spawn [`Workload`].
+pub struct Skew;
+
+fn sized(workers: usize, scaling: Scaling, groups: usize) -> SkewParams {
+    // VI-B-style decomposition: 2 tasks per worker. Strong scaling fixes
+    // the total work; weak scaling fixes the per-task size at the ~1 M
+    // minimum.
+    let tasks = (2 * workers).max(16);
+    let task_cycles = match scaling {
+        Scaling::Strong => ((1u64 << 31) / tasks as u64).max(1_000_000),
+        Scaling::Weak => 1_000_000,
+    };
+    SkewParams { tasks, task_cycles, hot_pct: 85, groups }
+}
+
+impl Workload for Skew {
+    fn name(&self) -> &'static str {
+        "skew"
+    }
+
+    fn register(&self, reg: &mut Registry) -> TaskRef {
+        register_tasks(reg)
+    }
+
+    fn params_for(&self, workers: usize, scaling: Scaling) -> Box<dyn Any> {
+        Box::new(sized(workers, scaling, groups_for(workers)))
+    }
+
+    fn mpi_programs(&self, ranks: usize, scaling: Scaling) -> Vec<Vec<MpiOp>> {
+        mpi_programs(&sized(ranks, scaling, 1), ranks)
+    }
+
+    fn verify(&self, world: &World) -> Result<(), String> {
+        let p = app_state::<SkewParams>(world)?;
+        // Task-count formula: main + one work task per decomposition unit.
+        check_task_counts(world, 1 + p.tasks as u64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{HierarchySpec, PlatformConfig};
+    use crate::mpi::runner::mpi_time;
+    use crate::platform::Platform;
+
+    fn params() -> SkewParams {
+        SkewParams { tasks: 40, task_cycles: 200_000, hot_pct: 90, groups: 4 }
+    }
+
+    fn build(cfg: PlatformConfig, p: SkewParams) -> Platform {
+        let (reg, main) = myrmics();
+        Platform::build_with(cfg, reg, main, move |w| {
+            w.app = Some(Box::new(p));
+        })
+    }
+
+    #[test]
+    fn completes_and_counts_match_the_formula() {
+        let p = params();
+        let mut plat = build(PlatformConfig::new(16, HierarchySpec::two_level(4)), p.clone());
+        let t = plat.run(Some(1 << 44));
+        assert!(t > 0);
+        assert_eq!(plat.world().gstats.tasks_spawned, 1 + p.tasks as u64);
+        Skew.verify(plat.world()).expect("verify must pass");
+    }
+
+    #[test]
+    fn hot_fraction_formula() {
+        assert_eq!(params().hot_tasks(), 36);
+        let p = SkewParams { hot_pct: 100, ..params() };
+        assert_eq!(p.hot_tasks(), 40);
+        let p = SkewParams { hot_pct: 0, ..params() };
+        assert_eq!(p.hot_tasks(), 0);
+    }
+
+    /// Static placement must follow the delegation: without stealing, the
+    /// hot group's leaf subtree executes (at least) the hot share of the
+    /// work — which is the imbalance the steal experiment then removes.
+    #[test]
+    fn skew_concentrates_work_without_stealing() {
+        let p = params();
+        let mut plat = build(PlatformConfig::new(16, HierarchySpec::two_level(4)), p.clone());
+        plat.run(Some(1 << 44));
+        let hier = &plat.eng.world.hier;
+        // Tasks run per leaf subtree (4 workers each).
+        let mut per_leaf = vec![0u64; hier.n_scheds];
+        for s in 0..hier.n_scheds {
+            for w in hier.leaf_workers[s].iter() {
+                per_leaf[s] += plat.eng.sim.stats[w.idx()].tasks_run;
+            }
+        }
+        let max = *per_leaf.iter().max().unwrap();
+        // 36 hot tasks + main on one leaf out of 40+1 total.
+        assert!(
+            max >= p.hot_tasks() as u64,
+            "hot leaf ran {max} tasks, expected >= {}: {per_leaf:?}",
+            p.hot_tasks()
+        );
+    }
+
+    #[test]
+    fn mpi_baseline_is_balanced_and_finishes() {
+        let p = params();
+        let t1 = mpi_time(mpi_programs(&p, 1), &PlatformConfig::flat(1));
+        let t8 = mpi_time(mpi_programs(&p, 8), &PlatformConfig::flat(1));
+        assert!(t1 as f64 / t8 as f64 > 5.0, "static balance scales: {t1} vs {t8}");
+    }
+}

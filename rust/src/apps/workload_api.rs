@@ -91,7 +91,7 @@ impl fmt::Debug for WorkloadRef {
 /// The single enumeration every driver derives its workload list from.
 /// Adding a scenario = implementing [`Workload`] in its own file and
 /// appending one entry here.
-pub fn all_workloads() -> [WorkloadRef; 6] {
+pub fn all_workloads() -> [WorkloadRef; 7] {
     [
         WorkloadRef(&crate::apps::jacobi::Jacobi),
         WorkloadRef(&crate::apps::raytrace::Raytrace),
@@ -99,6 +99,7 @@ pub fn all_workloads() -> [WorkloadRef; 6] {
         WorkloadRef(&crate::apps::kmeans::Kmeans),
         WorkloadRef(&crate::apps::matmul::Matmul),
         WorkloadRef(&crate::apps::barnes_hut::BarnesHut),
+        WorkloadRef(&crate::apps::skew::Skew),
     ]
 }
 
@@ -164,7 +165,10 @@ mod tests {
     #[test]
     fn table_names_are_unique_and_stable() {
         let names: Vec<&str> = all_workloads().iter().map(|w| w.name()).collect();
-        assert_eq!(names, ["jacobi", "raytrace", "bitonic", "kmeans", "matmul", "barnes-hut"]);
+        assert_eq!(
+            names,
+            ["jacobi", "raytrace", "bitonic", "kmeans", "matmul", "barnes-hut", "skew"]
+        );
         let mut dedup = names.clone();
         dedup.sort_unstable();
         dedup.dedup();

@@ -45,6 +45,53 @@ pub enum PolicyKind {
     PowerOfTwoChoices,
 }
 
+/// How a scheduler picks the sibling subtree to steal queued-ready tasks
+/// from when one of its children idles (see `sched::policy::VictimPolicy`).
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum VictimKind {
+    /// Deterministic: the most loaded eligible child (ties to the lowest
+    /// index). The default — draws no random numbers.
+    MaxLoad,
+    /// Uniform among eligible children, drawn from the per-scheduler RNG
+    /// derived from the run seed (never host entropy).
+    Random,
+}
+
+/// Idle-driven work-stealing configuration. **Off by default**: with
+/// `enabled == false` every ready task is dispatched in the same handler
+/// that queued it, no steal message ever exists, and the event schedule is
+/// byte-identical to the pre-stealing scheduler (the determinism
+/// fingerprints pin this). With it on, runs are still bit-deterministic
+/// from [`PlatformConfig::seed`] (`tests/steal_determinism.rs`).
+#[derive(Clone, Copy, Debug)]
+pub struct StealCfg {
+    pub enabled: bool,
+    /// A child subtree is steal-eligible when its load estimate is at
+    /// least this (and some sibling sits at exactly 0).
+    pub threshold: u64,
+    /// Maximum queued-ready tasks migrated per `StealGrant`.
+    pub batch: u32,
+    pub victim: VictimKind,
+}
+
+impl StealCfg {
+    /// Stealing enabled with the default threshold/batch/victim policy.
+    pub fn on() -> Self {
+        StealCfg { enabled: true, ..Self::default() }
+    }
+
+    /// Stealing enabled with the seeded randomized victim policy.
+    pub fn random_victim() -> Self {
+        StealCfg { enabled: true, victim: VictimKind::Random, ..Self::default() }
+    }
+}
+
+impl Default for StealCfg {
+    fn default() -> Self {
+        StealCfg { enabled: false, threshold: 4, batch: 2, victim: VictimKind::MaxLoad }
+    }
+}
+
 /// Placement-policy configuration: a tagged policy [`kind`](PolicyCfg::kind)
 /// plus its parameters. Only [`PolicyKind::LocalityBalance`] reads
 /// `p_locality`; randomized policies derive their RNG from
@@ -55,12 +102,20 @@ pub struct PolicyCfg {
     /// Percentage weight for the locality score (0..=100). The paper finds
     /// a good trade-off at 0.1-0.3 locality weight, i.e. `p` in 10..30.
     pub p_locality: u32,
+    /// Idle-driven work stealing (off by default).
+    pub steal: StealCfg,
 }
 
 impl PolicyCfg {
     /// The paper policy with an explicit locality weight.
     pub fn locality_balance(p_locality: u32) -> Self {
-        PolicyCfg { kind: PolicyKind::LocalityBalance, p_locality }
+        PolicyCfg { kind: PolicyKind::LocalityBalance, p_locality, ..Self::default() }
+    }
+
+    /// Same policy with work stealing configured (builder-style).
+    pub fn with_steal(mut self, steal: StealCfg) -> Self {
+        self.steal = steal;
+        self
     }
 
     pub fn round_robin() -> Self {
@@ -85,7 +140,11 @@ impl Default for PolicyCfg {
     fn default() -> Self {
         // Paper VI-D: "a good trade-off ... lies in the range of assigning
         // a 0.7-0.9 load-balance weight and a 0.3-0.1 locality weight".
-        PolicyCfg { kind: PolicyKind::LocalityBalance, p_locality: 10 }
+        PolicyCfg {
+            kind: PolicyKind::LocalityBalance,
+            p_locality: 10,
+            steal: StealCfg::default(),
+        }
     }
 }
 
@@ -173,6 +232,12 @@ pub struct CostModel {
     pub sc_rfree_per_node: Cycles,
     /// Handle an upstream load report.
     pub sc_load_report: Cycles,
+    /// Work stealing: fixed cost to service a `StealReq` at the victim.
+    pub sc_steal_handle: Cycles,
+    /// Work stealing: per migrated task (unlink + descriptor re-marshal)
+    /// at the victim; the thief additionally pays normal re-pack and
+    /// scoring charges when it re-places the stolen task.
+    pub sc_steal_per_task: Cycles,
 
     // --- Mini-MPI baseline costs (charged on MicroBlaze ranks) ----------
     /// Software send/receive overhead per MPI message (the paper uses "a
@@ -229,6 +294,8 @@ impl Default for CostModel {
             sc_free: 1_800,
             sc_rfree_per_node: 600,
             sc_load_report: 300,
+            sc_steal_handle: 1_200,
+            sc_steal_per_task: 400,
 
             mpi_send_overhead: 500,
             mpi_recv_overhead: 450,
@@ -455,6 +522,33 @@ mod tests {
         // Randomized/rotating policies keep the default blend parameter so
         // switching back to LocalityBalance is a one-field change.
         assert_eq!(PolicyCfg::round_robin().p_locality, 10);
+    }
+
+    #[test]
+    fn stealing_is_off_by_default_everywhere() {
+        // The off-by-default guarantee is what keeps every pre-stealing
+        // determinism fingerprint byte-identical: no constructor may flip
+        // it implicitly.
+        assert!(!PolicyCfg::default().steal.enabled);
+        assert!(!PolicyCfg::locality_balance(30).steal.enabled);
+        assert!(!PolicyCfg::round_robin().steal.enabled);
+        assert!(!PolicyCfg::power_of_two().steal.enabled);
+        assert!(!PlatformConfig::hierarchical(64).policy.steal.enabled);
+    }
+
+    #[test]
+    fn steal_cfg_constructors() {
+        let on = StealCfg::on();
+        assert!(on.enabled);
+        assert_eq!(on.victim, VictimKind::MaxLoad);
+        assert!(on.threshold >= 1);
+        assert!(on.batch >= 1);
+        let rnd = StealCfg::random_victim();
+        assert!(rnd.enabled);
+        assert_eq!(rnd.victim, VictimKind::Random);
+        let p = PolicyCfg::default().with_steal(on);
+        assert!(p.steal.enabled);
+        assert_eq!(p.kind, PolicyKind::LocalityBalance);
     }
 
     #[test]

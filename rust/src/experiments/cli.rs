@@ -2,11 +2,11 @@
 //! CLI binary: runs the selected experiments and prints paper-style rows.
 
 use super::bench::{all_workloads, workload, Scaling};
-use super::{fig11, fig12, fig7, fig8, fig9, policy};
+use super::{fig11, fig12, fig7, fig8, fig9, policy, steal};
 
 /// `args`: experiment names (empty = all) plus optional `--quick` /
-/// `--smoke` (smoke applies to the `policy` sweep: 1 policy × 1 tiny
-/// workload, for CI emitter checks).
+/// `--smoke` (smoke applies to the `policy` and `steal` sweeps: one tiny
+/// configuration each, for CI emitter checks).
 pub fn run(args: &[String]) {
     let quick = args.iter().any(|a| a == "--quick");
     let smoke = args.iter().any(|a| a == "--smoke");
@@ -86,9 +86,12 @@ pub fn run(args: &[String]) {
     if want("policy") {
         policy::run(quick, smoke);
     }
+    if want("steal") {
+        steal::run(quick, smoke);
+    }
 }
 
 pub const EXPERIMENTS: &[&str] = &[
     "fig7a", "fig7b", "fig8-strong", "fig8-weak", "overhead", "fig9", "fig10", "fig11",
-    "fig12a", "fig12b", "policy",
+    "fig12a", "fig12b", "policy", "steal",
 ];

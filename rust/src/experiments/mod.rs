@@ -12,6 +12,7 @@ pub mod fig7;
 pub mod fig8;
 pub mod fig9;
 pub mod policy;
+pub mod steal;
 
 use crate::ids::Cycles;
 use crate::sim::engine::Engine;

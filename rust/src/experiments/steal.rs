@@ -1,0 +1,302 @@
+//! Work-stealing sweep: stealing on/off over fig7/fig8 workload shapes
+//! and the skewed-spawn workload, with a machine-readable JSON report.
+//!
+//! The sweep answers the two questions the rebalance subsystem must get
+//! right at once:
+//!
+//! * **it wins where it should** — on the `skew` workload (a hot-spot
+//!   fraction of tasks delegated into one subtree) enabling stealing must
+//!   strictly reduce the makespan and raise the load-balance percentage;
+//! * **it costs ~nothing where it can't win** — on the already-balanced
+//!   fig7/fig8 shapes the steal-enabled run must stay within a few
+//!   percent (the protocol's only activity there is occasional
+//!   request/deny chatter near the tail).
+//!
+//! Output: rows on stdout (time, balance, queue-depth high-water, steal
+//! request/grant/deny/migration counts) plus `STEAL_sweep.json`. CI
+//! smoke-runs the emitter (1 shape x on/off) so it cannot rot.
+
+use crate::apps::skew::{myrmics as skew_myrmics, SkewParams};
+use crate::apps::synthetic::{hier_empty, independent, SynthParams};
+use crate::config::{HierarchySpec, PlatformConfig, StealCfg};
+use crate::ids::Cycles;
+use crate::platform::Platform;
+
+use super::summarize;
+
+/// One (workload, steal on/off) measurement.
+#[derive(Clone, Debug)]
+pub struct StealRow {
+    pub workload: &'static str,
+    pub workers: usize,
+    pub steal: bool,
+    pub threshold: u64,
+    pub batch: u32,
+    pub time: Cycles,
+    pub tasks: u64,
+    pub balance_pct: f64,
+    pub steal_reqs: u64,
+    pub steal_grants: u64,
+    pub steal_denies: u64,
+    pub tasks_stolen: u64,
+    pub ready_hwm: u64,
+    pub events: u64,
+}
+
+/// Workload shapes the sweep runs.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Shape {
+    /// fig7b: independent tasks fanned out over a two-level hierarchy —
+    /// already balanced, so stealing must be (near-)free here.
+    Fig7Independent,
+    /// fig8/12b: nested regions over a deep (3-level) tree — delegation
+    /// plus tree routing, still balanced.
+    Fig8Deep,
+    /// The skewed-spawn adversary: a hot-spot fraction of tasks delegated
+    /// into one leaf subtree — what stealing exists to fix.
+    Skew,
+}
+
+impl Shape {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Shape::Fig7Independent => "fig7-independent",
+            Shape::Fig8Deep => "fig8-deep",
+            Shape::Skew => "skew",
+        }
+    }
+}
+
+/// Run one workload shape with the given stealing configuration.
+pub fn run_one(shape: Shape, workers: usize, tasks: usize, steal: StealCfg) -> StealRow {
+    let mut plat = match shape {
+        Shape::Fig7Independent => {
+            let (reg, main) = independent();
+            let leaves = 4.min(workers.max(2));
+            let mut cfg = PlatformConfig::new(workers, HierarchySpec::two_level(leaves));
+            cfg.policy.steal = steal;
+            Platform::build_with(cfg, reg, main, move |w| {
+                w.app = Some(Box::new(SynthParams {
+                    n_tasks: tasks,
+                    task_cycles: 200_000,
+                    ..Default::default()
+                }));
+            })
+        }
+        Shape::Fig8Deep => {
+            let (reg, main) = hier_empty();
+            let mut cfg =
+                PlatformConfig::new(workers, HierarchySpec { scheds_per_level: vec![1, 2, 4] });
+            cfg.policy.steal = steal;
+            Platform::build_with(cfg, reg, main, move |w| {
+                w.app = Some(Box::new(SynthParams {
+                    domains: 4,
+                    per_domain: tasks.div_ceil(4),
+                    domain_level: 2,
+                    task_cycles: 50_000,
+                    ..Default::default()
+                }));
+            })
+        }
+        Shape::Skew => {
+            let (reg, main) = skew_myrmics();
+            // Explicit two-level tree with 4 leaf subtrees: `hierarchical`
+            // degenerates to flat under 32 workers, and stealing needs
+            // siblings to rebalance between.
+            let mut cfg = PlatformConfig::new(workers, HierarchySpec::two_level(4));
+            cfg.policy.steal = steal;
+            Platform::build_with(cfg, reg, main, move |w| {
+                w.app = Some(Box::new(SkewParams {
+                    tasks,
+                    task_cycles: 200_000,
+                    hot_pct: 90,
+                    groups: 4,
+                }));
+            })
+        }
+    };
+    let t = plat.run(Some(1 << 44));
+    let s = summarize(&plat.eng, t);
+    let g = &plat.eng.world.gstats;
+    StealRow {
+        workload: shape.name(),
+        workers,
+        steal: steal.enabled,
+        threshold: steal.threshold,
+        batch: steal.batch,
+        time: t,
+        tasks: g.tasks_completed,
+        balance_pct: s.balance,
+        steal_reqs: g.steal_reqs,
+        steal_grants: g.steal_grants,
+        steal_denies: g.steal_denies,
+        tasks_stolen: g.tasks_stolen,
+        ready_hwm: g.ready_queue_hwm,
+        events: g.events_processed,
+    }
+}
+
+/// Run the sweep. `quick` shrinks the workloads; `smoke` runs exactly one
+/// shape on/off (CI: exercises the emitter in seconds).
+pub fn run(quick: bool, smoke: bool) -> Vec<StealRow> {
+    let mut rows = Vec::new();
+    let configs = [StealCfg::default(), StealCfg::on()];
+    if smoke {
+        for steal in configs {
+            rows.push(run_one(Shape::Skew, 8, 32, steal));
+        }
+    } else {
+        let (workers, tasks) = if quick { (16, 64) } else { (64, 512) };
+        for shape in [Shape::Fig7Independent, Shape::Fig8Deep, Shape::Skew] {
+            for steal in configs {
+                rows.push(run_one(shape, workers, tasks, steal));
+            }
+        }
+    }
+    print_rows(&rows);
+    match emit_json(&rows, "STEAL_sweep.json") {
+        Ok(()) => println!("wrote STEAL_sweep.json ({} rows)", rows.len()),
+        Err(e) => eprintln!("failed to write STEAL_sweep.json: {e}"),
+    }
+    rows
+}
+
+pub fn print_rows(rows: &[StealRow]) {
+    println!("Steal sweep — idle-driven rebalance on/off over workload shapes");
+    println!(
+        "{:<18} {:>4} {:>6} {:>12} {:>9} {:>6} {:>7} {:>7} {:>7} {:>7} {:>8}",
+        "workload", "w", "steal", "time", "balance%", "qhwm", "reqs", "grants", "denies",
+        "stolen", "tasks"
+    );
+    for r in rows {
+        println!(
+            "{:<18} {:>4} {:>6} {:>12} {:>9.1} {:>6} {:>7} {:>7} {:>7} {:>7} {:>8}",
+            r.workload,
+            r.workers,
+            if r.steal { "on" } else { "off" },
+            r.time,
+            r.balance_pct,
+            r.ready_hwm,
+            r.steal_reqs,
+            r.steal_grants,
+            r.steal_denies,
+            r.tasks_stolen,
+            r.tasks
+        );
+    }
+    println!();
+}
+
+/// Serialize rows as a JSON array (no external deps — field values are
+/// numbers, booleans and fixed identifier strings).
+pub fn to_json(rows: &[StealRow]) -> String {
+    let objs: Vec<String> = rows
+        .iter()
+        .map(|r| {
+            format!(
+                "{{\"workload\": \"{}\", \"workers\": {}, \"steal\": {}, \
+                 \"threshold\": {}, \"batch\": {}, \"time\": {}, \"tasks\": {}, \
+                 \"balance_pct\": {:.2}, \"steal_reqs\": {}, \"steal_grants\": {}, \
+                 \"steal_denies\": {}, \"tasks_stolen\": {}, \"ready_hwm\": {}, \
+                 \"events\": {}}}",
+                r.workload,
+                r.workers,
+                r.steal,
+                r.threshold,
+                r.batch,
+                r.time,
+                r.tasks,
+                r.balance_pct,
+                r.steal_reqs,
+                r.steal_grants,
+                r.steal_denies,
+                r.tasks_stolen,
+                r.ready_hwm,
+                r.events,
+            )
+        })
+        .collect();
+    super::json_array(&objs)
+}
+
+pub fn emit_json(rows: &[StealRow], path: &str) -> std::io::Result<()> {
+    std::fs::write(path, to_json(rows))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The acceptance criterion, pinned: on the skewed workload stealing
+    /// strictly reduces the makespan (and actually migrates tasks).
+    #[test]
+    fn stealing_strictly_improves_the_skew_workload() {
+        let off = run_one(Shape::Skew, 16, 64, StealCfg::default());
+        let on = run_one(Shape::Skew, 16, 64, StealCfg::on());
+        assert_eq!(off.tasks, on.tasks, "both runs must complete everything");
+        assert_eq!(off.tasks_stolen, 0);
+        assert!(on.tasks_stolen > 0, "the skew workload must trigger migrations");
+        assert!(
+            on.time < off.time,
+            "stealing must strictly reduce the skew makespan: on {} vs off {}",
+            on.time,
+            off.time
+        );
+        assert!(
+            on.balance_pct > off.balance_pct,
+            "migrations must improve load balance: {:.1}% vs {:.1}%",
+            on.balance_pct,
+            off.balance_pct
+        );
+    }
+
+    /// On the already-balanced fig7 shape the steal-enabled run must stay
+    /// within 2% of the baseline makespan (the other acceptance bound).
+    #[test]
+    fn stealing_is_nearly_free_on_balanced_fig7() {
+        let off = run_one(Shape::Fig7Independent, 16, 64, StealCfg::default());
+        let on = run_one(Shape::Fig7Independent, 16, 64, StealCfg::on());
+        assert_eq!(off.tasks, on.tasks);
+        let delta = (on.time as f64 - off.time as f64).abs() / off.time as f64;
+        assert!(
+            delta < 0.02,
+            "steal-enabled fig7 drifted {:.2}% (on {} vs off {})",
+            100.0 * delta,
+            on.time,
+            off.time
+        );
+    }
+
+    /// Disabled stealing is the do-nothing path: no protocol traffic, and
+    /// the queue never holds more than the task being dispatched.
+    #[test]
+    fn disabled_stealing_has_no_protocol_footprint() {
+        for shape in [Shape::Fig7Independent, Shape::Fig8Deep, Shape::Skew] {
+            let r = run_one(shape, 8, 32, StealCfg::default());
+            assert_eq!(r.steal_reqs, 0, "{}: requests with stealing off", r.workload);
+            assert_eq!(r.tasks_stolen, 0);
+            assert!(r.ready_hwm <= 1, "{}: queue depth {} with stealing off", r.workload, r.ready_hwm);
+        }
+    }
+
+    #[test]
+    fn deep_tree_completes_with_stealing_on() {
+        let r = run_one(Shape::Fig8Deep, 16, 32, StealCfg::on());
+        assert!(r.tasks > 0);
+        assert!(r.time > 0);
+    }
+
+    #[test]
+    fn json_shape_is_stable() {
+        let rows = vec![run_one(Shape::Skew, 8, 16, StealCfg::on())];
+        let j = to_json(&rows);
+        assert!(j.starts_with("[\n"));
+        assert!(j.trim_end().ends_with(']'));
+        for key in
+            ["\"workload\"", "\"steal\"", "\"time\"", "\"tasks_stolen\"", "\"ready_hwm\""]
+        {
+            assert!(j.contains(key), "missing {key} in {j}");
+        }
+        assert_eq!(j.matches("{\"workload\"").count(), 1);
+    }
+}

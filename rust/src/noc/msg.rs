@@ -120,6 +120,20 @@ pub enum Msg {
     ScheduleDown { task: TaskId },
     /// Inform `node`'s owner that `worker` is now the last producer.
     ProducerUpdate { node: NodeId, worker: CoreId },
+    /// Idle-driven rebalance (parent -> child): request up to `batch`
+    /// queued-ready tasks from the child's [`ReadyQ`] for migration
+    /// towards an idle sibling subtree. Sent only when stealing is
+    /// enabled (`StealCfg`); at most one is in flight per scheduler.
+    ///
+    /// [`ReadyQ`]: crate::sched::readyq::ReadyQ
+    StealReq { batch: u32 },
+    /// Rebalance grant (child -> parent): the migrated task ids, popped
+    /// from the back of the victim's ready queue. Wire cost scales with
+    /// the batch (descriptors re-marshal onto the NoC).
+    StealGrant { tasks: Vec<TaskId> },
+    /// Rebalance refusal (child -> parent): the victim's ready queue was
+    /// empty — its load is already committed to workers/subtrees.
+    StealDeny,
 
     // ------------------------------------------------------ mini-MPI
     /// Point-to-point MPI message (baseline runtime). `bytes` is payload;
@@ -135,6 +149,8 @@ impl Msg {
             Msg::SpawnReq { desc, .. } => 1 + desc.args.len() as u64 / 4,
             Msg::PackResp { ranges, .. } => 1 + ranges.len() as u64 / 4,
             Msg::WaitReq { nodes, .. } => 1 + nodes.len() as u64 / 8,
+            // 8 task ids per 64-B frame.
+            Msg::StealGrant { tasks } => 1 + tasks.len() as u64 / 8,
             // MPI payloads move over DMA; the message is the header.
             _ => 1,
         }
@@ -164,6 +180,9 @@ impl Msg {
             Msg::PackResp { .. } => "PackResp",
             Msg::ScheduleDown { .. } => "ScheduleDown",
             Msg::ProducerUpdate { .. } => "ProducerUpdate",
+            Msg::StealReq { .. } => "StealReq",
+            Msg::StealGrant { .. } => "StealGrant",
+            Msg::StealDeny => "StealDeny",
             Msg::MpiSend { .. } => "MpiSend",
         }
     }
@@ -204,5 +223,19 @@ mod tests {
         // 8 ranges over 64-B frames: header + 2 continuation messages.
         assert_eq!(resp.wire_msgs(), 3);
         assert_eq!(resp.tag(), "PackResp");
+    }
+
+    #[test]
+    fn steal_messages_wire_cost_and_tags() {
+        assert_eq!(Msg::StealReq { batch: 4 }.wire_msgs(), 1);
+        assert_eq!(Msg::StealReq { batch: 4 }.tag(), "StealReq");
+        assert_eq!(Msg::StealDeny.wire_msgs(), 1);
+        assert_eq!(Msg::StealDeny.tag(), "StealDeny");
+        let small = Msg::StealGrant { tasks: (0..4).map(TaskId).collect() };
+        assert_eq!(small.wire_msgs(), 1);
+        assert_eq!(small.tag(), "StealGrant");
+        // 16 ids over 64-B frames: header + 2 continuation messages.
+        let big = Msg::StealGrant { tasks: (0..16).map(TaskId).collect() };
+        assert_eq!(big.wire_msgs(), 3);
     }
 }

@@ -2,6 +2,7 @@
 //! pluggable placement-policy layer and its scoring primitives.
 pub mod hierarchy;
 pub mod policy;
+pub mod readyq;
 pub mod scheduler;
 pub mod scoring;
 pub mod worker;

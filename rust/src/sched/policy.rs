@@ -44,12 +44,20 @@
 //!   perturb workload generation, and each scheduler's stream is
 //!   independent of event interleaving).
 
-use crate::config::{PolicyCfg, PolicyKind};
+use crate::config::{PolicyCfg, PolicyKind, StealCfg, VictimKind};
 use crate::ids::CoreId;
 use crate::noc::msg::ProducerRange;
 use crate::sched::hierarchy::HierarchyMap;
 use crate::sched::scoring::{balance_score, locality_score, pick_best};
 use crate::sim::rng::Rng;
+
+/// Per-worker ready-queue capacity the dispatch throttle targets when
+/// stealing is enabled: a worker double-buffers (one running + one
+/// prefetching, paper V-E), so two outstanding tasks keep it fed and
+/// anything deeper is better held where it can still migrate. This is the
+/// same "twice the number of cores" operating point the balance score
+/// uses as subtree capacity.
+pub const WORKER_QUEUE_CAP: u64 = 2;
 
 /// Enum-dispatched placement policy. Variants own their state (rotation
 /// cursor, RNG) so a scheduler's policy is self-contained.
@@ -134,6 +142,68 @@ impl PlacePolicy {
                 } else {
                     a
                 }
+            }
+        }
+    }
+}
+
+/// Victim selection for the idle-driven rebalance protocol: which loaded
+/// child subtree a scheduler asks for queued-ready tasks when a sibling
+/// idles. Lives here (not in the scheduler) per the policy-seam contract —
+/// and obeys the same determinism rules as [`PlacePolicy`]: the default is
+/// draw-free, the randomized variant uses only the per-scheduler RNG
+/// derived from the run seed.
+pub enum VictimPolicy {
+    /// The most loaded eligible child; ties break to the lowest index.
+    MaxLoad,
+    /// Uniform among eligible children (load >= threshold).
+    Random { rng: Rng },
+}
+
+impl VictimPolicy {
+    pub fn new(cfg: &StealCfg, sched_idx: usize, seed: u64) -> Self {
+        match cfg.victim {
+            VictimKind::MaxLoad => VictimPolicy::MaxLoad,
+            // A different odd mixer than PowerOfTwoChoices, so a scheduler
+            // running both randomized policies has two independent streams.
+            VictimKind::Random => VictimPolicy::Random {
+                rng: Rng::new(
+                    seed ^ (sched_idx as u64 + 1).wrapping_mul(0xD6E8_FEB8_6659_FD93),
+                ),
+            },
+        }
+    }
+
+    /// Pick a victim slot among `n` children whose `load(i) >= threshold`,
+    /// or `None` when no child is eligible.
+    pub fn choose(
+        &mut self,
+        n: usize,
+        load: impl Fn(usize) -> u64,
+        threshold: u64,
+    ) -> Option<usize> {
+        match self {
+            VictimPolicy::MaxLoad => {
+                let mut best: Option<(usize, u64)> = None;
+                for i in 0..n {
+                    let l = load(i);
+                    let better = match best {
+                        None => true,
+                        Some((_, bl)) => l > bl,
+                    };
+                    if l >= threshold && better {
+                        best = Some((i, l));
+                    }
+                }
+                best.map(|(i, _)| i)
+            }
+            VictimPolicy::Random { rng } => {
+                let eligible = (0..n).filter(|&i| load(i) >= threshold).count();
+                if eligible == 0 {
+                    return None;
+                }
+                let k = rng.below(eligible as u64) as usize;
+                (0..n).filter(|&i| load(i) >= threshold).nth(k)
             }
         }
     }
@@ -273,6 +343,10 @@ impl LoadTracker {
 pub struct Placer {
     pub policy: PlacePolicy,
     pub loads: LoadTracker,
+    /// Work-stealing knobs + victim selection (policy side of the
+    /// rebalance protocol; the scheduler owns only the messages).
+    steal: StealCfg,
+    victim: VictimPolicy,
     scratch: Vec<(u64, u64)>,
 }
 
@@ -281,8 +355,15 @@ impl Placer {
         Placer {
             policy: PlacePolicy::new(cfg, idx, seed),
             loads: LoadTracker::new(hier, idx),
+            steal: cfg.steal,
+            victim: VictimPolicy::new(&cfg.steal, idx, seed),
             scratch: Vec::new(),
         }
+    }
+
+    /// The run's stealing configuration (copied from `PolicyCfg`).
+    pub fn steal_cfg(&self) -> StealCfg {
+        self.steal
     }
 
     /// Pick the child subtree for a task descending from scheduler `idx`
@@ -367,6 +448,89 @@ impl Placer {
     /// Aggregate load estimate (reported upstream). O(1).
     pub fn total(&self) -> u64 {
         self.loads.total()
+    }
+
+    // ------------------------------------------------- work-stealing hooks
+
+    /// Dispatch throttle (stealing enabled only): is any placement target
+    /// below its capacity? Children cap at twice their subtree's worker
+    /// count (the balance score's operating point); attached workers cap
+    /// at [`WORKER_QUEUE_CAP`]. While false, ready tasks stay in the
+    /// scheduler's `ReadyQ`, where they remain migratable.
+    pub fn has_headroom(&self, hier: &HierarchyMap, idx: usize) -> bool {
+        let children = &hier.children[idx];
+        if children.is_empty() {
+            let n = hier.leaf_workers[idx].len();
+            (0..n).any(|i| self.loads.worker(i) < WORKER_QUEUE_CAP)
+        } else {
+            (0..children.len()).any(|i| {
+                self.loads.child(i) < 2 * hier.subtree_workers(children[i]).len() as u64
+            })
+        }
+    }
+
+    /// Steal trigger: when some child subtree sits at load 0 while a
+    /// sibling is at/above the configured threshold, pick the victim
+    /// (policy-dependent) and return its *global* scheduler index.
+    pub fn choose_victim(&mut self, hier: &HierarchyMap, idx: usize) -> Option<usize> {
+        let children = &hier.children[idx];
+        let n = children.len();
+        if n < 2 {
+            return None;
+        }
+        let loads = &self.loads;
+        if !(0..n).any(|i| loads.child(i) == 0) {
+            return None;
+        }
+        let thr = self.steal.threshold.max(1);
+        let slot = self.victim.choose(n, |i| loads.child(i), thr)?;
+        Some(children[slot])
+    }
+
+    /// Destination for one stolen task: the least-loaded child subtree
+    /// *other than the victim* (ties to the lowest index —
+    /// deterministic), bumped eagerly like any placement. Excluding the
+    /// victim is load-bearing: after `victim_stolen` decays its estimate,
+    /// a load tie could otherwise route the task straight back where it
+    /// was stolen from (wasted messages, and with `batch >= threshold` a
+    /// potential thief->victim->thief ping-pong). `choose_victim`
+    /// requires >= 2 children, so a non-victim candidate always exists.
+    /// Returns (global child index, candidates scored).
+    pub fn steal_dest(
+        &mut self,
+        hier: &HierarchyMap,
+        idx: usize,
+        victim_global: usize,
+    ) -> (usize, u64) {
+        let children = &hier.children[idx];
+        debug_assert!(children.len() >= 2, "steal_dest needs a sibling to route to");
+        let vslot = self.loads.child_slot(victim_global);
+        let mut best: Option<usize> = None;
+        for i in 0..children.len() {
+            if i == vslot {
+                continue;
+            }
+            let better = match best {
+                None => true,
+                Some(b) => self.loads.child(i) < self.loads.child(b),
+            };
+            if better {
+                best = Some(i);
+            }
+        }
+        let best = best.expect("steal_dest: no non-victim child");
+        self.loads.bump_child(best);
+        (children[best], children.len() as u64)
+    }
+
+    /// `n` queued-ready tasks just migrated out of child `victim_global`:
+    /// undo their share of its load estimate (saturating, like every
+    /// decay — an authoritative report may already have absorbed them).
+    pub fn victim_stolen(&mut self, victim_global: usize, n: u64) {
+        let slot = self.loads.child_slot(victim_global);
+        for _ in 0..n {
+            self.loads.decay_child(slot);
+        }
     }
 }
 
@@ -498,6 +662,118 @@ mod tests {
         }
         assert_eq!(tl.child_loads().len(), 0);
         assert_eq!(tl.worker_loads().len(), 4);
+    }
+
+    #[test]
+    fn headroom_tracks_capacity_at_both_levels() {
+        let hier = two_level();
+        // Top: 4 children x 4 workers => per-child cap 8.
+        let mut top = Placer::new(&PolicyCfg::default(), &hier, 0, 1);
+        assert!(top.has_headroom(&hier, 0));
+        for c in &hier.children[0] {
+            let slot = top.loads.child_slot(*c);
+            for _ in 0..8 {
+                top.loads.bump_child(slot);
+            }
+        }
+        assert!(!top.has_headroom(&hier, 0), "all children at 2x capacity");
+        top.loads.decay_child(0);
+        assert!(top.has_headroom(&hier, 0));
+        // Leaf: 4 workers, cap WORKER_QUEUE_CAP each.
+        let leaf = hier.children[0][1];
+        let mut lp = Placer::new(&PolicyCfg::default(), &hier, leaf, 1);
+        for slot in 0..4 {
+            for _ in 0..WORKER_QUEUE_CAP {
+                lp.loads.bump_worker(slot as usize);
+            }
+        }
+        assert!(!lp.has_headroom(&hier, leaf));
+        lp.loads.decay_worker(2);
+        assert!(lp.has_headroom(&hier, leaf));
+    }
+
+    #[test]
+    fn victim_needs_an_idle_sibling_and_a_loaded_one() {
+        let hier = two_level();
+        let cfg = PolicyCfg::default().with_steal(StealCfg::on());
+        let mut p = Placer::new(&cfg, &hier, 0, 1);
+        // All idle: nothing worth stealing.
+        assert_eq!(p.choose_victim(&hier, 0), None);
+        // One loaded child above threshold + idle siblings: it is chosen.
+        let heavy = hier.children[0][2];
+        let slot = p.loads.child_slot(heavy);
+        for _ in 0..p.steal_cfg().threshold.max(1) {
+            p.loads.bump_child(slot);
+        }
+        assert_eq!(p.choose_victim(&hier, 0), Some(heavy));
+        // No idle child (everyone has a unit): trigger condition fails.
+        for c in &hier.children[0] {
+            let s = p.loads.child_slot(*c);
+            if p.loads.child(s) == 0 {
+                p.loads.bump_child(s);
+            }
+        }
+        assert_eq!(p.choose_victim(&hier, 0), None);
+    }
+
+    #[test]
+    fn max_load_victim_breaks_ties_low_and_tracks_max() {
+        let mut v = VictimPolicy::MaxLoad;
+        let loads = [3u64, 9, 9, 0];
+        assert_eq!(v.choose(4, |i| loads[i], 4), Some(1));
+        assert_eq!(v.choose(4, |i| loads[i], 10), None);
+        let one = [0u64, 0, 5, 0];
+        assert_eq!(v.choose(4, |i| one[i], 5), Some(2));
+    }
+
+    #[test]
+    fn random_victim_is_seeded_and_eligible_only() {
+        let cfg = StealCfg::random_victim();
+        let loads = [9u64, 0, 7, 12];
+        let run = |seed: u64| {
+            let mut v = VictimPolicy::new(&cfg, 3, seed);
+            (0..32).map(|_| v.choose(4, |i| loads[i], 4).unwrap()).collect::<Vec<_>>()
+        };
+        assert_eq!(run(7), run(7), "victim stream must replay from the seed");
+        // Only eligible slots (load >= 4) are ever chosen.
+        assert!(run(7).iter().all(|&i| [0usize, 2, 3].contains(&i)));
+        // Ineligible-everything yields None without drawing forever.
+        let mut v = VictimPolicy::new(&cfg, 3, 7);
+        assert_eq!(v.choose(4, |i| loads[i], 100), None);
+    }
+
+    #[test]
+    fn steal_dest_and_victim_stolen_balance_the_books() {
+        let hier = two_level();
+        let cfg = PolicyCfg::default().with_steal(StealCfg::on());
+        let mut p = Placer::new(&cfg, &hier, 0, 1);
+        // Simulate: 4 tasks placed into child 0 (the future victim).
+        let victim = hier.children[0][0];
+        let vslot = p.loads.child_slot(victim);
+        for _ in 0..4 {
+            p.loads.bump_child(vslot);
+        }
+        assert_eq!(p.total(), 4);
+        // Steal 2: decay the victim, re-place each to the least-loaded
+        // non-victim child (never back to the victim, even on load ties).
+        p.victim_stolen(victim, 2);
+        assert_eq!(p.total(), 2);
+        let (d1, scored) = p.steal_dest(&hier, 0, victim);
+        assert_ne!(d1, victim);
+        assert_eq!(scored, 4);
+        let (d2, _) = p.steal_dest(&hier, 0, victim);
+        assert_ne!(d2, victim);
+        assert_ne!(d2, d1, "second task goes to the next idle subtree");
+        assert_eq!(p.total(), 4, "thief charged for every re-placed task");
+        // Completions drain everything back to zero.
+        p.victim_stolen(victim, 2);
+        p.victim_stolen(d1, 1);
+        p.victim_stolen(d2, 1);
+        assert_eq!(p.total(), 0);
+        // Full load tie (everything at zero): the victim is still never
+        // the destination — a tie must not undo the migration.
+        let (d3, _) = p.steal_dest(&hier, 0, victim);
+        assert_ne!(d3, victim);
     }
 
     #[test]

@@ -1,0 +1,253 @@
+//! Per-scheduler ready-task queue: the migratable staging area between
+//! "all dependencies granted + packed" and "committed to a subtree/worker".
+//!
+//! Before the work-stealing refactor a ready task was placed and sent in
+//! the same breath — once `place()` ran, the decision was irrevocable. Now
+//! every ready task passes through its scheduler's [`ReadyQ`]; dispatch is
+//! "pop + place + send". Tasks sitting in the queue are *not yet bound* to
+//! any child subtree or worker, which is exactly what makes them stealable:
+//! the rebalance protocol (`Msg::StealReq`/`StealGrant`) migrates queued
+//! entries without unwinding any placement state.
+//!
+//! # Hot-path discipline
+//!
+//! Push/pop/migrate sit on the per-event path, so the PR-1 invariant
+//! applies: the queue is an **intrusive doubly-linked FIFO over its own
+//! slot slab** (one contiguous `Vec`, links by dense `u32` index, freed
+//! slots recycled through an intrusive free list). Steady state performs
+//! no heap allocation and no hashing; the slab grows once to the
+//! high-water mark of simultaneously queued tasks and is then reused.
+//!
+//! Dispatch pops from the **front** (FIFO — oldest ready task first, the
+//! order the pre-refactor scheduler produced); steals pop from the
+//! **back** (the tasks the local scheduler would reach last, so migration
+//! costs are paid by work that would otherwise wait the longest).
+
+use crate::ids::TaskId;
+
+const NIL: u32 = u32::MAX;
+
+struct Node {
+    task: TaskId,
+    prev: u32,
+    next: u32,
+}
+
+/// Intrusive, arena-backed FIFO of ready task ids with O(1) push-back,
+/// pop-front (dispatch) and pop-back (steal).
+pub struct ReadyQ {
+    nodes: Vec<Node>,
+    /// Head of the intrusive free list (`next`-linked), `NIL` when empty.
+    free: u32,
+    head: u32,
+    tail: u32,
+    len: usize,
+}
+
+impl Default for ReadyQ {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ReadyQ {
+    pub fn new() -> Self {
+        ReadyQ { nodes: Vec::new(), free: NIL, head: NIL, tail: NIL, len: 0 }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Total slab slots ever allocated — the queue-depth high-water mark.
+    /// Steady state never grows this (tests pin slot reuse).
+    pub fn slots(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn push_back(&mut self, task: TaskId) {
+        let prev = self.tail;
+        let slot = if self.free != NIL {
+            let s = self.free;
+            let n = &mut self.nodes[s as usize];
+            self.free = n.next;
+            n.task = task;
+            n.prev = prev;
+            n.next = NIL;
+            s
+        } else {
+            let s = self.nodes.len() as u32;
+            self.nodes.push(Node { task, prev, next: NIL });
+            s
+        };
+        if prev != NIL {
+            self.nodes[prev as usize].next = slot;
+        } else {
+            self.head = slot;
+        }
+        self.tail = slot;
+        self.len += 1;
+    }
+
+    /// Dispatch order: oldest ready task.
+    pub fn pop_front(&mut self) -> Option<TaskId> {
+        if self.head == NIL {
+            return None;
+        }
+        let s = self.head;
+        let (task, next) = {
+            let n = &self.nodes[s as usize];
+            (n.task, n.next)
+        };
+        self.head = next;
+        if next != NIL {
+            self.nodes[next as usize].prev = NIL;
+        } else {
+            self.tail = NIL;
+        }
+        self.release(s);
+        Some(task)
+    }
+
+    /// Migration order: the task the local scheduler would reach last.
+    pub fn pop_back(&mut self) -> Option<TaskId> {
+        if self.tail == NIL {
+            return None;
+        }
+        let s = self.tail;
+        let (task, prev) = {
+            let n = &self.nodes[s as usize];
+            (n.task, n.prev)
+        };
+        self.tail = prev;
+        if prev != NIL {
+            self.nodes[prev as usize].next = NIL;
+        } else {
+            self.head = NIL;
+        }
+        self.release(s);
+        Some(task)
+    }
+
+    #[inline]
+    fn release(&mut self, s: u32) {
+        self.nodes[s as usize].next = self.free;
+        self.free = s;
+        self.len -= 1;
+    }
+
+    /// Front-to-back walk (diagnostics/tests only — not on the hot path).
+    pub fn iter(&self) -> ReadyIter<'_> {
+        ReadyIter { q: self, at: self.head }
+    }
+}
+
+pub struct ReadyIter<'a> {
+    q: &'a ReadyQ,
+    at: u32,
+}
+
+impl Iterator for ReadyIter<'_> {
+    type Item = TaskId;
+
+    fn next(&mut self) -> Option<TaskId> {
+        if self.at == NIL {
+            return None;
+        }
+        let n = &self.q.nodes[self.at as usize];
+        self.at = n.next;
+        Some(n.task)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ids(q: &ReadyQ) -> Vec<u64> {
+        q.iter().map(|t| t.0).collect()
+    }
+
+    #[test]
+    fn fifo_dispatch_order() {
+        let mut q = ReadyQ::new();
+        for i in 0..5 {
+            q.push_back(TaskId(i));
+        }
+        assert_eq!(q.len(), 5);
+        assert_eq!(ids(&q), vec![0, 1, 2, 3, 4]);
+        for i in 0..5 {
+            assert_eq!(q.pop_front(), Some(TaskId(i)));
+        }
+        assert_eq!(q.pop_front(), None);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn steals_come_off_the_back() {
+        let mut q = ReadyQ::new();
+        for i in 0..4 {
+            q.push_back(TaskId(i));
+        }
+        assert_eq!(q.pop_back(), Some(TaskId(3)));
+        assert_eq!(q.pop_back(), Some(TaskId(2)));
+        // Dispatch still sees the oldest first.
+        assert_eq!(q.pop_front(), Some(TaskId(0)));
+        assert_eq!(q.pop_back(), Some(TaskId(1)));
+        assert_eq!(q.pop_back(), None);
+        assert_eq!(q.pop_front(), None);
+    }
+
+    #[test]
+    fn single_element_from_either_end() {
+        let mut q = ReadyQ::new();
+        q.push_back(TaskId(7));
+        assert_eq!(q.pop_back(), Some(TaskId(7)));
+        q.push_back(TaskId(8));
+        assert_eq!(q.pop_front(), Some(TaskId(8)));
+        assert!(q.is_empty());
+        // Links fully reset: the queue keeps working after draining.
+        q.push_back(TaskId(9));
+        q.push_back(TaskId(10));
+        assert_eq!(ids(&q), vec![9, 10]);
+    }
+
+    #[test]
+    fn slots_are_recycled_not_grown() {
+        let mut q = ReadyQ::new();
+        for i in 0..8 {
+            q.push_back(TaskId(i));
+        }
+        let hwm = q.slots();
+        assert_eq!(hwm, 8);
+        // Steady-state churn at depth <= 8 must reuse the same slab.
+        for round in 0..100u64 {
+            q.pop_front();
+            q.pop_back();
+            q.push_back(TaskId(100 + round));
+            q.push_back(TaskId(200 + round));
+            assert_eq!(q.len(), 8);
+        }
+        assert_eq!(q.slots(), hwm, "steady-state churn must not allocate");
+    }
+
+    #[test]
+    fn interleaved_ops_preserve_order() {
+        let mut q = ReadyQ::new();
+        q.push_back(TaskId(1));
+        q.push_back(TaskId(2));
+        assert_eq!(q.pop_front(), Some(TaskId(1)));
+        q.push_back(TaskId(3));
+        q.push_back(TaskId(4));
+        assert_eq!(q.pop_back(), Some(TaskId(4)));
+        q.push_back(TaskId(5));
+        assert_eq!(ids(&q), vec![2, 3, 5]);
+        assert_eq!(q.len(), 3);
+    }
+}

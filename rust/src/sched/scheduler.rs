@@ -16,6 +16,14 @@
 //! has chosen), so placement strategies can be swept and extended without
 //! touching the traversal or packing state machines.
 //!
+//! Ready tasks pass through a per-scheduler [`ReadyQ`] before placement
+//! (dispatch = pop + place + send), which is what makes them migratable:
+//! the idle-driven rebalance protocol (`StealReq`/`StealGrant`/
+//! `StealDeny`, configured by `StealCfg` and **off by default**) moves
+//! queued-ready tasks from a loaded child subtree towards an idle sibling.
+//! See the "Work stealing" section of `docs/sim-engine.md` for the
+//! protocol, accounting and determinism contract.
+//!
 //! Everything that touches state owned by another scheduler leaves this
 //! core as a routed NoC message and is charged accordingly.
 //!
@@ -41,6 +49,7 @@ use crate::noc::msg::{MemOpKind, Msg, ProducerRange};
 use crate::memory::region::PackScratch;
 use crate::sched::hierarchy::HierarchyMap;
 use crate::sched::policy::Placer;
+use crate::sched::readyq::ReadyQ;
 use crate::sim::engine::{CoreLogic, Ctx};
 use crate::sim::event::Event;
 use crate::task::descriptor::{Access, TaskDesc};
@@ -69,6 +78,16 @@ pub struct SchedLogic {
     /// Placement policy + dense load estimates (the policy seam; see
     /// [`crate::sched::policy`]).
     placer: Placer,
+    /// Ready tasks not yet committed to a subtree/worker. Dispatch is
+    /// "pop front + place + send"; the rebalance protocol migrates from
+    /// the back. With stealing disabled the queue drains inside the
+    /// handler that fills it (`pump` never throttles), so the pre-stealing
+    /// event schedule is reproduced byte for byte.
+    ready: ReadyQ,
+    /// The child an outstanding `StealReq` went to (its estimate is
+    /// decayed when the grant lands). `Some` doubles as the "one request
+    /// in flight at a time" latch.
+    steal_victim: Option<usize>,
     last_reported: u64,
     /// `MYRMICS_TRACE_TASK`, read once at construction (it used to be an
     /// environment syscall on every single grant).
@@ -97,6 +116,8 @@ impl SchedLogic {
             spawns: FxHashMap::default(),
             waits: FxHashMap::default(),
             placer: Placer::new(&cfg.policy, hier, idx, cfg.seed),
+            ready: ReadyQ::new(),
+            steal_victim: None,
             last_reported: 0,
             trace_task: std::env::var("MYRMICS_TRACE_TASK")
                 .ok()
@@ -112,6 +133,11 @@ impl SchedLogic {
     /// diagnostics and the load-drift regression tests.
     pub fn placer(&self) -> &Placer {
         &self.placer
+    }
+
+    /// Current ready-queue depth (diagnostics/tests).
+    pub fn ready_depth(&self) -> usize {
+        self.ready.len()
     }
 
     fn fresh_req(&mut self) -> ReqId {
@@ -539,7 +565,7 @@ impl SchedLogic {
         }
         if outstanding == 0 {
             ctx.world.tasks.get_mut(task).pack = acc;
-            self.place(ctx, task);
+            self.enqueue_ready(ctx, task);
         } else {
             self.packs
                 .insert(req, PackPending { task: Some(task), reply: None, outstanding, acc });
@@ -606,10 +632,124 @@ impl SchedLogic {
         let p = self.packs.remove(&req).unwrap();
         if let Some(task) = p.task {
             ctx.world.tasks.get_mut(task).pack = p.acc;
-            self.place(ctx, task);
+            self.enqueue_ready(ctx, task);
         } else if let Some((orig, reply_to)) = p.reply {
             self.send_routed(ctx, reply_to, Msg::PackResp { req: orig, ranges: p.acc });
         }
+    }
+
+    // ========================================== ready queue + work stealing
+
+    /// A packed, dependency-free task enters this scheduler's ready queue.
+    /// Dispatch is "pop + place + send" (`pump`), so queued tasks remain
+    /// migratable until the moment they are placed.
+    fn enqueue_ready(&mut self, ctx: &mut Ctx<'_>, task: TaskId) {
+        ctx.world.tasks.get_mut(task).state = TaskState::Queued;
+        self.ready.push_back(task);
+        let depth = self.ready.len() as u64;
+        if depth > ctx.world.gstats.ready_queue_hwm {
+            ctx.world.gstats.ready_queue_hwm = depth;
+        }
+        self.pump(ctx);
+    }
+
+    /// Pop + place ready tasks. With stealing disabled this always drains
+    /// the queue immediately (identical behavior — and byte-identical
+    /// event schedule — to the pre-ReadyQ dispatch path). With stealing
+    /// enabled, dispatch throttles once every placement target is at
+    /// capacity: the surplus stays here, visible in upstream load reports
+    /// and stealable by the parent. Re-pumped on every load decay
+    /// (completions, forwarded `TaskDone` hops) and load report.
+    fn pump(&mut self, ctx: &mut Ctx<'_>) {
+        while !self.ready.is_empty() {
+            if self.placer.steal_cfg().enabled
+                && !self.placer.has_headroom(&ctx.world.hier, self.idx)
+            {
+                break;
+            }
+            let task = self.ready.pop_front().expect("non-empty ready queue");
+            self.place(ctx, task);
+        }
+    }
+
+    /// Idle-driven steal trigger: when one child subtree's load estimate
+    /// is 0 while a sibling's is at/above the threshold, ask the victim
+    /// (chosen by the configured [`VictimPolicy`]) for up to `batch`
+    /// queued-ready tasks. One request in flight at a time.
+    ///
+    /// [`VictimPolicy`]: crate::sched::policy::VictimPolicy
+    fn maybe_steal(&mut self, ctx: &mut Ctx<'_>) {
+        if !self.placer.steal_cfg().enabled || self.steal_victim.is_some() {
+            return;
+        }
+        let Some(victim) = self.placer.choose_victim(&ctx.world.hier, self.idx) else {
+            return;
+        };
+        self.steal_victim = Some(victim);
+        ctx.world.gstats.steal_reqs += 1;
+        let batch = self.placer.steal_cfg().batch;
+        let to = self.sched_core(ctx, victim);
+        self.send_routed(ctx, to, Msg::StealReq { batch });
+    }
+
+    /// Victim side: surrender up to `batch` tasks from the *back* of the
+    /// ready queue (the work this scheduler would reach last), or refuse
+    /// if everything is already committed to workers/subtrees.
+    fn on_steal_req(&mut self, ctx: &mut Ctx<'_>, batch: u32) {
+        ctx.charge(ctx.sim.cost.sc_steal_handle);
+        // StealReq only ever comes from the parent scheduler.
+        let parent = ctx.world.hier.parent[self.idx].expect("stolen-from scheduler has a parent");
+        let reply_to = self.sched_core(ctx, parent);
+        let mut tasks = Vec::new();
+        while (tasks.len() as u32) < batch {
+            let Some(t) = self.ready.pop_back() else { break };
+            ctx.charge(ctx.sim.cost.sc_steal_per_task);
+            tasks.push(t);
+        }
+        if tasks.is_empty() {
+            self.send_routed(ctx, reply_to, Msg::StealDeny);
+            return;
+        }
+        self.send_routed(ctx, reply_to, Msg::StealGrant { tasks });
+        // The queue shrank: refresh the parent's authoritative view (the
+        // grant already carried the eager decay; threshold-gated reports
+        // then land decay-then-overwrite like every other refresh).
+        self.report_up(ctx);
+    }
+
+    /// Thief side: account the migration (decay the victim's estimate,
+    /// charge the destination) and re-place every stolen task towards the
+    /// idle side of this scheduler's subtree.
+    fn on_steal_grant(&mut self, ctx: &mut Ctx<'_>, tasks: Vec<TaskId>) {
+        let victim = self.steal_victim.take().expect("grant without an outstanding StealReq");
+        ctx.world.gstats.steal_grants += 1;
+        ctx.world.gstats.tasks_stolen += tasks.len() as u64;
+        self.placer.victim_stolen(victim, tasks.len() as u64);
+        for task in tasks {
+            self.place_stolen(ctx, task, victim);
+        }
+        // The victim decay may have opened headroom for this scheduler's
+        // own held-back ready tasks — dispatch them (FIFO, so older local
+        // work is not overtaken further by the freshly routed steals).
+        self.pump(ctx);
+        // Re-placement bumped the idle slot(s), so the trigger condition
+        // re-evaluates against fresh estimates: still-imbalanced trees may
+        // immediately pull another batch, balanced ones stop.
+        self.maybe_steal(ctx);
+    }
+
+    /// Re-place one stolen task: charge the re-pack (its descriptor and
+    /// range list re-marshal towards the new subtree) plus a scoring pass,
+    /// then send it down the least-loaded child other than the victim.
+    /// The receiver runs the normal queue/place path from there.
+    fn place_stolen(&mut self, ctx: &mut Ctx<'_>, task: TaskId, victim: usize) {
+        let ranges = ctx.world.tasks.get(task).pack.len() as u64;
+        ctx.charge(ctx.sim.cost.sc_pack_base + ctx.sim.cost.sc_pack_per_range * ranges);
+        let (dest, scored) = self.placer.steal_dest(&ctx.world.hier, self.idx, victim);
+        ctx.charge(ctx.sim.cost.sc_score_base + ctx.sim.cost.sc_score_per_child * scored);
+        ctx.world.tasks.get_mut(task).state = TaskState::Placing;
+        let to = self.sched_core(ctx, dest);
+        self.send_routed(ctx, to, Msg::ScheduleDown { task });
     }
 
     // ============================================================ placement
@@ -681,6 +821,8 @@ impl SchedLogic {
             let to = self.sched_core(ctx, resp);
             self.send_routed(ctx, to, Msg::TaskDone { task });
             if known_worker.is_some() {
+                // The decay may have opened headroom for a held task.
+                self.pump(ctx);
                 self.report_up(ctx);
             }
             return;
@@ -697,10 +839,17 @@ impl SchedLogic {
         // child subtree the task descended into. (The decay mirrors the
         // worker-level refresh — previously inner schedulers leaked their
         // eager increments until the next child load report, so estimates
-        // drifted upward whenever reports were throttled.)
+        // drifted upward whenever reports were throttled.) A stolen task
+        // may have run on a worker *outside* this scheduler's subtree
+        // (migration above a delegated-to leaf): then there is nothing to
+        // decay here — this scheduler never placed it. `child_done`
+        // already no-ops via `child_towards`; the leaf case needs the
+        // explicit attachment check.
         if let Some(w) = ctx.world.tasks.get(task).worker {
             if ctx.world.hier.is_leaf(self.idx) {
-                self.placer.worker_done(w);
+                if ctx.world.hier.leaf_of_worker(w) == self.idx {
+                    self.placer.worker_done(w);
+                }
             } else {
                 self.placer.child_done(&ctx.world.hier, self.idx, w);
             }
@@ -723,6 +872,11 @@ impl SchedLogic {
         if ctx.world.gstats.tasks_completed == ctx.world.gstats.tasks_spawned {
             ctx.world.done = true;
         }
+        // The decay may have opened headroom (dispatch a held task) or
+        // idled a child subtree (trigger a steal). No-ops when stealing
+        // is disabled: the queue is empty and maybe_steal returns early.
+        self.pump(ctx);
+        self.maybe_steal(ctx);
     }
 
     fn on_pop_entry(&mut self, ctx: &mut Ctx<'_>, node: NodeId, task: TaskId, arg: usize) {
@@ -839,14 +993,24 @@ impl SchedLogic {
             Some(s) => self.placer.child_report(s, load),
             None => self.placer.worker_report(from, load),
         }
+        // Fresh estimates may reveal headroom or an idle/loaded imbalance.
+        // Pump first: dispatching from the queue keeps total+queue
+        // constant, so the upstream report below is unaffected by order.
+        self.pump(ctx);
+        self.maybe_steal(ctx);
         self.report_up(ctx);
     }
 
     /// Re-aggregate and report upstream when the load changed by at least
     /// the configured threshold (paper V-C). The aggregate is the
-    /// tracker's incrementally maintained total — O(1), no table scan.
+    /// tracker's incrementally maintained total — O(1), no table scan —
+    /// plus the depth of this scheduler's own ready queue: held-back
+    /// ready tasks are load this subtree owns, and without the term a
+    /// holding scheduler under-reports exactly the surplus the rebalance
+    /// protocol exists to detect. (With stealing disabled the queue is
+    /// always empty here, so the reported value is unchanged.)
     fn report_up(&mut self, ctx: &mut Ctx<'_>) {
-        let my_load = self.placer.total();
+        let my_load = self.placer.total() + self.ready.len() as u64;
         let thr = ctx.world.cfg.load_report_threshold;
         if my_load.abs_diff(self.last_reported) >= thr {
             if let Some(p) = ctx.world.hier.parent[self.idx] {
@@ -877,7 +1041,13 @@ impl SchedLogic {
             }
             Msg::PackReq { req, node, reply_to } => self.on_pack_req(ctx, req, node, reply_to),
             Msg::PackResp { req, ranges } => self.on_pack_resp(ctx, req, ranges),
-            Msg::ScheduleDown { task } => self.place(ctx, task),
+            Msg::ScheduleDown { task } => self.enqueue_ready(ctx, task),
+            Msg::StealReq { batch } => self.on_steal_req(ctx, batch),
+            Msg::StealGrant { tasks } => self.on_steal_grant(ctx, tasks),
+            Msg::StealDeny => {
+                self.steal_victim = None;
+                ctx.world.gstats.steal_denies += 1;
+            }
             Msg::ProducerUpdate { .. } => {
                 // Functional update was applied eagerly; charge bookkeeping.
                 ctx.charge(ctx.sim.cost.sc_load_report);
@@ -909,20 +1079,33 @@ impl CoreLogic for SchedLogic {
                     // destination. The payload moves — no envelope, no
                     // allocation.
                     //
-                    // A forwarded TaskDone always climbs from the worker's
-                    // leaf towards the responsible scheduler — the reverse
-                    // of the ScheduleDown descent — so this scheduler
-                    // eagerly bumped the child subtree the task went into
-                    // and must decay it here, or mid-level estimates leak
-                    // until the next child load report (see
-                    // `Placer::child_done`).
+                    // A forwarded TaskDone travels from the worker's leaf
+                    // towards the responsible scheduler — normally the
+                    // exact reverse of the ScheduleDown descent — so this
+                    // scheduler eagerly bumped the child subtree the task
+                    // went into and must decay it here, or mid-level
+                    // estimates leak until the next child load report. A
+                    // *migrated* task's completion may instead pass hops
+                    // whose subtree never held it (it runs outside its
+                    // responsible scheduler's subtree); `child_done`
+                    // attributes by the worker it actually ran on and
+                    // no-ops via `child_towards` everywhere else.
+                    let mut was_task_done = false;
                     if let Msg::TaskDone { task } = &msg {
+                        was_task_done = true;
                         if let Some(w) = ctx.world.tasks.get(*task).worker {
                             self.placer.child_done(&ctx.world.hier, self.idx, w);
                         }
                     }
                     let next = ctx.world.hier.route_next(self.idx, dst);
                     ctx.send_via(next, dst, msg);
+                    if was_task_done {
+                        // The forward-hop decay above may have opened
+                        // headroom or idled a child (no-op with stealing
+                        // disabled).
+                        self.pump(ctx);
+                        self.maybe_steal(ctx);
+                    }
                 }
             }
             Event::DmaDone { .. } | Event::Timer(_) | Event::Wake => {}

@@ -78,6 +78,19 @@ pub struct GlobalStats {
     /// Dependency-analysis boundary crossings (inter-scheduler messages
     /// caused by region-tree traversal).
     pub dep_boundary_msgs: u64,
+    // --- work-stealing protocol (all zero when stealing is disabled) ---
+    /// `StealReq` messages initiated by idle-detecting schedulers.
+    pub steal_reqs: u64,
+    /// Requests answered with a `StealGrant` (>= 1 migrated task).
+    pub steal_grants: u64,
+    /// Requests refused (`StealDeny`: victim's ready queue was empty).
+    pub steal_denies: u64,
+    /// Queued-ready tasks migrated between sibling subtrees.
+    pub tasks_stolen: u64,
+    /// Deepest any scheduler's ready queue ever got. With stealing
+    /// disabled the queue drains within the handler that fills it, so
+    /// this never exceeds 1.
+    pub ready_queue_hwm: u64,
 }
 
 #[cfg(test)]

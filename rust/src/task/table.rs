@@ -19,6 +19,9 @@ pub enum TaskState {
     DepWait,
     /// All arguments granted; packing in flight.
     Packing,
+    /// Packed; parked in a scheduler's ready queue awaiting dispatch —
+    /// the only state in which a task is migratable by work stealing.
+    Queued,
     /// Packed; placement descent in flight.
     Placing,
     /// Sent to a worker; queued or fetching arguments there.

@@ -13,8 +13,9 @@
 //! exactly zero through the decay path alone — on a 2-level hierarchy the
 //! decay fully mirrors the bumps (top: child slots, leaves: worker slots).
 
+use myrmics::apps::skew::{myrmics as skew_myrmics, SkewParams};
 use myrmics::apps::synthetic::{independent, SynthParams};
-use myrmics::config::{HierarchySpec, PlatformConfig};
+use myrmics::config::{HierarchySpec, PlatformConfig, StealCfg};
 use myrmics::platform::Platform;
 use myrmics::sched::scheduler::SchedLogic;
 use myrmics::sim::engine::Engine;
@@ -22,14 +23,32 @@ use myrmics::sim::engine::Engine;
 /// Downcast a scheduler core's logic and return its load-estimate state
 /// as (total, child_loads, worker_loads).
 fn sched_loads(eng: &Engine, idx: usize) -> (u64, Vec<u64>, Vec<u64>) {
-    let core = eng.world.hier.sched_core(idx);
-    let logic = eng.logic_of(core).expect("scheduler core has logic");
-    let sched = logic
-        .as_any()
-        .and_then(|a| a.downcast_ref::<SchedLogic>())
-        .expect("scheduler core logic is SchedLogic");
+    let sched = sched_logic(eng, idx);
     let loads = &sched.placer().loads;
     (loads.total(), loads.child_loads().to_vec(), loads.worker_loads().to_vec())
+}
+
+fn sched_logic(eng: &Engine, idx: usize) -> &SchedLogic {
+    let core = eng.world.hier.sched_core(idx);
+    let logic = eng.logic_of(core).expect("scheduler core has logic");
+    logic
+        .as_any()
+        .and_then(|a| a.downcast_ref::<SchedLogic>())
+        .expect("scheduler core logic is SchedLogic")
+}
+
+/// Every scheduler's books must be exactly zero and every ready queue
+/// drained once a run completes with load reports disabled.
+fn assert_drained(eng: &Engine) {
+    for s in 0..eng.world.hier.n_scheds {
+        let (total, children, workers) = sched_loads(eng, s);
+        assert_eq!(
+            total, 0,
+            "scheduler {s} leaked load estimates: total {total}, \
+             children {children:?}, workers {workers:?}"
+        );
+        assert_eq!(sched_logic(eng, s).ready_depth(), 0, "scheduler {s} still queues tasks");
+    }
 }
 
 #[test]
@@ -116,4 +135,86 @@ fn estimates_stay_bounded_with_reports() {
         "top-level estimates did not drain: total {total}, \
          children {children:?}, workers {workers:?}"
     );
+}
+
+/// Stealing enabled, reports disabled, 2-level tree: the throttled
+/// dispatch path (bump on place, decay on completion) plus any steals the
+/// eager estimates trigger must still drain every book to exactly zero —
+/// a stolen task decays at the victim's slot and charges the thief's
+/// destination slot, and the completion decay follows the worker it
+/// *actually* ran on.
+#[test]
+fn estimates_drain_to_zero_with_stealing_enabled() {
+    let (reg, main) = independent();
+    let mut cfg = PlatformConfig::new(16, HierarchySpec::two_level(4));
+    cfg.load_report_threshold = u64::MAX;
+    cfg.policy.steal = StealCfg::on();
+    let mut plat = Platform::build_with(cfg, reg, main, |w| {
+        w.app = Some(Box::new(SynthParams {
+            n_tasks: 48,
+            task_cycles: 100_000,
+            ..Default::default()
+        }));
+    });
+    plat.run(Some(1 << 44));
+    assert_eq!(plat.world().gstats.tasks_completed, 49, "main + 48 children must complete");
+    assert_drained(&plat.eng);
+}
+
+/// Same contract on a 3-level hierarchy: mid-level schedulers see stolen
+/// tasks only as forwarded `TaskDone` hops, and their books must still
+/// balance through the forward-path decay.
+#[test]
+fn estimates_drain_on_three_levels_with_stealing_enabled() {
+    let (reg, main) = independent();
+    let mut cfg = PlatformConfig::new(16, HierarchySpec::multi_level(3, 2));
+    cfg.load_report_threshold = u64::MAX;
+    cfg.policy.steal = StealCfg::on();
+    let mut plat = Platform::build_with(cfg, reg, main, |w| {
+        w.app = Some(Box::new(SynthParams {
+            n_tasks: 40,
+            task_cycles: 100_000,
+            ..Default::default()
+        }));
+    });
+    plat.run(Some(1 << 44));
+    assert_eq!(plat.world().gstats.tasks_completed, 41);
+    assert_drained(&plat.eng);
+}
+
+/// Actual migrations (skew workload, reports on): stolen tasks must decay
+/// at the victim and charge the thief — after completion no scheduler may
+/// hold queued tasks, and the top's estimates must be near-drained (only
+/// in-flight final reports may remain, exactly as in the report-enabled
+/// baseline test above).
+#[test]
+fn migration_accounting_balances_under_real_steals() {
+    let (reg, main) = skew_myrmics();
+    let mut cfg = PlatformConfig::new(16, HierarchySpec::two_level(4));
+    cfg.policy.steal = StealCfg::on();
+    let mut plat = Platform::build_with(cfg, reg, main, |w| {
+        w.app = Some(Box::new(SkewParams {
+            tasks: 64,
+            task_cycles: 200_000,
+            hot_pct: 90,
+            groups: 4,
+        }));
+    });
+    plat.run(Some(1 << 44));
+    let g = &plat.world().gstats;
+    assert_eq!(g.tasks_completed, 65);
+    assert!(g.tasks_stolen > 0, "the skewed run must actually migrate tasks");
+    for s in 0..plat.eng.world.hier.n_scheds {
+        assert_eq!(
+            sched_logic(&plat.eng, s).ready_depth(),
+            0,
+            "scheduler {s} finished with queued tasks"
+        );
+        let (total, children, workers) = sched_loads(&plat.eng, s);
+        assert!(
+            total <= 4,
+            "scheduler {s} books did not balance after migration: total {total}, \
+             children {children:?}, workers {workers:?}"
+        );
+    }
 }

@@ -1,0 +1,147 @@
+//! Determinism gate for the work-stealing subsystem.
+//!
+//! Two contracts, both load-bearing:
+//!
+//! 1. **Off by default = byte-identical**: with `StealCfg::enabled ==
+//!    false` (the default), the ReadyQ refactor must reproduce the
+//!    pre-stealing event schedule exactly — that contract is pinned by
+//!    the untouched replay fingerprints in `tests/determinism.rs` /
+//!    `tests/wheel_determinism.rs` (push + pop happen in the same
+//!    handler, no message, cost or ordering difference exists).
+//! 2. **On = still a pure function of the seed**: with stealing enabled,
+//!    every steal decision derives from deterministic load estimates and
+//!    (for the randomized victim policy) the per-scheduler RNG seeded
+//!    from `PlatformConfig::seed` — so two runs of the same configuration
+//!    must replay bit-identically, on flat and deep hierarchies alike.
+
+use myrmics::apps::skew::{myrmics as skew_myrmics, SkewParams};
+use myrmics::apps::synthetic::{independent, SynthParams};
+use myrmics::config::{HierarchySpec, PlatformConfig, StealCfg};
+use myrmics::platform::Platform;
+
+/// Everything that must replay bit-identically, including the steal
+/// protocol's own counters.
+#[derive(PartialEq, Eq, Debug)]
+struct Fingerprint {
+    final_time: u64,
+    events: u64,
+    msgs: u64,
+    tasks_spawned: u64,
+    tasks_completed: u64,
+    dep_boundary_msgs: u64,
+    steal_reqs: u64,
+    steal_grants: u64,
+    steal_denies: u64,
+    tasks_stolen: u64,
+    ready_hwm: u64,
+}
+
+fn run_skew(mut cfg: PlatformConfig, steal: StealCfg, tasks: usize) -> Fingerprint {
+    cfg.policy.steal = steal;
+    let (reg, main) = skew_myrmics();
+    let mut plat = Platform::build_with(cfg, reg, main, move |w| {
+        w.app = Some(Box::new(SkewParams {
+            tasks,
+            task_cycles: 200_000,
+            hot_pct: 90,
+            groups: 4,
+        }));
+    });
+    let t = plat.run(Some(1 << 44));
+    let g = &plat.world().gstats;
+    Fingerprint {
+        final_time: t,
+        events: g.events_processed,
+        msgs: g.msgs_total,
+        tasks_spawned: g.tasks_spawned,
+        tasks_completed: g.tasks_completed,
+        dep_boundary_msgs: g.dep_boundary_msgs,
+        steal_reqs: g.steal_reqs,
+        steal_grants: g.steal_grants,
+        steal_denies: g.steal_denies,
+        tasks_stolen: g.tasks_stolen,
+        ready_hwm: g.ready_queue_hwm,
+    }
+}
+
+/// Flat hierarchy: a single scheduler has no sibling to steal between —
+/// the protocol must stay silent, the run must still complete and replay.
+#[test]
+fn steal_enabled_flat_replays_bit_identically() {
+    let run = || run_skew(PlatformConfig::flat(4), StealCfg::on(), 32);
+    let a = run();
+    let b = run();
+    assert_eq!(a, b, "flat steal-enabled run must replay bit-identically");
+    assert_eq!(a.tasks_completed, 33, "main + 32 work tasks");
+    assert_eq!(a.steal_reqs, 0, "no siblings, no steals");
+}
+
+/// Two-level tree under heavy skew: steals must actually fire, and the
+/// whole schedule — including every steal decision — must replay.
+#[test]
+fn steal_enabled_two_level_replays_bit_identically() {
+    let cfg = || PlatformConfig::new(16, HierarchySpec::two_level(4));
+    let run = || run_skew(cfg(), StealCfg::on(), 64);
+    let a = run();
+    let b = run();
+    assert_eq!(a, b, "steal-enabled run must replay bit-identically");
+    assert_eq!(a.tasks_completed, 65);
+    assert!(a.tasks_stolen > 0, "the skewed run must migrate tasks: {a:?}");
+    assert!(a.ready_hwm > 1, "held-back ready tasks must show in the queue depth");
+}
+
+/// Three-level hierarchy: steals happen at inner levels too (a mid
+/// scheduler rebalancing its leaf children); replay must still pin.
+#[test]
+fn steal_enabled_three_level_replays_bit_identically() {
+    let cfg = || PlatformConfig::new(16, HierarchySpec::multi_level(3, 2));
+    let run = || run_skew(cfg(), StealCfg::on(), 64);
+    let a = run();
+    let b = run();
+    assert_eq!(a, b, "3-level steal-enabled run must replay bit-identically");
+    assert_eq!(a.tasks_completed, 65);
+    assert!(a.tasks_stolen > 0, "hierarchical steals must fire: {a:?}");
+}
+
+/// The randomized victim policy draws only from per-scheduler RNGs
+/// derived from the run seed: same seed = same schedule, different seed
+/// may differ (and at minimum never panics or stalls).
+#[test]
+fn random_victim_policy_is_seed_deterministic() {
+    let mut base = PlatformConfig::new(16, HierarchySpec::two_level(4));
+    base.seed = 0xFEED;
+    let run = |cfg: PlatformConfig| run_skew(cfg, StealCfg::random_victim(), 64);
+    let a = run(base.clone());
+    let b = run(base.clone());
+    assert_eq!(a, b, "random-victim runs must replay from the seed");
+    assert_eq!(a.tasks_completed, 65);
+    let mut other = base;
+    other.seed = 0xBEEF;
+    let c = run(other);
+    assert_eq!(c.tasks_completed, 65, "different seed must still complete");
+}
+
+/// Independent (non-skewed) workload with stealing enabled: the
+/// throttled-dispatch path replays too, not just the skew shape.
+#[test]
+fn steal_enabled_independent_replays_bit_identically() {
+    let run = || {
+        let mut cfg = PlatformConfig::new(16, HierarchySpec::two_level(4));
+        cfg.policy.steal = StealCfg::on();
+        let (reg, main) = independent();
+        let mut plat = Platform::build_with(cfg, reg, main, |w| {
+            w.app = Some(Box::new(SynthParams {
+                n_tasks: 48,
+                task_cycles: 100_000,
+                ..Default::default()
+            }));
+        });
+        let t = plat.run(Some(1 << 44));
+        let g = &plat.world().gstats;
+        (t, g.events_processed, g.msgs_total, g.tasks_completed, g.ready_queue_hwm)
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a, b);
+    assert_eq!(a.3, 49);
+}
