@@ -18,6 +18,7 @@
 //! calibration test in `apps::synthetic`).
 
 use crate::ids::Cycles;
+use crate::sim::chaos::FaultPlan;
 
 /// Which flavour of CPU a simulated core models. Affects only the charge
 /// rate: all costs in [`CostModel`] are expressed in MicroBlaze cycles and
@@ -72,6 +73,15 @@ pub struct StealCfg {
     /// Maximum queued-ready tasks migrated per `StealGrant`.
     pub batch: u32,
     pub victim: VictimKind,
+    /// Deny-retry backoff base, cycles. **0 (the default) disables
+    /// retry** and keeps the protocol byte-identical to the pre-retry
+    /// scheduler: a denied thief goes quiet until the next natural
+    /// trigger. When > 0, a denied thief re-arms its steal trigger after
+    /// `retry_backoff << min(attempt - 1, 10)` cycles (capped exponential
+    /// backoff), so an idle subtree can't stall behind one unlucky deny.
+    pub retry_backoff: u64,
+    /// Maximum consecutive denied retries before going quiet.
+    pub retry_max: u32,
 }
 
 impl StealCfg {
@@ -84,11 +94,26 @@ impl StealCfg {
     pub fn random_victim() -> Self {
         StealCfg { enabled: true, victim: VictimKind::Random, ..Self::default() }
     }
+
+    /// Deny-retry configured (builder-style); `backoff == 0` keeps the
+    /// retry path disabled.
+    pub fn with_retry(mut self, backoff: u64, max: u32) -> Self {
+        self.retry_backoff = backoff;
+        self.retry_max = max;
+        self
+    }
 }
 
 impl Default for StealCfg {
     fn default() -> Self {
-        StealCfg { enabled: false, threshold: 4, batch: 2, victim: VictimKind::MaxLoad }
+        StealCfg {
+            enabled: false,
+            threshold: 4,
+            batch: 2,
+            victim: VictimKind::MaxLoad,
+            retry_backoff: 0,
+            retry_max: 3,
+        }
     }
 }
 
@@ -409,6 +434,10 @@ pub struct PlatformConfig {
     pub load_report_threshold: u64,
     /// Deterministic seed for all randomized decisions in the run.
     pub seed: u64,
+    /// Deterministic fault injection ([`crate::sim::chaos`]). Disabled by
+    /// default ([`FaultPlan::none`]): runs stay byte-identical to the
+    /// pre-chaos engine.
+    pub chaos: FaultPlan,
 }
 
 impl PlatformConfig {
@@ -422,6 +451,7 @@ impl PlatformConfig {
             channel_capacity: 8,
             load_report_threshold: 1,
             seed: 0xB5EED,
+            chaos: FaultPlan::none(),
         }
     }
 
@@ -543,12 +573,28 @@ mod tests {
         assert_eq!(on.victim, VictimKind::MaxLoad);
         assert!(on.threshold >= 1);
         assert!(on.batch >= 1);
+        // Deny-retry is off by default (backoff 0 = pre-retry protocol).
+        assert_eq!(on.retry_backoff, 0);
         let rnd = StealCfg::random_victim();
         assert!(rnd.enabled);
         assert_eq!(rnd.victim, VictimKind::Random);
+        assert_eq!(rnd.retry_backoff, 0);
+        let retry = StealCfg::on().with_retry(10_000, 5);
+        assert_eq!(retry.retry_backoff, 10_000);
+        assert_eq!(retry.retry_max, 5);
         let p = PolicyCfg::default().with_steal(on);
         assert!(p.steal.enabled);
         assert_eq!(p.kind, PolicyKind::LocalityBalance);
+    }
+
+    #[test]
+    fn fault_injection_is_off_by_default_everywhere() {
+        // Same byte-identity contract as stealing: no constructor may
+        // install a fault plan implicitly.
+        assert!(!PlatformConfig::new(4, HierarchySpec::flat()).chaos.enabled);
+        assert!(!PlatformConfig::flat(8).chaos.enabled);
+        assert!(!PlatformConfig::hierarchical(64).chaos.enabled);
+        assert_eq!(PlatformConfig::flat(8).chaos, FaultPlan::none());
     }
 
     #[test]

@@ -99,6 +99,12 @@ impl DepState {
         self.nodes.is_empty()
     }
 
+    /// All live nodes, in slot order (diagnostics and the quiescence
+    /// oracles: at full drain every surviving node must be idle).
+    pub fn iter_nodes(&self) -> impl Iterator<Item = &DepNode> {
+        self.nodes.iter()
+    }
+
     /// Mark a node dying (region freed while draining) or remove it
     /// immediately if it is already idle.
     pub fn retire(&mut self, id: NodeId) {

@@ -2,16 +2,37 @@
 //! CLI binary: runs the selected experiments and prints paper-style rows.
 
 use super::bench::{all_workloads, workload, Scaling};
-use super::{fig11, fig12, fig7, fig8, fig9, policy, steal};
+use super::{fig11, fig12, fig7, fig8, fig9, fuzz, policy, steal};
 
-/// `args`: experiment names (empty = all) plus optional `--quick` /
-/// `--smoke` (smoke applies to the `policy` and `steal` sweeps: one tiny
-/// configuration each, for CI emitter checks).
+/// `args`: experiment names (empty = all paper figures) plus optional
+/// `--quick` / `--smoke` (smoke applies to the `policy`/`steal` sweeps
+/// and the `fuzz` harness: tiny configurations for CI checks). The
+/// `fuzz` harness additionally takes value flags — `--seeds N`,
+/// `--soak MINUTES`, and `--seed X [--plan Y]` to reproduce one case —
+/// which are consumed here so their values never masquerade as
+/// experiment names.
 pub fn run(args: &[String]) {
     let quick = args.iter().any(|a| a == "--quick");
     let smoke = args.iter().any(|a| a == "--smoke");
-    let picks: Vec<&str> =
-        args.iter().filter(|a| !a.starts_with("--")).map(|s| s.as_str()).collect();
+    let mut picks: Vec<&str> = Vec::new();
+    let mut fuzz_cases: Option<usize> = None;
+    let mut fuzz_soak_secs: u64 = 0;
+    let mut fuzz_seed: Option<u64> = None;
+    let mut fuzz_plan: Option<u64> = None;
+    let mut it = args.iter();
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--seeds" => fuzz_cases = it.next().and_then(|v| v.parse().ok()),
+            "--soak" => {
+                let mins: u64 = it.next().and_then(|v| v.parse().ok()).unwrap_or(0);
+                fuzz_soak_secs = mins * 60;
+            }
+            "--seed" => fuzz_seed = it.next().and_then(|v| v.parse().ok()),
+            "--plan" => fuzz_plan = it.next().and_then(|v| v.parse().ok()),
+            s if s.starts_with("--") => {}
+            s => picks.push(s),
+        }
+    }
     let want = |name: &str| picks.is_empty() || picks.contains(&name);
 
 
@@ -89,9 +110,29 @@ pub fn run(args: &[String]) {
     if want("steal") {
         steal::run(quick, smoke);
     }
+    // The fuzz harness only runs when explicitly picked: it is a
+    // robustness gate, not a paper figure, so the bare `myrmics exp`
+    // figure regeneration skips it. A failing case makes the whole
+    // invocation exit nonzero (the blocking CI contract).
+    if picks.contains(&"fuzz") {
+        let opts = fuzz::FuzzOpts {
+            cases: fuzz_cases.unwrap_or(if smoke {
+                8
+            } else if quick {
+                24
+            } else {
+                64
+            }),
+            soak_secs: fuzz_soak_secs,
+            fixed: fuzz_seed.map(|s| (s, fuzz_plan.unwrap_or(0))),
+        };
+        if !fuzz::run(&opts) {
+            std::process::exit(1);
+        }
+    }
 }
 
 pub const EXPERIMENTS: &[&str] = &[
     "fig7a", "fig7b", "fig8-strong", "fig8-weak", "overhead", "fig9", "fig10", "fig11",
-    "fig12a", "fig12b", "policy", "steal",
+    "fig12a", "fig12b", "policy", "steal", "fuzz",
 ];

@@ -1,0 +1,478 @@
+//! Protocol fuzz/soak harness: randomized fault plans x adversarial
+//! spawn patterns, every run checked against the quiescence oracles and
+//! a double-run replay pin.
+//!
+//! Each case is fully determined by two integers:
+//!
+//! * `seed` — the run seed (`PlatformConfig::seed`) *and* the source of
+//!   the case parameters (workload shape, hierarchy, steal config,
+//!   strictness), drawn from a decorrelated RNG stream;
+//! * `plan` — the fault-plan seed ([`FaultPlan::from_seed`]); `0` means
+//!   no faults, so every 5th case doubles as a plain-engine regression.
+//!
+//! That makes every verdict reproducible from one line:
+//! `myrmics exp fuzz --seed X --plan Y`. The harness runs each case
+//! twice and compares full fingerprints (the `tests/steal_determinism.rs`
+//! tuple), so a nondeterministic schedule is a failure even when every
+//! oracle passes. On failure with faults enabled the case is re-run with
+//! `plan = 0` as a one-step shrink: `clean_fails` in the report says
+//! whether the bug needs the fault plan at all.
+//!
+//! Output: verdict rows on stdout plus `FUZZ_report.json` (per-case
+//! verdicts, violations, reproducer lines). CI smoke-runs the harness on
+//! every PR; the nightly workflow runs wide (`--seeds 200`) and soaks.
+
+use std::time::Instant;
+
+use crate::apps::skew::{myrmics as skew_myrmics, SkewParams};
+use crate::apps::synthetic::{empty_chain, hier_empty, independent, SynthParams};
+use crate::config::{HierarchySpec, PlatformConfig, StealCfg};
+use crate::ids::Cycles;
+use crate::platform::Platform;
+use crate::sim::chaos::FaultPlan;
+use crate::sim::engine::Engine;
+use crate::sim::rng::Rng;
+use crate::testutil::oracles;
+
+/// Decorrelates case-parameter draws from the engine RNG streams (which
+/// also start from `seed`).
+const CASE_STREAM: u64 = 0xAD5E_11E5_0DDB_A11D;
+/// Seed of the meta-RNG that generates the (seed, plan) case list.
+const META_SEED: u64 = 0xF0CC_5EED;
+/// Cycle budget per run; a case still undrained here is a hang.
+const CASE_LIMIT: Cycles = 1 << 44;
+
+/// Harness options (parsed by `experiments::cli`).
+#[derive(Clone, Copy, Debug)]
+pub struct FuzzOpts {
+    /// Number of generated cases (ignored when `fixed` is set).
+    pub cases: usize,
+    /// Keep generating fresh cases until this much wall-clock has passed
+    /// (0 = no soak phase).
+    pub soak_secs: u64,
+    /// Reproduce exactly one `(seed, plan)` case.
+    pub fixed: Option<(u64, u64)>,
+}
+
+impl FuzzOpts {
+    pub fn smoke() -> Self {
+        FuzzOpts { cases: 8, soak_secs: 0, fixed: None }
+    }
+}
+
+/// Everything that must replay bit-identically (the
+/// `tests/steal_determinism.rs` fingerprint tuple).
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub struct CaseFp {
+    pub time: Cycles,
+    pub events: u64,
+    pub msgs: u64,
+    pub spawned: u64,
+    pub completed: u64,
+    pub dep_boundary: u64,
+    pub steal_reqs: u64,
+    pub steal_grants: u64,
+    pub steal_denies: u64,
+    pub tasks_stolen: u64,
+    pub ready_hwm: u64,
+}
+
+/// One case verdict.
+#[derive(Clone, Debug)]
+pub struct FuzzRow {
+    pub seed: u64,
+    pub plan: u64,
+    pub shape: &'static str,
+    pub hier: &'static str,
+    pub steal: &'static str,
+    pub strict: bool,
+    pub fp: CaseFp,
+    /// "ok" | "oracle" | "replay" | "hang".
+    pub verdict: &'static str,
+    pub violations: Vec<String>,
+    /// Shrink result for failures with faults on: does the same seed
+    /// fail with `plan = 0` too? `None` when not applicable.
+    pub clean_fails: Option<bool>,
+}
+
+impl FuzzRow {
+    pub fn ok(&self) -> bool {
+        self.verdict == "ok"
+    }
+
+    /// The one-line reproducer recorded in the report.
+    pub fn repro(&self) -> String {
+        format!("myrmics exp fuzz --seed {} --plan {}", self.seed, self.plan)
+    }
+}
+
+/// Case parameters, derived from the seed alone so the reproducer line
+/// needs no extra state.
+struct CaseParams {
+    shape: u64,
+    hier: u64,
+    steal: u64,
+    strict: bool,
+}
+
+impl CaseParams {
+    fn derive(seed: u64) -> Self {
+        let mut r = Rng::new(seed ^ CASE_STREAM);
+        CaseParams {
+            shape: r.below(5),
+            hier: r.below(3),
+            steal: r.below(4),
+            // Mostly strict (load reports off => books must hit exactly
+            // zero); the rest exercise the report path under the loose
+            // bound.
+            strict: r.below(4) < 3,
+        }
+    }
+
+    fn shape_name(&self) -> &'static str {
+        ["chain", "independent", "skew-hot", "skew-90", "hier-empty"][self.shape as usize]
+    }
+
+    fn hier_name(&self) -> &'static str {
+        ["flat4", "two-level16", "three-level16"][self.hier as usize]
+    }
+
+    fn steal_name(&self) -> &'static str {
+        ["off", "on", "rnd-victim", "on-retry"][self.steal as usize]
+    }
+}
+
+/// Build and fully drain one run. Shapes are the known adversaries: a
+/// deep serial chain (all `inout` on one object), a wide independent fan,
+/// the skewed-spawn hot spot (100% = everything into one subtree), and
+/// the nested-region hierarchy that spawns during delegation.
+fn exec(seed: u64, plan: u64) -> (Cycles, Engine) {
+    let p = CaseParams::derive(seed);
+    let mut cfg = match p.hier {
+        0 => PlatformConfig::new(4, HierarchySpec::flat()),
+        1 => PlatformConfig::new(16, HierarchySpec::two_level(4)),
+        _ => PlatformConfig::new(16, HierarchySpec::multi_level(3, 2)),
+    };
+    cfg.seed = seed;
+    cfg.chaos = FaultPlan::from_seed(plan);
+    cfg.policy.steal = match p.steal {
+        0 => StealCfg::default(),
+        1 => StealCfg::on(),
+        2 => StealCfg::random_victim(),
+        _ => StealCfg::on().with_retry(5_000, 3),
+    };
+    if p.strict {
+        cfg.load_report_threshold = u64::MAX;
+    }
+    let mut plat = match p.shape {
+        0 => {
+            let (reg, main) = empty_chain();
+            Platform::build_with(cfg, reg, main, |w| {
+                w.app = Some(Box::new(SynthParams {
+                    n_tasks: 60,
+                    task_cycles: 20_000,
+                    ..Default::default()
+                }));
+            })
+        }
+        1 => {
+            let (reg, main) = independent();
+            Platform::build_with(cfg, reg, main, |w| {
+                w.app = Some(Box::new(SynthParams {
+                    n_tasks: 48,
+                    task_cycles: 50_000,
+                    ..Default::default()
+                }));
+            })
+        }
+        2 | 3 => {
+            let hot_pct = if p.shape == 2 { 100 } else { 90 };
+            let (reg, main) = skew_myrmics();
+            Platform::build_with(cfg, reg, main, move |w| {
+                w.app = Some(Box::new(SkewParams {
+                    tasks: 48,
+                    task_cycles: 100_000,
+                    hot_pct,
+                    groups: 4,
+                }));
+            })
+        }
+        _ => {
+            let (reg, main) = hier_empty();
+            Platform::build_with(cfg, reg, main, |w| {
+                w.app = Some(Box::new(SynthParams {
+                    domains: 4,
+                    per_domain: 8,
+                    task_cycles: 20_000,
+                    // On shallower trees ralloc clamps at the leaves.
+                    domain_level: 2,
+                    ..Default::default()
+                }));
+            })
+        }
+    };
+    let t = plat.run_to_quiescence(Some(CASE_LIMIT));
+    (t, plat.eng)
+}
+
+fn fingerprint(t: Cycles, eng: &Engine) -> CaseFp {
+    let g = &eng.world.gstats;
+    CaseFp {
+        time: t,
+        events: g.events_processed,
+        msgs: g.msgs_total,
+        spawned: g.tasks_spawned,
+        completed: g.tasks_completed,
+        dep_boundary: g.dep_boundary_msgs,
+        steal_reqs: g.steal_reqs,
+        steal_grants: g.steal_grants,
+        steal_denies: g.steal_denies,
+        tasks_stolen: g.tasks_stolen,
+        ready_hwm: g.ready_queue_hwm,
+    }
+}
+
+/// Run one `(seed, plan)` case: execute, check oracles, replay, shrink.
+pub fn run_case(seed: u64, plan: u64) -> FuzzRow {
+    run_case_with(seed, plan, None)
+}
+
+/// Like [`run_case`] but lets a test corrupt the quiesced engine before
+/// the oracles see it — how the "a seeded corruption is caught and gets a
+/// reproducer line" acceptance test drives the real reporting path. The
+/// fingerprint is taken *before* corruption, so the replay pin still
+/// compares honest runs.
+pub fn run_case_with(
+    seed: u64,
+    plan: u64,
+    corrupt: Option<&dyn Fn(&mut Engine)>,
+) -> FuzzRow {
+    let p = CaseParams::derive(seed);
+    let (t, mut eng) = exec(seed, plan);
+    let fp = fingerprint(t, &eng);
+    let hang = !eng.world.done;
+    if let Some(f) = corrupt {
+        f(&mut eng);
+    }
+    let violations = oracles::check_all(&eng, p.strict);
+    let (t2, eng2) = exec(seed, plan);
+    let replay_ok = fp == fingerprint(t2, &eng2);
+    let verdict = if hang {
+        "hang"
+    } else if !violations.is_empty() {
+        "oracle"
+    } else if !replay_ok {
+        "replay"
+    } else {
+        "ok"
+    };
+    let clean_fails = if verdict != "ok" && plan != 0 {
+        let (_tc, engc) = exec(seed, 0);
+        Some(!engc.world.done || !oracles::check_all(&engc, p.strict).is_empty())
+    } else {
+        None
+    };
+    FuzzRow {
+        seed,
+        plan,
+        shape: p.shape_name(),
+        hier: p.hier_name(),
+        steal: p.steal_name(),
+        strict: p.strict,
+        fp,
+        verdict,
+        violations,
+        clean_fails,
+    }
+}
+
+/// Run the harness. Returns `true` when every case passed (the CLI exits
+/// nonzero otherwise, which is what makes the CI step blocking).
+pub fn run(opts: &FuzzOpts) -> bool {
+    let mut rows = Vec::new();
+    if let Some((seed, plan)) = opts.fixed {
+        rows.push(run_case(seed, plan));
+    } else {
+        let mut meta = Rng::new(META_SEED);
+        for i in 0..opts.cases {
+            let seed = meta.next_u64();
+            let drawn = meta.next_u64();
+            // Every 5th case runs fault-free: the oracles must also hold
+            // on the unperturbed engine.
+            let plan = if i % 5 == 4 { 0 } else { drawn };
+            rows.push(run_case(seed, plan));
+        }
+        if opts.soak_secs > 0 {
+            let start = Instant::now();
+            while start.elapsed().as_secs() < opts.soak_secs {
+                let seed = meta.next_u64();
+                let plan = meta.next_u64();
+                rows.push(run_case(seed, plan));
+            }
+        }
+    }
+    print_rows(&rows);
+    match emit_json(&rows, "FUZZ_report.json") {
+        Ok(()) => println!("wrote FUZZ_report.json ({} cases)", rows.len()),
+        Err(e) => eprintln!("failed to write FUZZ_report.json: {e}"),
+    }
+    let failures: Vec<&FuzzRow> = rows.iter().filter(|r| !r.ok()).collect();
+    for r in &failures {
+        eprintln!("FAIL [{}] {}  # shape {} hier {} steal {}", r.verdict, r.repro(), r.shape, r.hier, r.steal);
+    }
+    failures.is_empty()
+}
+
+pub fn print_rows(rows: &[FuzzRow]) {
+    println!("Protocol fuzz — fault plans x adversarial spawns, oracle + replay checked");
+    println!(
+        "{:<22} {:<22} {:<12} {:<12} {:<10} {:>6} {:>12} {:>6} {:>7} {:>8}",
+        "seed", "plan", "shape", "hier", "steal", "strict", "time", "tasks", "stolen", "verdict"
+    );
+    for r in rows {
+        println!(
+            "{:<22} {:<22} {:<12} {:<12} {:<10} {:>6} {:>12} {:>6} {:>7} {:>8}",
+            r.seed,
+            r.plan,
+            r.shape,
+            r.hier,
+            r.steal,
+            if r.strict { "yes" } else { "no" },
+            r.fp.time,
+            r.fp.completed,
+            r.fp.tasks_stolen,
+            r.verdict
+        );
+    }
+    println!();
+}
+
+/// Minimal JSON string escaping (violation text can contain quotes from
+/// `{:?}` formatting).
+fn esc(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+pub fn to_json(rows: &[FuzzRow]) -> String {
+    let objs: Vec<String> = rows
+        .iter()
+        .map(|r| {
+            let detail = esc(&r.violations.join("; "));
+            let clean = match r.clean_fails {
+                None => "null".to_string(),
+                Some(b) => b.to_string(),
+            };
+            format!(
+                "{{\"seed\": {}, \"plan\": {}, \"shape\": \"{}\", \"hier\": \"{}\", \
+                 \"steal\": \"{}\", \"strict\": {}, \"time\": {}, \"events\": {}, \
+                 \"tasks\": {}, \"tasks_stolen\": {}, \"steal_denies\": {}, \
+                 \"verdict\": \"{}\", \"violations\": {}, \"detail\": \"{}\", \
+                 \"clean_fails\": {}, \"repro\": \"{}\"}}",
+                r.seed,
+                r.plan,
+                r.shape,
+                r.hier,
+                r.steal,
+                r.strict,
+                r.fp.time,
+                r.fp.events,
+                r.fp.completed,
+                r.fp.tasks_stolen,
+                r.fp.steal_denies,
+                r.verdict,
+                r.violations.len(),
+                detail,
+                clean,
+                r.repro(),
+            )
+        })
+        .collect();
+    super::json_array(&objs)
+}
+
+pub fn emit_json(rows: &[FuzzRow], path: &str) -> std::io::Result<()> {
+    std::fs::write(path, to_json(rows))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// First cases of the real meta stream (what `--smoke` runs) must
+    /// pass every oracle and the replay pin.
+    #[test]
+    fn leading_smoke_cases_are_green() {
+        let mut meta = Rng::new(META_SEED);
+        for i in 0..3 {
+            let seed = meta.next_u64();
+            let drawn = meta.next_u64();
+            let plan = if i % 5 == 4 { 0 } else { drawn };
+            let r = run_case(seed, plan);
+            assert!(
+                r.ok(),
+                "case {i} (seed {seed}, plan {plan}) failed: {} {:?}",
+                r.verdict,
+                r.violations
+            );
+        }
+    }
+
+    /// The acceptance criterion: a deliberately corrupted run is caught
+    /// by an oracle and the row carries a reproducer line.
+    #[test]
+    fn seeded_corruption_is_caught_with_a_reproducer() {
+        let mut meta = Rng::new(META_SEED);
+        let seed = meta.next_u64();
+        let plan = meta.next_u64();
+        let r = run_case_with(seed, plan, Some(&|eng: &mut Engine| {
+            eng.world.gstats.tasks_completed -= 1;
+        }));
+        assert_eq!(r.verdict, "oracle");
+        assert!(!r.violations.is_empty());
+        assert!(r.repro().contains("--seed"), "repro line: {}", r.repro());
+        let j = to_json(&[r]);
+        assert!(j.contains("\"verdict\": \"oracle\""));
+        assert!(j.contains("myrmics exp fuzz --seed"));
+    }
+
+    /// Nonzero plans must actually perturb: across a handful of cases the
+    /// chaos layer has to have injected something (every generated plan
+    /// draws jitter_pct >= 10, so an all-quiet sweep means the hooks came
+    /// unwired).
+    #[test]
+    fn fault_plans_actually_inject() {
+        let mut meta = Rng::new(META_SEED);
+        let mut injected = 0u64;
+        for _ in 0..3 {
+            let seed = meta.next_u64();
+            let plan = meta.next_u64();
+            let (_t, eng) = exec(seed, plan);
+            assert!(eng.world.done, "chaos run must still complete");
+            let c = &eng.sim.chaos;
+            injected += c.jitters() + c.starves() + c.stalls() + c.forced_denies();
+        }
+        assert!(injected > 0, "no faults injected across 3 chaos cases");
+    }
+
+    /// A fixed-case reproduction (`--seed X --plan Y`) runs exactly one
+    /// row and replays.
+    #[test]
+    fn fixed_case_reproduces_and_replays() {
+        let a = run_case(12345, 678);
+        let b = run_case(12345, 678);
+        assert_eq!(a.fp, b.fp, "same (seed, plan) must fingerprint identically");
+        assert!(a.ok(), "fixed case failed: {} {:?}", a.verdict, a.violations);
+    }
+
+    #[test]
+    fn json_shape_is_stable() {
+        let rows = vec![run_case(42, 0)];
+        let j = to_json(&rows);
+        assert!(j.starts_with("[\n"));
+        assert!(j.trim_end().ends_with(']'));
+        for key in ["\"seed\"", "\"plan\"", "\"verdict\"", "\"repro\"", "\"clean_fails\""] {
+            assert!(j.contains(key), "missing {key} in {j}");
+        }
+        assert_eq!(j.matches("{\"seed\"").count(), 1);
+    }
+}

@@ -11,6 +11,7 @@ pub mod fig12;
 pub mod fig7;
 pub mod fig8;
 pub mod fig9;
+pub mod fuzz;
 pub mod policy;
 pub mod steal;
 

@@ -19,13 +19,15 @@ fn usage() -> ! {
     eprintln!();
     eprintln!("USAGE:");
     eprintln!("  myrmics exp [NAMES...] [--quick]   regenerate paper figures/tables");
+    eprintln!("  myrmics exp fuzz [FUZZ OPTS]       protocol fuzz + invariant oracles");
     eprintln!("  myrmics run <bench> [OPTS]         run one benchmark simulation");
     eprintln!("  myrmics bench --list               list the registered workloads");
     eprintln!();
     eprintln!("EXPERIMENTS: {}", cli::EXPERIMENTS.join(" "));
     eprintln!("BENCHES:     {}", bench_names());
     eprintln!();
-    eprintln!("run OPTS: --workers N (default 64)  --flat  --mpi  --weak");
+    eprintln!("run OPTS:  --workers N (default 64)  --flat  --mpi  --weak");
+    eprintln!("fuzz OPTS: --smoke | --seeds N | --soak MINUTES | --seed X [--plan Y]");
     std::process::exit(2)
 }
 

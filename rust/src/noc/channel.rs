@@ -28,9 +28,34 @@ pub struct Channel {
     /// destination, message). The destination rides along so tree-routed
     /// messages resume forwarding when the credit frees up.
     pub blocked: VecDeque<(Cycles, CoreId, Msg)>,
+    /// Debug-build audit: how often `release` found no in-flight credit.
+    /// Legal only on links marked [`Channel::allow_uncredited`]; anywhere
+    /// else an idle release is a double credit return being masked.
+    #[cfg(debug_assertions)]
+    idle_releases: u64,
+    /// Uncredited pushes (boot bootstrap) are expected on this link.
+    #[cfg(debug_assertions)]
+    uncredited_ok: bool,
 }
 
 impl Channel {
+    /// Mark this link as legitimately carrying uncredited direct pushes
+    /// (the platform-boot Dispatch). Debug builds then count idle
+    /// releases instead of flagging them as double credit returns.
+    /// No-op in release builds.
+    pub fn allow_uncredited(&mut self) {
+        #[cfg(debug_assertions)]
+        {
+            self.uncredited_ok = true;
+        }
+    }
+
+    /// How many idle releases this channel absorbed (debug builds only).
+    #[cfg(debug_assertions)]
+    pub fn idle_releases(&self) -> u64 {
+        self.idle_releases
+    }
+
     /// Try to consume a credit. Returns true if the send may proceed.
     pub fn try_acquire(&mut self, capacity: usize) -> bool {
         if self.in_flight < capacity {
@@ -45,13 +70,23 @@ impl Channel {
     /// blocked send is waiting, it immediately claims the credit and is
     /// returned for delivery.
     ///
-    /// A release with no in-flight message is a no-op: pre-seeded tree
-    /// channels (see [`ChannelTables`]) exist before any send, and a few
-    /// paths (platform boot, mini-MPI data delivery) inject `Event::Msg`
-    /// directly without consuming a credit.
+    /// A release with no in-flight message is a no-op in release builds:
+    /// a few paths (platform boot, mini-MPI data delivery) inject
+    /// `Event::Msg` directly without consuming a credit. Debug builds
+    /// audit the path: the link must have been marked
+    /// [`Channel::allow_uncredited`], otherwise the idle release is a
+    /// double credit return that the no-op would silently mask.
     pub fn release(&mut self) -> Option<(Cycles, CoreId, Msg)> {
         if self.in_flight == 0 {
             debug_assert!(self.blocked.is_empty(), "blocked sends on an idle channel");
+            #[cfg(debug_assertions)]
+            {
+                self.idle_releases += 1;
+                debug_assert!(
+                    self.uncredited_ok,
+                    "idle release on a credited link: double credit return"
+                );
+            }
             return None;
         }
         self.in_flight -= 1;
@@ -139,6 +174,12 @@ impl ChannelTables {
     pub fn degree_hint(topo: &Topology) -> usize {
         topo.max_degree() + 2
     }
+
+    /// All materialized channels (invariant oracles: at quiescence every
+    /// credit must be restored and no send may remain parked).
+    pub fn iter(&self) -> impl Iterator<Item = &Channel> {
+        self.chans.iter()
+    }
 }
 
 #[cfg(test)]
@@ -161,8 +202,36 @@ mod tests {
     #[test]
     fn idle_release_is_noop() {
         let mut ch = Channel::default();
+        // Links that receive uncredited direct pushes (platform boot) are
+        // marked; an idle release there is the legal no-op path.
+        ch.allow_uncredited();
         assert!(ch.release().is_none());
         assert_eq!(ch.in_flight, 0);
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "double credit return")]
+    fn double_release_is_caught_in_debug() {
+        let mut ch = Channel::default();
+        assert!(ch.try_acquire(1));
+        assert!(ch.release().is_none());
+        // One release too many on a credited link: must not be masked.
+        let _ = ch.release();
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    fn idle_releases_are_counted_on_uncredited_links() {
+        let mut ch = Channel::default();
+        ch.allow_uncredited();
+        assert!(ch.release().is_none());
+        assert!(ch.release().is_none());
+        assert_eq!(ch.idle_releases(), 2);
+        // A properly credited release is not an idle release.
+        assert!(ch.try_acquire(1));
+        assert!(ch.release().is_none());
+        assert_eq!(ch.idle_releases(), 2);
     }
 
     #[test]
@@ -184,8 +253,12 @@ mod tests {
         t.preseed(CoreId(0), CoreId(1));
         let ch = t.get_mut(CoreId(0), CoreId(1)).expect("preseeded");
         assert_eq!(ch.in_flight, 0);
-        // A release on the pre-seeded, never-used link is a no-op.
+        // A release on the pre-seeded, never-used link is a no-op — but
+        // only uncredited-marked links may absorb it (see
+        // `double_release_is_caught_in_debug`).
+        ch.allow_uncredited();
         assert!(ch.release().is_none());
+        assert_eq!(t.iter().count(), 1);
     }
 
     #[test]

@@ -152,6 +152,10 @@ impl Platform {
                 sim.preseed_channel(w, sc);
             }
         }
+        // Deterministic fault injection: a disabled plan (the default) is
+        // a no-op and keeps the engine byte-identical to the pre-chaos
+        // schedule.
+        sim.install_chaos(&cfg.chaos, cfg.seed);
 
         // Main task: holds the root region read-write, responsible
         // scheduler = top level, dispatched to worker 0.
@@ -187,8 +191,12 @@ impl Platform {
                 eng.set_logic(w, Box::new(WorkerLogic::new(w, leaf_core)));
             }
         }
-        // Boot: deliver the main-task dispatch to the first worker.
+        // Boot: deliver the main-task dispatch to the first worker. The
+        // push bypasses the credit channel, so the receiver-side release
+        // on that link legitimately finds no in-flight credit — mark it
+        // so debug builds don't flag the no-op as a double release.
         let top = eng.world.hier.top_core();
+        eng.sim.expect_uncredited(top, first_worker);
         eng.sim.push(
             0,
             first_worker,
@@ -201,6 +209,16 @@ impl Platform {
     /// virtual time.
     pub fn run(&mut self, limit: Option<Cycles>) -> Cycles {
         self.eng.run(limit);
+        self.eng.sim.now = self.eng.sim.horizon();
+        self.eng.sim.now
+    }
+
+    /// Run past completion until the event queue fully drains, so strict
+    /// quiescence invariants (credits restored, books exactly zero) hold
+    /// — the mode the fuzz harness checks its oracles in. See
+    /// [`Engine::run_to_quiescence`].
+    pub fn run_to_quiescence(&mut self, limit: Option<Cycles>) -> Cycles {
+        self.eng.run_to_quiescence(limit);
         self.eng.sim.now = self.eng.sim.horizon();
         self.eng.sim.now
     }

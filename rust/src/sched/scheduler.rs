@@ -51,9 +51,15 @@ use crate::sched::hierarchy::HierarchyMap;
 use crate::sched::policy::Placer;
 use crate::sched::readyq::ReadyQ;
 use crate::sim::engine::{CoreLogic, Ctx};
-use crate::sim::event::Event;
+use crate::sim::event::{Event, TimerKind};
 use crate::task::descriptor::{Access, TaskDesc};
 use crate::task::table::TaskState;
+
+/// Custom-timer tag for the deny-retry backoff rearm (see
+/// [`crate::config::StealCfg::retry_backoff`]). Workers never schedule
+/// custom timers, so the tag only needs to be unique among scheduler
+/// timers.
+const STEAL_RETRY_TIMER: u64 = 0x57EA_17;
 
 /// Reentrant pending packing operation ("reentrant events with saved local
 /// state", paper V-C).
@@ -88,6 +94,9 @@ pub struct SchedLogic {
     /// decayed when the grant lands). `Some` doubles as the "one request
     /// in flight at a time" latch.
     steal_victim: Option<usize>,
+    /// Consecutive denied steal attempts (deny-retry backoff state; only
+    /// advances when `StealCfg::retry_backoff > 0`).
+    steal_retries: u32,
     last_reported: u64,
     /// `MYRMICS_TRACE_TASK`, read once at construction (it used to be an
     /// environment syscall on every single grant).
@@ -118,6 +127,7 @@ impl SchedLogic {
             placer: Placer::new(&cfg.policy, hier, idx, cfg.seed),
             ready: ReadyQ::new(),
             steal_victim: None,
+            steal_retries: 0,
             last_reported: 0,
             trace_task: std::env::var("MYRMICS_TRACE_TASK")
                 .ok()
@@ -138,6 +148,25 @@ impl SchedLogic {
     /// Current ready-queue depth (diagnostics/tests).
     pub fn ready_depth(&self) -> usize {
         self.ready.len()
+    }
+
+    /// A `StealReq` is outstanding (oracle: must be false at quiescence).
+    pub fn steal_in_flight(&self) -> bool {
+        self.steal_victim.is_some()
+    }
+
+    /// Seeded-corruption hook for the oracle self-tests: mutable access
+    /// to the placement books.
+    #[cfg(test)]
+    pub fn placer_mut(&mut self) -> &mut Placer {
+        &mut self.placer
+    }
+
+    /// Seeded-corruption hook for the oracle self-tests: leak a task into
+    /// the ready queue after the run has drained.
+    #[cfg(test)]
+    pub fn ready_inject(&mut self, task: TaskId) {
+        self.ready.push_back(task);
     }
 
     fn fresh_req(&mut self) -> ReqId {
@@ -700,6 +729,12 @@ impl SchedLogic {
         // StealReq only ever comes from the parent scheduler.
         let parent = ctx.world.hier.parent[self.idx].expect("stolen-from scheduler has a parent");
         let reply_to = self.sched_core(ctx, parent);
+        // Fault injection: deny regardless of queue depth, exercising the
+        // thief's deny path and deny-retry backoff under load.
+        if ctx.chaos_force_deny() {
+            self.send_routed(ctx, reply_to, Msg::StealDeny);
+            return;
+        }
         let mut tasks = Vec::new();
         while (tasks.len() as u32) < batch {
             let Some(t) = self.ready.pop_back() else { break };
@@ -717,11 +752,33 @@ impl SchedLogic {
         self.report_up(ctx);
     }
 
+    /// Deny-retry backoff: with `StealCfg::retry_backoff > 0`, a denied
+    /// thief re-arms the steal trigger after a capped exponential delay
+    /// instead of going quiet until the next natural trigger (a load
+    /// report or completion hop). The default backoff of 0 disables the
+    /// path entirely — no timer, no counter movement — keeping the
+    /// pre-retry event schedule byte-identical.
+    fn retry_after_deny(&mut self, ctx: &mut Ctx<'_>) {
+        let cfg = self.placer.steal_cfg();
+        if cfg.retry_backoff == 0 {
+            return;
+        }
+        if self.steal_retries >= cfg.retry_max {
+            // Budget exhausted: go quiet; the next grant resets the count.
+            return;
+        }
+        self.steal_retries += 1;
+        let shift = (self.steal_retries - 1).min(10);
+        let delay = cfg.retry_backoff.saturating_mul(1u64 << shift);
+        ctx.after(delay, TimerKind::Custom(STEAL_RETRY_TIMER));
+    }
+
     /// Thief side: account the migration (decay the victim's estimate,
     /// charge the destination) and re-place every stolen task towards the
     /// idle side of this scheduler's subtree.
     fn on_steal_grant(&mut self, ctx: &mut Ctx<'_>, tasks: Vec<TaskId>) {
         let victim = self.steal_victim.take().expect("grant without an outstanding StealReq");
+        self.steal_retries = 0;
         ctx.world.gstats.steal_grants += 1;
         ctx.world.gstats.tasks_stolen += tasks.len() as u64;
         self.placer.victim_stolen(victim, tasks.len() as u64);
@@ -1047,6 +1104,7 @@ impl SchedLogic {
             Msg::StealDeny => {
                 self.steal_victim = None;
                 ctx.world.gstats.steal_denies += 1;
+                self.retry_after_deny(ctx);
             }
             Msg::ProducerUpdate { .. } => {
                 // Functional update was applied eagerly; charge bookkeeping.
@@ -1068,7 +1126,17 @@ impl CoreLogic for SchedLogic {
         Some(self)
     }
 
+    fn as_any_mut(&mut self) -> Option<&mut dyn std::any::Any> {
+        Some(self)
+    }
+
     fn on_event(&mut self, ctx: &mut Ctx<'_>, ev: Event) {
+        // Fault injection: a bounded stall defers this scheduler's
+        // processing (0 — and no RNG draw — when chaos is inactive).
+        let stall = ctx.chaos_stall();
+        if stall > 0 {
+            ctx.charge(stall);
+        }
         match ev {
             Event::Boot => {}
             Event::Msg { from, dst, msg } => {
@@ -1107,6 +1175,12 @@ impl CoreLogic for SchedLogic {
                         self.maybe_steal(ctx);
                     }
                 }
+            }
+            Event::Timer(TimerKind::Custom(STEAL_RETRY_TIMER)) => {
+                // Deny-retry backoff expired: re-evaluate the steal
+                // trigger against current estimates (no-op if a request
+                // is already in flight or no victim qualifies).
+                self.maybe_steal(ctx);
             }
             Event::DmaDone { .. } | Event::Timer(_) | Event::Wake => {}
         }

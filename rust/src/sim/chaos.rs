@@ -1,0 +1,326 @@
+//! Deterministic fault injection (robustness harness substrate).
+//!
+//! A [`FaultPlan`] perturbs a run *within legal bounds*: message latency
+//! jitter, transient credit starvation, bounded scheduler stalls and
+//! forced steal denies. Every perturbation flows through the existing
+//! event/cost seams — faults never invent, drop or corrupt messages, they
+//! only shift when things happen — so a faulted run must still satisfy
+//! every protocol invariant (`testutil/oracles.rs`) and must replay
+//! bit-identically from `(seed, plan)`.
+//!
+//! Determinism contract (same as `sched/policy.rs`): all randomness
+//! derives from `PlatformConfig::seed` and the plan seed through
+//! [`crate::sim::rng::Rng`] on a dedicated stream mixer — never host
+//! entropy, never time. [`FaultPlan::none()`] keeps the engine on the
+//! exact pre-fault code paths (zero extra RNG draws, zero extra events),
+//! so disabled runs stay byte-identical to a build without this module —
+//! pinned by the untouched fingerprints in `tests/determinism.rs`.
+//!
+//! Hot-path invariant: fault state lives in dense per-link tables sized
+//! once at install; the steady state allocates nothing.
+
+use crate::ids::{CoreId, Cycles};
+use crate::sim::rng::Rng;
+
+/// Stream mixer for the chaos RNG — a third odd constant, distinct from
+/// the placement (p2c) and victim-selection streams in `sched/policy.rs`,
+/// so fault draws never correlate with policy draws.
+pub const CHAOS_STREAM: u64 = 0xC2B2_AE3D_27D4_EB4F;
+
+/// A bounded, seed-derived fault schedule. All knobs are rates (percent)
+/// or cycle caps; `enabled == false` (the [`FaultPlan::none`] default)
+/// short-circuits every hook before any RNG draw.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct FaultPlan {
+    /// Master switch. False = the engine behaves byte-identically to a
+    /// build without fault injection.
+    pub enabled: bool,
+    /// Identifies the plan (for reproducer lines and the RNG stream).
+    pub plan_seed: u64,
+    /// Percent of message deliveries that gain extra latency.
+    pub jitter_pct: u32,
+    /// Max extra delivery latency, cycles (each jitter draws `1..=max`).
+    pub jitter_max: Cycles,
+    /// Percent of credited sends forcibly starved (parked in the blocked
+    /// queue) even when a credit is available. Only applied while the
+    /// channel has messages in flight, so a future release always
+    /// unblocks the parked send — starvation is transient by design.
+    pub starve_pct: u32,
+    /// Percent of scheduler events preceded by a bounded stall.
+    pub stall_pct: u32,
+    /// Max stall length, cycles.
+    pub stall_max: Cycles,
+    /// Percent of steal requests denied even when the victim has work.
+    pub deny_pct: u32,
+    /// Unconditionally deny this many steal requests before `deny_pct`
+    /// takes over — pins the "first victim always denies" retry path.
+    pub deny_first: u32,
+}
+
+impl FaultPlan {
+    /// No faults; runs are byte-identical to the pre-chaos engine.
+    pub fn none() -> Self {
+        FaultPlan {
+            enabled: false,
+            plan_seed: 0,
+            jitter_pct: 0,
+            jitter_max: 0,
+            starve_pct: 0,
+            stall_pct: 0,
+            stall_max: 0,
+            deny_pct: 0,
+            deny_first: 0,
+        }
+    }
+
+    /// Derive a legal-bounds plan from a plan seed. Plan 0 is reserved
+    /// for "no faults" so `--plan 0` reproduces the clean baseline; any
+    /// other value yields an enabled plan whose knobs are a pure function
+    /// of the seed. Jitter is always on (≥ 10%) so every derived plan
+    /// genuinely perturbs the schedule; the other fault classes may be
+    /// individually absent.
+    pub fn from_seed(plan_seed: u64) -> Self {
+        if plan_seed == 0 {
+            return Self::none();
+        }
+        let mut r = Rng::new(plan_seed.wrapping_mul(CHAOS_STREAM) | 1);
+        FaultPlan {
+            enabled: true,
+            plan_seed,
+            jitter_pct: 10 + r.below(41) as u32,
+            jitter_max: 1 + r.below(5_000),
+            starve_pct: r.below(26) as u32,
+            stall_pct: r.below(31) as u32,
+            stall_max: 1 + r.below(20_000),
+            deny_pct: r.below(51) as u32,
+            deny_first: r.below(3) as u32,
+        }
+    }
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        Self::none()
+    }
+}
+
+/// Per-run fault state: the plan, its RNG stream and the dense per-link
+/// delivery-floor table that preserves per-link FIFO order under jitter.
+/// Sized once at install; no steady-state allocation.
+#[derive(Debug)]
+pub struct ChaosState {
+    plan: FaultPlan,
+    rng: Rng,
+    n: usize,
+    /// Last delivery time pushed per directed (from, hop) link. Jittered
+    /// deliveries clamp to this floor so same-link messages never
+    /// reorder — per-link FIFO is load-bearing (decay-then-overwrite
+    /// load accounting, dependency-protocol ordering).
+    link_last: Vec<Cycles>,
+    denies_left: u32,
+    // Injection counters (observability / harness assertions).
+    jitters: u64,
+    starves: u64,
+    stalls: u64,
+    forced_denies: u64,
+}
+
+impl ChaosState {
+    /// Inert state: `active()` is false and no table is allocated.
+    pub fn disabled() -> Self {
+        ChaosState {
+            plan: FaultPlan::none(),
+            rng: Rng::new(1),
+            n: 0,
+            link_last: Vec::new(),
+            denies_left: 0,
+            jitters: 0,
+            starves: 0,
+            stalls: 0,
+            forced_denies: 0,
+        }
+    }
+
+    /// Build the fault state for a run: the RNG stream mixes the run
+    /// seed with the plan seed so `(seed, plan)` fully determines every
+    /// draw.
+    pub fn new(plan: FaultPlan, run_seed: u64, n_cores: usize) -> Self {
+        let stream =
+            run_seed ^ plan.plan_seed.wrapping_add(1).wrapping_mul(CHAOS_STREAM);
+        let denies_left = plan.deny_first;
+        ChaosState {
+            rng: Rng::new(stream),
+            n: n_cores,
+            link_last: vec![0; n_cores * n_cores],
+            denies_left,
+            jitters: 0,
+            starves: 0,
+            stalls: 0,
+            forced_denies: 0,
+            plan,
+        }
+    }
+
+    /// Whether any fault hook should run. The engine gates every chaos
+    /// call on this, keeping disabled runs on the exact pre-fault paths.
+    #[inline]
+    pub fn active(&self) -> bool {
+        self.plan.enabled
+    }
+
+    pub fn plan(&self) -> &FaultPlan {
+        &self.plan
+    }
+
+    /// Final delivery time for a message on link (from → hop), given the
+    /// undisturbed arrival `at`. Applies jitter, then clamps to the
+    /// link's delivery floor so per-link FIFO order is preserved.
+    /// Must only be called when `active()`.
+    pub fn delivery_time(&mut self, from: CoreId, hop: CoreId, at: Cycles) -> Cycles {
+        let mut t = at;
+        if self.plan.jitter_pct > 0 && self.rng.below(100) < self.plan.jitter_pct as u64 {
+            let extra = 1 + self.rng.below(self.plan.jitter_max.max(1));
+            t += extra;
+            self.jitters += 1;
+        }
+        let key = from.idx() * self.n + hop.idx();
+        if t < self.link_last[key] {
+            t = self.link_last[key];
+        }
+        self.link_last[key] = t;
+        t
+    }
+
+    /// Draw the transient-starvation decision for a credited send. The
+    /// caller applies it only when the channel has in-flight messages
+    /// (so a release is guaranteed to unpark the send later).
+    pub fn draw_starve(&mut self) -> bool {
+        self.plan.starve_pct > 0 && self.rng.below(100) < self.plan.starve_pct as u64
+    }
+
+    /// Record that a send was actually parked by a starvation fault.
+    pub fn note_starved(&mut self) {
+        self.starves += 1;
+    }
+
+    /// Bounded scheduler stall for the current event: 0 = no stall.
+    pub fn stall(&mut self) -> Cycles {
+        if self.plan.stall_pct == 0 || self.rng.below(100) >= self.plan.stall_pct as u64 {
+            return 0;
+        }
+        self.stalls += 1;
+        1 + self.rng.below(self.plan.stall_max.max(1))
+    }
+
+    /// Whether the victim must deny this steal request regardless of its
+    /// queue depth: the first `deny_first` requests always deny, then
+    /// `deny_pct` applies.
+    pub fn force_deny(&mut self) -> bool {
+        if self.denies_left > 0 {
+            self.denies_left -= 1;
+            self.forced_denies += 1;
+            return true;
+        }
+        if self.plan.deny_pct > 0 && self.rng.below(100) < self.plan.deny_pct as u64 {
+            self.forced_denies += 1;
+            return true;
+        }
+        false
+    }
+
+    pub fn jitters(&self) -> u64 {
+        self.jitters
+    }
+    pub fn starves(&self) -> u64 {
+        self.starves
+    }
+    pub fn stalls(&self) -> u64 {
+        self.stalls
+    }
+    pub fn forced_denies(&self) -> u64 {
+        self.forced_denies
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_zero_is_none_and_default_is_inert() {
+        assert_eq!(FaultPlan::from_seed(0), FaultPlan::none());
+        assert_eq!(FaultPlan::default(), FaultPlan::none());
+        assert!(!FaultPlan::none().enabled);
+        assert!(!ChaosState::disabled().active());
+    }
+
+    #[test]
+    fn from_seed_is_deterministic_and_bounded() {
+        for s in 1..64u64 {
+            let a = FaultPlan::from_seed(s);
+            let b = FaultPlan::from_seed(s);
+            assert_eq!(a, b, "plan derivation must be pure");
+            assert!(a.enabled);
+            assert!((10..=50).contains(&a.jitter_pct), "{a:?}");
+            assert!((1..=5_000).contains(&a.jitter_max), "{a:?}");
+            assert!(a.starve_pct <= 25, "{a:?}");
+            assert!(a.stall_pct <= 30, "{a:?}");
+            assert!((1..=20_000).contains(&a.stall_max), "{a:?}");
+            assert!(a.deny_pct <= 50, "{a:?}");
+            assert!(a.deny_first <= 2, "{a:?}");
+        }
+        assert_ne!(
+            FaultPlan::from_seed(1),
+            FaultPlan::from_seed(2),
+            "different seeds should generally differ"
+        );
+    }
+
+    #[test]
+    fn jitter_preserves_per_link_fifo() {
+        let plan = FaultPlan { jitter_pct: 100, ..FaultPlan::from_seed(7) };
+        let mut st = ChaosState::new(plan, 0xB5EED, 4);
+        let (a, b) = (CoreId(0), CoreId(1));
+        let mut last = 0;
+        for t in (0..400).step_by(3) {
+            let d = st.delivery_time(a, b, t);
+            assert!(d >= t, "jitter only delays");
+            assert!(d >= last, "same-link deliveries must never reorder");
+            last = d;
+        }
+        assert!(st.jitters() > 0);
+        // An independent link has its own floor.
+        let d = st.delivery_time(b, a, 1);
+        assert!(d >= 1);
+    }
+
+    #[test]
+    fn deny_first_counts_down_then_rate_applies() {
+        let plan = FaultPlan {
+            deny_first: 2,
+            deny_pct: 0,
+            ..FaultPlan::from_seed(3)
+        };
+        let mut st = ChaosState::new(plan, 0xB5EED, 2);
+        assert!(st.force_deny());
+        assert!(st.force_deny());
+        assert!(!st.force_deny(), "deny_pct 0: no denies after the countdown");
+        assert_eq!(st.forced_denies(), 2);
+    }
+
+    #[test]
+    fn replay_is_bit_identical_from_seed_and_plan() {
+        let mk = || ChaosState::new(FaultPlan::from_seed(42), 0xFEED, 8);
+        let (mut x, mut y) = (mk(), mk());
+        for i in 0..200u64 {
+            let (f, h) = (CoreId((i % 8) as u32), CoreId(((i + 1) % 8) as u32));
+            assert_eq!(
+                x.delivery_time(f, h, i * 10),
+                y.delivery_time(f, h, i * 10)
+            );
+            assert_eq!(x.draw_starve(), y.draw_starve());
+            assert_eq!(x.stall(), y.stall());
+            assert_eq!(x.force_deny(), y.force_deny());
+        }
+    }
+}

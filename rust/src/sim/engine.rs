@@ -24,6 +24,7 @@ use crate::noc::dma::{group_completion, Transfer};
 use crate::noc::msg::Msg;
 use crate::noc::topology::Topology;
 use crate::platform::World;
+use crate::sim::chaos::{ChaosState, FaultPlan};
 use crate::sim::event::{Event, TimerKind};
 use crate::sim::wheel::{EventQ, Popped};
 use crate::stats::metrics::CoreStats;
@@ -64,6 +65,11 @@ pub struct SimState {
     dma_seq: u64,
     /// Print an event trace (debugging aid).
     pub trace: bool,
+    /// Deterministic fault injection ([`crate::sim::chaos`]). Inert by
+    /// default: every hook below is gated on `chaos.active()`, so runs
+    /// without an installed plan stay byte-identical to the pre-chaos
+    /// engine (no extra RNG draws, events or charges).
+    pub chaos: ChaosState,
 }
 
 impl SimState {
@@ -96,6 +102,15 @@ impl SimState {
             max_busy: 0,
             dma_seq: 0,
             trace: false,
+            chaos: ChaosState::disabled(),
+        }
+    }
+
+    /// Install a fault plan for this run. A disabled plan is a no-op so
+    /// the default config never allocates fault tables.
+    pub fn install_chaos(&mut self, plan: &FaultPlan, run_seed: u64) {
+        if plan.enabled {
+            self.chaos = ChaosState::new(plan.clone(), run_seed, self.n_cores());
         }
     }
 
@@ -131,9 +146,40 @@ impl SimState {
         self.channels.preseed(src, dst);
     }
 
+    /// Mark the `src -> dst` link as legitimately uncredited: messages on
+    /// it may be pushed directly (boot bootstrap) so a release finding
+    /// zero in-flight credits there is expected, not a double release.
+    /// See [`crate::noc::channel::Channel::allow_uncredited`].
+    pub fn expect_uncredited(&mut self, src: CoreId, dst: CoreId) {
+        self.channels.entry(src, dst).allow_uncredited();
+    }
+
+    /// Read-only view of the credit-channel tables (invariant oracles).
+    pub fn channels(&self) -> &ChannelTables {
+        &self.channels
+    }
+
+    /// Mutable channel access for seeded-corruption tests only.
+    #[cfg(test)]
+    pub fn channels_mut(&mut self) -> &mut ChannelTables {
+        &mut self.channels
+    }
+
+    /// True once every event (including wake markers) has been consumed.
+    pub fn queue_is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
     fn deliver_msg(&mut self, t_send: Cycles, from: CoreId, hop: CoreId, dst: CoreId, msg: Msg) {
         let lat = self.cost.msg_latency(self.topo.hops(from, hop));
-        self.push(t_send + lat, hop, Event::Msg { from, dst, msg });
+        let mut at = t_send + lat;
+        if self.chaos.active() {
+            // Fault injection: bounded latency jitter, clamped so
+            // same-link deliveries never reorder (per-link FIFO is
+            // load-bearing for load accounting and the dep protocol).
+            at = self.chaos.delivery_time(from, hop, at);
+        }
+        self.push(at, hop, Event::Msg { from, dst, msg });
     }
 }
 
@@ -198,11 +244,31 @@ impl<'a> Ctx<'a> {
         st.msg_bytes_sent += wires * self.sim.cost.msg_bytes;
         let t_send = self.start + self.charged_rt + self.charged_task;
         let cap = self.sim.channel_capacity;
-        if self.sim.channels.entry(self.core, next).try_acquire(cap) {
+        // Fault injection: transiently starve this send of its credit.
+        // Only legal while the channel has messages in flight — the
+        // matching release is what unparks blocked sends, so starving an
+        // idle channel would strand the message forever.
+        let starve = self.sim.chaos.active() && self.sim.chaos.draw_starve();
+        let (acquired, starved) = {
+            let ch = self.sim.channels.entry(self.core, next);
+            if !ch.blocked.is_empty() {
+                // Preserve send order behind already-parked messages.
+                (false, false)
+            } else if starve && ch.in_flight > 0 {
+                (false, true)
+            } else {
+                (ch.try_acquire(cap), false)
+            }
+        };
+        if starved {
+            self.sim.chaos.note_starved();
+        }
+        if acquired {
             self.sim.deliver_msg(t_send, self.core, next, dst, msg);
         } else {
-            // Cold path: out of credits; re-find the channel (the borrow
-            // cannot span `deliver_msg` above) and park the send.
+            // Cold path: out of credits (or starved); re-find the channel
+            // (the borrow cannot span `deliver_msg` above) and park the
+            // send.
             self.sim.channels.entry(self.core, next).blocked.push_back((t_send, dst, msg));
         }
     }
@@ -244,6 +310,22 @@ impl<'a> Ctx<'a> {
     pub fn hops_to(&self, to: CoreId) -> u32 {
         self.sim.topo.hops(self.core, to)
     }
+
+    /// Fault injection: bounded stall (cycles) to charge before handling
+    /// the current event. Always 0 when no fault plan is active — the
+    /// inactive path draws no randomness and charges nothing.
+    pub fn chaos_stall(&mut self) -> Cycles {
+        if !self.sim.chaos.active() {
+            return 0;
+        }
+        self.sim.chaos.stall()
+    }
+
+    /// Fault injection: must this steal request be denied regardless of
+    /// queue depth? Always false when no fault plan is active.
+    pub fn chaos_force_deny(&mut self) -> bool {
+        self.sim.chaos.active() && self.sim.chaos.force_deny()
+    }
 }
 
 /// Logic driving one simulated core.
@@ -253,6 +335,12 @@ pub trait CoreLogic {
     /// Downcast hook for diagnostics and tests (e.g. inspecting a
     /// scheduler's load estimates after a run). Default: not downcastable.
     fn as_any(&self) -> Option<&dyn std::any::Any> {
+        None
+    }
+
+    /// Mutable downcast hook (seeded-corruption tests for the invariant
+    /// oracles). Default: not downcastable.
+    fn as_any_mut(&mut self) -> Option<&mut dyn std::any::Any> {
         None
     }
 }
@@ -283,6 +371,11 @@ impl Engine {
         self.logic.get(core.idx()).and_then(|l| l.as_deref())
     }
 
+    /// Mutable logic borrow (see [`CoreLogic::as_any_mut`]).
+    pub fn logic_of_mut(&mut self, core: CoreId) -> Option<&mut dyn CoreLogic> {
+        self.logic.get_mut(core.idx()).and_then(|l| l.as_deref_mut())
+    }
+
     /// Schedule [`Event::Boot`] for every core with logic at t=0.
     pub fn boot(&mut self) {
         for i in 0..self.logic.len() {
@@ -295,8 +388,21 @@ impl Engine {
     /// Run until the event queue drains, `world.done` is set, or the
     /// optional time limit is exceeded. Returns the final virtual time.
     pub fn run(&mut self, limit: Option<Cycles>) -> Cycles {
+        self.run_inner(limit, true)
+    }
+
+    /// Like [`Engine::run`], but keeps processing past `world.done` until
+    /// the event queue fully drains (or the limit cuts the run off).
+    /// `run` discards whatever was still queued at the completion cutoff;
+    /// the fuzz harness needs true quiescence, where strict invariants
+    /// (channel credits restored, books exactly zero) are checkable.
+    pub fn run_to_quiescence(&mut self, limit: Option<Cycles>) -> Cycles {
+        self.run_inner(limit, false)
+    }
+
+    fn run_inner(&mut self, limit: Option<Cycles>, stop_on_done: bool) -> Cycles {
         while let Some(popped) = self.sim.queue.pop() {
-            if self.world.done {
+            if stop_on_done && self.world.done {
                 break;
             }
             let (p_t, core) = match &popped {
@@ -596,5 +702,68 @@ mod tests {
             (t, eng.world.gstats.msgs_total, eng.sim.stats[0].busy_runtime)
         };
         assert_eq!(run(), run());
+    }
+
+    fn ping_pong_with(plan: &FaultPlan) -> (Cycles, u64) {
+        let mut eng = tiny_engine(2, 100);
+        eng.sim.install_chaos(plan, 0xB5EED);
+        eng.sim
+            .push(0, CoreId(0), Event::Msg { from: CoreId(1), dst: CoreId(0), msg: Msg::SpawnAck { req: ReqId(0) } });
+        let t = eng.run(None);
+        (t, eng.world.gstats.msgs_total)
+    }
+
+    #[test]
+    fn disabled_fault_plan_is_inert() {
+        // Installing FaultPlan::none() must leave the engine on the
+        // baseline schedule (full byte-identity is pinned by the platform
+        // fingerprints in tests/determinism.rs).
+        assert_eq!(ping_pong_with(&FaultPlan::none()), ping_pong_with(&FaultPlan::none()));
+        let base = {
+            let mut eng = tiny_engine(2, 100);
+            eng.sim
+                .push(0, CoreId(0), Event::Msg { from: CoreId(1), dst: CoreId(0), msg: Msg::SpawnAck { req: ReqId(0) } });
+            let t = eng.run(None);
+            (t, eng.world.gstats.msgs_total)
+        };
+        assert_eq!(ping_pong_with(&FaultPlan::none()), base);
+    }
+
+    #[test]
+    fn chaos_run_replays_and_never_drops_messages() {
+        let plan = FaultPlan::from_seed(9);
+        let a = ping_pong_with(&plan);
+        let b = ping_pong_with(&plan);
+        assert_eq!(a, b, "(seed, plan) must replay bit-identically");
+        assert_eq!(a.1, 6, "faults delay but never drop messages");
+    }
+
+    #[test]
+    fn forced_starvation_parks_but_never_loses_messages() {
+        let mut eng = tiny_engine(2, 50);
+        let plan = FaultPlan {
+            enabled: true,
+            plan_seed: 1,
+            starve_pct: 100,
+            ..FaultPlan::none()
+        };
+        eng.sim.install_chaos(&plan, 0xB5EED);
+        struct Burst;
+        impl CoreLogic for Burst {
+            fn on_event(&mut self, ctx: &mut Ctx<'_>, ev: Event) {
+                if matches!(ev, Event::Boot) {
+                    for i in 0..3 {
+                        ctx.send(CoreId(1), Msg::SpawnAck { req: ReqId(i) });
+                    }
+                }
+            }
+        }
+        eng.set_logic(CoreId(0), Box::new(Burst));
+        eng.sim.push(0, CoreId(0), Event::Boot);
+        eng.run(None);
+        // Starvation parks sends behind in-flight messages, and each
+        // release unparks the next one — nothing may be lost.
+        assert_eq!(eng.sim.stats[1].msgs_recv, 3);
+        assert!(eng.sim.chaos.starves() > 0, "100% starvation must park some send");
     }
 }

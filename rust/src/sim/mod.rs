@@ -1,4 +1,5 @@
 //! Discrete-event simulation substrate.
+pub mod chaos;
 pub mod engine;
 pub mod event;
 pub mod rng;

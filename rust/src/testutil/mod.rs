@@ -1,2 +1,3 @@
-//! Test utilities (mini property-testing harness).
+//! Test utilities (mini property-testing harness + invariant oracles).
+pub mod oracles;
 pub mod prop;

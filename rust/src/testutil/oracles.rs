@@ -1,0 +1,308 @@
+//! Invariant oracles for the protocol fuzz/soak harness.
+//!
+//! Each oracle inspects a quiesced engine (run with
+//! [`crate::sim::engine::Engine::run_to_quiescence`], i.e. the event
+//! queue fully drained — not merely cut off at `world.done`) and returns
+//! human-readable violations. At true quiescence the distributed
+//! scheduler state must have collapsed back to its ground state:
+//!
+//! * every spawned task completed exactly once (no lost or duplicated
+//!   `TaskId`s),
+//! * every `LoadTracker` book drained (exactly zero when load reports are
+//!   disabled; near-zero otherwise),
+//! * every ready queue empty and no steal request left outstanding,
+//! * every surviving dependency node idle (queues and waiters empty,
+//!   child activity counters zero) and no dying node leaked,
+//! * every channel credit restored and no send left parked,
+//! * the global steal counters self-consistent (reqs == grants + denies,
+//!   stolen tasks imply grants).
+//!
+//! The individual checks are public so a debug build can interleave the
+//! cheap ones (e.g. [`check_gstats`]) mid-run; [`check_all`] is the
+//! quiesce-time entry point the fuzz harness uses. Violations are
+//! returned, not asserted, so the harness can record them per seed and
+//! emit a reproducer line instead of dying on the first bad run.
+
+use crate::sched::scheduler::SchedLogic;
+use crate::sim::engine::Engine;
+use crate::task::table::TaskState;
+
+/// Non-strict bound for per-scheduler load-estimate residue. With load
+/// reports enabled the run cuts off with authoritative reports possibly
+/// still queued behind the final decay, so books may legitimately hold a
+/// few units at `world.done`; full drain delivers them, but the bound
+/// stays lenient to keep the oracle free of false positives.
+const LOOSE_BOOK_BOUND: u64 = 16;
+
+/// Run every oracle; returns all violations (empty = healthy).
+/// `strict_books` should be true when the run disabled load reports
+/// (`load_report_threshold == u64::MAX`): then the decay path alone must
+/// balance every book to exactly zero (pinned by `tests/load_drift.rs`).
+pub fn check_all(eng: &Engine, strict_books: bool) -> Vec<String> {
+    let mut v = Vec::new();
+    check_drained(eng, &mut v);
+    check_tasks(eng, &mut v);
+    check_schedulers(eng, strict_books, &mut v);
+    check_dep(eng, &mut v);
+    check_channels(eng, &mut v);
+    check_gstats(eng, &mut v);
+    v
+}
+
+/// The engine must actually be quiescent for the other oracles to apply.
+pub fn check_drained(eng: &Engine, out: &mut Vec<String>) {
+    if !eng.world.done {
+        out.push("run did not complete: world.done is false".into());
+    }
+    if !eng.sim.queue_is_empty() {
+        out.push("event queue not drained: oracle state is not final".into());
+    }
+}
+
+/// Every spawned task completes exactly once.
+pub fn check_tasks(eng: &Engine, out: &mut Vec<String>) {
+    let g = &eng.world.gstats;
+    let table = eng.world.tasks.len() as u64;
+    if g.tasks_spawned != table {
+        out.push(format!(
+            "task oracle: {} spawned but {} table entries",
+            g.tasks_spawned, table
+        ));
+    }
+    if g.tasks_completed != g.tasks_spawned {
+        out.push(format!(
+            "task oracle: {} spawned, {} completed — lost or duplicated tasks",
+            g.tasks_spawned, g.tasks_completed
+        ));
+    }
+    for e in eng.world.tasks.iter() {
+        if e.state != TaskState::Done {
+            out.push(format!(
+                "task oracle: task {} finished the run in state {:?}",
+                e.id, e.state
+            ));
+        }
+    }
+}
+
+/// Per-scheduler state: books drained, ready queues empty, steal latch
+/// clear.
+pub fn check_schedulers(eng: &Engine, strict_books: bool, out: &mut Vec<String>) {
+    for s in 0..eng.world.hier.n_scheds {
+        let core = eng.world.hier.sched_core(s);
+        let Some(logic) = eng.logic_of(core) else {
+            out.push(format!("scheduler {s}: core has no logic"));
+            continue;
+        };
+        let Some(sched) = logic.as_any().and_then(|a| a.downcast_ref::<SchedLogic>()) else {
+            out.push(format!("scheduler {s}: logic is not SchedLogic"));
+            continue;
+        };
+        if sched.ready_depth() != 0 {
+            out.push(format!(
+                "ready oracle: scheduler {s} holds {} queued tasks at quiescence",
+                sched.ready_depth()
+            ));
+        }
+        if sched.steal_in_flight() {
+            out.push(format!(
+                "steal oracle: scheduler {s} still has a StealReq outstanding"
+            ));
+        }
+        let loads = &sched.placer().loads;
+        let total = loads.total();
+        let bound = if strict_books { 0 } else { LOOSE_BOOK_BOUND };
+        if total > bound {
+            out.push(format!(
+                "book oracle: scheduler {s} leaked load estimates: total {total} \
+                 (bound {bound}), children {:?}, workers {:?}",
+                loads.child_loads(),
+                loads.worker_loads()
+            ));
+        }
+    }
+}
+
+/// Dependency forest: every surviving node must be idle (queue and
+/// waiters empty, child-activity counters drained by the quiescence
+/// protocol) and no dying node may outlive its drain.
+pub fn check_dep(eng: &Engine, out: &mut Vec<String>) {
+    for n in eng.world.dep.iter_nodes() {
+        if !n.queue.is_empty() {
+            out.push(format!(
+                "dep oracle: node {} still queues {} entries",
+                n.id,
+                n.queue.len()
+            ));
+        }
+        if !n.waiters.is_empty() {
+            out.push(format!(
+                "dep oracle: node {} still holds {} waiters",
+                n.id,
+                n.waiters.len()
+            ));
+        }
+        if n.cr != 0 || n.cw != 0 {
+            out.push(format!(
+                "dep oracle: node {} child counters not drained (cr {}, cw {})",
+                n.id, n.cr, n.cw
+            ));
+        }
+        if n.dying {
+            out.push(format!("dep oracle: dying node {} leaked past quiescence", n.id));
+        }
+    }
+}
+
+/// Channel credits: at quiescence every in-flight message was processed
+/// (its credit returned) and no send remains parked.
+pub fn check_channels(eng: &Engine, out: &mut Vec<String>) {
+    for (i, ch) in eng.sim.channels().iter().enumerate() {
+        if ch.in_flight != 0 {
+            out.push(format!(
+                "channel oracle: channel slot {i} still holds {} credits",
+                ch.in_flight
+            ));
+        }
+        if !ch.blocked.is_empty() {
+            out.push(format!(
+                "channel oracle: channel slot {i} still parks {} sends",
+                ch.blocked.len()
+            ));
+        }
+    }
+}
+
+/// Global steal-counter consistency.
+pub fn check_gstats(eng: &Engine, out: &mut Vec<String>) {
+    let g = &eng.world.gstats;
+    if g.steal_reqs != g.steal_grants + g.steal_denies {
+        out.push(format!(
+            "gstats oracle: steal_reqs {} != grants {} + denies {}",
+            g.steal_reqs, g.steal_grants, g.steal_denies
+        ));
+    }
+    if g.tasks_stolen < g.steal_grants {
+        out.push(format!(
+            "gstats oracle: {} grants but only {} stolen tasks (every grant \
+             carries at least one)",
+            g.steal_grants, g.tasks_stolen
+        ));
+    }
+    if g.tasks_stolen > 0 && g.steal_grants == 0 {
+        out.push(format!(
+            "gstats oracle: {} stolen tasks with zero grants",
+            g.tasks_stolen
+        ));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    //! Oracle self-tests: each oracle must fail loudly on a seeded
+    //! corruption, so the suite can't rot into always-green.
+
+    use super::*;
+    use crate::apps::synthetic::{independent, SynthParams};
+    use crate::config::{HierarchySpec, PlatformConfig, StealCfg};
+    use crate::ids::{CoreId, NodeId, RegionId};
+    use crate::platform::Platform;
+
+    /// A small finished run in the strict (reports-off) regime, fully
+    /// drained so every oracle should pass before corruption.
+    fn healthy_engine() -> Engine {
+        let (reg, main) = independent();
+        let mut cfg = PlatformConfig::new(16, HierarchySpec::two_level(4));
+        cfg.load_report_threshold = u64::MAX;
+        cfg.policy.steal = StealCfg::on();
+        let mut plat = Platform::build_with(cfg, reg, main, |w| {
+            w.app = Some(Box::new(SynthParams {
+                n_tasks: 24,
+                task_cycles: 50_000,
+                ..Default::default()
+            }));
+        });
+        plat.run_to_quiescence(Some(1 << 44));
+        plat.eng
+    }
+
+    fn sched_mut(eng: &mut Engine, idx: usize) -> &mut SchedLogic {
+        let core = eng.world.hier.sched_core(idx);
+        eng.logic_of_mut(core)
+            .and_then(|l| l.as_any_mut())
+            .and_then(|a| a.downcast_mut::<SchedLogic>())
+            .expect("scheduler core logic is SchedLogic")
+    }
+
+    fn assert_caught(violations: &[String], needle: &str) {
+        assert!(
+            violations.iter().any(|v| v.contains(needle)),
+            "expected a violation containing {needle:?}, got {violations:?}"
+        );
+    }
+
+    #[test]
+    fn healthy_run_passes_all_oracles() {
+        let eng = healthy_engine();
+        let v = check_all(&eng, true);
+        assert!(v.is_empty(), "healthy quiesced run must pass: {v:?}");
+    }
+
+    #[test]
+    fn task_oracle_catches_state_corruption() {
+        let mut eng = healthy_engine();
+        let id = eng.world.tasks.iter().next().expect("tasks exist").id;
+        eng.world.tasks.get_mut(id).state = TaskState::Running;
+        assert_caught(&check_all(&eng, true), "finished the run in state");
+    }
+
+    #[test]
+    fn task_oracle_catches_lost_completion() {
+        let mut eng = healthy_engine();
+        eng.world.gstats.tasks_completed -= 1;
+        assert_caught(&check_all(&eng, true), "lost or duplicated tasks");
+    }
+
+    #[test]
+    fn book_oracle_catches_skewed_loads() {
+        let mut eng = healthy_engine();
+        let loads = &mut sched_mut(&mut eng, 0).placer_mut().loads;
+        for _ in 0..LOOSE_BOOK_BOUND + 1 {
+            loads.bump_child(0);
+        }
+        assert_caught(&check_all(&eng, true), "leaked load estimates");
+    }
+
+    #[test]
+    fn ready_oracle_catches_leaked_queue_entry() {
+        let mut eng = healthy_engine();
+        let id = eng.world.tasks.iter().next().expect("tasks exist").id;
+        sched_mut(&mut eng, 1).ready_inject(id);
+        assert_caught(&check_all(&eng, true), "queued tasks at quiescence");
+    }
+
+    #[test]
+    fn dep_oracle_catches_undrained_counters() {
+        let mut eng = healthy_engine();
+        let crate::platform::World { dep, mem, .. } = &mut eng.world;
+        dep.node_mut(NodeId::Region(RegionId::ROOT), mem).cr += 1;
+        assert_caught(&check_all(&eng, true), "child counters not drained");
+    }
+
+    #[test]
+    fn channel_oracle_catches_leaked_credit() {
+        let mut eng = healthy_engine();
+        eng.sim
+            .channels_mut()
+            .entry(CoreId(0), CoreId(1))
+            .try_acquire(8);
+        assert_caught(&check_all(&eng, true), "still holds");
+    }
+
+    #[test]
+    fn gstats_oracle_catches_inconsistent_steal_counters() {
+        let mut eng = healthy_engine();
+        eng.world.gstats.steal_reqs += 1;
+        assert_caught(&check_all(&eng, true), "steal_reqs");
+    }
+}

@@ -1,0 +1,98 @@
+//! Regression gate for bounded steal retry with backoff
+//! (`StealCfg::retry_backoff` / `retry_max`).
+//!
+//! The scenario retry exists for: a thief's first victim answers
+//! `StealDeny` (here forced deterministically via the chaos layer's
+//! `deny_first` knob), and without a retry the thief would sit idle until
+//! the next organic idle trigger. With retry enabled the thief re-arms
+//! after a bounded exponential backoff and the migration still happens.
+//! With `retry_backoff == 0` (the default) the feature is off and the
+//! schedule must stay byte-identical to plain `StealCfg::on()`.
+
+use myrmics::apps::skew::{myrmics as skew_myrmics, SkewParams};
+use myrmics::config::{HierarchySpec, PlatformConfig, StealCfg};
+use myrmics::platform::Platform;
+use myrmics::sim::chaos::FaultPlan;
+
+/// The steal-determinism fingerprint tuple: everything that must replay.
+#[derive(PartialEq, Eq, Debug)]
+struct Fingerprint {
+    final_time: u64,
+    events: u64,
+    msgs: u64,
+    tasks_spawned: u64,
+    tasks_completed: u64,
+    dep_boundary_msgs: u64,
+    steal_reqs: u64,
+    steal_grants: u64,
+    steal_denies: u64,
+    tasks_stolen: u64,
+    ready_hwm: u64,
+}
+
+fn run_skew(steal: StealCfg, chaos: FaultPlan) -> Fingerprint {
+    let mut cfg = PlatformConfig::new(16, HierarchySpec::two_level(4));
+    cfg.policy.steal = steal;
+    cfg.chaos = chaos;
+    let (reg, main) = skew_myrmics();
+    let mut plat = Platform::build_with(cfg, reg, main, |w| {
+        w.app = Some(Box::new(SkewParams {
+            tasks: 64,
+            task_cycles: 200_000,
+            hot_pct: 90,
+            groups: 4,
+        }));
+    });
+    let t = plat.run(Some(1 << 44));
+    let g = &plat.world().gstats;
+    Fingerprint {
+        final_time: t,
+        events: g.events_processed,
+        msgs: g.msgs_total,
+        tasks_spawned: g.tasks_spawned,
+        tasks_completed: g.tasks_completed,
+        dep_boundary_msgs: g.dep_boundary_msgs,
+        steal_reqs: g.steal_reqs,
+        steal_grants: g.steal_grants,
+        steal_denies: g.steal_denies,
+        tasks_stolen: g.tasks_stolen,
+        ready_hwm: g.ready_queue_hwm,
+    }
+}
+
+/// A fault plan whose only perturbation is forcing the first `n`
+/// `StealReq`s to be denied (all rates zero — no jitter, stalls or
+/// starvation).
+fn deny_first(n: u32) -> FaultPlan {
+    FaultPlan { enabled: true, plan_seed: 7, deny_first: n, ..FaultPlan::none() }
+}
+
+/// `with_retry(0, _)` is the do-nothing configuration: the schedule must
+/// be byte-identical to plain `StealCfg::on()`.
+#[test]
+fn retry_disabled_is_byte_identical_to_plain_on() {
+    let a = run_skew(StealCfg::on(), FaultPlan::none());
+    let b = run_skew(StealCfg::on().with_retry(0, 7), FaultPlan::none());
+    assert_eq!(a, b, "retry_backoff == 0 must not change the schedule");
+}
+
+/// The headline scenario: the first victims always deny, retry re-arms
+/// the thief, and the skewed load still migrates and completes.
+#[test]
+fn denied_first_attempts_retry_and_still_migrate() {
+    let fp = run_skew(StealCfg::on().with_retry(10_000, 4), deny_first(3));
+    assert_eq!(fp.tasks_completed, 65, "main + 64 work tasks despite forced denies");
+    assert_eq!(fp.tasks_completed, fp.tasks_spawned);
+    assert!(fp.steal_denies >= 3, "the forced denies must show up: {fp:?}");
+    assert!(fp.tasks_stolen > 0, "retries must still reach a granting victim: {fp:?}");
+}
+
+/// Retry-enabled runs (with forced denies in the mix) are still a pure
+/// function of the configuration: two runs replay bit-identically.
+#[test]
+fn retry_runs_replay_bit_identically() {
+    let run = || run_skew(StealCfg::on().with_retry(10_000, 4), deny_first(3));
+    let a = run();
+    let b = run();
+    assert_eq!(a, b, "retry + forced-deny run must replay bit-identically");
+}
