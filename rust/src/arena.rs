@@ -137,6 +137,11 @@ impl<T> SlotArena<T> {
     pub fn iter(&self) -> impl Iterator<Item = &T> {
         self.slots.iter().filter_map(|s| s.val.as_ref())
     }
+
+    /// Mutable iteration over live entries in slot order.
+    pub fn iter_mut(&mut self) -> impl Iterator<Item = &mut T> {
+        self.slots.iter_mut().filter_map(|s| s.val.as_mut())
+    }
 }
 
 #[cfg(test)]

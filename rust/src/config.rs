@@ -117,6 +117,49 @@ impl Default for StealCfg {
     }
 }
 
+/// Crash-recovery configuration (heartbeat detection + hierarchical
+/// re-adoption, see `rust/docs/fuzzing.md` "Crash & recovery"). **Off by
+/// default**: with `enabled == false` no heartbeat timer is ever armed, no
+/// `Ping`/`Pong` message exists, crash knobs in the fault plan are ignored,
+/// and the event schedule stays byte-identical to the pre-recovery engine
+/// (pinned by the untouched fingerprints in `tests/determinism.rs` and
+/// `tests/steal_determinism.rs`). With it on, runs are still
+/// bit-deterministic from `(seed, plan)` (`tests/crash_determinism.rs`).
+#[derive(Clone, Copy, Debug)]
+pub struct RecoveryCfg {
+    pub enabled: bool,
+    /// Heartbeat period, cycles: every non-leaf scheduler pings each
+    /// scheduler child this often while the run is live.
+    pub heartbeat_period: Cycles,
+    /// A child is declared dead when no `Pong` arrived within this many
+    /// cycles. Must comfortably exceed `heartbeat_period` plus worst-case
+    /// wire latency and chaos stalls, or healthy children get buried.
+    pub heartbeat_timeout: Cycles,
+}
+
+impl RecoveryCfg {
+    /// Recovery disabled; runs are byte-identical to the pre-recovery
+    /// engine.
+    pub fn off() -> Self {
+        RecoveryCfg { enabled: false, heartbeat_period: 0, heartbeat_timeout: 0 }
+    }
+
+    /// Recovery enabled with the default heartbeat cadence.
+    pub fn on() -> Self {
+        RecoveryCfg {
+            enabled: true,
+            heartbeat_period: 50_000,
+            heartbeat_timeout: 250_000,
+        }
+    }
+}
+
+impl Default for RecoveryCfg {
+    fn default() -> Self {
+        Self::off()
+    }
+}
+
 /// Placement-policy configuration: a tagged policy [`kind`](PolicyCfg::kind)
 /// plus its parameters. Only [`PolicyKind::LocalityBalance`] reads
 /// `p_locality`; randomized policies derive their RNG from
@@ -438,6 +481,9 @@ pub struct PlatformConfig {
     /// default ([`FaultPlan::none`]): runs stay byte-identical to the
     /// pre-chaos engine.
     pub chaos: FaultPlan,
+    /// Crash detection + recovery protocol ([`RecoveryCfg`]). Disabled by
+    /// default; crash faults in the plan only fire when this is on.
+    pub recovery: RecoveryCfg,
 }
 
 impl PlatformConfig {
@@ -452,6 +498,7 @@ impl PlatformConfig {
             load_report_threshold: 1,
             seed: 0xB5EED,
             chaos: FaultPlan::none(),
+            recovery: RecoveryCfg::off(),
         }
     }
 
@@ -595,6 +642,20 @@ mod tests {
         assert!(!PlatformConfig::flat(8).chaos.enabled);
         assert!(!PlatformConfig::hierarchical(64).chaos.enabled);
         assert_eq!(PlatformConfig::flat(8).chaos, FaultPlan::none());
+    }
+
+    #[test]
+    fn recovery_is_off_by_default_everywhere() {
+        // Same byte-identity contract as stealing and chaos: no
+        // constructor may arm heartbeats implicitly.
+        assert!(!RecoveryCfg::default().enabled);
+        assert!(!PlatformConfig::new(4, HierarchySpec::flat()).recovery.enabled);
+        assert!(!PlatformConfig::flat(8).recovery.enabled);
+        assert!(!PlatformConfig::hierarchical(64).recovery.enabled);
+        let on = RecoveryCfg::on();
+        assert!(on.enabled);
+        assert!(on.heartbeat_timeout > on.heartbeat_period);
+        assert!(on.heartbeat_period > 0);
     }
 
     #[test]

@@ -26,7 +26,7 @@ use std::time::Instant;
 
 use crate::apps::skew::{myrmics as skew_myrmics, SkewParams};
 use crate::apps::synthetic::{empty_chain, hier_empty, independent, SynthParams};
-use crate::config::{HierarchySpec, PlatformConfig, StealCfg};
+use crate::config::{HierarchySpec, PlatformConfig, RecoveryCfg, StealCfg};
 use crate::ids::Cycles;
 use crate::platform::Platform;
 use crate::sim::chaos::FaultPlan;
@@ -75,6 +75,10 @@ pub struct CaseFp {
     pub steal_denies: u64,
     pub tasks_stolen: u64,
     pub ready_hwm: u64,
+    pub crashes: u64,
+    pub restarts: u64,
+    pub tasks_reissued: u64,
+    pub crash_dups_dropped: u64,
 }
 
 /// One case verdict.
@@ -85,6 +89,7 @@ pub struct FuzzRow {
     pub shape: &'static str,
     pub hier: &'static str,
     pub steal: &'static str,
+    pub recovery: &'static str,
     pub strict: bool,
     pub fp: CaseFp,
     /// "ok" | "oracle" | "replay" | "hang".
@@ -113,6 +118,11 @@ struct CaseParams {
     hier: u64,
     steal: u64,
     strict: bool,
+    /// 0 = recovery off (pre-crash engine), 1 = protocol armed (the plan's
+    /// own crash knobs decide if anything dies), 2 = forced crash (the
+    /// plan's `crash_pct` is pinned to 100 so the full outage/re-adoption
+    /// path runs whenever the tree has an eligible victim).
+    recovery: u64,
 }
 
 impl CaseParams {
@@ -126,6 +136,9 @@ impl CaseParams {
             // zero); the rest exercise the report path under the loose
             // bound.
             strict: r.below(4) < 3,
+            // Trailing draw: earlier knobs for a given seed are unchanged,
+            // so pre-crash reproducer lines keep their meaning.
+            recovery: r.below(3),
         }
     }
 
@@ -139,6 +152,10 @@ impl CaseParams {
 
     fn steal_name(&self) -> &'static str {
         ["off", "on", "rnd-victim", "on-retry"][self.steal as usize]
+    }
+
+    fn recovery_name(&self) -> &'static str {
+        ["off", "armed", "crash"][self.recovery as usize]
     }
 }
 
@@ -155,6 +172,19 @@ fn exec(seed: u64, plan: u64) -> (Cycles, Engine) {
     };
     cfg.seed = seed;
     cfg.chaos = FaultPlan::from_seed(plan);
+    match p.recovery {
+        0 => {}
+        1 => cfg.recovery = RecoveryCfg::on(),
+        _ => {
+            cfg.recovery = RecoveryCfg::on();
+            // Forced crash: with a live plan, guarantee the schedule rolls
+            // a victim (plan 0 still means a clean engine — recovery armed
+            // but nothing to recover from).
+            if cfg.chaos.enabled {
+                cfg.chaos.crash_pct = 100;
+            }
+        }
+    }
     cfg.policy.steal = match p.steal {
         0 => StealCfg::default(),
         1 => StealCfg::on(),
@@ -229,6 +259,10 @@ fn fingerprint(t: Cycles, eng: &Engine) -> CaseFp {
         steal_denies: g.steal_denies,
         tasks_stolen: g.tasks_stolen,
         ready_hwm: g.ready_queue_hwm,
+        crashes: g.crashes,
+        restarts: g.restarts,
+        tasks_reissued: g.tasks_reissued,
+        crash_dups_dropped: g.crash_dups_dropped,
     }
 }
 
@@ -278,6 +312,7 @@ pub fn run_case_with(
         shape: p.shape_name(),
         hier: p.hier_name(),
         steal: p.steal_name(),
+        recovery: p.recovery_name(),
         strict: p.strict,
         fp,
         verdict,
@@ -318,7 +353,10 @@ pub fn run(opts: &FuzzOpts) -> bool {
     }
     let failures: Vec<&FuzzRow> = rows.iter().filter(|r| !r.ok()).collect();
     for r in &failures {
-        eprintln!("FAIL [{}] {}  # shape {} hier {} steal {}", r.verdict, r.repro(), r.shape, r.hier, r.steal);
+        eprintln!(
+            "FAIL [{}] {}  # shape {} hier {} steal {} recovery {}",
+            r.verdict, r.repro(), r.shape, r.hier, r.steal, r.recovery
+        );
     }
     failures.is_empty()
 }
@@ -326,21 +364,23 @@ pub fn run(opts: &FuzzOpts) -> bool {
 pub fn print_rows(rows: &[FuzzRow]) {
     println!("Protocol fuzz — fault plans x adversarial spawns, oracle + replay checked");
     println!(
-        "{:<22} {:<22} {:<12} {:<12} {:<10} {:>6} {:>12} {:>6} {:>7} {:>8}",
-        "seed", "plan", "shape", "hier", "steal", "strict", "time", "tasks", "stolen", "verdict"
+        "{:<22} {:<22} {:<12} {:<12} {:<10} {:<8} {:>6} {:>12} {:>6} {:>7} {:>7} {:>8}",
+        "seed", "plan", "shape", "hier", "steal", "recov", "strict", "time", "tasks", "stolen", "crashes", "verdict"
     );
     for r in rows {
         println!(
-            "{:<22} {:<22} {:<12} {:<12} {:<10} {:>6} {:>12} {:>6} {:>7} {:>8}",
+            "{:<22} {:<22} {:<12} {:<12} {:<10} {:<8} {:>6} {:>12} {:>6} {:>7} {:>7} {:>8}",
             r.seed,
             r.plan,
             r.shape,
             r.hier,
             r.steal,
+            r.recovery,
             if r.strict { "yes" } else { "no" },
             r.fp.time,
             r.fp.completed,
             r.fp.tasks_stolen,
+            r.fp.crashes,
             r.verdict
         );
     }
@@ -364,8 +404,9 @@ pub fn to_json(rows: &[FuzzRow]) -> String {
             };
             format!(
                 "{{\"seed\": {}, \"plan\": {}, \"shape\": \"{}\", \"hier\": \"{}\", \
-                 \"steal\": \"{}\", \"strict\": {}, \"time\": {}, \"events\": {}, \
-                 \"tasks\": {}, \"tasks_stolen\": {}, \"steal_denies\": {}, \
+                 \"steal\": \"{}\", \"recovery\": \"{}\", \"strict\": {}, \"time\": {}, \
+                 \"events\": {}, \"tasks\": {}, \"tasks_stolen\": {}, \"steal_denies\": {}, \
+                 \"crashes\": {}, \"tasks_reissued\": {}, \
                  \"verdict\": \"{}\", \"violations\": {}, \"detail\": \"{}\", \
                  \"clean_fails\": {}, \"repro\": \"{}\"}}",
                 r.seed,
@@ -373,12 +414,15 @@ pub fn to_json(rows: &[FuzzRow]) -> String {
                 r.shape,
                 r.hier,
                 r.steal,
+                r.recovery,
                 r.strict,
                 r.fp.time,
                 r.fp.events,
                 r.fp.completed,
                 r.fp.tasks_stolen,
                 r.fp.steal_denies,
+                r.fp.crashes,
+                r.fp.tasks_reissued,
                 r.verdict,
                 r.violations.len(),
                 detail,
@@ -449,9 +493,51 @@ mod tests {
             let (_t, eng) = exec(seed, plan);
             assert!(eng.world.done, "chaos run must still complete");
             let c = &eng.sim.chaos;
-            injected += c.jitters() + c.starves() + c.stalls() + c.forced_denies();
+            injected += c.jitters()
+                + c.starves()
+                + c.stalls()
+                + c.forced_denies()
+                + c.report_delays()
+                + c.grant_delays();
         }
         assert!(injected > 0, "no faults injected across 3 chaos cases");
+    }
+
+    /// The meta stream's forced-crash cases (recovery mode "crash" on a
+    /// tree with an eligible victim) must lose a scheduler mid-run, run
+    /// the re-adoption protocol, and still come out green on every oracle
+    /// plus the replay pin — the crash-and-restart acceptance criterion,
+    /// exercised on the exact cases CI's smoke/nightly sweeps draw.
+    #[test]
+    fn crash_cases_recover_and_stay_green() {
+        let mut meta = Rng::new(META_SEED);
+        let mut ran = 0u32;
+        let mut crashed = 0u64;
+        for i in 0..64 {
+            let seed = meta.next_u64();
+            let drawn = meta.next_u64();
+            let plan = if i % 5 == 4 { 0 } else { drawn };
+            let p = CaseParams::derive(seed);
+            // flat4 has a single scheduler: no eligible victim, so the
+            // forced-crash knob is inert there by design.
+            if plan == 0 || p.recovery != 2 || p.hier == 0 {
+                continue;
+            }
+            let r = run_case(seed, plan);
+            assert!(
+                r.ok(),
+                "crash case (seed {seed}, plan {plan}) failed: {} {:?}",
+                r.verdict,
+                r.violations
+            );
+            crashed += r.fp.crashes;
+            ran += 1;
+            if ran == 3 {
+                break;
+            }
+        }
+        assert!(ran > 0, "meta stream produced no forced-crash case in 64 draws");
+        assert!(crashed > 0, "no forced-crash case actually lost a scheduler");
     }
 
     /// A fixed-case reproduction (`--seed X --plan Y`) runs exactly one
@@ -470,7 +556,16 @@ mod tests {
         let j = to_json(&rows);
         assert!(j.starts_with("[\n"));
         assert!(j.trim_end().ends_with(']'));
-        for key in ["\"seed\"", "\"plan\"", "\"verdict\"", "\"repro\"", "\"clean_fails\""] {
+        for key in [
+            "\"seed\"",
+            "\"plan\"",
+            "\"recovery\"",
+            "\"crashes\"",
+            "\"tasks_reissued\"",
+            "\"verdict\"",
+            "\"repro\"",
+            "\"clean_fails\"",
+        ] {
             assert!(j.contains(key), "missing {key} in {j}");
         }
         assert_eq!(j.matches("{\"seed\"").count(), 1);

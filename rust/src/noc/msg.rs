@@ -117,7 +117,12 @@ pub enum Msg {
     PackResp { req: ReqId, ranges: Vec<ProducerRange> },
     /// Hierarchical placement descent: the receiving scheduler picks one
     /// of its children subtrees (or a worker, at leaf level) for `task`.
-    ScheduleDown { task: TaskId },
+    /// `epoch` is the task's placement generation (see
+    /// `task::table::TaskEntry::epoch`): crash recovery bumps it when it
+    /// re-issues an orphaned task, so a late duplicate `ScheduleDown`
+    /// that surfaces from a dead scheduler's drained mailbox is dropped
+    /// by the epoch dedup rule instead of double-placing the task.
+    ScheduleDown { task: TaskId, epoch: u32 },
     /// Inform `node`'s owner that `worker` is now the last producer.
     ProducerUpdate { node: NodeId, worker: CoreId },
     /// Idle-driven rebalance (parent -> child): request up to `batch`
@@ -134,6 +139,23 @@ pub enum Msg {
     /// Rebalance refusal (child -> parent): the victim's ready queue was
     /// empty — its load is already committed to workers/subtrees.
     StealDeny,
+
+    // ----------------------------------------------- crash & recovery
+    /// Heartbeat probe (parent -> scheduler child). Only exists when
+    /// `RecoveryCfg::enabled`; a child that misses the pong window is
+    /// declared dead and its subtree re-adopted.
+    Ping,
+    /// Heartbeat reply (child -> parent).
+    Pong,
+    /// Re-point a worker's uplink at `leaf` (re-adoption hands the
+    /// workers of a dead leaf scheduler to its parent; re-integration
+    /// hands them back to the restarted leaf).
+    Adopt { leaf: CoreId },
+    /// A restarted scheduler announces itself to its parent (carries its
+    /// own core id because the message may be processed after further
+    /// topology churn). The parent clears the dead mark and routing
+    /// redirect; the child's follow-up full `LoadReport` rebuilds books.
+    Rejoin { from: CoreId },
 
     // ------------------------------------------------------ mini-MPI
     /// Point-to-point MPI message (baseline runtime). `bytes` is payload;
@@ -183,6 +205,10 @@ impl Msg {
             Msg::StealReq { .. } => "StealReq",
             Msg::StealGrant { .. } => "StealGrant",
             Msg::StealDeny => "StealDeny",
+            Msg::Ping => "Ping",
+            Msg::Pong => "Pong",
+            Msg::Adopt { .. } => "Adopt",
+            Msg::Rejoin { .. } => "Rejoin",
             Msg::MpiSend { .. } => "MpiSend",
         }
     }
@@ -223,6 +249,19 @@ mod tests {
         // 8 ranges over 64-B frames: header + 2 continuation messages.
         assert_eq!(resp.wire_msgs(), 3);
         assert_eq!(resp.tag(), "PackResp");
+    }
+
+    #[test]
+    fn recovery_messages_are_single_frame() {
+        assert_eq!(Msg::Ping.wire_msgs(), 1);
+        assert_eq!(Msg::Ping.tag(), "Ping");
+        assert_eq!(Msg::Pong.wire_msgs(), 1);
+        assert_eq!(Msg::Pong.tag(), "Pong");
+        assert_eq!(Msg::Adopt { leaf: CoreId(3) }.wire_msgs(), 1);
+        assert_eq!(Msg::Adopt { leaf: CoreId(3) }.tag(), "Adopt");
+        assert_eq!(Msg::Rejoin { from: CoreId(1) }.wire_msgs(), 1);
+        assert_eq!(Msg::Rejoin { from: CoreId(1) }.tag(), "Rejoin");
+        assert_eq!(Msg::ScheduleDown { task: TaskId(1), epoch: 0 }.wire_msgs(), 1);
     }
 
     #[test]

@@ -21,7 +21,7 @@ use crate::memory::store::DataStore;
 use crate::noc::msg::Msg;
 use crate::noc::topology::Topology;
 use crate::sched::hierarchy::HierarchyMap;
-use crate::sched::scheduler::SchedLogic;
+use crate::sched::scheduler::{Journal, SchedLogic};
 use crate::sched::worker::WorkerLogic;
 use crate::sim::engine::{Engine, SimState};
 use crate::sim::event::Event;
@@ -39,6 +39,11 @@ pub struct World {
     pub dep: DepState,
     pub tasks: TaskTable,
     pub store: DataStore,
+    /// Durable reentrant-request tables (pack aggregations, spawn
+    /// rendezvous, wait counts), keyed by globally unique ids. World-level
+    /// so crash recovery can serve a reply that surfaces from a dead
+    /// scheduler's re-adopted mailbox — see [`Journal`].
+    pub journal: Journal,
     pub gstats: GlobalStats,
     pub rng: Rng,
     /// Loaded PJRT kernels for `Real` compute mode (`None` = modeled).
@@ -62,6 +67,7 @@ impl World {
             dep: DepState::new(),
             tasks: TaskTable::new(),
             store: DataStore::new(),
+            journal: Journal::default(),
             gstats: GlobalStats::default(),
             kernels: None,
             app: None,
@@ -156,6 +162,16 @@ impl Platform {
         // a no-op and keeps the engine byte-identical to the pre-chaos
         // schedule.
         sim.install_chaos(&cfg.chaos, cfg.seed);
+        // Deterministic scheduler crash: derived from (run seed, plan),
+        // leaf victims only, and only when both the plan and the recovery
+        // protocol are on — a crash without the protocol would simply
+        // wedge the run, which is not an interesting configuration.
+        if cfg.recovery.enabled && cfg.chaos.enabled {
+            let eligible = world.hier.crash_eligible();
+            if let Some(cs) = cfg.chaos.crash_schedule(cfg.seed, &eligible) {
+                sim.install_crash(world.hier.sched_core(cs.victim), cs.at, cs.up_at);
+            }
+        }
 
         // Main task: holds the root region read-write, responsible
         // scheduler = top level, dispatched to worker 0.
@@ -202,6 +218,17 @@ impl Platform {
             first_worker,
             Event::Msg { from: top, dst: first_worker, msg: Msg::Dispatch { task: main_task } },
         );
+        // Recovery on: seed a Boot on every probing (non-leaf) scheduler
+        // so the heartbeat chains arm at t=0. Recovery off: zero extra
+        // events — the pre-recovery schedule stays byte-identical.
+        if eng.world.cfg.recovery.enabled {
+            for s in 0..eng.world.hier.n_scheds {
+                if !eng.world.hier.children[s].is_empty() {
+                    let core = eng.world.hier.sched_core(s);
+                    eng.sim.push(0, core, Event::Boot);
+                }
+            }
+        }
         Platform { eng, main_task }
     }
 

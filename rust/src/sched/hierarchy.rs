@@ -274,6 +274,21 @@ impl HierarchyMap {
     pub fn n_levels(&self) -> usize {
         self.level_of.iter().copied().max().unwrap_or(0) + 1
     }
+
+    /// Scheduler indices eligible to be crash victims: leaf schedulers
+    /// whose parent has at least two children. Leaf-only keeps the blast
+    /// radius to one scheduling domain; the >= 2 siblings rule guarantees
+    /// the re-adopting parent always has a *surviving* child subtree to
+    /// re-place orphaned work into. Deterministic (index order) so the
+    /// chaos plan's victim draw replays bit-identically.
+    pub fn crash_eligible(&self) -> Vec<usize> {
+        (0..self.n_scheds)
+            .filter(|&s| {
+                self.is_leaf(s)
+                    && self.parent[s].is_some_and(|p| self.children[p].len() >= 2)
+            })
+            .collect()
+    }
 }
 
 #[cfg(test)]
@@ -448,6 +463,24 @@ mod tests {
         assert!(h.subtree_contains_core(1, w));
         assert!(!h.subtree_contains_core(2, w));
         assert!(h.subtree_contains_core(0, w));
+    }
+
+    #[test]
+    fn crash_eligible_needs_a_surviving_sibling() {
+        // Flat: the single scheduler has no parent — nothing eligible.
+        let flat = HierarchyMap::build(4, &HierarchySpec::flat());
+        assert!(flat.crash_eligible().is_empty());
+        // Single-child chain: leaf 2's parent has one child — ineligible.
+        let chain = HierarchyMap::build(4, &HierarchySpec { scheds_per_level: vec![1, 1, 1] });
+        assert!(chain.crash_eligible().is_empty());
+        // Two-level with 7 leaves: all 7 eligible, never the top.
+        let two = HierarchyMap::build(128, &HierarchySpec::two_level(7));
+        assert_eq!(two.crash_eligible(), (1..8).collect::<Vec<_>>());
+        // Three-level: only the 36 leaves, not the mid tier.
+        let three = HierarchyMap::build(216, &HierarchySpec::multi_level(3, 6));
+        let elig = three.crash_eligible();
+        assert_eq!(elig.len(), 36);
+        assert!(elig.iter().all(|&s| three.is_leaf(s)));
     }
 
     #[test]

@@ -224,6 +224,12 @@ pub struct LoadTracker {
     worker_base: u32,
     worker: Vec<u64>,
     total: u64,
+    /// Crash recovery: children currently marked dead (scheduler down,
+    /// subtree re-adopted). Dead slots are pinned at load 0 and excluded
+    /// from every placement / victim / headroom decision until a `Rejoin`
+    /// clears the mark.
+    dead: Vec<bool>,
+    n_dead: usize,
 }
 
 impl LoadTracker {
@@ -246,6 +252,8 @@ impl LoadTracker {
             worker_base,
             worker: vec![0; workers.len()],
             total: 0,
+            dead: vec![false; children.len()],
+            n_dead: 0,
         }
     }
 
@@ -335,6 +343,38 @@ impl LoadTracker {
     pub fn worker_loads(&self) -> &[u64] {
         &self.worker
     }
+
+    // -------------------------------------------------- crash-recovery marks
+
+    /// Mark a child dead: its book zeroes (the work it held is being
+    /// re-placed elsewhere by the recovery scan) and the slot drops out of
+    /// every decision until cleared. Idempotent.
+    pub fn set_child_dead(&mut self, slot: usize) {
+        if !self.dead[slot] {
+            self.dead[slot] = true;
+            self.n_dead += 1;
+        }
+        self.set_child(slot, 0);
+    }
+
+    /// A restarted child rejoined: it is placeable again. Its book stays
+    /// at whatever the fresh post-restart `LoadReport` set it to.
+    pub fn clear_child_dead(&mut self, slot: usize) {
+        if self.dead[slot] {
+            self.dead[slot] = false;
+            self.n_dead -= 1;
+        }
+    }
+
+    #[inline]
+    pub fn child_dead(&self, slot: usize) -> bool {
+        self.dead[slot]
+    }
+
+    #[inline]
+    pub fn any_dead(&self) -> bool {
+        self.n_dead > 0
+    }
 }
 
 /// A scheduler's complete placement state: the policy, its load tables and
@@ -378,6 +418,27 @@ impl Placer {
     ) -> (usize, u64) {
         let children = &hier.children[idx];
         let n = children.len();
+        if self.loads.any_dead() {
+            // Crash recovery in progress: score only surviving children.
+            // This path runs at most for one outage window per run, so a
+            // local candidate list (allocation) is fine here — the common
+            // no-dead path below stays allocation-free.
+            let live: Vec<usize> =
+                (0..n).filter(|&i| !self.loads.child_dead(i)).collect();
+            debug_assert!(!live.is_empty(), "placement with every child dead");
+            let loads = &self.loads;
+            let k = self.policy.choose(
+                pack,
+                live.len(),
+                |i| hier.subtree_workers(children[live[i]]),
+                |i| loads.child(live[i]),
+                &mut self.scratch,
+            );
+            let scored = self.policy.scored(live.len());
+            let slot = live[k];
+            self.loads.bump_child(slot);
+            return (children[slot], scored);
+        }
         let loads = &self.loads;
         let slot = self.policy.choose(
             pack,
@@ -464,7 +525,8 @@ impl Placer {
             (0..n).any(|i| self.loads.worker(i) < WORKER_QUEUE_CAP)
         } else {
             (0..children.len()).any(|i| {
-                self.loads.child(i) < 2 * hier.subtree_workers(children[i]).len() as u64
+                !self.loads.child_dead(i)
+                    && self.loads.child(i) < 2 * hier.subtree_workers(children[i]).len() as u64
             })
         }
     }
@@ -479,11 +541,18 @@ impl Placer {
             return None;
         }
         let loads = &self.loads;
-        if !(0..n).any(|i| loads.child(i) == 0) {
+        // The trigger needs a *live* idle child — a dead subtree sits at
+        // load 0 but cannot absorb work, so it must not look like a
+        // starving sibling.
+        if !(0..n).any(|i| !loads.child_dead(i) && loads.child(i) == 0) {
             return None;
         }
         let thr = self.steal.threshold.max(1);
-        let slot = self.victim.choose(n, |i| loads.child(i), thr)?;
+        // Dead slots are pinned at load 0 < threshold, so they can never
+        // be chosen as victims; the explicit map keeps that true even if a
+        // stale estimate ever leaked in.
+        let slot =
+            self.victim.choose(n, |i| if loads.child_dead(i) { 0 } else { loads.child(i) }, thr)?;
         Some(children[slot])
     }
 
@@ -507,7 +576,7 @@ impl Placer {
         let vslot = self.loads.child_slot(victim_global);
         let mut best: Option<usize> = None;
         for i in 0..children.len() {
-            if i == vslot {
+            if i == vslot || self.loads.child_dead(i) {
                 continue;
             }
             let better = match best {
@@ -518,9 +587,40 @@ impl Placer {
                 best = Some(i);
             }
         }
-        let best = best.expect("steal_dest: no non-victim child");
+        // Every sibling dead (a grant that was already in flight when the
+        // outage hit): keep the tasks where they are — the victim is the
+        // only live subtree left.
+        let best = best.unwrap_or(vslot);
         self.loads.bump_child(best);
         (children[best], children.len() as u64)
+    }
+
+    // ------------------------------------------------ crash-recovery hooks
+
+    /// Mark child scheduler `global` dead (zero book, excluded from every
+    /// decision) after a missed-heartbeat detection.
+    pub fn mark_child_dead(&mut self, global: usize) {
+        let slot = self.loads.child_slot(global);
+        self.loads.set_child_dead(slot);
+    }
+
+    /// A restarted child rejoined: make it placeable again.
+    pub fn mark_child_alive(&mut self, global: usize) {
+        let slot = self.loads.child_slot(global);
+        self.loads.clear_child_dead(slot);
+    }
+
+    /// Is child scheduler `global` currently marked dead?
+    pub fn child_is_dead(&self, global: usize) -> bool {
+        self.loads.child_dead(self.loads.child_slot(global))
+    }
+
+    /// Rebuild the load books from scratch. A restarted scheduler lost its
+    /// volatile placement state; authoritative reports (a fresh
+    /// unconditional one is requested from every attached worker on
+    /// `Adopt`) repopulate the zeroed slots.
+    pub fn reset_loads(&mut self, hier: &HierarchyMap, idx: usize) {
+        self.loads = LoadTracker::new(hier, idx);
     }
 
     /// `n` queued-ready tasks just migrated out of child `victim_global`:
@@ -774,6 +874,60 @@ mod tests {
         // the destination — a tie must not undo the migration.
         let (d3, _) = p.steal_dest(&hier, 0, victim);
         assert_ne!(d3, victim);
+    }
+
+    #[test]
+    fn dead_children_drop_out_of_every_decision() {
+        let hier = two_level();
+        let cfg = PolicyCfg::default().with_steal(StealCfg::on());
+        let mut p = Placer::new(&cfg, &hier, 0, 1);
+        let dead = hier.children[0][0];
+        let slot = p.loads.child_slot(dead);
+        for _ in 0..3 {
+            p.loads.bump_child(slot);
+        }
+        assert_eq!(p.total(), 3);
+        p.mark_child_dead(dead);
+        assert!(p.child_is_dead(dead));
+        assert_eq!(p.total(), 0, "dead book zeroes");
+        // Placement never picks the dead child, even though it now has
+        // the lowest (zero) load.
+        for _ in 0..16 {
+            let (c, _) = p.choose_child(&hier, 0, &[]);
+            assert_ne!(c, dead);
+        }
+        // A dead subtree at load 0 is not a starving sibling: with every
+        // live child loaded and only the dead one idle, no steal fires.
+        let mut q = Placer::new(&cfg, &hier, 0, 1);
+        q.mark_child_dead(dead);
+        for &c in &hier.children[0][1..] {
+            let s = q.loads.child_slot(c);
+            for _ in 0..q.steal_cfg().threshold.max(1) {
+                q.loads.bump_child(s);
+            }
+        }
+        assert_eq!(q.choose_victim(&hier, 0), None);
+        // Steal destination skips the dead slot too.
+        let victim = hier.children[0][1];
+        let (d, _) = q.steal_dest(&hier, 0, victim);
+        assert_ne!(d, dead);
+        assert_ne!(d, victim);
+        // Headroom ignores dead capacity: kill everything but one child,
+        // fill it to its cap, and the parent must report no headroom.
+        let mut r = Placer::new(&cfg, &hier, 0, 1);
+        for &c in &hier.children[0][..3] {
+            r.mark_child_dead(c);
+        }
+        let last = hier.children[0][3];
+        let ls = r.loads.child_slot(last);
+        for _ in 0..8 {
+            r.loads.bump_child(ls);
+        }
+        assert!(!r.has_headroom(&hier, 0));
+        // Rejoin restores the slot to service.
+        r.mark_child_alive(dead);
+        assert!(!r.child_is_dead(dead));
+        assert!(r.has_headroom(&hier, 0));
     }
 
     #[test]

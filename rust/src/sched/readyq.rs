@@ -146,6 +146,18 @@ impl ReadyQ {
     pub fn iter(&self) -> ReadyIter<'_> {
         ReadyIter { q: self, at: self.head }
     }
+
+    /// Drain the queue front-to-back into a `Vec`, leaving it empty.
+    /// Crash recovery uses this: a restarted scheduler's volatile queue is
+    /// wiped wholesale, and a re-adopting parent drains what it can see.
+    /// Off the hot path — called at most once per crash.
+    pub fn take_all(&mut self) -> Vec<TaskId> {
+        let mut out = Vec::with_capacity(self.len);
+        while let Some(t) = self.pop_front() {
+            out.push(t);
+        }
+        out
+    }
 }
 
 pub struct ReadyIter<'a> {
@@ -235,6 +247,21 @@ mod tests {
             assert_eq!(q.len(), 8);
         }
         assert_eq!(q.slots(), hwm, "steady-state churn must not allocate");
+    }
+
+    #[test]
+    fn take_all_drains_in_fifo_order() {
+        let mut q = ReadyQ::new();
+        for i in 0..6 {
+            q.push_back(TaskId(i));
+        }
+        q.pop_back();
+        let drained: Vec<u64> = q.take_all().iter().map(|t| t.0).collect();
+        assert_eq!(drained, vec![0, 1, 2, 3, 4]);
+        assert!(q.is_empty());
+        // The queue survives a wholesale drain.
+        q.push_back(TaskId(9));
+        assert_eq!(q.pop_front(), Some(TaskId(9)));
     }
 
     #[test]

@@ -44,7 +44,7 @@
 use crate::config::PlatformConfig;
 use crate::dep::node::ReadyAction;
 use crate::fxmap::FxHashMap;
-use crate::ids::{CoreId, NodeId, ReqId, TaskId};
+use crate::ids::{CoreId, Cycles, NodeId, ReqId, TaskId};
 use crate::noc::msg::{MemOpKind, Msg, ProducerRange};
 use crate::memory::region::PackScratch;
 use crate::sched::hierarchy::HierarchyMap;
@@ -61,9 +61,14 @@ use crate::task::table::TaskState;
 /// timers.
 const STEAL_RETRY_TIMER: u64 = 0x57EA_17;
 
+/// Custom-timer tag for the recovery heartbeat tick (must stay distinct
+/// from [`STEAL_RETRY_TIMER`] — both arrive as `Timer(Custom(..))` on the
+/// same scheduler cores).
+const HEARTBEAT_TIMER: u64 = 0xB_EA7;
+
 /// Reentrant pending packing operation ("reentrant events with saved local
 /// state", paper V-C).
-struct PackPending {
+pub struct PackPending {
     /// Root pend: drives `task`'s scheduling when complete.
     task: Option<TaskId>,
     /// Aggregation pend: reply to (original req, requester) when complete.
@@ -72,15 +77,54 @@ struct PackPending {
     acc: Vec<ProducerRange>,
 }
 
-pub struct SchedLogic {
-    pub idx: usize,
-    pub core: CoreId,
-    next_req: u64,
+/// Durable reentrant-request tables, shared by all schedulers and keyed by
+/// globally unique ids (`ReqId` embeds the issuing scheduler's index).
+///
+/// Pre-crash these lived inside each `SchedLogic`; they moved to the
+/// [`World`](crate::platform::World) so crash recovery stays tractable:
+/// the model is that a scheduler *journals* its request tables (pack
+/// aggregations, spawn rendezvous, wait counts) to memory that survives a
+/// crash, so a reply surfacing from a dead scheduler's re-adopted mailbox
+/// can be served — by the re-adopting parent during the outage or by the
+/// restarted incarnation after it — instead of wedging its requester
+/// forever. Functionally nothing changed for healthy runs: ids never
+/// collide across schedulers, and each entry is still only touched by the
+/// core currently serving it.
+#[derive(Default)]
+pub struct Journal {
     packs: FxHashMap<ReqId, PackPending>,
-    /// Spawn rendezvous: (spawner core, unsettled argument traversals).
+    /// Spawn rendezvous: req -> (spawner core, unsettled traversals).
     spawns: FxHashMap<ReqId, (CoreId, usize)>,
     /// task -> outstanding wait-node count.
     waits: FxHashMap<TaskId, usize>,
+}
+
+impl Journal {
+    /// All request tables drained (quiescence oracle: nothing reentrant
+    /// may be pending once the platform is idle).
+    pub fn is_empty(&self) -> bool {
+        self.packs.is_empty() && self.spawns.is_empty() && self.waits.is_empty()
+    }
+
+    /// Outstanding entries (diagnostics/oracle reporting).
+    pub fn outstanding(&self) -> usize {
+        self.packs.len() + self.spawns.len() + self.waits.len()
+    }
+
+    /// Seeded-corruption hook for oracle self-tests: leak a rendezvous.
+    #[cfg(test)]
+    pub fn inject_spawn(&mut self, req: ReqId, origin: CoreId, left: usize) {
+        self.spawns.insert(req, (origin, left));
+    }
+}
+
+pub struct SchedLogic {
+    pub idx: usize,
+    pub core: CoreId,
+    /// Monotone request counter. Survives a crash (part of the journal
+    /// fiction — see [`Journal`]): resetting it would mint `ReqId`s that
+    /// collide with pre-crash journal entries.
+    next_req: u64,
     /// Placement policy + dense load estimates (the policy seam; see
     /// [`crate::sched::policy`]).
     placer: Placer,
@@ -98,6 +142,16 @@ pub struct SchedLogic {
     /// advances when `StealCfg::retry_backoff > 0`).
     steal_retries: u32,
     last_reported: u64,
+    // --- crash recovery (all inert while `RecoveryCfg::enabled` is off:
+    // --- no timers armed, no probes sent, no draws, no charges).
+    /// Per-child-slot time of the last heard `Pong` (or `Rejoin`).
+    last_pong: Vec<Cycles>,
+    /// Incarnation number: bumped by each crash restart (diagnostics —
+    /// the functional dedup rides on task epochs and the task table).
+    generation: u32,
+    /// Set by the engine's restart transition, consumed by the next
+    /// `Boot`: run the rejoin protocol before anything else.
+    just_restarted: bool,
     /// `MYRMICS_TRACE_TASK`, read once at construction (it used to be an
     /// environment syscall on every single grant).
     trace_task: Option<u64>,
@@ -121,14 +175,14 @@ impl SchedLogic {
             idx,
             core,
             next_req: 1,
-            packs: FxHashMap::default(),
-            spawns: FxHashMap::default(),
-            waits: FxHashMap::default(),
             placer: Placer::new(&cfg.policy, hier, idx, cfg.seed),
             ready: ReadyQ::new(),
             steal_victim: None,
             steal_retries: 0,
             last_reported: 0,
+            last_pong: vec![0; hier.children[idx].len()],
+            generation: 0,
+            just_restarted: false,
             trace_task: std::env::var("MYRMICS_TRACE_TASK")
                 .ok()
                 .and_then(|t| t.parse::<u64>().ok()),
@@ -153,6 +207,11 @@ impl SchedLogic {
     /// A `StealReq` is outstanding (oracle: must be false at quiescence).
     pub fn steal_in_flight(&self) -> bool {
         self.steal_victim.is_some()
+    }
+
+    /// Incarnation number (0 = never crashed; oracles/tests).
+    pub fn generation(&self) -> u32 {
+        self.generation
     }
 
     /// Seeded-corruption hook for the oracle self-tests: mutable access
@@ -232,10 +291,17 @@ impl SchedLogic {
         }
         if !self.owners_scratch.is_empty() {
             if let Some(child) = ctx.world.hier.child_covering(self.idx, &self.owners_scratch) {
-                ctx.world.tasks.get_mut(task).resp = child;
-                let to = self.sched_core(ctx, child);
-                self.send_routed(ctx, to, Msg::Delegate { task, req, origin });
-                return;
+                // Never delegate into a dead subtree: the re-adopted
+                // mailbox would bounce the Delegate straight back here
+                // and the covering check would pick the same child again,
+                // forever. Keeping responsibility here is always correct
+                // (the dep protocol runs fine above the owners).
+                if !self.placer.child_is_dead(child) {
+                    ctx.world.tasks.get_mut(task).resp = child;
+                    let to = self.sched_core(ctx, child);
+                    self.send_routed(ctx, to, Msg::Delegate { task, req, origin });
+                    return;
+                }
             }
         }
         self.start_dep_analysis(ctx, task, req, origin);
@@ -243,10 +309,13 @@ impl SchedLogic {
 
     /// One argument traversal settled; ack the spawner once all have.
     fn on_settled(&mut self, ctx: &mut Ctx<'_>, req: ReqId) {
-        let Some(entry) = self.spawns.get_mut(&req) else { return };
-        entry.1 -= 1;
-        if entry.1 == 0 {
-            let (origin, _) = self.spawns.remove(&req).unwrap();
+        let done = {
+            let Some(entry) = ctx.world.journal.spawns.get_mut(&req) else { return };
+            entry.1 -= 1;
+            entry.1 == 0
+        };
+        if done {
+            let (origin, _) = ctx.world.journal.spawns.remove(&req).unwrap();
             self.send_routed(ctx, origin, Msg::SpawnAck { req });
         }
     }
@@ -271,7 +340,7 @@ impl SchedLogic {
             self.task_ready(ctx, task);
             return;
         }
-        self.spawns.insert(req, (origin, deps_pending));
+        ctx.world.journal.spawns.insert(req, (origin, deps_pending));
         let settle = Some((self.core, req));
         let (desc, parent) = {
             let entry = ctx.world.tasks.get(task);
@@ -335,7 +404,13 @@ impl SchedLogic {
             ctx.charge(ctx.sim.cost.sc_dep_path_step);
             let w = &mut *ctx.world;
             let node = w.dep.node_mut(at, &w.mem);
-            debug_assert_eq!(node.owner, self.idx, "descend on foreign node {at}");
+            // With recovery enabled a re-adopting parent legitimately
+            // serves traversal steps on nodes owned by its dead child
+            // (ownership is cost attribution; the state is shared).
+            debug_assert!(
+                node.owner == self.idx || w.cfg.recovery.enabled,
+                "descend on foreign node {at}"
+            );
             if entered {
                 node.note_arrival(mode);
             }
@@ -596,7 +671,9 @@ impl SchedLogic {
             ctx.world.tasks.get_mut(task).pack = acc;
             self.enqueue_ready(ctx, task);
         } else {
-            self.packs
+            ctx.world
+                .journal
+                .packs
                 .insert(req, PackPending { task: Some(task), reply: None, outstanding, acc });
         }
     }
@@ -622,7 +699,7 @@ impl SchedLogic {
         }
         let nested = self.fresh_req();
         let outstanding = self.pack_remote.len();
-        self.packs.insert(
+        ctx.world.journal.packs.insert(
             nested,
             PackPending { task: None, reply: Some((req, reply_to)), outstanding, acc: ranges },
         );
@@ -652,13 +729,16 @@ impl SchedLogic {
     }
 
     fn on_pack_resp(&mut self, ctx: &mut Ctx<'_>, req: ReqId, ranges: Vec<ProducerRange>) {
-        let Some(p) = self.packs.get_mut(&req) else { return };
-        p.acc.extend(ranges);
-        p.outstanding -= 1;
-        if p.outstanding > 0 {
+        let finished = {
+            let Some(p) = ctx.world.journal.packs.get_mut(&req) else { return };
+            p.acc.extend(ranges);
+            p.outstanding -= 1;
+            p.outstanding == 0
+        };
+        if !finished {
             return;
         }
-        let p = self.packs.remove(&req).unwrap();
+        let p = ctx.world.journal.packs.remove(&req).unwrap();
         if let Some(task) = p.task {
             ctx.world.tasks.get_mut(task).pack = p.acc;
             self.enqueue_ready(ctx, task);
@@ -673,7 +753,11 @@ impl SchedLogic {
     /// Dispatch is "pop + place + send" (`pump`), so queued tasks remain
     /// migratable until the moment they are placed.
     fn enqueue_ready(&mut self, ctx: &mut Ctx<'_>, task: TaskId) {
-        ctx.world.tasks.get_mut(task).state = TaskState::Queued;
+        {
+            let entry = ctx.world.tasks.get_mut(task);
+            entry.state = TaskState::Queued;
+            entry.queued_at = self.idx;
+        }
         self.ready.push_back(task);
         let depth = self.ready.len() as u64;
         if depth > ctx.world.gstats.ready_queue_hwm {
@@ -697,6 +781,18 @@ impl SchedLogic {
                 break;
             }
             let task = self.ready.pop_front().expect("non-empty ready queue");
+            // Stale-lease check: the table, not the queue, is the source
+            // of truth. A crash re-adoption may have re-issued this task
+            // elsewhere (its `queued_at` moved); dispatching the local
+            // leftover would run it twice. Never taken in a crash-free
+            // run, so the pre-recovery schedule is untouched.
+            {
+                let entry = ctx.world.tasks.get(task);
+                if entry.state != TaskState::Queued || entry.queued_at != self.idx {
+                    ctx.world.gstats.crash_dups_dropped += 1;
+                    continue;
+                }
+            }
             self.place(ctx, task);
         }
     }
@@ -724,9 +820,29 @@ impl SchedLogic {
     /// Victim side: surrender up to `batch` tasks from the *back* of the
     /// ready queue (the work this scheduler would reach last), or refuse
     /// if everything is already committed to workers/subtrees.
-    fn on_steal_req(&mut self, ctx: &mut Ctx<'_>, batch: u32) {
+    fn on_steal_req(&mut self, ctx: &mut Ctx<'_>, from: CoreId, batch: u32) {
         ctx.charge(ctx.sim.cost.sc_steal_handle);
-        // StealReq only ever comes from the parent scheduler.
+        // A StealReq whose sender is one of this scheduler's own children
+        // is its own in-flight request, surfaced from a re-adopted dead
+        // mailbox (the drain rewrites the sender to the dead core).
+        // `declare_dead` already answered it with the synthesized deny —
+        // swallow it. "Serving" it instead would reply towards *this*
+        // scheduler's parent: at the root that parent does not exist, and
+        // at a mid level the reply would corrupt the grandparent's latch.
+        if ctx
+            .world
+            .hier
+            .sched_idx(from)
+            .is_some_and(|s| ctx.world.hier.parent[s] == Some(self.idx))
+        {
+            assert!(
+                ctx.world.cfg.recovery.enabled,
+                "StealReq from own child outside crash recovery"
+            );
+            ctx.world.gstats.crash_dups_dropped += 1;
+            return;
+        }
+        // Otherwise a StealReq only ever comes from the parent scheduler.
         let parent = ctx.world.hier.parent[self.idx].expect("stolen-from scheduler has a parent");
         let reply_to = self.sched_core(ctx, parent);
         // Fault injection: deny regardless of queue depth, exercising the
@@ -738,6 +854,15 @@ impl SchedLogic {
         let mut tasks = Vec::new();
         while (tasks.len() as u32) < batch {
             let Some(t) = self.ready.pop_back() else { break };
+            // Same stale-lease check as `pump`: never surrender a queue
+            // entry the table no longer maps to this scheduler.
+            {
+                let entry = ctx.world.tasks.get(t);
+                if entry.state != TaskState::Queued || entry.queued_at != self.idx {
+                    ctx.world.gstats.crash_dups_dropped += 1;
+                    continue;
+                }
+            }
             ctx.charge(ctx.sim.cost.sc_steal_per_task);
             tasks.push(t);
         }
@@ -777,7 +902,20 @@ impl SchedLogic {
     /// charge the destination) and re-place every stolen task towards the
     /// idle side of this scheduler's subtree.
     fn on_steal_grant(&mut self, ctx: &mut Ctx<'_>, tasks: Vec<TaskId>) {
-        let victim = self.steal_victim.take().expect("grant without an outstanding StealReq");
+        let Some(victim) = self.steal_victim.take() else {
+            // Only one way the latch can be empty: the victim granted,
+            // then died before the (possibly chaos-delayed) grant landed,
+            // and `declare_dead` already synthesized the deny and
+            // re-issued every lease in this batch (they were all still
+            // `Queued` at the victim when it was declared). Late
+            // duplicate — outside recovery it is a protocol bug.
+            assert!(
+                ctx.world.cfg.recovery.enabled,
+                "grant without an outstanding StealReq"
+            );
+            ctx.world.gstats.crash_dups_dropped += tasks.len() as u64;
+            return;
+        };
         self.steal_retries = 0;
         ctx.world.gstats.steal_grants += 1;
         ctx.world.gstats.tasks_stolen += tasks.len() as u64;
@@ -800,13 +938,16 @@ impl SchedLogic {
     /// then send it down the least-loaded child other than the victim.
     /// The receiver runs the normal queue/place path from there.
     fn place_stolen(&mut self, ctx: &mut Ctx<'_>, task: TaskId, victim: usize) {
-        let ranges = ctx.world.tasks.get(task).pack.len() as u64;
+        let (ranges, epoch) = {
+            let entry = ctx.world.tasks.get(task);
+            (entry.pack.len() as u64, entry.epoch)
+        };
         ctx.charge(ctx.sim.cost.sc_pack_base + ctx.sim.cost.sc_pack_per_range * ranges);
         let (dest, scored) = self.placer.steal_dest(&ctx.world.hier, self.idx, victim);
         ctx.charge(ctx.sim.cost.sc_score_base + ctx.sim.cost.sc_score_per_child * scored);
         ctx.world.tasks.get_mut(task).state = TaskState::Placing;
         let to = self.sched_core(ctx, dest);
-        self.send_routed(ctx, to, Msg::ScheduleDown { task });
+        self.send_routed(ctx, to, Msg::ScheduleDown { task, epoch });
     }
 
     // ============================================================ placement
@@ -825,8 +966,9 @@ impl SchedLogic {
                 ctx.sim.cost.sc_score_base + ctx.sim.cost.sc_score_per_child * scored,
             );
             ctx.world.tasks.get_mut(task).pack = pack;
+            let epoch = ctx.world.tasks.get(task).epoch;
             let to = self.sched_core(ctx, chosen);
-            self.send_routed(ctx, to, Msg::ScheduleDown { task });
+            self.send_routed(ctx, to, Msg::ScheduleDown { task, epoch });
             return;
         }
         // Leaf: pick a worker.
@@ -863,6 +1005,14 @@ impl SchedLogic {
     // ============================================================ completion
 
     fn on_task_done(&mut self, ctx: &mut Ctx<'_>, task: TaskId) {
+        // Exactly-once completion: a `TaskDone` for a task already
+        // recorded `Done` is a late duplicate that surfaced from a dead
+        // scheduler's drained mailbox. The table is the source of truth —
+        // drop it before any forwarding or accounting.
+        if ctx.world.tasks.get(task).state == TaskState::Done {
+            ctx.world.gstats.crash_dups_dropped += 1;
+            return;
+        }
         let resp = ctx.world.tasks.get(task).resp;
         if resp != self.idx {
             // Leaf on the worker's path: refresh the local load estimate,
@@ -871,7 +1021,13 @@ impl SchedLogic {
             // their eager-estimate decay first and the authoritative
             // report (which already reflects this completion) lands last —
             // decay-then-overwrite never double-counts.
-            let known_worker = ctx.world.tasks.get(task).worker;
+            // After a crash re-adoption this first-hop role can fall to
+            // the dead leaf's *parent*, whose tracker has no slot for the
+            // adopted worker — attribute only workers actually attached
+            // here (`child_done` on the resp path covers the rest).
+            let known_worker = ctx.world.tasks.get(task).worker.filter(|&w| {
+                ctx.world.hier.is_leaf(self.idx) && ctx.world.hier.leaf_of_worker(w) == self.idx
+            });
             if let Some(w) = known_worker {
                 self.placer.worker_done(w);
             }
@@ -967,7 +1123,7 @@ impl SchedLogic {
             self.send_routed(ctx, origin, Msg::WaitGranted { task });
             return;
         }
-        self.waits.insert(task, nodes.len());
+        ctx.world.journal.waits.insert(task, nodes.len());
         for (node, mode) in nodes {
             let owner = match ctx.world.dep.get(node) {
                 Some(n) => n.owner,
@@ -1005,10 +1161,13 @@ impl SchedLogic {
             self.send_routed(ctx, to, Msg::WaitNodeOk { task, node });
             return;
         }
-        let Some(left) = self.waits.get_mut(&task) else { return };
-        *left -= 1;
-        if *left == 0 {
-            self.waits.remove(&task);
+        let drained = {
+            let Some(left) = ctx.world.journal.waits.get_mut(&task) else { return };
+            *left -= 1;
+            *left == 0
+        };
+        if drained {
+            ctx.world.journal.waits.remove(&task);
             let worker = ctx.world.tasks.get(task).worker.expect("waiting task has a worker");
             ctx.world.tasks.get_mut(task).state = TaskState::Running;
             self.send_routed(ctx, worker, Msg::WaitGranted { task });
@@ -1025,7 +1184,7 @@ impl SchedLogic {
         owner: CoreId,
         op: MemOpKind,
     ) {
-        if owner != self.core {
+        if owner != self.core && !self.serving_for(ctx, owner) {
             self.send_routed(ctx, owner, Msg::MemReq { req, origin, owner, op });
             return;
         }
@@ -1047,8 +1206,30 @@ impl SchedLogic {
     fn on_load_report(&mut self, ctx: &mut Ctx<'_>, from: CoreId, load: u64) {
         ctx.charge(ctx.sim.cost.sc_load_report);
         match ctx.world.hier.sched_idx(from) {
-            Some(s) => self.placer.child_report(s, load),
-            None => self.placer.worker_report(from, load),
+            Some(s) => {
+                // Stale pre-crash traffic from a child declared dead
+                // since: scoring it would resurrect the book the
+                // declaration just zeroed. (A restarted child's fresh
+                // report rides the same link *behind* its Rejoin, so it
+                // always lands on a live mark.)
+                if ctx.world.hier.parent[s] == Some(self.idx) && self.placer.child_is_dead(s) {
+                    ctx.world.gstats.crash_dups_dropped += 1;
+                    return;
+                }
+                self.placer.child_report(s, load)
+            }
+            None => {
+                // A re-adopted orphan worker reports here during an
+                // outage, but the (non-leaf) adopter keeps no worker
+                // book — orphans only drain in-flight work until their
+                // leaf rejoins, so the report carries no decision.
+                if !ctx.world.hier.is_leaf(self.idx)
+                    || ctx.world.hier.leaf_of_worker(from) != self.idx
+                {
+                    return;
+                }
+                self.placer.worker_report(from, load)
+            }
         }
         // Fresh estimates may reveal headroom or an idle/loaded imbalance.
         // Pump first: dispatching from the queue keeps total+queue
@@ -1078,9 +1259,197 @@ impl SchedLogic {
         }
     }
 
+    // ======================================================= crash recovery
+
+    /// Is `core` a scheduler child of mine that I currently serve for
+    /// (declared dead, mailbox re-adopted)? Requests addressed to it by
+    /// core id (`MemReq`) are handled here instead of re-forwarded — the
+    /// redirect would bounce them back forever.
+    fn serving_for(&self, ctx: &Ctx<'_>, core: CoreId) -> bool {
+        ctx.world.cfg.recovery.enabled
+            && ctx.world.hier.sched_idx(core).is_some_and(|s| {
+                ctx.world.hier.parent[s] == Some(self.idx) && self.placer.child_is_dead(s)
+            })
+    }
+
+    /// Arm the next heartbeat tick. Gated on the recovery switch, on
+    /// having scheduler children to probe, and on the run still being
+    /// live — once `done` is set the chain stops, or teardown would idle
+    /// behind a timer nobody needs.
+    fn maybe_arm_heartbeat(&mut self, ctx: &mut Ctx<'_>) {
+        let rc = ctx.world.cfg.recovery;
+        if rc.enabled && !ctx.world.hier.children[self.idx].is_empty() && !ctx.world.done {
+            ctx.after(rc.heartbeat_period, TimerKind::Custom(HEARTBEAT_TIMER));
+        }
+    }
+
+    /// One heartbeat tick: probe every live scheduler child, declare the
+    /// ones whose last `Pong` is older than the timeout, re-arm.
+    fn on_heartbeat(&mut self, ctx: &mut Ctx<'_>) {
+        if ctx.world.done {
+            return;
+        }
+        let timeout = ctx.world.cfg.recovery.heartbeat_timeout;
+        let now = ctx.now();
+        // Child slots are contiguous (slot i = base + i), so the probe
+        // loop borrows nothing and allocates nothing.
+        let n = ctx.world.hier.children[self.idx].len();
+        let Some(&base) = ctx.world.hier.children[self.idx].first() else { return };
+        for slot in 0..n {
+            if self.placer.loads.child_dead(slot) {
+                continue;
+            }
+            if now.saturating_sub(self.last_pong[slot]) > timeout {
+                self.declare_dead(ctx, base + slot);
+            } else {
+                ctx.world.gstats.heartbeats += 1;
+                ctx.charge(ctx.sim.cost.sc_load_report);
+                let to = self.sched_core(ctx, base + slot);
+                self.send_routed(ctx, to, Msg::Ping);
+            }
+        }
+        self.maybe_arm_heartbeat(ctx);
+    }
+
+    /// Liveness probe from the parent — answer with a `Pong`. The probe
+    /// may also be *our own*: a `Ping` sent to a child declared dead
+    /// since bounces off its re-adopted mailbox back to us (sender
+    /// rewritten to the dead core) and must be swallowed, not ponged.
+    fn on_ping(&mut self, ctx: &mut Ctx<'_>, from: CoreId) {
+        ctx.charge(ctx.sim.cost.sc_load_report);
+        if let Some(s) = ctx.world.hier.sched_idx(from) {
+            if ctx.world.hier.parent[s] == Some(self.idx) && self.placer.child_is_dead(s) {
+                return;
+            }
+        }
+        self.send_routed(ctx, from, Msg::Pong);
+    }
+
+    /// `Pong` from a scheduler child: refresh its liveness stamp.
+    fn on_pong(&mut self, ctx: &mut Ctx<'_>, from: CoreId) {
+        ctx.charge(ctx.sim.cost.sc_load_report);
+        if let Some(s) = ctx.world.hier.sched_idx(from) {
+            if ctx.world.hier.parent[s] == Some(self.idx) {
+                self.last_pong[self.placer.loads.child_slot(s)] = ctx.now();
+            }
+        }
+    }
+
+    /// A scheduler child missed its heartbeat deadline: take its subtree
+    /// over. The parent (a) adopts the dead core's mailbox so in-flight
+    /// traffic drains here instead of blackholing, (b) drops the child
+    /// from every placement/steal decision, (c) releases a steal latch
+    /// the victim can no longer answer, (d) re-attaches the orphaned
+    /// workers to itself, and (e) re-issues the tasks stranded in the
+    /// dead scheduler's volatile ready queue towards surviving siblings.
+    ///
+    /// Exactly-once contract: the durable task table is the source of
+    /// truth. Only tasks still `Queued` *and* leased to the dead child
+    /// (`queued_at`) are re-issued, each under a bumped epoch; anything
+    /// further along (Placing/Dispatched/Running) completes through the
+    /// re-adopted mailbox and the adopted workers. Stale queue entries
+    /// and stale `ScheduleDown`s are dropped by the lease/epoch checks at
+    /// dispatch time, so a spurious declaration (a slow-but-alive child)
+    /// costs capacity, never correctness.
+    fn declare_dead(&mut self, ctx: &mut Ctx<'_>, child: usize) {
+        let dead_core = ctx.world.hier.sched_core(child);
+        ctx.world.gstats.re_adoptions += 1;
+        ctx.charge(ctx.sim.cost.sc_score_base);
+        self.placer.mark_child_dead(child);
+        ctx.adopt_mailbox(dead_core, self.core);
+        // An outstanding StealReq to the dead child can never be
+        // answered — synthesize the deny so the one-request latch is
+        // released and deny-retry backoff keeps this thief live.
+        if self.steal_victim == Some(child) {
+            self.steal_victim = None;
+            ctx.world.gstats.steal_denies += 1;
+            ctx.world.gstats.crash_denies_synth += 1;
+            self.retry_after_deny(ctx);
+        }
+        for i in 0..ctx.world.hier.leaf_workers[child].len() {
+            let w = ctx.world.hier.leaf_workers[child][i];
+            ctx.charge(ctx.sim.cost.sc_dispatch);
+            self.send_routed(ctx, w, Msg::Adopt { leaf: self.core });
+        }
+        // Recovery scan (off the hot path — at most one outage per run,
+        // so the allocation is fine): responsibility for the dead child's
+        // tasks moves here; stranded `Queued` leases are re-issued.
+        let mut orphans = Vec::new();
+        for e in ctx.world.tasks.iter_mut() {
+            if e.resp == child {
+                e.resp = self.idx;
+            }
+            if e.state == TaskState::Queued && e.queued_at == child {
+                e.epoch += 1;
+                orphans.push(e.id);
+            }
+        }
+        ctx.world.gstats.tasks_reissued += orphans.len() as u64;
+        for t in orphans {
+            ctx.charge(ctx.sim.cost.sc_steal_per_task);
+            self.enqueue_ready(ctx, t);
+        }
+    }
+
+    /// Restart transition, scheduler side: the engine wiped the volatile
+    /// state (`on_crash_restart`), then the restart `Boot` lands here.
+    /// Rebuild the load books from zero, reclaim whatever the durable
+    /// task table still leases to this scheduler (a restart that beats
+    /// the parent's timeout means nothing was ever re-issued), and
+    /// announce the fresh incarnation so the parent clears the redirect
+    /// and hands the workers back.
+    fn rejoin(&mut self, ctx: &mut Ctx<'_>) {
+        self.just_restarted = false;
+        self.placer.reset_loads(&ctx.world.hier, self.idx);
+        let mut mine = Vec::new();
+        for e in ctx.world.tasks.iter() {
+            if e.state == TaskState::Queued && e.queued_at == self.idx {
+                mine.push(e.id);
+            }
+        }
+        for t in mine {
+            ctx.charge(ctx.sim.cost.sc_steal_per_task);
+            self.enqueue_ready(ctx, t);
+        }
+        if let Some(p) = ctx.world.hier.parent[self.idx] {
+            ctx.charge(ctx.sim.cost.sc_load_report);
+            let to = self.sched_core(ctx, p);
+            self.send_routed(ctx, to, Msg::Rejoin { from: self.core });
+            // Unconditional report: the parent's book for this child was
+            // zeroed at declaration (or is stale pre-crash). Same-link
+            // FIFO lands it after the Rejoin, i.e. on a live mark.
+            let load = self.placer.total() + self.ready.len() as u64;
+            self.last_reported = load;
+            self.send_routed(ctx, to, Msg::LoadReport { from: self.core, load });
+        }
+        self.pump(ctx);
+    }
+
+    /// A restarted child announced itself: clear the death mark and the
+    /// mailbox redirect, hand its workers back, and refresh liveness so
+    /// the next heartbeat tick does not instantly re-declare it.
+    fn on_rejoin(&mut self, ctx: &mut Ctx<'_>, child_core: CoreId) {
+        ctx.charge(ctx.sim.cost.sc_load_report);
+        let Some(s) = ctx.world.hier.sched_idx(child_core) else { return };
+        if ctx.world.hier.parent[s] != Some(self.idx) {
+            return;
+        }
+        self.last_pong[self.placer.loads.child_slot(s)] = ctx.now();
+        if self.placer.child_is_dead(s) {
+            ctx.restore_mailbox(child_core);
+            self.placer.mark_child_alive(s);
+            ctx.world.gstats.re_adoptions += 1;
+            for i in 0..ctx.world.hier.leaf_workers[s].len() {
+                let w = ctx.world.hier.leaf_workers[s][i];
+                ctx.charge(ctx.sim.cost.sc_dispatch);
+                self.send_routed(ctx, w, Msg::Adopt { leaf: child_core });
+            }
+        }
+    }
+
     // ============================================================= dispatch
 
-    pub fn handle(&mut self, ctx: &mut Ctx<'_>, _from: CoreId, msg: Msg) {
+    pub fn handle(&mut self, ctx: &mut Ctx<'_>, from: CoreId, msg: Msg) {
         match msg {
             Msg::SpawnReq { req, origin, parent, desc } => {
                 self.on_spawn(ctx, req, origin, parent, desc)
@@ -1098,13 +1467,34 @@ impl SchedLogic {
             }
             Msg::PackReq { req, node, reply_to } => self.on_pack_req(ctx, req, node, reply_to),
             Msg::PackResp { req, ranges } => self.on_pack_resp(ctx, req, ranges),
-            Msg::ScheduleDown { task } => self.enqueue_ready(ctx, task),
-            Msg::StealReq { batch } => self.on_steal_req(ctx, batch),
+            Msg::ScheduleDown { task, epoch } => {
+                // Epoch dedup (exactly-once): a descent that surfaced from
+                // a dead scheduler's drained mailbox may already have been
+                // re-issued under a bumped epoch by the re-adopting parent
+                // — the older incarnation loses.
+                if epoch < ctx.world.tasks.get(task).epoch {
+                    ctx.world.gstats.crash_dups_dropped += 1;
+                } else {
+                    self.enqueue_ready(ctx, task)
+                }
+            }
+            Msg::StealReq { batch } => self.on_steal_req(ctx, from, batch),
             Msg::StealGrant { tasks } => self.on_steal_grant(ctx, tasks),
             Msg::StealDeny => {
-                self.steal_victim = None;
-                ctx.world.gstats.steal_denies += 1;
-                self.retry_after_deny(ctx);
+                if self.steal_victim.take().is_none() {
+                    // The victim refused, then died before the reply
+                    // landed: `declare_dead` already synthesized this
+                    // deny (and counted it). Counting the late duplicate
+                    // would break `reqs == grants + denies`.
+                    assert!(
+                        ctx.world.cfg.recovery.enabled,
+                        "deny without an outstanding StealReq"
+                    );
+                    ctx.world.gstats.crash_dups_dropped += 1;
+                } else {
+                    ctx.world.gstats.steal_denies += 1;
+                    self.retry_after_deny(ctx);
+                }
             }
             Msg::ProducerUpdate { .. } => {
                 // Functional update was applied eagerly; charge bookkeeping.
@@ -1116,6 +1506,9 @@ impl SchedLogic {
             Msg::RegisterWait { task, node, mode } => self.register_wait(ctx, task, node, mode),
             Msg::WaitNodeOk { task, node } => self.wait_node_ok(ctx, task, node),
             Msg::LoadReport { from, load } => self.on_load_report(ctx, from, load),
+            Msg::Ping => self.on_ping(ctx, from),
+            Msg::Pong => self.on_pong(ctx, from),
+            Msg::Rejoin { from: child } => self.on_rejoin(ctx, child),
             other => panic!("scheduler {} got unexpected message {}", self.idx, other.tag()),
         }
     }
@@ -1138,7 +1531,16 @@ impl CoreLogic for SchedLogic {
             ctx.charge(stall);
         }
         match ev {
-            Event::Boot => {}
+            Event::Boot => {
+                // Recovery off: inert, exactly as before (no Boot is even
+                // seeded). Recovery on: the t=0 seed Boot starts the
+                // heartbeat chain on probing (non-leaf) schedulers; a
+                // restart Boot first runs the rejoin protocol.
+                if self.just_restarted {
+                    self.rejoin(ctx);
+                }
+                self.maybe_arm_heartbeat(ctx);
+            }
             Event::Msg { from, dst, msg } => {
                 if dst == self.core {
                     self.handle(ctx, from, msg);
@@ -1182,7 +1584,27 @@ impl CoreLogic for SchedLogic {
                 // is already in flight or no victim qualifies).
                 self.maybe_steal(ctx);
             }
+            Event::Timer(TimerKind::Custom(HEARTBEAT_TIMER)) => self.on_heartbeat(ctx),
             Event::DmaDone { .. } | Event::Timer(_) | Event::Wake => {}
+        }
+    }
+
+    fn on_crash_restart(&mut self) {
+        // The volatile scheduling plane is lost: ready queue, load books
+        // (rebuilt in `rejoin` from fresh reports), the steal latch and
+        // backoff, the report-threshold anchor, liveness stamps.
+        // `next_req` deliberately survives (journaled — see [`Journal`]):
+        // resetting it would mint ReqIds colliding with pre-crash journal
+        // entries. The task table and dep/memory state are `World`-level
+        // and durable by construction.
+        self.generation += 1;
+        self.just_restarted = true;
+        self.ready = ReadyQ::new();
+        self.steal_victim = None;
+        self.steal_retries = 0;
+        self.last_reported = 0;
+        for p in &mut self.last_pong {
+            *p = 0;
         }
     }
 }

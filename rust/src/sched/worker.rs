@@ -249,6 +249,18 @@ impl CoreLogic for WorkerLogic {
                         self.maybe_start(ctx);
                         self.report_load(ctx);
                     }
+                    Msg::Adopt { leaf } => {
+                        // Crash recovery re-homed this worker under a new
+                        // (or restarted) scheduler. All future uplink
+                        // traffic goes there; send an unconditional load
+                        // report so the adopter's book starts from truth
+                        // instead of the dead child's stale view.
+                        ctx.charge(ctx.sim.cost.wk_msg_proc);
+                        self.leaf = leaf;
+                        let load = self.load();
+                        self.last_load = load;
+                        ctx.send(self.leaf, Msg::LoadReport { from: self.core, load });
+                    }
                     Msg::SpawnAck { req } => self.resume(ctx, Waiting::SpawnAck(req)),
                     Msg::MemResp { req } => self.resume(ctx, Waiting::Rpc(req)),
                     Msg::WaitGranted { task } => {

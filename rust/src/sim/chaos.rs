@@ -27,6 +27,35 @@ use crate::sim::rng::Rng;
 /// so fault draws never correlate with policy draws.
 pub const CHAOS_STREAM: u64 = 0xC2B2_AE3D_27D4_EB4F;
 
+/// Stream mixer for the crash-schedule RNG — decorrelated from
+/// [`CHAOS_STREAM`] so adding crash faults to a plan never shifts the
+/// jitter/starve/stall/deny draws of the same `(seed, plan)` pair.
+pub const CRASH_STREAM: u64 = 0x9E37_79B9_7F4A_7C15;
+
+/// Message class seen by the class-targeted delay knobs. Classification
+/// happens in the engine (which owns the `Msg`); chaos only draws.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum MsgClass {
+    /// `LoadReport` / `QuiesceUp`: books and region-teardown traffic.
+    Report,
+    /// `StealGrant`: migration payloads, racing fresh spawns.
+    Grant,
+    Other,
+}
+
+/// A deterministic scheduler crash derived from `(run seed, plan seed)`:
+/// which scheduler dies, when, and whether/when it comes back.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CrashSchedule {
+    /// Scheduler index (into the hierarchy's eligible-victim list).
+    pub victim: usize,
+    /// Cycle at which the scheduler goes dark.
+    pub at: Cycles,
+    /// Cycle at which it restarts with fresh volatile state; `None`
+    /// means permanent death.
+    pub up_at: Option<Cycles>,
+}
+
 /// A bounded, seed-derived fault schedule. All knobs are rates (percent)
 /// or cycle caps; `enabled == false` (the [`FaultPlan::none`] default)
 /// short-circuits every hook before any RNG draw.
@@ -55,6 +84,27 @@ pub struct FaultPlan {
     /// Unconditionally deny this many steal requests before `deny_pct`
     /// takes over — pins the "first victim always denies" retry path.
     pub deny_first: u32,
+    /// Percent chance the run schedules a scheduler crash. Crashes only
+    /// fire when `RecoveryCfg::enabled` is also set — without the
+    /// recovery protocol a dead scheduler would simply orphan its
+    /// subtree, which is a feature gap, not a fault to fuzz.
+    pub crash_pct: u32,
+    /// Upper bound on the crash time, cycles (drawn `1..=max`).
+    pub crash_max: Cycles,
+    /// Upper bound on the down window before restart, cycles.
+    pub crash_down: Cycles,
+    /// Percent chance the crash is permanent (no restart; the parent
+    /// keeps the re-adopted subtree forever).
+    pub crash_perm_pct: u32,
+    /// Percent of `LoadReport`/`QuiesceUp` deliveries given extra delay
+    /// beyond generic jitter — races quiescence against region teardown.
+    pub report_delay_pct: u32,
+    pub report_delay_max: Cycles,
+    /// Percent of `StealGrant` deliveries given extra delay — widens the
+    /// window in which adversarial spawns land while a grant is in
+    /// flight.
+    pub grant_delay_pct: u32,
+    pub grant_delay_max: Cycles,
 }
 
 impl FaultPlan {
@@ -70,6 +120,14 @@ impl FaultPlan {
             stall_max: 0,
             deny_pct: 0,
             deny_first: 0,
+            crash_pct: 0,
+            crash_max: 0,
+            crash_down: 0,
+            crash_perm_pct: 0,
+            report_delay_pct: 0,
+            report_delay_max: 0,
+            grant_delay_pct: 0,
+            grant_delay_max: 0,
         }
     }
 
@@ -94,7 +152,44 @@ impl FaultPlan {
             stall_max: 1 + r.below(20_000),
             deny_pct: r.below(51) as u32,
             deny_first: r.below(3) as u32,
+            // Drawn after the original knobs so pre-crash plans keep the
+            // exact values they had when their reproducer lines were
+            // recorded.
+            crash_pct: r.below(61) as u32,
+            crash_max: 50_000 + r.below(1_450_001),
+            crash_down: 100_000 + r.below(900_001),
+            crash_perm_pct: r.below(26) as u32,
+            report_delay_pct: r.below(41) as u32,
+            report_delay_max: 1 + r.below(50_000),
+            grant_delay_pct: r.below(41) as u32,
+            grant_delay_max: 1 + r.below(50_000),
         }
+    }
+
+    /// Derive the run's crash schedule, or `None` when the dice say no
+    /// crash or there is no eligible victim. `eligible` is the list of
+    /// crash-eligible scheduler indices (leaf schedulers whose parent has
+    /// a surviving sibling to re-place orphans onto); the platform only
+    /// calls this when recovery is enabled. A separate RNG stream keeps
+    /// the jitter/stall/deny draws of the same plan untouched.
+    pub fn crash_schedule(&self, run_seed: u64, eligible: &[usize]) -> Option<CrashSchedule> {
+        if !self.enabled || self.crash_pct == 0 || eligible.is_empty() {
+            return None;
+        }
+        let stream =
+            run_seed ^ self.plan_seed.wrapping_add(1).wrapping_mul(CRASH_STREAM);
+        let mut r = Rng::new(stream | 1);
+        if r.below(100) >= self.crash_pct as u64 {
+            return None;
+        }
+        let victim = eligible[r.below(eligible.len() as u64) as usize];
+        let at = 1 + r.below(self.crash_max.max(1));
+        let up_at = if r.below(100) < self.crash_perm_pct as u64 {
+            None
+        } else {
+            Some(at + 1 + r.below(self.crash_down.max(1)))
+        };
+        Some(CrashSchedule { victim, at, up_at })
     }
 }
 
@@ -123,6 +218,9 @@ pub struct ChaosState {
     starves: u64,
     stalls: u64,
     forced_denies: u64,
+    report_delays: u64,
+    grant_delays: u64,
+    msgs_requeued: u64,
 }
 
 impl ChaosState {
@@ -138,6 +236,9 @@ impl ChaosState {
             starves: 0,
             stalls: 0,
             forced_denies: 0,
+            report_delays: 0,
+            grant_delays: 0,
+            msgs_requeued: 0,
         }
     }
 
@@ -157,6 +258,9 @@ impl ChaosState {
             starves: 0,
             stalls: 0,
             forced_denies: 0,
+            report_delays: 0,
+            grant_delays: 0,
+            msgs_requeued: 0,
             plan,
         }
     }
@@ -189,6 +293,40 @@ impl ChaosState {
         }
         self.link_last[key] = t;
         t
+    }
+
+    /// Extra class-targeted delivery delay for a message of `class`,
+    /// applied *before* the generic jitter + FIFO clamp in
+    /// [`Self::delivery_time`] (so per-link order still holds). Draws
+    /// only when the matching knob is armed, keeping plans without these
+    /// knobs on their original draw sequence. Must only be called when
+    /// `active()`.
+    pub fn class_delay(&mut self, class: MsgClass) -> Cycles {
+        match class {
+            MsgClass::Report if self.plan.report_delay_pct > 0 => {
+                if self.rng.below(100) < self.plan.report_delay_pct as u64 {
+                    self.report_delays += 1;
+                    1 + self.rng.below(self.plan.report_delay_max.max(1))
+                } else {
+                    0
+                }
+            }
+            MsgClass::Grant if self.plan.grant_delay_pct > 0 => {
+                if self.rng.below(100) < self.plan.grant_delay_pct as u64 {
+                    self.grant_delays += 1;
+                    1 + self.rng.below(self.plan.grant_delay_max.max(1))
+                } else {
+                    0
+                }
+            }
+            _ => 0,
+        }
+    }
+
+    /// Record a message re-parked in a dead scheduler's mailbox (engine
+    /// crash path).
+    pub fn note_requeued(&mut self) {
+        self.msgs_requeued += 1;
     }
 
     /// Draw the transient-starvation decision for a credited send. The
@@ -240,6 +378,15 @@ impl ChaosState {
     pub fn forced_denies(&self) -> u64 {
         self.forced_denies
     }
+    pub fn report_delays(&self) -> u64 {
+        self.report_delays
+    }
+    pub fn grant_delays(&self) -> u64 {
+        self.grant_delays
+    }
+    pub fn msgs_requeued(&self) -> u64 {
+        self.msgs_requeued
+    }
 }
 
 #[cfg(test)]
@@ -268,6 +415,14 @@ mod tests {
             assert!((1..=20_000).contains(&a.stall_max), "{a:?}");
             assert!(a.deny_pct <= 50, "{a:?}");
             assert!(a.deny_first <= 2, "{a:?}");
+            assert!(a.crash_pct <= 60, "{a:?}");
+            assert!((50_000..=1_500_000).contains(&a.crash_max), "{a:?}");
+            assert!((100_000..=1_000_000).contains(&a.crash_down), "{a:?}");
+            assert!(a.crash_perm_pct <= 25, "{a:?}");
+            assert!(a.report_delay_pct <= 40, "{a:?}");
+            assert!((1..=50_000).contains(&a.report_delay_max), "{a:?}");
+            assert!(a.grant_delay_pct <= 40, "{a:?}");
+            assert!((1..=50_000).contains(&a.grant_delay_max), "{a:?}");
         }
         assert_ne!(
             FaultPlan::from_seed(1),
@@ -306,6 +461,63 @@ mod tests {
         assert!(st.force_deny());
         assert!(!st.force_deny(), "deny_pct 0: no denies after the countdown");
         assert_eq!(st.forced_denies(), 2);
+    }
+
+    #[test]
+    fn crash_schedule_is_pure_and_bounded() {
+        let plan = FaultPlan { crash_pct: 100, ..FaultPlan::from_seed(11) };
+        let eligible = [1usize, 2, 3];
+        let a = plan.crash_schedule(0xFEED, &eligible);
+        let b = plan.crash_schedule(0xFEED, &eligible);
+        assert_eq!(a, b, "crash schedule must be pure in (seed, plan)");
+        let s = a.expect("crash_pct 100 must schedule a crash");
+        assert!(eligible.contains(&s.victim));
+        assert!(s.at >= 1 && s.at <= plan.crash_max);
+        if let Some(u) = s.up_at {
+            assert!(u > s.at && u <= s.at + 1 + plan.crash_down);
+        }
+        // No crash without a victim pool, without the knob, or disabled.
+        assert_eq!(plan.crash_schedule(0xFEED, &[]), None);
+        let off = FaultPlan { crash_pct: 0, ..plan.clone() };
+        assert_eq!(off.crash_schedule(0xFEED, &eligible), None);
+        assert_eq!(FaultPlan::none().crash_schedule(0xFEED, &eligible), None);
+        // Different run seeds move the schedule (decorrelated stream).
+        let c = plan.crash_schedule(0xFEED ^ 1, &eligible);
+        assert!(c.is_some());
+    }
+
+    #[test]
+    fn permanent_death_follows_perm_pct() {
+        let perm = FaultPlan {
+            crash_pct: 100,
+            crash_perm_pct: 100,
+            ..FaultPlan::from_seed(11)
+        };
+        let s = perm.crash_schedule(0xFEED, &[1, 2]).unwrap();
+        assert_eq!(s.up_at, None, "perm_pct 100 must never restart");
+        let transient = FaultPlan { crash_perm_pct: 0, ..perm };
+        let s = transient.crash_schedule(0xFEED, &[1, 2]).unwrap();
+        assert!(s.up_at.is_some(), "perm_pct 0 must always restart");
+    }
+
+    #[test]
+    fn class_delays_only_hit_their_class() {
+        let plan = FaultPlan {
+            report_delay_pct: 100,
+            grant_delay_pct: 0,
+            ..FaultPlan::from_seed(5)
+        };
+        let mut st = ChaosState::new(plan, 0xB5EED, 4);
+        assert!(st.class_delay(MsgClass::Report) > 0);
+        assert_eq!(st.class_delay(MsgClass::Grant), 0);
+        assert_eq!(st.class_delay(MsgClass::Other), 0);
+        assert_eq!(st.report_delays(), 1);
+        assert_eq!(st.grant_delays(), 0);
+        let bound = st.plan().report_delay_max;
+        for _ in 0..100 {
+            let d = st.class_delay(MsgClass::Report);
+            assert!(d >= 1 && d <= 1 + bound);
+        }
     }
 
     #[test]

@@ -24,11 +24,42 @@ use crate::noc::dma::{group_completion, Transfer};
 use crate::noc::msg::Msg;
 use crate::noc::topology::Topology;
 use crate::platform::World;
-use crate::sim::chaos::{ChaosState, FaultPlan};
+use crate::sim::chaos::{ChaosState, FaultPlan, MsgClass};
 use crate::sim::event::{Event, TimerKind};
 use crate::sim::wheel::{EventQ, Popped};
 use crate::stats::metrics::CoreStats;
 use crate::task::registry::Registry;
+
+/// How long a message sits in a dead scheduler's hardware mailbox before
+/// the engine re-checks whether the core is back (or its mailbox has been
+/// re-adopted). Purely a polling granularity: a fixed constant so replays
+/// stay bit-identical and per-link FIFO order is preserved (equal delays
+/// cannot reorder a link).
+pub const CRASH_MAILBOX_RETRY: Cycles = 1_024;
+
+/// An installed scheduler crash (engine-level view of
+/// [`crate::sim::chaos::CrashSchedule`], resolved to a core id).
+///
+/// Crash semantics: between `at` and `up_at` the core processes nothing.
+/// Its *software* state (ready queue, load books, request latches) is lost
+/// at restart — [`CoreLogic::on_crash_restart`] wipes it — but the
+/// *hardware* mailbox survives: messages delivered while the core is down
+/// are re-parked (see [`CRASH_MAILBOX_RETRY`]), never dropped, so channel
+/// credits stay balanced. Once the parent re-adopts the subtree it
+/// installs a redirect and the engine drains the dead mailbox toward it.
+#[derive(Clone, Copy, Debug)]
+pub struct CrashState {
+    pub core: CoreId,
+    pub at: Cycles,
+    /// Restart time; `None` = permanent death (the core stays dark until
+    /// the post-completion teardown re-bootstrap).
+    pub up_at: Option<Cycles>,
+    /// The crash intercepted at least one event (counted in gstats).
+    pub fired: bool,
+    /// The restart transition has run (volatile state wiped, `Boot`
+    /// delivered to the fresh incarnation).
+    pub restarted: bool,
+}
 
 /// Per-core engine metadata.
 #[derive(Clone, Debug)]
@@ -70,6 +101,13 @@ pub struct SimState {
     /// without an installed plan stay byte-identical to the pre-chaos
     /// engine (no extra RNG draws, events or charges).
     pub chaos: ChaosState,
+    /// Installed scheduler crash, if any (`None` keeps the pop loop on
+    /// the exact pre-crash paths — the check is a single `Option` test).
+    crash: Option<CrashState>,
+    /// Per-core mailbox redirect installed by re-adoption: events for a
+    /// dead core are forwarded (uncredited) to the adoptive parent.
+    /// Allocated only when a crash is installed.
+    redirect: Vec<Option<CoreId>>,
 }
 
 impl SimState {
@@ -103,6 +141,8 @@ impl SimState {
             dma_seq: 0,
             trace: false,
             chaos: ChaosState::disabled(),
+            crash: None,
+            redirect: Vec::new(),
         }
     }
 
@@ -112,6 +152,38 @@ impl SimState {
         if plan.enabled {
             self.chaos = ChaosState::new(plan.clone(), run_seed, self.n_cores());
         }
+    }
+
+    /// Install a scheduler crash for this run (platform-side, only when
+    /// recovery is enabled). Schedules the restart `Boot` so the fresh
+    /// incarnation announces itself even if no traffic wakes it.
+    pub fn install_crash(&mut self, core: CoreId, at: Cycles, up_at: Option<Cycles>) {
+        self.crash = Some(CrashState { core, at, up_at, fired: false, restarted: false });
+        if self.redirect.is_empty() {
+            self.redirect = vec![None; self.n_cores()];
+        }
+        if let Some(u) = up_at {
+            self.push(u, core, Event::Boot);
+        }
+    }
+
+    /// The installed crash, if any (oracles/tests).
+    pub fn crash(&self) -> Option<&CrashState> {
+        self.crash.as_ref()
+    }
+
+    /// Point a dead core's mailbox at `to` (re-adoption), or clear the
+    /// redirect with `None` (re-integration after restart).
+    pub fn set_redirect(&mut self, dead: CoreId, to: Option<CoreId>) {
+        if self.redirect.is_empty() {
+            self.redirect = vec![None; self.n_cores()];
+        }
+        self.redirect[dead.idx()] = to;
+    }
+
+    /// Current mailbox redirect for `core`, if any.
+    pub fn redirect_of(&self, core: CoreId) -> Option<CoreId> {
+        self.redirect.get(core.idx()).copied().flatten()
     }
 
     pub fn n_cores(&self) -> usize {
@@ -174,9 +246,17 @@ impl SimState {
         let lat = self.cost.msg_latency(self.topo.hops(from, hop));
         let mut at = t_send + lat;
         if self.chaos.active() {
-            // Fault injection: bounded latency jitter, clamped so
+            // Fault injection: class-targeted delay (delayed load/quiesce
+            // reports racing region teardown; steal grants racing fresh
+            // spawns), then bounded generic jitter — both clamped so
             // same-link deliveries never reorder (per-link FIFO is
             // load-bearing for load accounting and the dep protocol).
+            let class = match &msg {
+                Msg::LoadReport { .. } | Msg::QuiesceUp { .. } => MsgClass::Report,
+                Msg::StealGrant { .. } => MsgClass::Grant,
+                _ => MsgClass::Other,
+            };
+            at += self.chaos.class_delay(class);
             at = self.chaos.delivery_time(from, hop, at);
         }
         self.push(at, hop, Event::Msg { from, dst, msg });
@@ -326,11 +406,27 @@ impl<'a> Ctx<'a> {
     pub fn chaos_force_deny(&mut self) -> bool {
         self.sim.chaos.active() && self.sim.chaos.force_deny()
     }
+
+    /// Recovery: re-adopt a dead scheduler's mailbox — future events for
+    /// `dead` are drained toward `to` (uncredited forwards).
+    pub fn adopt_mailbox(&mut self, dead: CoreId, to: CoreId) {
+        self.sim.set_redirect(dead, Some(to));
+    }
+
+    /// Recovery: give a restarted scheduler its mailbox back.
+    pub fn restore_mailbox(&mut self, core: CoreId) {
+        self.sim.set_redirect(core, None);
+    }
 }
 
 /// Logic driving one simulated core.
 pub trait CoreLogic {
     fn on_event(&mut self, ctx: &mut Ctx<'_>, ev: Event);
+
+    /// Crash-recovery hook: wipe volatile state after a restart. Called
+    /// by the engine exactly once, immediately before the first event the
+    /// fresh incarnation processes. Default: no-op (workers never crash).
+    fn on_crash_restart(&mut self) {}
 
     /// Downcast hook for diagnostics and tests (e.g. inspecting a
     /// scheduler's load estimates after a run). Default: not downcastable.
@@ -461,6 +557,110 @@ impl Engine {
                     }
                 }
             };
+            // Crash interception (single `Option` test when no crash is
+            // installed — the default path is untouched).
+            if let Some(c) = self.sim.crash {
+                if c.core == core && !c.restarted {
+                    let down = t >= c.at && c.up_at.is_none_or(|u| t < u);
+                    if down && !self.world.done {
+                        if !self.sim.crash.as_mut().expect("checked").fired {
+                            self.sim.crash.as_mut().expect("checked").fired = true;
+                            self.world.gstats.crashes += 1;
+                        }
+                        match ev {
+                            Event::Msg { from, dst, msg } => {
+                                if let Some(target) = self.sim.redirect[ci] {
+                                    // Re-adopted: drain the dead mailbox
+                                    // toward the adoptive parent. Return
+                                    // the sender's credit (the message
+                                    // left the buffer) and forward
+                                    // uncredited — the link is marked so
+                                    // the release at processing time is
+                                    // expected, not a double release.
+                                    let released = self
+                                        .sim
+                                        .channels
+                                        .get_mut(from, core)
+                                        .and_then(|ch| ch.release());
+                                    if let Some((t_blk, b_dst, b_msg)) = released {
+                                        let stall = t.saturating_sub(t_blk);
+                                        self.sim.stats[from.idx()].credit_stall += stall;
+                                        self.sim.deliver_msg(t, from, core, b_dst, b_msg);
+                                    }
+                                    // Destination rewrite: traffic for the
+                                    // dead core itself goes to the adopter;
+                                    // traffic merely routed *through* it
+                                    // (worker <-> ancestors) skips the dead
+                                    // hop straight to its destination. The
+                                    // adopter owns the dead switch's
+                                    // routing table — bouncing transit off
+                                    // the adopter would loop forever, since
+                                    // its tree route back towards the
+                                    // destination passes through this very
+                                    // core.
+                                    let fwd = if dst == core { target } else { dst };
+                                    self.sim.expect_uncredited(core, fwd);
+                                    self.sim.push(
+                                        t,
+                                        fwd,
+                                        Event::Msg { from: core, dst: fwd, msg },
+                                    );
+                                } else {
+                                    // Not yet re-adopted: the hardware
+                                    // mailbox holds the message; re-check
+                                    // after a fixed poll interval (equal
+                                    // delays preserve per-link FIFO).
+                                    self.sim.chaos.note_requeued();
+                                    self.sim.push(
+                                        t + CRASH_MAILBOX_RETRY,
+                                        core,
+                                        Event::Msg { from, dst, msg },
+                                    );
+                                }
+                            }
+                            // Timers and markers of the dead incarnation
+                            // die with it; the fresh one re-arms its own.
+                            _ => {}
+                        }
+                        // Keep draining whatever was parked behind the
+                        // busy cursor pre-crash: the normal re-arm runs
+                        // after the handler, which we just skipped.
+                        let rearm = {
+                            let meta = &mut self.sim.metas[ci];
+                            if !meta.pending.is_empty() && !meta.wake_scheduled {
+                                meta.wake_scheduled = true;
+                                true
+                            } else {
+                                false
+                            }
+                        };
+                        if rearm {
+                            self.sim.push_wake(t, core);
+                        }
+                        continue;
+                    }
+                    if t >= c.at {
+                        // Restart transition: past the down window (or a
+                        // crash surfacing after completion, too late for
+                        // the liveness protocol — re-bootstrap so the
+                        // teardown drain cannot wedge on a dark mailbox).
+                        let cs = self.sim.crash.as_mut().expect("checked");
+                        cs.restarted = true;
+                        if !cs.fired {
+                            cs.fired = true;
+                            self.world.gstats.crashes += 1;
+                        }
+                        self.world.gstats.restarts += 1;
+                        // The reboot clears the pipeline: whatever the
+                        // dead incarnation was "executing" is gone.
+                        self.sim.metas[ci].busy_until = t;
+                        if let Some(l) = self.logic[ci].as_deref_mut() {
+                            l.on_crash_restart();
+                        }
+                    }
+                }
+            }
+
             debug_assert!(t >= self.sim.now, "time went backwards");
             self.sim.now = t;
             self.world.gstats.events_processed += 1;
@@ -736,6 +936,72 @@ mod tests {
         let b = ping_pong_with(&plan);
         assert_eq!(a, b, "(seed, plan) must replay bit-identically");
         assert_eq!(a.1, 6, "faults delay but never drop messages");
+    }
+
+    #[test]
+    fn crashed_core_parks_messages_until_restart() {
+        let mut eng = tiny_engine(2, 10);
+        eng.sim.install_crash(CoreId(1), 5, Some(50_000));
+        // Three messages land during the down window (req >= 5 so the
+        // echo logic does not reply). The mailbox must hold them — none
+        // processed before the restart, all processed after it.
+        for (i, t) in [10u64, 20, 30].into_iter().enumerate() {
+            eng.sim.push(
+                t,
+                CoreId(1),
+                Event::Msg {
+                    from: CoreId(0),
+                    dst: CoreId(1),
+                    msg: Msg::SpawnAck { req: ReqId(7 + i as u64) },
+                },
+            );
+        }
+        let end = eng.run(None);
+        assert!(end >= 50_000, "messages must wait out the down window");
+        assert_eq!(eng.sim.stats[1].msgs_recv, 3, "mailbox holds, never drops");
+        assert_eq!(eng.world.gstats.crashes, 1);
+        assert_eq!(eng.world.gstats.restarts, 1);
+        assert!(eng.sim.chaos.msgs_requeued() > 0);
+        assert!(eng.sim.crash().expect("installed").restarted);
+    }
+
+    #[test]
+    fn readopted_mailbox_forwards_to_redirect_target() {
+        let mut eng = tiny_engine(3, 10);
+        // Permanent death of core 1; its mailbox is re-adopted by core 2.
+        eng.sim.install_crash(CoreId(1), 5, None);
+        eng.sim.set_redirect(CoreId(1), Some(CoreId(2)));
+        eng.sim.push(
+            10,
+            CoreId(1),
+            Event::Msg { from: CoreId(0), dst: CoreId(1), msg: Msg::SpawnAck { req: ReqId(9) } },
+        );
+        eng.run(None);
+        assert_eq!(eng.sim.stats[1].msgs_recv, 0, "dead core processes nothing");
+        assert_eq!(eng.sim.stats[2].msgs_recv, 1, "forwarded to the adopter");
+        assert_eq!(eng.world.gstats.crashes, 1);
+        assert_eq!(eng.world.gstats.restarts, 0, "permanent death never restarts");
+        assert_eq!(eng.sim.redirect_of(CoreId(1)), Some(CoreId(2)));
+    }
+
+    #[test]
+    fn crash_replays_bit_identically() {
+        let run = || {
+            let mut eng = tiny_engine(2, 100);
+            eng.sim.install_crash(CoreId(0), 300, Some(9_000));
+            eng.sim.push(
+                0,
+                CoreId(0),
+                Event::Msg {
+                    from: CoreId(1),
+                    dst: CoreId(0),
+                    msg: Msg::SpawnAck { req: ReqId(0) },
+                },
+            );
+            let t = eng.run(None);
+            (t, eng.world.gstats.msgs_total, eng.sim.stats[0].busy_runtime)
+        };
+        assert_eq!(run(), run());
     }
 
     #[test]

@@ -91,6 +91,29 @@ pub struct GlobalStats {
     /// disabled the queue drains within the handler that fills it, so
     /// this never exceeds 1.
     pub ready_queue_hwm: u64,
+    // --- crash & recovery (all zero when recovery is disabled) ---
+    /// Scheduler crashes that actually fired (0 or 1 per run today).
+    pub crashes: u64,
+    /// Crashed schedulers that restarted and rejoined the tree.
+    pub restarts: u64,
+    /// Dead subtrees re-adopted by their parent after a missed-heartbeat
+    /// detection (worker uplinks redirected, orphans re-placed).
+    pub re_adoptions: u64,
+    /// Orphaned tasks re-issued toward surviving siblings. Exactly-once:
+    /// only tasks whose table state shows no dispatch and no recorded
+    /// completion are ever re-issued.
+    pub tasks_reissued: u64,
+    /// Stale messages dropped by the generation/epoch dedup rule (late
+    /// `ScheduleDown` with an old epoch, duplicate `TaskDone` for a task
+    /// already recorded `Done`).
+    pub crash_dups_dropped: u64,
+    /// `StealDeny`s synthesized by a parent on re-adoption for a
+    /// `StealReq` that was in flight to the crashed child (keeps
+    /// `steal_reqs == steal_grants + steal_denies` and un-leaks the
+    /// one-req-in-flight latch).
+    pub crash_denies_synth: u64,
+    /// Heartbeat `Ping` probes sent by parent schedulers.
+    pub heartbeats: u64,
 }
 
 #[cfg(test)]

@@ -44,6 +44,14 @@ pub struct TaskEntry {
     pub parent: Option<TaskId>,
     /// Responsible scheduler index.
     pub resp: usize,
+    /// Scheduler index whose `ReadyQ` currently holds this task (valid
+    /// only while `state == Queued`). Distinct from `resp`: a task placed
+    /// down the tree queues at a descendant while dependency
+    /// responsibility stays put. Crash recovery scans on it to find tasks
+    /// stranded in a dead scheduler's volatile queue, and dispatch
+    /// validates it before placing — a queue entry whose task was
+    /// re-adopted elsewhere is a stale lease and is dropped.
+    pub queued_at: usize,
     pub state: TaskState,
     /// Dependency-pending argument count (granted when it hits zero).
     pub deps_pending: usize,
@@ -53,6 +61,13 @@ pub struct TaskEntry {
     pub worker: Option<CoreId>,
     /// Current `sys_wait` phase (0 = first run of the body).
     pub phase: u32,
+    /// Placement generation. Bumped when crash recovery re-issues the
+    /// task toward a surviving sibling; a `ScheduleDown` carrying an
+    /// older epoch is a stale duplicate (it surfaced from a dead
+    /// scheduler's drained mailbox) and is dropped, which is what makes
+    /// re-issue exactly-once. 0 for the entire life of a task that never
+    /// met a crash.
+    pub epoch: u32,
     // --- timeline, for profiling/reports ---
     pub spawned_at: Cycles,
     pub ready_at: Cycles,
@@ -88,11 +103,13 @@ impl TaskTable {
             desc: Arc::new(desc),
             parent,
             resp,
+            queued_at: resp,
             state: TaskState::DepWait,
             deps_pending,
             pack: Vec::new(),
             worker: None,
             phase: 0,
+            epoch: 0,
             spawned_at: now,
             ready_at: 0,
             started_at: 0,
@@ -137,6 +154,12 @@ impl TaskTable {
 
     pub fn iter(&self) -> impl Iterator<Item = &TaskEntry> {
         self.tasks.iter()
+    }
+
+    /// Mutable sweep over every entry — the crash-recovery scan uses it
+    /// to reassign responsibility for a dead scheduler's tasks.
+    pub fn iter_mut(&mut self) -> impl Iterator<Item = &mut TaskEntry> {
+        self.tasks.iter_mut()
     }
 
     pub fn n_done(&self) -> usize {

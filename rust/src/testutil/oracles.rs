@@ -46,6 +46,8 @@ pub fn check_all(eng: &Engine, strict_books: bool) -> Vec<String> {
     check_dep(eng, &mut v);
     check_channels(eng, &mut v);
     check_gstats(eng, &mut v);
+    check_journal(eng, &mut v);
+    check_recovery(eng, &mut v);
     v
 }
 
@@ -197,6 +199,61 @@ pub fn check_gstats(eng: &Engine, out: &mut Vec<String>) {
     }
 }
 
+/// Durable request journal: every reentrant rendezvous (pack aggregation,
+/// spawn settle, wait count) must have been served by quiescence — a
+/// leaked entry means a requester is suspended forever.
+pub fn check_journal(eng: &Engine, out: &mut Vec<String>) {
+    let j = &eng.world.journal;
+    if !j.is_empty() {
+        out.push(format!(
+            "journal oracle: {} reentrant requests (pack/spawn/wait) still pending",
+            j.outstanding()
+        ));
+    }
+}
+
+/// Crash-recovery counter consistency: at most the one installable crash
+/// fired, every restart matches a crash, synthesized denies are a subset
+/// of all denies, re-issued tasks imply a re-adoption, and no recovery
+/// machinery moved in a crash-free run. (Exactly-once completion itself is
+/// covered by [`check_tasks`]: spawned == completed and every entry Done.)
+pub fn check_recovery(eng: &Engine, out: &mut Vec<String>) {
+    let g = &eng.world.gstats;
+    if g.crashes > 1 {
+        out.push(format!(
+            "recovery oracle: {} crashes fired but at most one is installable",
+            g.crashes
+        ));
+    }
+    if g.restarts > g.crashes {
+        out.push(format!(
+            "recovery oracle: {} restarts exceed {} crashes",
+            g.restarts, g.crashes
+        ));
+    }
+    if g.crash_denies_synth > g.steal_denies {
+        out.push(format!(
+            "recovery oracle: {} synthesized denies exceed {} total denies",
+            g.crash_denies_synth, g.steal_denies
+        ));
+    }
+    if g.tasks_reissued > 0 && g.re_adoptions == 0 {
+        out.push(format!(
+            "recovery oracle: {} tasks re-issued without any re-adoption",
+            g.tasks_reissued
+        ));
+    }
+    if g.crashes == 0
+        && (g.re_adoptions > 0 || g.tasks_reissued > 0 || g.crash_denies_synth > 0)
+    {
+        out.push(format!(
+            "recovery oracle: recovery counters moved without a crash \
+             (re_adoptions {}, reissued {}, synth denies {})",
+            g.re_adoptions, g.tasks_reissued, g.crash_denies_synth
+        ));
+    }
+}
+
 #[cfg(test)]
 mod tests {
     //! Oracle self-tests: each oracle must fail loudly on a seeded
@@ -304,5 +361,44 @@ mod tests {
         let mut eng = healthy_engine();
         eng.world.gstats.steal_reqs += 1;
         assert_caught(&check_all(&eng, true), "steal_reqs");
+    }
+
+    #[test]
+    fn journal_oracle_catches_leaked_rendezvous() {
+        use crate::ids::ReqId;
+        let mut eng = healthy_engine();
+        eng.world.journal.inject_spawn(ReqId(0xDEAD), CoreId(17), 2);
+        assert_caught(&check_all(&eng, true), "still pending");
+    }
+
+    #[test]
+    fn recovery_oracle_catches_restart_without_crash() {
+        let mut eng = healthy_engine();
+        eng.world.gstats.restarts += 1;
+        assert_caught(&check_all(&eng, true), "restarts exceed");
+    }
+
+    #[test]
+    fn recovery_oracle_catches_reissue_without_adoption() {
+        let mut eng = healthy_engine();
+        eng.world.gstats.crashes = 1;
+        eng.world.gstats.restarts = 1;
+        eng.world.gstats.tasks_reissued = 3;
+        assert_caught(&check_all(&eng, true), "without any re-adoption");
+    }
+
+    #[test]
+    fn recovery_oracle_catches_machinery_moving_crash_free() {
+        let mut eng = healthy_engine();
+        eng.world.gstats.re_adoptions = 1;
+        assert_caught(&check_all(&eng, true), "without a crash");
+    }
+
+    #[test]
+    fn recovery_oracle_catches_synth_deny_overflow() {
+        let mut eng = healthy_engine();
+        eng.world.gstats.crashes = 1;
+        eng.world.gstats.crash_denies_synth = eng.world.gstats.steal_denies + 1;
+        assert_caught(&check_all(&eng, true), "synthesized denies exceed");
     }
 }

@@ -1,0 +1,266 @@
+//! Determinism and liveness gate for scheduler crash-and-restart.
+//!
+//! Three contracts, all load-bearing:
+//!
+//! 1. **Recovery off = byte-identical**: with `RecoveryCfg::off()` (the
+//!    default) no heartbeat is armed, no crash is installed and no extra
+//!    RNG draw happens — the pre-crash event schedule is pinned by the
+//!    untouched replay fingerprints in `tests/determinism.rs` /
+//!    `tests/steal_determinism.rs`. Here we additionally pin that a
+//!    plan's crash knobs are inert while recovery is off.
+//! 2. **Crashed runs replay**: the crash schedule is a pure function of
+//!    `(run seed, plan seed)`, the outage window and every recovery step
+//!    (death declaration, mailbox adoption, orphan re-issue, rejoin) run
+//!    on virtual time only — so two runs of a crashing configuration
+//!    must produce bit-identical fingerprints, including the recovery
+//!    counters themselves.
+//! 3. **Exactly-once completion**: with a leaf scheduler lost mid-run,
+//!    every workload still reaches quiescence with `tasks_completed ==
+//!    tasks_spawned` and every PR-6 oracle green — no lost task, no
+//!    double execution (duplicates land in `crash_dups_dropped`, never
+//!    in the task table).
+
+use myrmics::apps::skew::{myrmics as skew_myrmics, SkewParams};
+use myrmics::apps::synthetic::{empty_chain, hier_empty, independent, SynthParams};
+use myrmics::config::{HierarchySpec, PlatformConfig, RecoveryCfg, StealCfg};
+use myrmics::platform::Platform;
+use myrmics::sim::chaos::FaultPlan;
+use myrmics::testutil::oracles;
+
+/// Everything that must replay bit-identically, recovery counters
+/// included.
+#[derive(PartialEq, Eq, Debug)]
+struct Fingerprint {
+    final_time: u64,
+    events: u64,
+    msgs: u64,
+    tasks_spawned: u64,
+    tasks_completed: u64,
+    steal_reqs: u64,
+    steal_grants: u64,
+    steal_denies: u64,
+    tasks_stolen: u64,
+    crashes: u64,
+    restarts: u64,
+    re_adoptions: u64,
+    tasks_reissued: u64,
+    crash_dups_dropped: u64,
+    heartbeats: u64,
+}
+
+/// A plan whose only perturbation is the scheduler crash: every rate
+/// knob is zero, so any schedule difference against a crash-free run is
+/// the outage and the recovery protocol, nothing else.
+fn crash_plan(perm_pct: u32) -> FaultPlan {
+    FaultPlan {
+        enabled: true,
+        plan_seed: 7,
+        crash_pct: 100,
+        crash_max: 50_000,
+        crash_down: 600_000,
+        crash_perm_pct: perm_pct,
+        ..FaultPlan::none()
+    }
+}
+
+struct Outcome {
+    fp: Fingerprint,
+    done: bool,
+    violations: Vec<String>,
+}
+
+/// Build, drain to quiescence and check oracles on the skew workload.
+fn run_skew(hier: HierarchySpec, recovery: RecoveryCfg, chaos: FaultPlan) -> Outcome {
+    let mut cfg = PlatformConfig::new(16, hier);
+    cfg.policy.steal = StealCfg::on().with_retry(10_000, 8);
+    cfg.recovery = recovery;
+    cfg.chaos = chaos;
+    let (reg, main) = skew_myrmics();
+    let mut plat = Platform::build_with(cfg, reg, main, |w| {
+        w.app = Some(Box::new(SkewParams {
+            tasks: 64,
+            task_cycles: 200_000,
+            hot_pct: 90,
+            groups: 4,
+        }));
+    });
+    let t = plat.run_to_quiescence(Some(1 << 44));
+    finish(t, plat)
+}
+
+fn finish(t: u64, plat: Platform) -> Outcome {
+    let violations = oracles::check_all(&plat.eng, false);
+    let g = &plat.eng.world.gstats;
+    Outcome {
+        fp: Fingerprint {
+            final_time: t,
+            events: g.events_processed,
+            msgs: g.msgs_total,
+            tasks_spawned: g.tasks_spawned,
+            tasks_completed: g.tasks_completed,
+            steal_reqs: g.steal_reqs,
+            steal_grants: g.steal_grants,
+            steal_denies: g.steal_denies,
+            tasks_stolen: g.tasks_stolen,
+            crashes: g.crashes,
+            restarts: g.restarts,
+            re_adoptions: g.re_adoptions,
+            tasks_reissued: g.tasks_reissued,
+            crash_dups_dropped: g.crash_dups_dropped,
+            heartbeats: g.heartbeats,
+        },
+        done: plat.eng.world.done,
+        violations,
+    }
+}
+
+/// Two-level tree, leaf scheduler lost and restarted mid-run: the run
+/// completes exactly once, every oracle holds, and the whole thing —
+/// outage, re-adoption, re-issue, rejoin — replays bit-identically.
+#[test]
+fn crashed_run_replays_bit_identically_two_level() {
+    let run = || run_skew(HierarchySpec::two_level(4), RecoveryCfg::on(), crash_plan(0));
+    let a = run();
+    let b = run();
+    assert_eq!(a.fp, b.fp, "crashed run must replay bit-identically");
+    assert!(a.done, "crashed run must still complete");
+    assert!(a.violations.is_empty(), "oracles: {:?}", a.violations);
+    assert_eq!(a.fp.crashes, 1, "the forced crash must fire: {:?}", a.fp);
+    assert_eq!(a.fp.restarts, 1, "the victim must restart: {:?}", a.fp);
+    assert_eq!(a.fp.tasks_completed, a.fp.tasks_spawned, "exactly-once: {:?}", a.fp);
+    assert!(a.fp.heartbeats > 0, "the liveness probe must have run: {:?}", a.fp);
+}
+
+/// Three-level tree: death is declared by a mid scheduler, re-placement
+/// happens inside its subtree, and the schedule still replays.
+#[test]
+fn crashed_run_replays_bit_identically_three_level() {
+    let run = || run_skew(HierarchySpec::multi_level(3, 2), RecoveryCfg::on(), crash_plan(0));
+    let a = run();
+    let b = run();
+    assert_eq!(a.fp, b.fp, "3-level crashed run must replay bit-identically");
+    assert!(a.done && a.violations.is_empty(), "oracles: {:?}", a.violations);
+    assert_eq!(a.fp.crashes, 1, "{:?}", a.fp);
+    assert_eq!(a.fp.tasks_completed, a.fp.tasks_spawned, "{:?}", a.fp);
+}
+
+/// Flat tree: a single scheduler has no eligible victim (nobody could
+/// adopt its orphans), so the forced-crash plan must install nothing —
+/// the run completes crash-free and replays.
+#[test]
+fn flat_tree_has_no_eligible_victim() {
+    let run = || run_skew(HierarchySpec::flat(), RecoveryCfg::on(), crash_plan(0));
+    let a = run();
+    let b = run();
+    assert_eq!(a.fp, b.fp);
+    assert!(a.done && a.violations.is_empty(), "oracles: {:?}", a.violations);
+    assert_eq!(a.fp.crashes, 0, "no eligible victim on a flat tree: {:?}", a.fp);
+    assert_eq!(a.fp.restarts, 0, "{:?}", a.fp);
+    assert_eq!(a.fp.tasks_reissued, 0, "{:?}", a.fp);
+}
+
+/// Recovery off (the default): the plan's crash knobs are dead weight —
+/// the fingerprint is byte-identical to the same plan with the crash
+/// knobs zeroed, and no recovery counter moves.
+#[test]
+fn recovery_off_makes_crash_knobs_inert() {
+    let with_knobs = run_skew(HierarchySpec::two_level(4), RecoveryCfg::off(), crash_plan(0));
+    let without = run_skew(
+        HierarchySpec::two_level(4),
+        RecoveryCfg::off(),
+        FaultPlan { crash_pct: 0, ..crash_plan(0) },
+    );
+    assert_eq!(
+        with_knobs.fp, without.fp,
+        "crash knobs must be byte-inert while recovery is off"
+    );
+    assert_eq!(with_knobs.fp.crashes, 0);
+    assert_eq!(with_knobs.fp.heartbeats, 0, "no probe without recovery: {:?}", with_knobs.fp);
+    assert!(with_knobs.done && with_knobs.violations.is_empty());
+}
+
+/// Permanent death (`up_at = None`): the victim never rejoins, its
+/// workers stay adopted by the parent and the siblings absorb the
+/// re-issued orphans — the run still quiesces exactly once and replays.
+#[test]
+fn permanent_death_still_completes_exactly_once() {
+    let run = || run_skew(HierarchySpec::two_level(4), RecoveryCfg::on(), crash_plan(100));
+    let a = run();
+    let b = run();
+    assert_eq!(a.fp, b.fp, "permanent-death run must replay bit-identically");
+    assert!(a.done, "permanent death must not wedge the run");
+    assert!(a.violations.is_empty(), "oracles: {:?}", a.violations);
+    assert_eq!(a.fp.crashes, 1, "{:?}", a.fp);
+    assert_eq!(a.fp.restarts, 0, "permanent death never restarts: {:?}", a.fp);
+    assert_eq!(a.fp.re_adoptions, 1, "the parent must adopt the subtree: {:?}", a.fp);
+    assert_eq!(a.fp.tasks_completed, a.fp.tasks_spawned, "exactly-once: {:?}", a.fp);
+}
+
+/// Every workload shape survives losing a leaf scheduler mid-run: full
+/// quiescence, oracles green, `completed == spawned` (exactly-once), on
+/// the two-level tree with a crash early in the run.
+#[test]
+fn all_workloads_quiesce_through_a_leaf_crash() {
+    let shapes: &[&str] = &["chain", "independent", "skew-90", "hier-empty"];
+    for &shape in shapes {
+        let mut cfg = PlatformConfig::new(16, HierarchySpec::two_level(4));
+        cfg.policy.steal = StealCfg::on().with_retry(10_000, 8);
+        cfg.recovery = RecoveryCfg::on();
+        cfg.chaos = crash_plan(0);
+        let mut plat = match shape {
+            "chain" => {
+                let (reg, main) = empty_chain();
+                Platform::build_with(cfg, reg, main, |w| {
+                    w.app = Some(Box::new(SynthParams {
+                        n_tasks: 60,
+                        task_cycles: 20_000,
+                        ..Default::default()
+                    }));
+                })
+            }
+            "independent" => {
+                let (reg, main) = independent();
+                Platform::build_with(cfg, reg, main, |w| {
+                    w.app = Some(Box::new(SynthParams {
+                        n_tasks: 48,
+                        task_cycles: 100_000,
+                        ..Default::default()
+                    }));
+                })
+            }
+            "skew-90" => {
+                let (reg, main) = skew_myrmics();
+                Platform::build_with(cfg, reg, main, |w| {
+                    w.app = Some(Box::new(SkewParams {
+                        tasks: 48,
+                        task_cycles: 200_000,
+                        hot_pct: 90,
+                        groups: 4,
+                    }));
+                })
+            }
+            _ => {
+                let (reg, main) = hier_empty();
+                Platform::build_with(cfg, reg, main, |w| {
+                    w.app = Some(Box::new(SynthParams {
+                        domains: 4,
+                        per_domain: 8,
+                        task_cycles: 100_000,
+                        domain_level: 2,
+                        ..Default::default()
+                    }));
+                })
+            }
+        };
+        let t = plat.run_to_quiescence(Some(1 << 44));
+        let o = finish(t, plat);
+        assert!(o.done, "{shape}: crashed run must reach quiescence");
+        assert!(o.violations.is_empty(), "{shape}: oracles: {:?}", o.violations);
+        assert_eq!(o.fp.crashes, 1, "{shape}: the crash must fire: {:?}", o.fp);
+        assert_eq!(
+            o.fp.tasks_completed, o.fp.tasks_spawned,
+            "{shape}: exactly-once completion: {:?}",
+            o.fp
+        );
+    }
+}

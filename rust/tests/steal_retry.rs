@@ -10,9 +10,10 @@
 //! schedule must stay byte-identical to plain `StealCfg::on()`.
 
 use myrmics::apps::skew::{myrmics as skew_myrmics, SkewParams};
-use myrmics::config::{HierarchySpec, PlatformConfig, StealCfg};
+use myrmics::config::{HierarchySpec, PlatformConfig, RecoveryCfg, StealCfg};
 use myrmics::platform::Platform;
 use myrmics::sim::chaos::FaultPlan;
+use myrmics::testutil::oracles;
 
 /// The steal-determinism fingerprint tuple: everything that must replay.
 #[derive(PartialEq, Eq, Debug)]
@@ -95,4 +96,89 @@ fn retry_runs_replay_bit_identically() {
     let a = run();
     let b = run();
     assert_eq!(a, b, "retry + forced-deny run must replay bit-identically");
+}
+
+/// Crash interlock: a `StealReq` in flight to a victim that dies can
+/// never be answered, so the thief's latch would stay set forever —
+/// unless the death declaration synthesizes the `StealDeny` itself and
+/// re-arms the thief through the ordinary retry path.
+///
+/// Phase 1 discovers the hot leaf empirically (stealing off, 100% skew:
+/// every work task records the worker it ran on, all in one subtree).
+/// Phase 2 re-runs with stealing + recovery enabled and kills exactly
+/// that leaf mid-run: the parent keeps aiming its steal requests at the
+/// (stale-high) dead child's load estimate, so its request is parked in
+/// the dead mailbox when the missed-heartbeat declaration fires.
+#[test]
+fn crashed_victim_gets_a_synthesized_deny_and_the_run_completes() {
+    let build = |steal: StealCfg, recovery: RecoveryCfg| {
+        let mut cfg = PlatformConfig::new(16, HierarchySpec::two_level(4));
+        cfg.policy.steal = steal;
+        cfg.recovery = recovery;
+        let (reg, main) = skew_myrmics();
+        Platform::build_with(cfg, reg, main, |w| {
+            w.app = Some(Box::new(SkewParams {
+                tasks: 64,
+                task_cycles: 200_000,
+                hot_pct: 100,
+                groups: 4,
+            }));
+        })
+    };
+    // Phase 1: with stealing off nothing migrates, so the task table's
+    // `worker` fields name the hot subtree directly.
+    let mut probe = build(StealCfg::default(), RecoveryCfg::off());
+    probe.run(Some(1 << 44));
+    let w = probe.world();
+    let mut per_leaf = vec![0u64; w.hier.n_scheds];
+    for e in w.tasks.iter() {
+        if let Some(wk) = e.worker {
+            per_leaf[w.hier.leaf_of_worker(wk)] += 1;
+        }
+    }
+    let hot = (0..w.hier.n_scheds)
+        .max_by_key(|&s| per_leaf[s])
+        .expect("tree has leaves");
+    assert!(per_leaf[hot] >= 64, "100% skew must pile onto one leaf: {per_leaf:?}");
+    let hot_core = w.hier.sched_core(hot);
+
+    // Phase 2: kill the hot leaf while the work is queued there; restart
+    // it long after the heartbeat timeout so death is actually declared.
+    let run = || {
+        let mut plat = build(StealCfg::on().with_retry(10_000, 8), RecoveryCfg::on());
+        plat.eng.sim.install_crash(hot_core, 300_000, Some(1_500_000));
+        let t = plat.run_to_quiescence(Some(1 << 44));
+        let violations = oracles::check_all(&plat.eng, false);
+        let g = &plat.eng.world.gstats;
+        (
+            t,
+            g.events_processed,
+            g.tasks_completed,
+            g.tasks_spawned,
+            g.steal_reqs,
+            g.steal_grants,
+            g.steal_denies,
+            g.crashes,
+            g.crash_denies_synth,
+            g.tasks_reissued,
+            plat.eng.world.done,
+            violations,
+        )
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a, b, "crashed-victim steal run must replay bit-identically");
+    let (_, _, completed, spawned, reqs, grants, denies, crashes, synth, reissued, done, violations) =
+        a;
+    assert!(done, "the run must complete despite the dead victim");
+    assert!(violations.is_empty(), "oracles: {violations:?}");
+    assert_eq!(crashes, 1, "the installed crash must fire");
+    assert_eq!(completed, spawned, "exactly-once completion");
+    assert!(
+        synth >= 1,
+        "the in-flight StealReq to the dead hot leaf must be answered by a \
+         synthesized deny: reqs {reqs} grants {grants} denies {denies} synth {synth}"
+    );
+    assert_eq!(reqs, grants + denies, "steal accounting must balance");
+    assert!(reissued > 0, "the dead leaf's queued work must be re-issued");
 }
