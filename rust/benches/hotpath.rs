@@ -22,7 +22,7 @@ use myrmics::apps::jacobi;
 use myrmics::apps::skew::{myrmics as skew_myrmics, SkewParams};
 use myrmics::apps::synthetic::{empty_chain, hier_empty, independent, SynthParams};
 use myrmics::apps::workload_api::workload;
-use myrmics::config::{HierarchySpec, PlatformConfig, PolicyCfg, StealCfg};
+use myrmics::config::{HierarchySpec, PlatformConfig, PolicyCfg, ShardCfg, StealCfg};
 use myrmics::dep::node::DepNode;
 use myrmics::experiments::bench::{run_myrmics, Scaling};
 use myrmics::ids::{NodeId, RegionId, TaskId};
@@ -34,6 +34,8 @@ use myrmics::task::descriptor::Access;
 
 struct Record {
     case: String,
+    /// Engine shard count the case ran with (1 = legacy single queue).
+    shards: usize,
     ns_per_op: f64,
     events_per_sec: f64,
 }
@@ -61,7 +63,7 @@ fn time(label: &str, budget_ms: u128, out: &mut Vec<Record>, mut f: impl FnMut()
     println!(
         "{label:<44} {ns_per:>10.1} ns/op  ({iters} runs, {work} ops, {elapsed:.2?})"
     );
-    out.push(Record { case: label.to_string(), ns_per_op: ns_per, events_per_sec: 0.0 });
+    out.push(Record { case: label.to_string(), shards: 1, ns_per_op: ns_per, events_per_sec: 0.0 });
 }
 
 /// Whole-simulation throughput case: run the engine-under-test for
@@ -72,6 +74,19 @@ fn time(label: &str, budget_ms: u128, out: &mut Vec<Record>, mut f: impl FnMut()
 /// gate is defined over.
 fn sim_case(
     label: &'static str,
+    budget_ms: u128,
+    out: &mut Vec<Record>,
+    build: impl FnMut() -> Engine,
+) {
+    sim_case_sharded(label, 1, budget_ms, out, build)
+}
+
+/// [`sim_case`] with an explicit engine shard count recorded in the JSON
+/// row, so `tools/bench_delta.py` can group the scaling ladder per shard
+/// count instead of seeing three same-named cases.
+fn sim_case_sharded(
+    label: &'static str,
+    shards: usize,
     budget_ms: u128,
     out: &mut Vec<Record>,
     mut build: impl FnMut() -> Engine,
@@ -99,8 +114,13 @@ fn sim_case(
     let secs = timed.as_secs_f64();
     let eps = if secs > 0.0 { events as f64 / secs } else { 0.0 };
     let ns_per_event = if events > 0 { secs * 1e9 / events as f64 } else { 0.0 };
-    println!("{label:<44} {eps:>12.0} events/s ({runs} runs, {events} events)");
-    out.push(Record { case: label.to_string(), ns_per_op: ns_per_event, events_per_sec: eps });
+    println!("{label:<44} {eps:>12.0} events/s ({runs} runs, {events} events, {shards} shards)");
+    out.push(Record {
+        case: label.to_string(),
+        shards,
+        ns_per_op: ns_per_event,
+        events_per_sec: eps,
+    });
 }
 
 fn emit_json(records: &[Record]) {
@@ -108,8 +128,8 @@ fn emit_json(records: &[Record]) {
         .iter()
         .map(|r| {
             format!(
-                "{{\"case\": \"{}\", \"ns_per_op\": {:.3}, \"events_per_sec\": {:.1}}}",
-                r.case, r.ns_per_op, r.events_per_sec
+                "{{\"case\": \"{}\", \"shards\": {}, \"ns_per_op\": {:.3}, \"events_per_sec\": {:.1}}}",
+                r.case, r.shards, r.ns_per_op, r.events_per_sec
             )
         })
         .collect();
@@ -294,6 +314,33 @@ fn main() {
         })
         .eng
     });
+    // Shard-scaling ladder: the same 256-worker fig7 shape at 1/2/4
+    // engine shards. Same label, distinguished by the `shards` JSON
+    // field. The schedule is bit-identical by contract, so event counts
+    // match across rungs and the events/sec column isolates the engine's
+    // merge overhead (today) and the host-thread speedup (once shards
+    // execute on real threads — see docs/sim-engine.md).
+    for shards in [1usize, 2, 4] {
+        sim_case_sharded(
+            "fig7 independent 256w x 1024 tasks (shard scaling)",
+            shards,
+            sim_ms,
+            &mut records,
+            move || {
+                let (reg, main) = independent();
+                let mut cfg = PlatformConfig::hierarchical(256);
+                cfg.shard = ShardCfg::with_shards(shards);
+                Platform::build_with(cfg, reg, main, |w| {
+                    w.app = Some(Box::new(SynthParams {
+                        n_tasks: 1024,
+                        task_cycles: 1_000_000,
+                        ..Default::default()
+                    }));
+                })
+                .eng
+            },
+        );
+    }
     // The same fig7 throughput shape under the non-default placement
     // policies: whole-simulation policy cost (and any schedule-quality
     // effect on event counts) lands in BENCH_hotpath.json next to the

@@ -160,6 +160,59 @@ impl Default for RecoveryCfg {
     }
 }
 
+/// Sharded-engine configuration (conservative PDES over the scheduler
+/// hierarchy, see `rust/docs/sim-engine.md` "Sharded engine"). **`shards
+/// == 1` by default**: the engine takes the exact legacy single-wheel
+/// code path — no partition is computed, no mailbox exists, and every
+/// pre-sharding determinism fingerprint stays byte-identical. With
+/// `shards > 1` the run is still bit-identical to `shards == 1`: shards
+/// exchange cross-shard events through mailboxes merged in the global
+/// `(t, seq)` order under a lookahead window derived from the minimum
+/// cross-shard NoC link latency.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShardCfg {
+    /// Requested shard count. Clamped at build time to the number of
+    /// top-level scheduler subtrees (a shard must own at least one whole
+    /// subtree; flat hierarchies always run with one shard).
+    pub shards: usize,
+    /// Override the derived conservative lookahead (cycles). `None` (the
+    /// default) derives it from the cost model: the minimum one-way wire
+    /// latency over all cross-shard tree links. Lowering it below the
+    /// true minimum would be unsound; the engine clamps to >= 1.
+    pub lookahead_override: Option<Cycles>,
+}
+
+impl ShardCfg {
+    /// Single-shard: the legacy engine path, byte-identical to HEAD.
+    pub fn off() -> Self {
+        ShardCfg { shards: 1, lookahead_override: None }
+    }
+
+    /// Sharded engine with `n` shards and the derived lookahead.
+    pub fn with_shards(n: usize) -> Self {
+        ShardCfg { shards: n.max(1), lookahead_override: None }
+    }
+
+    /// Shard count from the `MYRMICS_SHARDS` environment variable (CI
+    /// runs the whole suite under `MYRMICS_SHARDS=4`); unset, empty or
+    /// unparsable values mean 1 (the legacy path).
+    pub fn from_env() -> Self {
+        match std::env::var("MYRMICS_SHARDS") {
+            Ok(v) => match v.trim().parse::<usize>() {
+                Ok(n) if n >= 1 => Self::with_shards(n),
+                _ => Self::off(),
+            },
+            Err(_) => Self::off(),
+        }
+    }
+}
+
+impl Default for ShardCfg {
+    fn default() -> Self {
+        Self::off()
+    }
+}
+
 /// Placement-policy configuration: a tagged policy [`kind`](PolicyCfg::kind)
 /// plus its parameters. Only [`PolicyKind::LocalityBalance`] reads
 /// `p_locality`; randomized policies derive their RNG from
@@ -484,6 +537,11 @@ pub struct PlatformConfig {
     /// Crash detection + recovery protocol ([`RecoveryCfg`]). Disabled by
     /// default; crash faults in the plan only fire when this is on.
     pub recovery: RecoveryCfg,
+    /// Sharded-engine configuration ([`ShardCfg`]). Defaults to the
+    /// `MYRMICS_SHARDS` environment variable (1 when unset): the whole
+    /// test suite can be re-run against the sharded engine without
+    /// touching a single constructor call.
+    pub shard: ShardCfg,
 }
 
 impl PlatformConfig {
@@ -499,6 +557,7 @@ impl PlatformConfig {
             seed: 0xB5EED,
             chaos: FaultPlan::none(),
             recovery: RecoveryCfg::off(),
+            shard: ShardCfg::from_env(),
         }
     }
 
@@ -656,6 +715,24 @@ mod tests {
         assert!(on.enabled);
         assert!(on.heartbeat_timeout > on.heartbeat_period);
         assert!(on.heartbeat_period > 0);
+    }
+
+    #[test]
+    fn sharding_defaults_follow_the_env() {
+        // Same byte-identity contract as stealing/chaos/recovery: the
+        // plain default is the legacy single-shard path. The constructor
+        // funnel additionally honours MYRMICS_SHARDS so CI can re-run the
+        // whole suite sharded — assert against from_env() rather than a
+        // literal so this test is green in both CI lanes.
+        assert_eq!(ShardCfg::default(), ShardCfg::off());
+        assert_eq!(ShardCfg::off().shards, 1);
+        assert!(ShardCfg::off().lookahead_override.is_none());
+        assert_eq!(ShardCfg::with_shards(0).shards, 1);
+        assert_eq!(ShardCfg::with_shards(4).shards, 4);
+        let want = ShardCfg::from_env();
+        assert_eq!(PlatformConfig::new(4, HierarchySpec::flat()).shard, want);
+        assert_eq!(PlatformConfig::flat(8).shard, want);
+        assert_eq!(PlatformConfig::hierarchical(64).shard, want);
     }
 
     #[test]

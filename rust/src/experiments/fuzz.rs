@@ -26,7 +26,7 @@ use std::time::Instant;
 
 use crate::apps::skew::{myrmics as skew_myrmics, SkewParams};
 use crate::apps::synthetic::{empty_chain, hier_empty, independent, SynthParams};
-use crate::config::{HierarchySpec, PlatformConfig, RecoveryCfg, StealCfg};
+use crate::config::{HierarchySpec, PlatformConfig, RecoveryCfg, ShardCfg, StealCfg};
 use crate::ids::Cycles;
 use crate::platform::Platform;
 use crate::sim::chaos::FaultPlan;
@@ -90,6 +90,9 @@ pub struct FuzzRow {
     pub hier: &'static str,
     pub steal: &'static str,
     pub recovery: &'static str,
+    /// Requested engine shard count (the partition may clamp it lower on
+    /// small trees; clamped runs are still bit-identical by contract).
+    pub shards: usize,
     pub strict: bool,
     pub fp: CaseFp,
     /// "ok" | "oracle" | "replay" | "hang".
@@ -123,6 +126,8 @@ struct CaseParams {
     /// plan's `crash_pct` is pinned to 100 so the full outage/re-adoption
     /// path runs whenever the tree has an eligible victim).
     recovery: u64,
+    /// Engine shard count draw: 0 -> 1 shard (legacy), 1 -> 2, 2 -> 4.
+    shard: u64,
 }
 
 impl CaseParams {
@@ -139,7 +144,17 @@ impl CaseParams {
             // Trailing draw: earlier knobs for a given seed are unchanged,
             // so pre-crash reproducer lines keep their meaning.
             recovery: r.below(3),
+            // Trailing again (same reasoning): the sharded engine joins
+            // the sweep without renaming any pre-shard reproducer.
+            shard: r.below(3),
         }
+    }
+
+    /// Requested shard count (the hierarchy partition clamps it to the
+    /// number of top-level subtrees; fixed by the seed, so the
+    /// reproducer line is environment-independent).
+    fn shard_count(&self) -> usize {
+        [1, 2, 4][self.shard as usize]
     }
 
     fn shape_name(&self) -> &'static str {
@@ -194,6 +209,9 @@ fn exec(seed: u64, plan: u64) -> (Cycles, Engine) {
     if p.strict {
         cfg.load_report_threshold = u64::MAX;
     }
+    // Shard count comes from the case stream, not the environment, so a
+    // reproducer line means the same thing everywhere.
+    cfg.shard = ShardCfg::with_shards(p.shard_count());
     let mut plat = match p.shape {
         0 => {
             let (reg, main) = empty_chain();
@@ -313,6 +331,7 @@ pub fn run_case_with(
         hier: p.hier_name(),
         steal: p.steal_name(),
         recovery: p.recovery_name(),
+        shards: p.shard_count(),
         strict: p.strict,
         fp,
         verdict,
@@ -364,18 +383,19 @@ pub fn run(opts: &FuzzOpts) -> bool {
 pub fn print_rows(rows: &[FuzzRow]) {
     println!("Protocol fuzz — fault plans x adversarial spawns, oracle + replay checked");
     println!(
-        "{:<22} {:<22} {:<12} {:<12} {:<10} {:<8} {:>6} {:>12} {:>6} {:>7} {:>7} {:>8}",
-        "seed", "plan", "shape", "hier", "steal", "recov", "strict", "time", "tasks", "stolen", "crashes", "verdict"
+        "{:<22} {:<22} {:<12} {:<12} {:<10} {:<8} {:>6} {:>6} {:>12} {:>6} {:>7} {:>7} {:>8}",
+        "seed", "plan", "shape", "hier", "steal", "recov", "shards", "strict", "time", "tasks", "stolen", "crashes", "verdict"
     );
     for r in rows {
         println!(
-            "{:<22} {:<22} {:<12} {:<12} {:<10} {:<8} {:>6} {:>12} {:>6} {:>7} {:>7} {:>8}",
+            "{:<22} {:<22} {:<12} {:<12} {:<10} {:<8} {:>6} {:>6} {:>12} {:>6} {:>7} {:>7} {:>8}",
             r.seed,
             r.plan,
             r.shape,
             r.hier,
             r.steal,
             r.recovery,
+            r.shards,
             if r.strict { "yes" } else { "no" },
             r.fp.time,
             r.fp.completed,
@@ -404,7 +424,7 @@ pub fn to_json(rows: &[FuzzRow]) -> String {
             };
             format!(
                 "{{\"seed\": {}, \"plan\": {}, \"shape\": \"{}\", \"hier\": \"{}\", \
-                 \"steal\": \"{}\", \"recovery\": \"{}\", \"strict\": {}, \"time\": {}, \
+                 \"steal\": \"{}\", \"recovery\": \"{}\", \"shards\": {}, \"strict\": {}, \"time\": {}, \
                  \"events\": {}, \"tasks\": {}, \"tasks_stolen\": {}, \"steal_denies\": {}, \
                  \"crashes\": {}, \"tasks_reissued\": {}, \
                  \"verdict\": \"{}\", \"violations\": {}, \"detail\": \"{}\", \
@@ -415,6 +435,7 @@ pub fn to_json(rows: &[FuzzRow]) -> String {
                 r.hier,
                 r.steal,
                 r.recovery,
+                r.shards,
                 r.strict,
                 r.fp.time,
                 r.fp.events,
@@ -560,6 +581,7 @@ mod tests {
             "\"seed\"",
             "\"plan\"",
             "\"recovery\"",
+            "\"shards\"",
             "\"crashes\"",
             "\"tasks_reissued\"",
             "\"verdict\"",

@@ -175,6 +175,15 @@ impl ChannelTables {
         topo.max_degree() + 2
     }
 
+    /// Pool-sizing hint for one of `n_shards` per-shard tables: each
+    /// shard owns roughly `1/n_shards` of the links (cross-shard channels
+    /// go to the lower endpoint's table), so scale the global hint down
+    /// while keeping the tree-link headroom so a skewed partition never
+    /// reallocates on the hot path.
+    pub fn degree_hint_sharded(topo: &Topology, n_shards: usize) -> usize {
+        topo.max_degree() / n_shards.max(1) + 2
+    }
+
     /// All materialized channels (invariant oracles: at quiescence every
     /// credit must be restored and no send may remain parked).
     pub fn iter(&self) -> impl Iterator<Item = &Channel> {
@@ -232,6 +241,18 @@ mod tests {
         assert!(ch.try_acquire(1));
         assert!(ch.release().is_none());
         assert_eq!(ch.idle_releases(), 2);
+    }
+
+    #[test]
+    fn sharded_degree_hint_scales_down_but_keeps_headroom() {
+        let topo = Topology::new(64);
+        let full = ChannelTables::degree_hint(&topo);
+        let quarter = ChannelTables::degree_hint_sharded(&topo, 4);
+        assert!(quarter <= full);
+        assert!(quarter >= 2, "tree-link headroom survives any shard count");
+        // Degenerate inputs must not divide by zero or underflow.
+        assert_eq!(ChannelTables::degree_hint_sharded(&topo, 1), full);
+        let _ = ChannelTables::degree_hint_sharded(&topo, 1000);
     }
 
     #[test]

@@ -142,6 +142,12 @@ impl Platform {
             cfg.cost.clone(),
             cfg.channel_capacity,
         );
+        // Sharding must be installed before the first push or preseed so
+        // every event and channel lands in its shard-local structure from
+        // the start. `shards=1` (the default) leaves the legacy
+        // single-queue engine untouched.
+        let part = world.hier.shard_partition(cfg.shard.shards);
+        sim.install_sharding(&part, cfg.shard.lookahead_override);
         // Pre-seed the channel table with the scheduler-tree links
         // (parent <-> child, leaf <-> worker): messages flow strictly
         // along the tree, so these hot edges get contiguous slots at the

@@ -14,6 +14,32 @@
 use crate::config::HierarchySpec;
 use crate::ids::CoreId;
 
+/// Core-to-shard assignment for the sharded engine, computed from the
+/// scheduler tree: each *top-level subtree* (a child of the root and
+/// everything under it) is an indivisible unit, distributed round-robin
+/// over the shards; the top-level scheduler itself lives on shard 0. The
+/// only tree links that can cross shards are therefore root <-> top-level
+/// child links — enumerated in `cross_links` so the engine can derive its
+/// conservative lookahead from the slowest-free (minimum-latency) one.
+#[derive(Clone, Debug)]
+pub struct ShardPartition {
+    /// Effective shard count after clamping the request to the number of
+    /// top-level subtrees (1 for flat hierarchies).
+    pub n_shards: usize,
+    /// Core id -> shard id, dense over all cores.
+    pub shard_of: Vec<u32>,
+    /// Tree links whose endpoints land on different shards, as
+    /// `(parent_core, child_core)` pairs in child-index order. Empty when
+    /// `n_shards == 1`.
+    pub cross_links: Vec<(CoreId, CoreId)>,
+}
+
+impl ShardPartition {
+    pub fn shard(&self, c: CoreId) -> usize {
+        self.shard_of[c.idx()] as usize
+    }
+}
+
 #[derive(Clone, Copy, PartialEq, Eq, Debug)]
 pub enum Role {
     /// Scheduler with the given scheduler index (0 = top level).
@@ -275,6 +301,51 @@ impl HierarchyMap {
         self.level_of.iter().copied().max().unwrap_or(0) + 1
     }
 
+    /// The top-level subtree a scheduler belongs to, as an index into
+    /// `children[0]` (`None` for the root itself).
+    fn top_subtree_of(&self, mut s: usize) -> Option<usize> {
+        loop {
+            match self.parent[s] {
+                None => return None,
+                Some(0) => return self.children[0].iter().position(|&c| c == s),
+                Some(p) => s = p,
+            }
+        }
+    }
+
+    /// Compute the shard partition for a requested shard count. The
+    /// request is clamped to the number of top-level subtrees (a shard
+    /// must own whole subtrees; flat hierarchies always get one shard),
+    /// so `requested = 4` on a two-subtree tree silently runs with 2 —
+    /// determinism is unaffected since the merged order is shard-count
+    /// invariant by construction.
+    pub fn shard_partition(&self, requested: usize) -> ShardPartition {
+        let n_subtrees = self.children[0].len();
+        let n_shards = requested.clamp(1, n_subtrees.max(1));
+        let mut shard_of = vec![0u32; self.n_cores()];
+        if n_shards > 1 {
+            for s in 0..self.n_scheds {
+                if let Some(i) = self.top_subtree_of(s) {
+                    let shard = (i % n_shards) as u32;
+                    shard_of[self.sched_cores[s].idx()] = shard;
+                    for &w in &self.leaf_workers[s] {
+                        shard_of[w.idx()] = shard;
+                    }
+                }
+            }
+        }
+        let mut cross_links = Vec::new();
+        for s in 0..self.n_scheds {
+            if let Some(p) = self.parent[s] {
+                let (pc, sc) = (self.sched_cores[p], self.sched_cores[s]);
+                if shard_of[pc.idx()] != shard_of[sc.idx()] {
+                    cross_links.push((pc, sc));
+                }
+            }
+        }
+        ShardPartition { n_shards, shard_of, cross_links }
+    }
+
     /// Scheduler indices eligible to be crash victims: leaf schedulers
     /// whose parent has at least two children. Leaf-only keeps the blast
     /// radius to one scheduling domain; the >= 2 siblings rule guarantees
@@ -481,6 +552,72 @@ mod tests {
         let elig = three.crash_eligible();
         assert_eq!(elig.len(), 36);
         assert!(elig.iter().all(|&s| three.is_leaf(s)));
+    }
+
+    #[test]
+    fn shard_partition_is_by_top_level_subtree() {
+        let h = HierarchyMap::build(128, &HierarchySpec::two_level(7));
+        let p = h.shard_partition(4);
+        assert_eq!(p.n_shards, 4);
+        // The root lives on shard 0.
+        assert_eq!(p.shard(h.top_core()), 0);
+        // Each leaf subtree is whole: the leaf scheduler and all its
+        // workers share one shard, and subtrees round-robin over shards.
+        for (i, &l) in h.children[0].iter().enumerate() {
+            let want = i % 4;
+            assert_eq!(p.shard(h.sched_core(l)), want, "leaf {l}");
+            for &w in &h.leaf_workers[l] {
+                assert_eq!(p.shard(w), want);
+            }
+        }
+        // Cross links are exactly the root <-> off-shard-0 child links.
+        assert_eq!(p.cross_links.len(), 5); // subtrees 1,2,3,5,6
+        for &(a, b) in &p.cross_links {
+            assert_eq!(a, h.top_core());
+            assert_ne!(p.shard(a), p.shard(b));
+        }
+    }
+
+    #[test]
+    fn shard_partition_clamps_and_degenerates() {
+        // Flat: no subtrees, always one shard, no cross links.
+        let flat = HierarchyMap::build(4, &HierarchySpec::flat());
+        let p = flat.shard_partition(8);
+        assert_eq!(p.n_shards, 1);
+        assert!(p.cross_links.is_empty());
+        assert!(p.shard_of.iter().all(|&s| s == 0));
+        // Two subtrees: a request for 4 clamps to 2.
+        let two = HierarchyMap::build(32, &HierarchySpec::two_level(2));
+        let p = two.shard_partition(4);
+        assert_eq!(p.n_shards, 2);
+        assert_eq!(p.cross_links.len(), 1);
+        // Requesting 1 shard never computes a partition.
+        let p1 = two.shard_partition(1);
+        assert_eq!(p1.n_shards, 1);
+        assert!(p1.cross_links.is_empty());
+    }
+
+    #[test]
+    fn shard_partition_keeps_deep_subtrees_whole() {
+        // 3 levels, fanout 2: subtrees under mids 1 and 2 must each land
+        // whole (mid + its leaves + their workers) on one shard.
+        let h = HierarchyMap::build(36, &HierarchySpec::multi_level(3, 2));
+        let p = h.shard_partition(2);
+        assert_eq!(p.n_shards, 2);
+        for (i, &mid) in h.children[0].iter().enumerate() {
+            let want = i % 2;
+            assert_eq!(p.shard(h.sched_core(mid)), want);
+            for &leaf in &h.children[mid] {
+                assert_eq!(p.shard(h.sched_core(leaf)), want);
+                for &w in &h.leaf_workers[leaf] {
+                    assert_eq!(p.shard(w), want);
+                }
+            }
+        }
+        // Only root<->mid links can cross; leaf<->mid links never do.
+        for &(a, _) in &p.cross_links {
+            assert_eq!(a, h.top_core());
+        }
     }
 
     #[test]

@@ -159,18 +159,26 @@ pub fn check_dep(eng: &Engine, out: &mut Vec<String>) {
 /// Channel credits: at quiescence every in-flight message was processed
 /// (its credit returned) and no send remains parked.
 pub fn check_channels(eng: &Engine, out: &mut Vec<String>) {
-    for (i, ch) in eng.sim.channels().iter().enumerate() {
-        if ch.in_flight != 0 {
-            out.push(format!(
-                "channel oracle: channel slot {i} still holds {} credits",
-                ch.in_flight
-            ));
-        }
-        if !ch.blocked.is_empty() {
-            out.push(format!(
-                "channel oracle: channel slot {i} still parks {} sends",
-                ch.blocked.len()
-            ));
+    // `channel_views` covers both engine modes: the legacy table (always
+    // present, so test-only injections stay visible) plus one table per
+    // shard when the run was sharded. The slot counter is global across
+    // tables so a violation message still names a unique slot.
+    let mut slot = 0usize;
+    for table in eng.sim.channel_views() {
+        for ch in table.iter() {
+            if ch.in_flight != 0 {
+                out.push(format!(
+                    "channel oracle: channel slot {slot} still holds {} credits",
+                    ch.in_flight
+                ));
+            }
+            if !ch.blocked.is_empty() {
+                out.push(format!(
+                    "channel oracle: channel slot {slot} still parks {} sends",
+                    ch.blocked.len()
+                ));
+            }
+            slot += 1;
         }
     }
 }

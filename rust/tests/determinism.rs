@@ -17,7 +17,7 @@
 
 use myrmics::apps::jacobi;
 use myrmics::apps::synthetic::{empty_chain, hier_empty, independent, SynthParams};
-use myrmics::config::PlatformConfig;
+use myrmics::config::{HierarchySpec, PlatformConfig, ShardCfg};
 use myrmics::mpi::runner::run_mpi;
 use myrmics::platform::Platform;
 
@@ -160,4 +160,83 @@ fn hier_empty_replays_bit_identically() {
     assert_eq!(a, b);
     assert_eq!(a.3, a.4, "all spawned tasks complete");
     assert!(a.5 > 0, "nested regions must exercise cross-owner traversal");
+}
+
+// ---------------------------------------------------------------------------
+// Sharded engine: the conservative-sync merge must reproduce the exact
+// single-queue schedule, so the fingerprint is pinned to be *identical*
+// across shard counts — not merely self-consistent per count.
+// ---------------------------------------------------------------------------
+
+fn run_with_shards(cfg_base: PlatformConfig, shards: usize) -> Fingerprint {
+    let (reg, main) = independent();
+    let mut cfg = cfg_base;
+    cfg.shard = ShardCfg::with_shards(shards);
+    let mut plat = Platform::build_with(cfg, reg, main, |w| {
+        w.app = Some(Box::new(SynthParams {
+            n_tasks: 256,
+            task_cycles: 100_000,
+            ..Default::default()
+        }));
+    });
+    let t = plat.run(Some(1 << 44));
+    let g = &plat.world().gstats;
+    Fingerprint {
+        final_time: t,
+        events: g.events_processed,
+        msgs: g.msgs_total,
+        tasks_spawned: g.tasks_spawned,
+        tasks_completed: g.tasks_completed,
+        dep_boundary_msgs: g.dep_boundary_msgs,
+        dma_transfers: g.dma_transfers,
+    }
+}
+
+/// fig7-independent over the paper's two-level 64-worker tree (4 leaf
+/// subtrees): shards=1 (the exact legacy path) must equal shards=2 and
+/// shards=4 bit-for-bit.
+#[test]
+fn fig7_independent_fingerprint_is_shard_count_invariant() {
+    let one = run_with_shards(PlatformConfig::hierarchical(64), 1);
+    let two = run_with_shards(PlatformConfig::hierarchical(64), 2);
+    let four = run_with_shards(PlatformConfig::hierarchical(64), 4);
+    assert_eq!(one, two, "shards=2 must replay the legacy schedule");
+    assert_eq!(one, four, "shards=4 must replay the legacy schedule");
+    assert_eq!(one.tasks_completed, 257);
+}
+
+/// Deeper tree: a 3-level hierarchy (1-3-9 schedulers) keeps whole
+/// top-level subtrees per shard, so the partition is coarser and the
+/// cross-shard links are only the root's three child edges.
+#[test]
+fn three_level_hierarchy_fingerprint_is_shard_count_invariant() {
+    let base = || PlatformConfig::new(64, HierarchySpec::multi_level(3, 3));
+    let one = run_with_shards(base(), 1);
+    let two = run_with_shards(base(), 2);
+    let four = run_with_shards(base(), 4); // clamps to the 3 subtrees
+    assert_eq!(one, two);
+    assert_eq!(one, four);
+    assert_eq!(one.tasks_spawned, one.tasks_completed);
+}
+
+/// Satellite pin for the sharded `horizon()` max-reduce: a sharded run
+/// must still drain past `world.done` to true quiescence, with the final
+/// time covering every shard's busy horizon.
+#[test]
+fn sharded_run_to_quiescence_drains_past_done() {
+    let (reg, main) = independent();
+    let mut cfg = PlatformConfig::hierarchical(64);
+    cfg.shard = ShardCfg::with_shards(4);
+    let mut plat = Platform::build_with(cfg, reg, main, |w| {
+        w.app = Some(Box::new(SynthParams {
+            n_tasks: 64,
+            task_cycles: 100_000,
+            ..Default::default()
+        }));
+    });
+    let t = plat.run_to_quiescence(Some(1 << 44));
+    assert!(plat.world().done, "workload must complete");
+    assert!(plat.eng.sim.queue_is_empty(), "every wheel, held slot and mailbox drained");
+    assert_eq!(t, plat.eng.sim.horizon(), "final time covers the per-shard max-reduce");
+    assert!(plat.eng.sim.shard_windows() > 0, "run actually used the sharded engine");
 }

@@ -6,11 +6,15 @@ Non-blocking CI aid (the workflow runs it with continue-on-error): it
 surfaces the per-case throughput trajectory next to every PR without
 gating merges on a noisy shared runner.
 
+Rows are keyed by (case, shards): the sharded-engine scaling ladder
+reuses one case label across shard counts and is distinguished by the
+"shards" field (absent in pre-shard records, which default to 1).
+
 Baseline format inside ROADMAP.md — an HTML comment block so the numbers
 live next to the prose that explains them:
 
     <!-- hotpath-baseline
-    [{"case": "...", "events_per_sec": 123.0}, ...]
+    [{"case": "...", "shards": 1, "events_per_sec": 123.0}, ...]
     -->
 
 Usage: bench_delta.py BENCH_hotpath.json ROADMAP.md
@@ -21,13 +25,22 @@ import re
 import sys
 
 
+def key(r):
+    return (r["case"], int(r.get("shards", 1)))
+
+
+def label(k):
+    case, shards = k
+    return case if shards == 1 else f"{case} [{shards} shards]"
+
+
 def main() -> int:
     if len(sys.argv) != 3:
         print(__doc__.strip())
         return 2
     bench_path, roadmap_path = sys.argv[1], sys.argv[2]
     with open(bench_path) as f:
-        bench = {r["case"]: r for r in json.load(f)}
+        bench = {key(r): r for r in json.load(f)}
     with open(roadmap_path) as f:
         text = f.read()
     m = re.search(r"<!--\s*hotpath-baseline\s*\n(.*?)-->", text, re.S)
@@ -35,27 +48,28 @@ def main() -> int:
         print("no hotpath-baseline block in ROADMAP.md; nothing to compare")
         return 0
     try:
-        baseline = {r["case"]: r for r in json.loads(m.group(1))}
+        baseline = {key(r): r for r in json.loads(m.group(1))}
     except json.JSONDecodeError as e:
         print(f"unparseable hotpath-baseline block: {e}")
         return 0
     if not baseline:
         print("hotpath-baseline block is empty (no machine has recorded numbers yet)")
         return 0
-    print(f"{'case':<44} {'baseline':>12} {'current':>12} {'delta':>8}")
-    for case, b in baseline.items():
+    print(f"{'case':<56} {'baseline':>12} {'current':>12} {'delta':>8}")
+    for k, b in baseline.items():
+        name = label(k)
         base = b.get("events_per_sec", 0.0)
-        cur = bench.get(case, {}).get("events_per_sec", 0.0)
+        cur = bench.get(k, {}).get("events_per_sec", 0.0)
         if not cur:
-            print(f"{case:<44} {base:>12.0f} {'missing':>12} {'-':>8}")
+            print(f"{name:<56} {base:>12.0f} {'missing':>12} {'-':>8}")
             continue
         if base:
-            print(f"{case:<44} {base:>12.0f} {cur:>12.0f} {100.0 * (cur / base - 1.0):>+7.1f}%")
+            print(f"{name:<56} {base:>12.0f} {cur:>12.0f} {100.0 * (cur / base - 1.0):>+7.1f}%")
         else:
-            print(f"{case:<44} {base:>12.0f} {cur:>12.0f} {'-':>8}")
-    for case, r in bench.items():
-        if case not in baseline and r.get("events_per_sec"):
-            print(f"{case:<44} (new case, no baseline)")
+            print(f"{name:<56} {base:>12.0f} {cur:>12.0f} {'-':>8}")
+    for k, r in bench.items():
+        if k not in baseline and r.get("events_per_sec"):
+            print(f"{label(k):<56} (new case, no baseline)")
     return 0
 
 
