@@ -273,6 +273,17 @@ impl Workload for BarnesHut {
         "barnes-hut"
     }
 
+    /// Irregular force tasks skewed towards the dense octant.
+    fn job_shape(&self, scale: u32) -> crate::sim::traffic::JobShape {
+        let s = scale.max(1);
+        crate::sim::traffic::JobShape {
+            tasks: 12 * s,
+            task_cycles: 1_200_000,
+            fanout: 4,
+            hot_pct: 60,
+        }
+    }
+
     /// The paper stops at 128 workers "due to memory constraints".
     fn valid_workers(&self, workers: usize) -> bool {
         workers <= 128

@@ -260,6 +260,12 @@ impl Workload for Bitonic {
         "bitonic"
     }
 
+    /// Merge-stage chunks: small tasks over a binary split.
+    fn job_shape(&self, scale: u32) -> crate::sim::traffic::JobShape {
+        let s = scale.max(1);
+        crate::sim::traffic::JobShape { tasks: 16 * s, task_cycles: 500_000, fanout: 2, hot_pct: 0 }
+    }
+
     fn valid_workers(&self, workers: usize) -> bool {
         workers.is_power_of_two()
     }

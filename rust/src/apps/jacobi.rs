@@ -401,6 +401,13 @@ impl Workload for Jacobi {
         "jacobi"
     }
 
+    /// Band-parallel stencil: moderate grain, one subregion per band
+    /// group, no hot spot.
+    fn job_shape(&self, scale: u32) -> crate::sim::traffic::JobShape {
+        let s = scale.max(1);
+        crate::sim::traffic::JobShape { tasks: 12 * s, task_cycles: 800_000, fanout: 4, hot_pct: 0 }
+    }
+
     fn register(&self, reg: &mut Registry) -> TaskRef {
         register_tasks(reg)
     }

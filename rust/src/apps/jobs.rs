@@ -1,0 +1,174 @@
+//! Generic traffic job bodies: the task tree a [`JobShape`] realizes.
+//!
+//! Traffic jobs cannot read per-run state out of `world.app` — many jobs
+//! with different shapes run concurrently — so the whole shape travels in
+//! the root task's SAFE by-value arguments: `(region, tasks, task_cycles,
+//! fanout, hot_pct)`. The admission path (`SchedLogic::try_admit`) builds
+//! that descriptor from the job's [`JobShape`]; the body here decomposes
+//! it exactly like the skew workload's main task — `fanout` subregions
+//! pushed towards leaf-level owners, one 64-byte object per compute task,
+//! a `hot_pct` fraction of tasks skewed into subregion 0 — so a single
+//! registered function serves every template in the arrival mix.
+//!
+//! The boot body is deliberately empty: under traffic the platform's
+//! mandatory boot main task has nothing to do, and the engine keeps
+//! running past its completion because the quiescence gate also requires
+//! `TrafficState::all_done`.
+//!
+//! [`JobShape`]: crate::sim::traffic::JobShape
+
+use crate::api::args::{ObjArg, RegionArg};
+use crate::api::ctx::TaskCtx;
+use crate::task::registry::{Registry, TaskRef};
+
+/// Deep enough to sink fanout subregions to leaf-level owners on any tree
+/// the experiments build (same constant as the skew workload).
+const LEAF_LEVEL: i32 = 8;
+
+/// Handles of the registered traffic bodies.
+pub struct JobRefs {
+    /// The (empty) boot main task `Platform::build` requires.
+    pub boot: TaskRef,
+    /// The generic per-job root task; its registry index is what
+    /// `TrafficState::main_fn` records for the admission path.
+    pub job_main: TaskRef,
+}
+
+/// Register the traffic job bodies into `reg`.
+pub fn register_jobs(reg: &mut Registry) -> JobRefs {
+    let work = reg.register("job_work", |ctx: &mut TaskCtx<'_>| {
+        let (_obj, cycles): (ObjArg, u64) = ctx.args();
+        ctx.compute(cycles);
+    });
+    let job_main = reg.register("job_main", move |ctx: &mut TaskCtx<'_>| {
+        let (root, tasks, task_cycles, fanout, hot_pct): (RegionArg, u64, u64, u64, u64) =
+            ctx.args();
+        let fanout = fanout.max(1) as usize;
+        let mut regions = Vec::with_capacity(fanout);
+        for _ in 0..fanout {
+            regions.push(ctx.ralloc(root, LEAF_LEVEL));
+        }
+        let hot = (tasks * hot_pct.min(100) / 100) as usize;
+        for i in 0..tasks as usize {
+            let g = if i < hot || fanout == 1 {
+                0
+            } else {
+                // Cold remainder round-robins over subregions 1..fanout.
+                1 + (i - hot) % (fanout - 1)
+            };
+            let o = ctx.alloc(64, regions[g]);
+            ctx.spawn_task(work).obj_inout(o).val(task_cycles).submit();
+        }
+    });
+    let boot = reg.register("traffic_boot", |_ctx: &mut TaskCtx<'_>| {});
+    JobRefs { boot, job_main }
+}
+
+/// Build a registry holding only the traffic bodies. Returns it plus the
+/// handles a traffic run needs (boot main for `Platform::build_with`,
+/// `job_main` for `TrafficState::generate`).
+pub fn traffic_boot() -> (Registry, JobRefs) {
+    let mut reg = Registry::new();
+    let refs = register_jobs(&mut reg);
+    (reg, refs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{AdmissionKind, HierarchySpec, PlatformConfig, TrafficCfg};
+    use crate::platform::Platform;
+    use crate::sim::traffic::{JobPhase, JobShape, JobTemplate, TrafficState};
+
+    fn templates() -> Vec<JobTemplate> {
+        vec![
+            JobTemplate {
+                name: "small",
+                shape: JobShape { tasks: 6, task_cycles: 2_000_000, fanout: 2, hot_pct: 50 },
+            },
+            JobTemplate {
+                name: "wide",
+                shape: JobShape { tasks: 12, task_cycles: 1_000_000, fanout: 4, hot_pct: 0 },
+            },
+        ]
+    }
+
+    fn run_traffic(cfg: PlatformConfig) -> Platform {
+        let (reg, refs) = traffic_boot();
+        let main_fn = refs.job_main.index();
+        let tcfg = cfg.traffic.clone();
+        let seed = cfg.seed;
+        let mut plat = Platform::build_with(cfg, reg, refs.boot, move |w| {
+            let tr = TrafficState::generate(&tcfg, seed, &w.hier, main_fn, &templates());
+            w.traffic = Some(tr);
+        });
+        plat.run(Some(1 << 44));
+        plat
+    }
+
+    #[test]
+    fn traffic_run_drains_every_job() {
+        let mut cfg = PlatformConfig::new(16, HierarchySpec::two_level(4));
+        cfg.traffic = TrafficCfg::on(8, 2);
+        let plat = run_traffic(cfg);
+        let tr = plat.world().traffic.as_ref().unwrap();
+        assert!(tr.all_done(), "every arrival fired and every job drained");
+        assert_eq!(tr.admitted, 8);
+        for j in &tr.jobs {
+            assert_eq!(j.phase, JobPhase::Done);
+            assert_eq!(j.spawned, j.shape.total_tasks(), "root + per-shape work tasks");
+            assert_eq!(j.spawned, j.completed);
+            assert!(j.finish_at > j.submit_at);
+        }
+        // Global counts: the empty boot main plus every job's tree.
+        let total: u64 = 1 + tr.jobs.iter().map(|j| j.shape.total_tasks()).sum::<u64>();
+        assert_eq!(plat.world().gstats.tasks_spawned, total);
+        assert_eq!(plat.world().gstats.tasks_completed, total);
+    }
+
+    #[test]
+    fn tenant_cap_defers_and_still_drains() {
+        let mut cfg = PlatformConfig::new(16, HierarchySpec::two_level(4));
+        cfg.traffic = TrafficCfg::on(10, 1).with_admission(AdmissionKind::TenantCap);
+        cfg.traffic.tenant_cap = 1;
+        // Cram arrivals well inside a job's runtime so the cap must bite.
+        cfg.traffic.mean_gap = 50_000;
+        let plat = run_traffic(cfg);
+        let tr = plat.world().traffic.as_ref().unwrap();
+        assert!(tr.all_done(), "deferred jobs are retried until admitted");
+        assert_eq!(tr.admitted, 10);
+        assert!(tr.total_deferrals > 0, "cap 1 with crammed arrivals must defer");
+        assert!(tr.jobs.iter().any(|j| j.attempts > 1));
+    }
+
+    #[test]
+    fn load_threshold_backpressure_drains() {
+        let mut cfg = PlatformConfig::new(16, HierarchySpec::two_level(4));
+        cfg.traffic = TrafficCfg::on(10, 2).with_admission(AdmissionKind::LoadThreshold);
+        cfg.traffic.load_threshold = 2;
+        cfg.traffic.mean_gap = 50_000;
+        let plat = run_traffic(cfg);
+        let tr = plat.world().traffic.as_ref().unwrap();
+        assert!(tr.all_done());
+        assert_eq!(tr.admitted, 10);
+    }
+
+    #[test]
+    fn traffic_is_seed_deterministic_end_to_end() {
+        let mut cfg = PlatformConfig::new(16, HierarchySpec::two_level(4));
+        cfg.traffic = TrafficCfg::on(6, 2);
+        let a = run_traffic(cfg.clone());
+        let b = run_traffic(cfg);
+        let (ta, tb) = (
+            a.world().traffic.as_ref().unwrap(),
+            b.world().traffic.as_ref().unwrap(),
+        );
+        for (x, y) in ta.jobs.iter().zip(&tb.jobs) {
+            assert_eq!(x.submit_at, y.submit_at);
+            assert_eq!(x.admit_at, y.admit_at);
+            assert_eq!(x.finish_at, y.finish_at);
+            assert_eq!(x.attempts, y.attempts);
+        }
+        assert_eq!(a.eng.sim.now, b.eng.sim.now);
+    }
+}

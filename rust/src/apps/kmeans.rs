@@ -383,6 +383,17 @@ impl Workload for Kmeans {
         "kmeans"
     }
 
+    /// Map phase plus a mild reduction hot spot on the centers region.
+    fn job_shape(&self, scale: u32) -> crate::sim::traffic::JobShape {
+        let s = scale.max(1);
+        crate::sim::traffic::JobShape {
+            tasks: 10 * s,
+            task_cycles: 900_000,
+            fanout: 4,
+            hot_pct: 30,
+        }
+    }
+
     fn register(&self, reg: &mut Registry) -> TaskRef {
         register_tasks(reg)
     }

@@ -282,6 +282,17 @@ impl Workload for Matmul {
         "matmul"
     }
 
+    /// Coarse block products: few heavy tasks.
+    fn job_shape(&self, scale: u32) -> crate::sim::traffic::JobShape {
+        let s = scale.max(1);
+        crate::sim::traffic::JobShape {
+            tasks: 8 * s,
+            task_cycles: 2_000_000,
+            fanout: 4,
+            hot_pct: 0,
+        }
+    }
+
     /// Square grids only (the paper: power-of-4 core counts).
     fn valid_workers(&self, workers: usize) -> bool {
         let p = (workers as f64).sqrt().round() as usize;

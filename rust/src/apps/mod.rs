@@ -5,6 +5,7 @@
 pub mod barnes_hut;
 pub mod bitonic;
 pub mod jacobi;
+pub mod jobs;
 pub mod kmeans;
 pub mod matmul;
 pub mod raytrace;

@@ -160,6 +160,13 @@ impl Workload for Raytrace {
         "raytrace"
     }
 
+    /// Embarrassingly parallel tiles: many fine-grained tasks over a wide
+    /// fanout.
+    fn job_shape(&self, scale: u32) -> crate::sim::traffic::JobShape {
+        let s = scale.max(1);
+        crate::sim::traffic::JobShape { tasks: 16 * s, task_cycles: 600_000, fanout: 8, hot_pct: 0 }
+    }
+
     fn register(&self, reg: &mut Registry) -> TaskRef {
         register_tasks(reg)
     }

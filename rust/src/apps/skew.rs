@@ -118,6 +118,17 @@ impl Workload for Skew {
         "skew"
     }
 
+    /// The adversary: a hard hot-spot fraction, as in the steal sweep.
+    fn job_shape(&self, scale: u32) -> crate::sim::traffic::JobShape {
+        let s = scale.max(1);
+        crate::sim::traffic::JobShape {
+            tasks: 16 * s,
+            task_cycles: 1_000_000,
+            fanout: 4,
+            hot_pct: 85,
+        }
+    }
+
     fn register(&self, reg: &mut Registry) -> TaskRef {
         register_tasks(reg)
     }

@@ -23,6 +23,7 @@ use std::ops::Deref;
 use crate::config::HierarchySpec;
 use crate::mpi::rank::MpiOp;
 use crate::platform::World;
+use crate::sim::traffic::{JobShape, JobTemplate};
 use crate::task::registry::{Registry, TaskRef};
 
 /// Problem-sizing mode (paper VI-B).
@@ -61,6 +62,18 @@ pub trait Workload {
     /// Post-run check on the finished world: structural invariants
     /// always, numeric results when the run carried real data.
     fn verify(&self, world: &World) -> Result<(), String>;
+
+    /// This workload's instantiation as a traffic job template: the
+    /// shape the generic job body (`apps::jobs`) realizes when an
+    /// instance arrives as one job in a multi-tenant mix. `scale`
+    /// multiplies the task count (1 = the smoke size). Overrides encode
+    /// each workload's decomposition character — grain, fanout,
+    /// hot-spot skew — so the arrival mix exercises heterogeneous job
+    /// sizes, not seven copies of the same bag.
+    fn job_shape(&self, scale: u32) -> JobShape {
+        let s = scale.max(1);
+        JobShape { tasks: 8 * s, task_cycles: 1_000_000, fanout: 4, hot_pct: 0 }
+    }
 }
 
 /// Copyable handle to a workload: what drivers pass around and compare.
@@ -109,6 +122,16 @@ pub fn workload(name: &str) -> WorkloadRef {
         .into_iter()
         .find(|w| w.name() == name)
         .unwrap_or_else(|| panic!("unknown workload {name:?}"))
+}
+
+/// Every workload in [`all_workloads`] as a traffic job template at
+/// `scale` — the mix the tenants experiment feeds
+/// [`TrafficState::generate`](crate::sim::traffic::TrafficState::generate).
+pub fn job_templates(scale: u32) -> Vec<JobTemplate> {
+    all_workloads()
+        .iter()
+        .map(|w| JobTemplate { name: w.name(), shape: w.job_shape(scale) })
+        .collect()
 }
 
 /// Groups used by the app decompositions — the paper's leaf-scheduler
@@ -179,6 +202,25 @@ mod tests {
     fn lookup_by_name_round_trips() {
         for w in all_workloads() {
             assert_eq!(workload(w.name()), w);
+        }
+    }
+
+    #[test]
+    fn job_templates_cover_the_table_with_distinct_shapes() {
+        let t = job_templates(1);
+        assert_eq!(t.len(), all_workloads().len());
+        for (tpl, w) in t.iter().zip(all_workloads()) {
+            assert_eq!(tpl.name, w.name());
+            assert!(tpl.shape.tasks >= 1 && tpl.shape.fanout >= 1);
+            assert!(tpl.shape.hot_pct <= 100);
+        }
+        assert!(
+            t.iter().any(|x| x.shape != t[0].shape),
+            "the mix must contain heterogeneous shapes"
+        );
+        let big = job_templates(4);
+        for (a, b) in t.iter().zip(&big) {
+            assert!(b.shape.tasks > a.shape.tasks, "scale grows the task count");
         }
     }
 

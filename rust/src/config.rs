@@ -117,6 +117,112 @@ impl Default for StealCfg {
     }
 }
 
+/// How an entry scheduler decides whether to admit an arriving traffic
+/// job (see `sim::traffic` and `sched::policy::Placer::admit_job`).
+/// Decisions are taken *per top-level subtree* with local state only —
+/// admission is decentralized, never funneled through the hierarchy root.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum AdmissionKind {
+    /// Every arrival is admitted immediately.
+    AdmitAll,
+    /// A tenant may have at most `TrafficCfg::tenant_cap` live jobs;
+    /// arrivals beyond the cap are deferred with backoff.
+    TenantCap,
+    /// Load-threshold backpressure: defer while the entry scheduler's
+    /// aggregate load estimate is at or above
+    /// `TrafficCfg::load_threshold`.
+    LoadThreshold,
+}
+
+impl AdmissionKind {
+    /// Stable policy name used in sweep reports and JSON output.
+    pub fn name(&self) -> &'static str {
+        match self {
+            AdmissionKind::AdmitAll => "admit-all",
+            AdmissionKind::TenantCap => "tenant-cap",
+            AdmissionKind::LoadThreshold => "load-threshold",
+        }
+    }
+}
+
+/// Multi-tenant traffic configuration (`sim::traffic`). **Off by
+/// default**: with `enabled == false` no `TrafficState` is installed, no
+/// arrival timer is ever pushed, the scheduler's quiescence gate is
+/// unchanged, and every single-job fingerprint stays byte-identical to
+/// the pre-traffic engine (the config tests below pin that no
+/// constructor flips it). With it on, the whole arrival schedule is
+/// drawn from [`PlatformConfig::seed`] at build time, so runs stay
+/// bit-deterministic and shard-count invariant.
+#[derive(Clone, Debug)]
+pub struct TrafficCfg {
+    pub enabled: bool,
+    /// Total jobs in the open-loop arrival schedule.
+    pub jobs: u32,
+    /// Tenant count; per-job tenants are drawn weighted by
+    /// `tenant_weights` (uniform when the table is empty).
+    pub tenants: u32,
+    /// Per-tenant draw weights (the "tenant table"). Empty = uniform;
+    /// otherwise must have exactly `tenants` entries.
+    pub tenant_weights: Vec<u64>,
+    /// Mean inter-arrival gap, cycles (uniform jitter in
+    /// `[mean/2, 3*mean/2]`).
+    pub mean_gap: Cycles,
+    pub admission: AdmissionKind,
+    /// `TenantCap`: max live jobs per tenant (>= 1 enforced at the seam).
+    pub tenant_cap: u32,
+    /// `LoadThreshold`: defer while the entry subtree's load estimate is
+    /// at or above this.
+    pub load_threshold: u64,
+    /// Deferred-retry backoff base, cycles (capped exponential).
+    pub retry_backoff: Cycles,
+}
+
+impl TrafficCfg {
+    /// Traffic disabled; runs are byte-identical to the pre-traffic
+    /// engine.
+    pub fn off() -> Self {
+        TrafficCfg {
+            enabled: false,
+            jobs: 0,
+            tenants: 1,
+            tenant_weights: Vec::new(),
+            mean_gap: 0,
+            admission: AdmissionKind::AdmitAll,
+            tenant_cap: 0,
+            load_threshold: 0,
+            retry_backoff: 0,
+        }
+    }
+
+    /// Traffic enabled with `jobs` arrivals over `tenants` tenants and
+    /// the default knobs.
+    pub fn on(jobs: u32, tenants: u32) -> Self {
+        TrafficCfg {
+            enabled: true,
+            jobs: jobs.max(1),
+            tenants: tenants.max(1),
+            tenant_weights: Vec::new(),
+            mean_gap: 2_000_000,
+            admission: AdmissionKind::AdmitAll,
+            tenant_cap: 2,
+            load_threshold: 24,
+            retry_backoff: 500_000,
+        }
+    }
+
+    /// Admission policy configured (builder-style).
+    pub fn with_admission(mut self, kind: AdmissionKind) -> Self {
+        self.admission = kind;
+        self
+    }
+}
+
+impl Default for TrafficCfg {
+    fn default() -> Self {
+        Self::off()
+    }
+}
+
 /// Crash-recovery configuration (heartbeat detection + hierarchical
 /// re-adoption, see `rust/docs/fuzzing.md` "Crash & recovery"). **Off by
 /// default**: with `enabled == false` no heartbeat timer is ever armed, no
@@ -542,6 +648,9 @@ pub struct PlatformConfig {
     /// test suite can be re-run against the sharded engine without
     /// touching a single constructor call.
     pub shard: ShardCfg,
+    /// Multi-tenant traffic layer ([`TrafficCfg`]). Disabled by default;
+    /// single-job runs never see an arrival timer or an admission branch.
+    pub traffic: TrafficCfg,
 }
 
 impl PlatformConfig {
@@ -558,6 +667,7 @@ impl PlatformConfig {
             chaos: FaultPlan::none(),
             recovery: RecoveryCfg::off(),
             shard: ShardCfg::from_env(),
+            traffic: TrafficCfg::off(),
         }
     }
 
@@ -733,6 +843,40 @@ mod tests {
         assert_eq!(PlatformConfig::new(4, HierarchySpec::flat()).shard, want);
         assert_eq!(PlatformConfig::flat(8).shard, want);
         assert_eq!(PlatformConfig::hierarchical(64).shard, want);
+    }
+
+    #[test]
+    fn traffic_is_off_by_default_everywhere() {
+        // Same byte-identity contract as stealing/chaos/recovery/shards:
+        // no constructor may install an arrival schedule implicitly.
+        assert!(!TrafficCfg::default().enabled);
+        assert!(!PlatformConfig::new(4, HierarchySpec::flat()).traffic.enabled);
+        assert!(!PlatformConfig::flat(8).traffic.enabled);
+        assert!(!PlatformConfig::hierarchical(64).traffic.enabled);
+        assert_eq!(TrafficCfg::off().jobs, 0);
+    }
+
+    #[test]
+    fn traffic_cfg_constructors() {
+        let t = TrafficCfg::on(24, 3);
+        assert!(t.enabled);
+        assert_eq!(t.jobs, 24);
+        assert_eq!(t.tenants, 3);
+        assert!(t.tenant_weights.is_empty(), "uniform tenant table by default");
+        assert!(t.mean_gap > 0);
+        assert!(t.retry_backoff > 0);
+        assert_eq!(t.admission, AdmissionKind::AdmitAll);
+        let t = t.with_admission(AdmissionKind::TenantCap);
+        assert_eq!(t.admission, AdmissionKind::TenantCap);
+        assert!(t.tenant_cap >= 1);
+        // Degenerate requests clamp to usable values.
+        let z = TrafficCfg::on(0, 0);
+        assert_eq!(z.jobs, 1);
+        assert_eq!(z.tenants, 1);
+        // Stable report names.
+        assert_eq!(AdmissionKind::AdmitAll.name(), "admit-all");
+        assert_eq!(AdmissionKind::TenantCap.name(), "tenant-cap");
+        assert_eq!(AdmissionKind::LoadThreshold.name(), "load-threshold");
     }
 
     #[test]

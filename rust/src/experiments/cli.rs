@@ -2,11 +2,11 @@
 //! CLI binary: runs the selected experiments and prints paper-style rows.
 
 use super::bench::{all_workloads, workload, Scaling};
-use super::{fig11, fig12, fig7, fig8, fig9, fuzz, policy, steal};
+use super::{fig11, fig12, fig7, fig8, fig9, fuzz, policy, steal, tenants};
 
 /// `args`: experiment names (empty = all paper figures) plus optional
-/// `--quick` / `--smoke` (smoke applies to the `policy`/`steal` sweeps
-/// and the `fuzz` harness: tiny configurations for CI checks). The
+/// `--quick` / `--smoke` (smoke applies to the `policy`/`steal`/`tenants`
+/// sweeps and the `fuzz` harness: tiny configurations for CI checks). The
 /// `fuzz` harness additionally takes value flags — `--seeds N`,
 /// `--soak MINUTES`, and `--seed X [--plan Y]` to reproduce one case —
 /// which are consumed here so their values never masquerade as
@@ -110,6 +110,9 @@ pub fn run(args: &[String]) {
     if want("steal") {
         steal::run(quick, smoke);
     }
+    if want("tenants") {
+        tenants::run(quick, smoke);
+    }
     // The fuzz harness only runs when explicitly picked: it is a
     // robustness gate, not a paper figure, so the bare `myrmics exp`
     // figure regeneration skips it. A failing case makes the whole
@@ -134,5 +137,5 @@ pub fn run(args: &[String]) {
 
 pub const EXPERIMENTS: &[&str] = &[
     "fig7a", "fig7b", "fig8-strong", "fig8-weak", "overhead", "fig9", "fig10", "fig11",
-    "fig12a", "fig12b", "policy", "steal", "fuzz",
+    "fig12a", "fig12b", "policy", "steal", "tenants", "fuzz",
 ];

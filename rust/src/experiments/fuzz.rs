@@ -24,14 +24,19 @@
 
 use std::time::Instant;
 
+use crate::apps::jobs::traffic_boot;
 use crate::apps::skew::{myrmics as skew_myrmics, SkewParams};
 use crate::apps::synthetic::{empty_chain, hier_empty, independent, SynthParams};
-use crate::config::{HierarchySpec, PlatformConfig, RecoveryCfg, ShardCfg, StealCfg};
+use crate::apps::workload_api::job_templates;
+use crate::config::{
+    AdmissionKind, HierarchySpec, PlatformConfig, RecoveryCfg, ShardCfg, StealCfg, TrafficCfg,
+};
 use crate::ids::Cycles;
 use crate::platform::Platform;
 use crate::sim::chaos::FaultPlan;
 use crate::sim::engine::Engine;
 use crate::sim::rng::Rng;
+use crate::sim::traffic::TrafficState;
 use crate::testutil::oracles;
 
 /// Decorrelates case-parameter draws from the engine RNG streams (which
@@ -79,6 +84,10 @@ pub struct CaseFp {
     pub restarts: u64,
     pub tasks_reissued: u64,
     pub crash_dups_dropped: u64,
+    /// Traffic books (0 on non-traffic cases): the replay pin covers the
+    /// admission schedule, not just the task schedule.
+    pub jobs_admitted: u32,
+    pub job_deferrals: u64,
 }
 
 /// One case verdict.
@@ -94,6 +103,12 @@ pub struct FuzzRow {
     /// small trees; clamped runs are still bit-identical by contract).
     pub shards: usize,
     pub strict: bool,
+    /// Traffic mode ("off" | "steady" | "burst") and its parameters —
+    /// `jobs`/`tenants` are 0 and `admission` is "-" on non-traffic cases.
+    pub traffic: &'static str,
+    pub admission: &'static str,
+    pub jobs: u32,
+    pub tenants: u32,
     pub fp: CaseFp,
     /// "ok" | "oracle" | "replay" | "hang".
     pub verdict: &'static str,
@@ -128,6 +143,15 @@ struct CaseParams {
     recovery: u64,
     /// Engine shard count draw: 0 -> 1 shard (legacy), 1 -> 2, 2 -> 4.
     shard: u64,
+    /// Traffic mode: 0..=1 = off (the single-job shapes above run as
+    /// before), 2 = steady open-loop arrivals, 3 = burst (tight gaps +
+    /// backpressure-heavy admission knobs).
+    traffic: u64,
+    /// Arrival-mix parameters for traffic cases, drawn unconditionally so
+    /// the stream position never depends on earlier values.
+    traffic_jobs: u64,
+    traffic_tenants: u64,
+    traffic_adm: u64,
 }
 
 impl CaseParams {
@@ -147,6 +171,65 @@ impl CaseParams {
             // Trailing again (same reasoning): the sharded engine joins
             // the sweep without renaming any pre-shard reproducer.
             shard: r.below(3),
+            // Trailing again: chaos + crash + steal now also run under
+            // concurrent multi-tenant jobs, without renaming any
+            // pre-traffic reproducer.
+            traffic: r.below(4),
+            traffic_jobs: r.range(6, 14),
+            traffic_tenants: r.range(2, 4),
+            traffic_adm: r.below(3),
+        }
+    }
+
+    fn traffic_on(&self) -> bool {
+        self.traffic >= 2
+    }
+
+    /// The traffic configuration of this case (`None` = single-job case).
+    /// Burst mode crams arrivals an order of magnitude tighter than a
+    /// job's service time and pins the backpressure knobs low, so the
+    /// deferral/retry machinery actually runs under chaos.
+    fn traffic_cfg(&self) -> Option<TrafficCfg> {
+        if !self.traffic_on() {
+            return None;
+        }
+        let mut t = TrafficCfg::on(self.traffic_jobs as u32, self.traffic_tenants as u32);
+        t.admission = [
+            AdmissionKind::AdmitAll,
+            AdmissionKind::TenantCap,
+            AdmissionKind::LoadThreshold,
+        ][self.traffic_adm as usize];
+        if self.traffic == 3 {
+            t.mean_gap = 100_000;
+            t.tenant_cap = 1;
+            t.load_threshold = 8;
+            t.retry_backoff = 50_000;
+        }
+        Some(t)
+    }
+
+    fn traffic_name(&self) -> &'static str {
+        match self.traffic {
+            0 | 1 => "off",
+            2 => "steady",
+            _ => "burst",
+        }
+    }
+
+    fn admission_name(&self) -> &'static str {
+        if !self.traffic_on() {
+            return "-";
+        }
+        ["admit-all", "tenant-cap", "load-threshold"][self.traffic_adm as usize]
+    }
+
+    /// What actually executed: traffic cases replace the drawn single-job
+    /// shape with the multi-job traffic body.
+    fn effective_shape_name(&self) -> &'static str {
+        if self.traffic_on() {
+            "traffic-jobs"
+        } else {
+            self.shape_name()
         }
     }
 
@@ -212,6 +295,20 @@ fn exec(seed: u64, plan: u64) -> (Cycles, Engine) {
     // Shard count comes from the case stream, not the environment, so a
     // reproducer line means the same thing everywhere.
     cfg.shard = ShardCfg::with_shards(p.shard_count());
+    // Traffic cases swap the single-job shape for an open-loop multi-job
+    // arrival mix: chaos, crashes and steal faults all run under
+    // concurrent admissions, checked by the `check_jobs` oracle.
+    if let Some(tcfg) = p.traffic_cfg() {
+        cfg.traffic = tcfg.clone();
+        let (reg, refs) = traffic_boot();
+        let main_fn = refs.job_main.index();
+        let mut plat = Platform::build_with(cfg, reg, refs.boot, move |w| {
+            let tr = TrafficState::generate(&tcfg, seed, &w.hier, main_fn, &job_templates(1));
+            w.traffic = Some(tr);
+        });
+        let t = plat.run_to_quiescence(Some(CASE_LIMIT));
+        return (t, plat.eng);
+    }
     let mut plat = match p.shape {
         0 => {
             let (reg, main) = empty_chain();
@@ -265,6 +362,8 @@ fn exec(seed: u64, plan: u64) -> (Cycles, Engine) {
 
 fn fingerprint(t: Cycles, eng: &Engine) -> CaseFp {
     let g = &eng.world.gstats;
+    let (jobs_admitted, job_deferrals) =
+        eng.world.traffic.as_ref().map_or((0, 0), |tr| (tr.admitted, tr.total_deferrals));
     CaseFp {
         time: t,
         events: g.events_processed,
@@ -281,6 +380,8 @@ fn fingerprint(t: Cycles, eng: &Engine) -> CaseFp {
         restarts: g.restarts,
         tasks_reissued: g.tasks_reissued,
         crash_dups_dropped: g.crash_dups_dropped,
+        jobs_admitted,
+        job_deferrals,
     }
 }
 
@@ -327,12 +428,16 @@ pub fn run_case_with(
     FuzzRow {
         seed,
         plan,
-        shape: p.shape_name(),
+        shape: p.effective_shape_name(),
         hier: p.hier_name(),
         steal: p.steal_name(),
         recovery: p.recovery_name(),
         shards: p.shard_count(),
         strict: p.strict,
+        traffic: p.traffic_name(),
+        admission: p.admission_name(),
+        jobs: if p.traffic_on() { p.traffic_jobs as u32 } else { 0 },
+        tenants: if p.traffic_on() { p.traffic_tenants as u32 } else { 0 },
         fp,
         verdict,
         violations,
@@ -373,8 +478,8 @@ pub fn run(opts: &FuzzOpts) -> bool {
     let failures: Vec<&FuzzRow> = rows.iter().filter(|r| !r.ok()).collect();
     for r in &failures {
         eprintln!(
-            "FAIL [{}] {}  # shape {} hier {} steal {} recovery {}",
-            r.verdict, r.repro(), r.shape, r.hier, r.steal, r.recovery
+            "FAIL [{}] {}  # shape {} hier {} steal {} recovery {} traffic {}",
+            r.verdict, r.repro(), r.shape, r.hier, r.steal, r.recovery, r.traffic
         );
     }
     failures.is_empty()
@@ -383,24 +488,26 @@ pub fn run(opts: &FuzzOpts) -> bool {
 pub fn print_rows(rows: &[FuzzRow]) {
     println!("Protocol fuzz — fault plans x adversarial spawns, oracle + replay checked");
     println!(
-        "{:<22} {:<22} {:<12} {:<12} {:<10} {:<8} {:>6} {:>6} {:>12} {:>6} {:>7} {:>7} {:>8}",
-        "seed", "plan", "shape", "hier", "steal", "recov", "shards", "strict", "time", "tasks", "stolen", "crashes", "verdict"
+        "{:<22} {:<22} {:<12} {:<12} {:<10} {:<8} {:<8} {:>6} {:>6} {:>12} {:>6} {:>7} {:>7} {:>5} {:>8}",
+        "seed", "plan", "shape", "hier", "steal", "recov", "traffic", "shards", "strict", "time", "tasks", "stolen", "crashes", "jobs", "verdict"
     );
     for r in rows {
         println!(
-            "{:<22} {:<22} {:<12} {:<12} {:<10} {:<8} {:>6} {:>6} {:>12} {:>6} {:>7} {:>7} {:>8}",
+            "{:<22} {:<22} {:<12} {:<12} {:<10} {:<8} {:<8} {:>6} {:>6} {:>12} {:>6} {:>7} {:>7} {:>5} {:>8}",
             r.seed,
             r.plan,
             r.shape,
             r.hier,
             r.steal,
             r.recovery,
+            r.traffic,
             r.shards,
             if r.strict { "yes" } else { "no" },
             r.fp.time,
             r.fp.completed,
             r.fp.tasks_stolen,
             r.fp.crashes,
+            r.fp.jobs_admitted,
             r.verdict
         );
     }
@@ -424,7 +531,9 @@ pub fn to_json(rows: &[FuzzRow]) -> String {
             };
             format!(
                 "{{\"seed\": {}, \"plan\": {}, \"shape\": \"{}\", \"hier\": \"{}\", \
-                 \"steal\": \"{}\", \"recovery\": \"{}\", \"shards\": {}, \"strict\": {}, \"time\": {}, \
+                 \"steal\": \"{}\", \"recovery\": \"{}\", \"shards\": {}, \"strict\": {}, \
+                 \"traffic\": \"{}\", \"admission\": \"{}\", \"jobs\": {}, \"tenants\": {}, \
+                 \"admitted\": {}, \"deferrals\": {}, \"time\": {}, \
                  \"events\": {}, \"tasks\": {}, \"tasks_stolen\": {}, \"steal_denies\": {}, \
                  \"crashes\": {}, \"tasks_reissued\": {}, \
                  \"verdict\": \"{}\", \"violations\": {}, \"detail\": \"{}\", \
@@ -437,6 +546,12 @@ pub fn to_json(rows: &[FuzzRow]) -> String {
                 r.recovery,
                 r.shards,
                 r.strict,
+                r.traffic,
+                r.admission,
+                r.jobs,
+                r.tenants,
+                r.fp.jobs_admitted,
+                r.fp.job_deferrals,
                 r.fp.time,
                 r.fp.events,
                 r.fp.completed,
@@ -582,6 +697,12 @@ mod tests {
             "\"plan\"",
             "\"recovery\"",
             "\"shards\"",
+            "\"traffic\"",
+            "\"admission\"",
+            "\"jobs\"",
+            "\"tenants\"",
+            "\"admitted\"",
+            "\"deferrals\"",
             "\"crashes\"",
             "\"tasks_reissued\"",
             "\"verdict\"",
@@ -591,5 +712,80 @@ mod tests {
             assert!(j.contains(key), "missing {key} in {j}");
         }
         assert_eq!(j.matches("{\"seed\"").count(), 1);
+    }
+
+    /// Traffic cases from the real meta stream run green (oracles +
+    /// replay pin, which now covers the admission books) and their rows
+    /// carry the drawn traffic parameters into the report.
+    #[test]
+    fn traffic_cases_run_green_and_report_their_params() {
+        let mut meta = Rng::new(META_SEED);
+        let mut ran = 0u32;
+        for i in 0..64 {
+            let seed = meta.next_u64();
+            let drawn = meta.next_u64();
+            let plan = if i % 5 == 4 { 0 } else { drawn };
+            let p = CaseParams::derive(seed);
+            if !p.traffic_on() {
+                continue;
+            }
+            let r = run_case(seed, plan);
+            assert!(
+                r.ok(),
+                "traffic case (seed {seed}, plan {plan}) failed: {} {:?}",
+                r.verdict,
+                r.violations
+            );
+            assert_eq!(r.shape, "traffic-jobs");
+            assert_ne!(r.traffic, "off");
+            assert_ne!(r.admission, "-");
+            assert!(r.jobs > 0 && r.tenants > 0);
+            // The oracle already pins "every job admitted"; the row must
+            // agree with the books.
+            assert_eq!(r.fp.jobs_admitted, r.jobs);
+            let j = to_json(&[r]);
+            assert!(j.contains("\"traffic\": \"steady\"") || j.contains("\"traffic\": \"burst\""));
+            ran += 1;
+            if ran == 2 {
+                break;
+            }
+        }
+        assert!(ran > 0, "meta stream produced no traffic case in 64 draws");
+    }
+
+    /// The headline satellite: chaos + a forced scheduler crash under
+    /// concurrent multi-tenant jobs. The run must lose a scheduler,
+    /// recover (re-adoption re-arms the dead entry's job timers), drain
+    /// every admitted job, and replay bit-identically.
+    #[test]
+    fn traffic_crash_cases_recover_and_drain_every_job() {
+        let mut meta = Rng::new(META_SEED);
+        let mut ran = 0u32;
+        let mut crashed = 0u64;
+        for i in 0..128 {
+            let seed = meta.next_u64();
+            let drawn = meta.next_u64();
+            let plan = if i % 5 == 4 { 0 } else { drawn };
+            let p = CaseParams::derive(seed);
+            // flat4 has no eligible crash victim; plan 0 is fault-free.
+            if plan == 0 || !p.traffic_on() || p.recovery != 2 || p.hier == 0 {
+                continue;
+            }
+            let r = run_case(seed, plan);
+            assert!(
+                r.ok(),
+                "traffic crash case (seed {seed}, plan {plan}) failed: {} {:?}",
+                r.verdict,
+                r.violations
+            );
+            assert_eq!(r.fp.jobs_admitted, r.jobs, "every job must still be admitted");
+            crashed += r.fp.crashes;
+            ran += 1;
+            if ran == 2 {
+                break;
+            }
+        }
+        assert!(ran > 0, "meta stream produced no traffic+crash case in 128 draws");
+        assert!(crashed > 0, "no traffic crash case actually lost a scheduler");
     }
 }

@@ -14,6 +14,7 @@ pub mod fig9;
 pub mod fuzz;
 pub mod policy;
 pub mod steal;
+pub mod tenants;
 
 use crate::ids::Cycles;
 use crate::sim::engine::Engine;

@@ -1,0 +1,312 @@
+//! Multi-tenant traffic sweep: admission policies x hierarchy depths.
+//!
+//! Each point drives the open-loop arrival process (`sim::traffic`) with
+//! the full heterogeneous template mix (`apps::workload_api::job_templates`)
+//! and measures what the admission layer trades: makespan and utilization
+//! against per-tenant job-latency percentiles, deferral counts and Jain's
+//! fairness index (`stats::tenants`). Trees go up to 4096 workers under a
+//! 4-level scheduler hierarchy — the scale argument for decentralized
+//! admission: every decision is taken at a top-level subtree root from
+//! local load books, so adding subtrees adds admission capacity.
+//!
+//! Output: rows on stdout plus `TENANTS_sweep.json`. CI smoke-runs the
+//! emitter (`myrmics exp tenants --smoke`, blocking) so it cannot rot;
+//! the nightly workflow runs the full depth ladder.
+
+use crate::apps::jobs::traffic_boot;
+use crate::apps::workload_api::job_templates;
+use crate::config::{AdmissionKind, HierarchySpec, PlatformConfig, TrafficCfg};
+use crate::ids::Cycles;
+use crate::platform::Platform;
+use crate::sim::traffic::TrafficState;
+use crate::stats::tenants::tenant_report;
+
+use super::summarize;
+
+/// One (tree, admission policy) measurement.
+#[derive(Clone, Debug)]
+pub struct TenantRow {
+    pub policy: &'static str,
+    pub tree: &'static str,
+    pub workers: usize,
+    pub levels: usize,
+    pub jobs: u32,
+    pub tenants: u32,
+    pub admitted: u32,
+    pub deferrals: u64,
+    pub makespan: Cycles,
+    pub p50_latency: Cycles,
+    pub p99_latency: Cycles,
+    pub jain: f64,
+    /// Mean fraction of worker time spent in task bodies.
+    pub util_pct: f64,
+    pub tenant_p50: Vec<Cycles>,
+    pub tenant_p99: Vec<Cycles>,
+    pub events: u64,
+}
+
+/// One hierarchy point of the depth ladder.
+#[derive(Clone, Debug)]
+pub struct TreePoint {
+    pub name: &'static str,
+    pub workers: usize,
+    pub spec: HierarchySpec,
+}
+
+impl TreePoint {
+    pub fn levels(&self) -> usize {
+        self.spec.scheds_per_level.len()
+    }
+}
+
+/// The depth ladder the full sweep climbs (levels 2..=4, up to 4096
+/// workers). Leaf counts keep ~64 workers per leaf subtree at the top
+/// end, matching the paper's 512-core chapter scaled up.
+pub fn depth_ladder() -> Vec<TreePoint> {
+    vec![
+        TreePoint { name: "two-level-64", workers: 64, spec: HierarchySpec::two_level(8) },
+        TreePoint {
+            name: "three-level-512",
+            workers: 512,
+            spec: HierarchySpec { scheds_per_level: vec![1, 4, 16] },
+        },
+        TreePoint {
+            name: "four-level-4096",
+            workers: 4096,
+            spec: HierarchySpec { scheds_per_level: vec![1, 4, 16, 64] },
+        },
+    ]
+}
+
+/// Run one point: `tcfg` jobs arrive over `tree`, templates at `scale`.
+pub fn run_one(tree: &TreePoint, tcfg: &TrafficCfg, scale: u32) -> TenantRow {
+    let mut cfg = PlatformConfig::new(tree.workers, tree.spec.clone());
+    cfg.traffic = tcfg.clone();
+    let levels = tree.levels();
+    let (reg, refs) = traffic_boot();
+    let main_fn = refs.job_main.index();
+    let seed = cfg.seed;
+    let prime_cfg = tcfg.clone();
+    let mut plat = Platform::build_with(cfg, reg, refs.boot, move |w| {
+        let tr =
+            TrafficState::generate(&prime_cfg, seed, &w.hier, main_fn, &job_templates(scale));
+        w.traffic = Some(tr);
+    });
+    let t = plat.run(Some(1 << 44));
+    let s = summarize(&plat.eng, t);
+    let tr = plat.world().traffic.as_ref().expect("traffic installed");
+    assert!(tr.all_done(), "sweep points must drain: {} {:?}", tree.name, tcfg.admission);
+    let rep = tenant_report(tr);
+    TenantRow {
+        policy: tcfg.admission.name(),
+        tree: tree.name,
+        workers: tree.workers,
+        levels,
+        jobs: tcfg.jobs,
+        tenants: tcfg.tenants,
+        admitted: rep.admitted,
+        deferrals: rep.total_deferrals,
+        makespan: t,
+        p50_latency: rep.p50_latency,
+        p99_latency: rep.p99_latency,
+        jain: rep.jain_index,
+        util_pct: 100.0 * s.worker_task_frac,
+        tenant_p50: rep.tenants.iter().map(|x| x.p50_latency).collect(),
+        tenant_p99: rep.tenants.iter().map(|x| x.p99_latency).collect(),
+        events: plat.world().gstats.events_processed,
+    }
+}
+
+/// The three admission policies every sweep mode covers.
+pub fn policies() -> [AdmissionKind; 3] {
+    [AdmissionKind::AdmitAll, AdmissionKind::TenantCap, AdmissionKind::LoadThreshold]
+}
+
+fn traffic_for(jobs: u32, tenants: u32, admission: AdmissionKind) -> TrafficCfg {
+    let mut t = TrafficCfg::on(jobs, tenants).with_admission(admission);
+    // Arrivals well inside a job's runtime so admission actually has
+    // concurrent load to push back on.
+    t.mean_gap = 400_000;
+    t
+}
+
+/// Run the sweep. `smoke` = one small tree, all three policies (CI,
+/// seconds); `quick` = two trees; full = the whole depth ladder to 4096
+/// workers with job counts scaled to the tree.
+pub fn run(quick: bool, smoke: bool) -> Vec<TenantRow> {
+    let mut rows = Vec::new();
+    if smoke {
+        let tree =
+            TreePoint { name: "two-level-16", workers: 16, spec: HierarchySpec::two_level(4) };
+        for p in policies() {
+            rows.push(run_one(&tree, &traffic_for(12, 3, p), 1));
+        }
+    } else {
+        let ladder = depth_ladder();
+        let trees: &[TreePoint] = if quick { &ladder[..2] } else { &ladder };
+        for tree in trees {
+            let jobs = ((tree.workers / 16) as u32).clamp(24, 128);
+            let scale = if tree.workers >= 512 { 2 } else { 1 };
+            for p in policies() {
+                rows.push(run_one(tree, &traffic_for(jobs, 4, p), scale));
+            }
+        }
+    }
+    print_rows(&rows);
+    match emit_json(&rows, "TENANTS_sweep.json") {
+        Ok(()) => println!("wrote TENANTS_sweep.json ({} rows)", rows.len()),
+        Err(e) => eprintln!("failed to write TENANTS_sweep.json: {e}"),
+    }
+    rows
+}
+
+pub fn print_rows(rows: &[TenantRow]) {
+    println!("Tenants sweep — admission policies over the hierarchy depth ladder");
+    println!(
+        "{:<16} {:<16} {:>5} {:>3} {:>5} {:>6} {:>6} {:>12} {:>10} {:>10} {:>6} {:>6}",
+        "tree", "policy", "w", "lvl", "jobs", "admit", "defer", "makespan", "p50", "p99",
+        "jain", "util%"
+    );
+    for r in rows {
+        println!(
+            "{:<16} {:<16} {:>5} {:>3} {:>5} {:>6} {:>6} {:>12} {:>10} {:>10} {:>6.3} {:>6.1}",
+            r.tree,
+            r.policy,
+            r.workers,
+            r.levels,
+            r.jobs,
+            r.admitted,
+            r.deferrals,
+            r.makespan,
+            super::fmt_cycles(r.p50_latency),
+            super::fmt_cycles(r.p99_latency),
+            r.jain,
+            r.util_pct,
+        );
+    }
+    println!();
+}
+
+fn json_cycles_array(xs: &[Cycles]) -> String {
+    let items: Vec<String> = xs.iter().map(|x| x.to_string()).collect();
+    format!("[{}]", items.join(", "))
+}
+
+/// Serialize rows as a JSON array (no external deps — values are numbers
+/// and fixed identifier strings).
+pub fn to_json(rows: &[TenantRow]) -> String {
+    let objs: Vec<String> = rows
+        .iter()
+        .map(|r| {
+            format!(
+                "{{\"tree\": \"{}\", \"policy\": \"{}\", \"workers\": {}, \
+                 \"levels\": {}, \"jobs\": {}, \"tenants\": {}, \"admitted\": {}, \
+                 \"deferrals\": {}, \"makespan\": {}, \"p50_latency\": {}, \
+                 \"p99_latency\": {}, \"jain\": {:.4}, \"util_pct\": {:.2}, \
+                 \"tenant_p50\": {}, \"tenant_p99\": {}, \"events\": {}}}",
+                r.tree,
+                r.policy,
+                r.workers,
+                r.levels,
+                r.jobs,
+                r.tenants,
+                r.admitted,
+                r.deferrals,
+                r.makespan,
+                r.p50_latency,
+                r.p99_latency,
+                r.jain,
+                r.util_pct,
+                json_cycles_array(&r.tenant_p50),
+                json_cycles_array(&r.tenant_p99),
+                r.events,
+            )
+        })
+        .collect();
+    super::json_array(&objs)
+}
+
+pub fn emit_json(rows: &[TenantRow], path: &str) -> std::io::Result<()> {
+    std::fs::write(path, to_json(rows))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_tree() -> TreePoint {
+        TreePoint { name: "two-level-16", workers: 16, spec: HierarchySpec::two_level(4) }
+    }
+
+    #[test]
+    fn every_policy_admits_and_drains_everything() {
+        for p in policies() {
+            let r = run_one(&small_tree(), &traffic_for(8, 2, p), 1);
+            assert_eq!(r.admitted, 8, "{}: all jobs eventually admitted", r.policy);
+            assert!(r.p99_latency >= r.p50_latency);
+            assert!(r.jain > 0.0 && r.jain <= 1.0 + 1e-9);
+            assert_eq!(r.tenant_p50.len(), 2);
+        }
+    }
+
+    #[test]
+    fn admit_all_never_defers_and_caps_do() {
+        let all = run_one(&small_tree(), &traffic_for(10, 1, AdmissionKind::AdmitAll), 1);
+        assert_eq!(all.deferrals, 0);
+        let mut t = traffic_for(10, 1, AdmissionKind::TenantCap);
+        t.tenant_cap = 1;
+        t.mean_gap = 50_000;
+        let cap = run_one(&small_tree(), &t, 1);
+        assert!(cap.deferrals > 0, "cap 1 with crammed arrivals must defer");
+        assert!(
+            cap.p99_latency >= all.p99_latency,
+            "backpressure trades tail latency: cap {} vs all {}",
+            cap.p99_latency,
+            all.p99_latency
+        );
+    }
+
+    /// The acceptance replay pin: two identically configured sweeps are
+    /// identical in every measured field.
+    #[test]
+    fn double_run_replays_identically() {
+        let t = traffic_for(8, 3, AdmissionKind::LoadThreshold);
+        let a = run_one(&small_tree(), &t, 1);
+        let b = run_one(&small_tree(), &t, 1);
+        assert_eq!(a.makespan, b.makespan);
+        assert_eq!(a.p50_latency, b.p50_latency);
+        assert_eq!(a.p99_latency, b.p99_latency);
+        assert_eq!(a.admitted, b.admitted);
+        assert_eq!(a.deferrals, b.deferrals);
+        assert_eq!(a.events, b.events);
+        assert_eq!(a.tenant_p50, b.tenant_p50);
+    }
+
+    #[test]
+    fn json_shape_is_stable() {
+        let rows = vec![run_one(&small_tree(), &traffic_for(6, 2, AdmissionKind::AdmitAll), 1)];
+        let j = to_json(&rows);
+        assert!(j.starts_with("[\n"));
+        assert!(j.trim_end().ends_with(']'));
+        for key in [
+            "\"policy\"",
+            "\"levels\"",
+            "\"p99_latency\"",
+            "\"jain\"",
+            "\"util_pct\"",
+            "\"tenant_p50\"",
+        ] {
+            assert!(j.contains(key), "missing {key} in {j}");
+        }
+        assert_eq!(j.matches("{\"tree\"").count(), 1);
+    }
+
+    #[test]
+    fn depth_ladder_reaches_4096_workers_at_4_levels() {
+        let l = depth_ladder();
+        let top = l.last().unwrap();
+        assert_eq!(top.workers, 4096);
+        assert_eq!(top.levels(), 4);
+        assert!(l.iter().all(|t| t.levels() >= 2));
+    }
+}

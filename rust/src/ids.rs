@@ -117,6 +117,24 @@ impl From<ObjectId> for NodeId {
     }
 }
 
+/// A traffic job: one instance of a workload template admitted into the
+/// platform by the multi-tenant traffic layer (`sim::traffic`). Ids index
+/// the arrival schedule densely, so per-job books are array lookups.
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Debug)]
+pub struct JobId(pub u32);
+
+impl JobId {
+    pub fn idx(self) -> usize {
+        self.0 as usize
+    }
+}
+
+impl fmt::Display for JobId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "j{}", self.0)
+    }
+}
+
 /// Request id used to match replies to reentrant pending operations inside
 /// a scheduler (the paper's "reentrant events with saved local state").
 #[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Debug)]

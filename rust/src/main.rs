@@ -18,14 +18,18 @@ fn usage() -> ! {
     eprintln!("myrmics — Myrmics runtime-system reproduction");
     eprintln!();
     eprintln!("USAGE:");
-    eprintln!("  myrmics exp [NAMES...] [--quick]   regenerate paper figures/tables");
-    eprintln!("  myrmics exp fuzz [FUZZ OPTS]       protocol fuzz + invariant oracles");
-    eprintln!("  myrmics run <bench> [OPTS]         run one benchmark simulation");
-    eprintln!("  myrmics bench --list               list the registered workloads");
+    eprintln!("  myrmics exp [NAMES...] [--quick|--smoke]  regenerate paper figures/tables");
+    eprintln!("  myrmics exp policy [--quick|--smoke]      placement-policy sweep -> POLICY_sweep.json");
+    eprintln!("  myrmics exp steal [--quick|--smoke]       work-stealing sweep -> STEAL_sweep.json");
+    eprintln!("  myrmics exp tenants [--quick|--smoke]     multi-tenant traffic sweep -> TENANTS_sweep.json");
+    eprintln!("  myrmics exp fuzz [FUZZ OPTS]              protocol fuzz + invariant oracles");
+    eprintln!("  myrmics run <bench> [OPTS]                run one benchmark simulation");
+    eprintln!("  myrmics bench --list                      list the registered workloads");
     eprintln!();
     eprintln!("EXPERIMENTS: {}", cli::EXPERIMENTS.join(" "));
     eprintln!("BENCHES:     {}", bench_names());
     eprintln!();
+    eprintln!("exp FLAGS: --quick (small sweep)  --smoke (tiny CI configuration)");
     eprintln!("run OPTS:  --workers N (default 64)  --flat  --mpi  --weak");
     eprintln!("fuzz OPTS: --smoke | --seeds N | --soak MINUTES | --seed X [--plan Y]");
     std::process::exit(2)

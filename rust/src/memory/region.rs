@@ -169,6 +169,36 @@ impl Memory {
         id
     }
 
+    /// Create a region under `parent` with an explicitly pinned owner —
+    /// the traffic layer's per-job root regions: a job admitted at an
+    /// entry scheduler keeps its root region (and thus its dependency
+    /// anchor) local to that scheduler, so admission never takes a
+    /// cross-owner hop. Bypasses the level-hint descent but maintains
+    /// every ownership structure `ralloc` does.
+    pub fn ralloc_pinned(&mut self, parent: RegionId, owner: usize) -> RegionId {
+        assert!(owner < self.pools.len(), "pinned owner out of range");
+        let id = RegionId(self.next_rid);
+        self.next_rid += 1;
+        let depth = self.region(parent).depth + 1;
+        self.regions.insert(
+            id,
+            Region {
+                id,
+                parent: Some(parent),
+                children: Vec::new(),
+                objects: Vec::new(),
+                owner,
+                level_hint: 0,
+                depth,
+                pool: SlabPool::new(),
+            },
+        );
+        self.region_mut(parent).children.push(id);
+        self.region_load[owner] += 1;
+        self.rid_owner.insert(id.0, owner);
+        id
+    }
+
     /// `sys_alloc`: allocate `size` bytes in region `r`.
     pub fn alloc(&mut self, size: u64, r: RegionId) -> ObjectId {
         let owner = self.region(r).owner;
@@ -516,6 +546,24 @@ mod tests {
         // Routing trie agrees.
         assert_eq!(m.rid_owner.get(r1.0), Some(&1));
         assert_eq!(m.rid_owner.get(r2.0), Some(&2));
+    }
+
+    #[test]
+    fn ralloc_pinned_bypasses_the_descent() {
+        let h = hier2();
+        let mut m = Memory::new(h.n_scheds);
+        // Pin to scheduler 2 even though the load-balanced descent would
+        // pick scheduler 1 first.
+        let r = m.ralloc_pinned(RegionId::ROOT, 2);
+        assert_eq!(m.region(r).owner, 2);
+        assert_eq!(m.rid_owner.get(r.0), Some(&2));
+        assert!(m.region(RegionId::ROOT).children.contains(&r));
+        assert_eq!(m.depth_of(NodeId::Region(r)), 1);
+        // Ownership load is booked exactly like ralloc, so rfree's
+        // decrement stays balanced.
+        let load = m.region_load[2];
+        m.rfree(r);
+        assert_eq!(m.region_load[2], load - 1);
     }
 
     #[test]

@@ -15,7 +15,7 @@ use std::any::Any;
 use crate::api::ctx::TaskCtx;
 use crate::config::{CoreKind, PlatformConfig};
 use crate::dep::analysis::DepState;
-use crate::ids::{CoreId, Cycles, NodeId, RegionId, TaskId};
+use crate::ids::{CoreId, Cycles, JobId, NodeId, RegionId, TaskId};
 use crate::memory::region::Memory;
 use crate::memory::store::DataStore;
 use crate::noc::msg::Msg;
@@ -24,7 +24,8 @@ use crate::sched::hierarchy::HierarchyMap;
 use crate::sched::scheduler::{Journal, SchedLogic};
 use crate::sched::worker::WorkerLogic;
 use crate::sim::engine::{Engine, SimState};
-use crate::sim::event::Event;
+use crate::sim::event::{Event, TimerKind};
+use crate::sim::traffic::TrafficState;
 use crate::sim::rng::Rng;
 use crate::stats::metrics::GlobalStats;
 use crate::task::descriptor::{TaskArg, TaskDesc};
@@ -52,6 +53,11 @@ pub struct World {
     pub app: Option<Box<dyn Any>>,
     /// Mini-MPI collective rendezvous state (baseline runs only).
     pub mpi: Option<crate::mpi::rank::MpiShared>,
+    /// Multi-tenant traffic layer: the seed-deterministic job arrival
+    /// schedule plus per-job/per-tenant books. `None` (the default) means
+    /// the layer does not exist — single-job runs stay byte-identical.
+    /// Installed by the `prime` closure (see `experiments::tenants`).
+    pub traffic: Option<TrafficState>,
     pub done: bool,
 }
 
@@ -72,6 +78,7 @@ impl World {
             kernels: None,
             app: None,
             mpi: None,
+            traffic: None,
             done: false,
         }
     }
@@ -233,6 +240,21 @@ impl Platform {
                     let core = eng.world.hier.sched_core(s);
                     eng.sim.push(0, core, Event::Boot);
                 }
+            }
+        }
+        // Traffic: pre-push every job's open-loop arrival timer on its
+        // entry scheduler. The schedule (installed by `prime`) was drawn
+        // entirely at build time, so the pushes are identical across
+        // shard counts and replay runs; `traffic == None` (the default)
+        // pushes nothing and keeps the event schedule byte-identical.
+        if let Some(tr) = eng.world.traffic.as_ref() {
+            for (i, j) in tr.jobs.iter().enumerate() {
+                let tag = crate::sim::traffic::arrive_tag(JobId(i as u32));
+                eng.sim.push(
+                    j.submit_at,
+                    eng.world.hier.sched_core(j.entry),
+                    Event::Timer(TimerKind::Custom(tag)),
+                );
             }
         }
         Platform { eng, main_task }

@@ -44,7 +44,7 @@
 //!   perturb workload generation, and each scheduler's stream is
 //!   independent of event interleaving).
 
-use crate::config::{PolicyCfg, PolicyKind, StealCfg, VictimKind};
+use crate::config::{AdmissionKind, PolicyCfg, PolicyKind, StealCfg, TrafficCfg, VictimKind};
 use crate::ids::CoreId;
 use crate::noc::msg::ProducerRange;
 use crate::sched::hierarchy::HierarchyMap;
@@ -511,6 +511,23 @@ impl Placer {
         self.loads.total()
     }
 
+    // --------------------------------------------------- admission control
+
+    /// Decentralized traffic-admission decision (`sim::traffic`): should
+    /// this scheduler admit an arriving job of a tenant that currently
+    /// has `tenant_live` live jobs? Consumes only state already at hand —
+    /// the O(1) aggregate load estimate and the tenant book — so the
+    /// decision costs one branch and never messages another scheduler.
+    /// `false` means defer: the caller re-arms a deterministic backoff
+    /// retry timer.
+    pub fn admit_job(&self, t: &TrafficCfg, tenant_live: u32) -> bool {
+        match t.admission {
+            AdmissionKind::AdmitAll => true,
+            AdmissionKind::TenantCap => tenant_live < t.tenant_cap.max(1),
+            AdmissionKind::LoadThreshold => self.total() < t.load_threshold.max(1),
+        }
+    }
+
     // ------------------------------------------------- work-stealing hooks
 
     /// Dispatch throttle (stealing enabled only): is any placement target
@@ -668,6 +685,39 @@ mod tests {
         }
         let (chosen, _) = placer_bal.choose_child(&hier, 0, &pack);
         assert_ne!(chosen, hier.children[0][0]);
+    }
+
+    #[test]
+    fn admission_policies_read_local_state_only() {
+        let hier = two_level();
+        let mut placer = Placer::new(&PolicyCfg::default(), &hier, 0, 1);
+        // Admit-all: always yes, whatever the books say.
+        let t = TrafficCfg::on(8, 2);
+        assert!(placer.admit_job(&t, 0));
+        assert!(placer.admit_job(&t, 1_000));
+        // Tenant cap: defers exactly at the cap.
+        let t = TrafficCfg::on(8, 2).with_admission(AdmissionKind::TenantCap);
+        assert!(placer.admit_job(&t, t.tenant_cap - 1));
+        assert!(!placer.admit_job(&t, t.tenant_cap));
+        // A zero cap clamps to one so a tenant can never be starved
+        // forever.
+        let mut z = t.clone();
+        z.tenant_cap = 0;
+        assert!(placer.admit_job(&z, 0));
+        assert!(!placer.admit_job(&z, 1));
+        // Load threshold: keys off the placer's aggregate estimate.
+        let mut t = TrafficCfg::on(8, 2).with_admission(AdmissionKind::LoadThreshold);
+        t.load_threshold = 3;
+        assert!(placer.admit_job(&t, 0));
+        let slot = placer.loads.child_slot(hier.children[0][0]);
+        for _ in 0..3 {
+            placer.loads.bump_child(slot);
+        }
+        assert!(!placer.admit_job(&t, 0), "at the threshold the job defers");
+        // An idle subtree always admits even with threshold 0 (clamped).
+        let idle = Placer::new(&PolicyCfg::default(), &hier, 0, 1);
+        t.load_threshold = 0;
+        assert!(idle.admit_job(&t, 0));
     }
 
     #[test]

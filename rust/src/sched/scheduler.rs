@@ -44,7 +44,7 @@
 use crate::config::PlatformConfig;
 use crate::dep::node::ReadyAction;
 use crate::fxmap::FxHashMap;
-use crate::ids::{CoreId, Cycles, NodeId, ReqId, TaskId};
+use crate::ids::{CoreId, Cycles, JobId, NodeId, RegionId, ReqId, TaskId};
 use crate::noc::msg::{MemOpKind, Msg, ProducerRange};
 use crate::memory::region::PackScratch;
 use crate::sched::hierarchy::HierarchyMap;
@@ -52,7 +52,8 @@ use crate::sched::policy::Placer;
 use crate::sched::readyq::ReadyQ;
 use crate::sim::engine::{CoreLogic, Ctx};
 use crate::sim::event::{Event, TimerKind};
-use crate::task::descriptor::{Access, TaskDesc};
+use crate::sim::traffic::{self, JobPhase, JobTimer};
+use crate::task::descriptor::{Access, TaskArg, TaskDesc};
 use crate::task::table::TaskState;
 
 /// Custom-timer tag for the deny-retry backoff rearm (see
@@ -273,6 +274,14 @@ impl SchedLogic {
         let now = ctx.now();
         let task = ctx.world.tasks.create(desc, parent, self.idx, now);
         ctx.world.gstats.tasks_spawned += 1;
+        // Traffic books ride the same exactly-once site as the global
+        // spawn counter. `job` is inherited from the parent entry, so a
+        // non-traffic run (job == None everywhere) never takes the branch.
+        if let Some(j) = ctx.world.tasks.get(task).job {
+            if let Some(tr) = ctx.world.traffic.as_mut() {
+                tr.on_task_spawned(j);
+            }
+        }
         // sys_spawn is a synchronous RPC, and the ack doubles as the
         // race-closing rendezvous: it is sent only after every argument
         // traversal has settled (see Msg::DepDescend::settle).
@@ -1068,6 +1077,13 @@ impl SchedLogic {
             }
         }
         ctx.world.gstats.tasks_completed += 1;
+        // Traffic books: same exactly-once site as the completion counter
+        // (the dedup above covers crash-recovery duplicates too).
+        if let Some(j) = ctx.world.tasks.get(task).job {
+            if let Some(tr) = ctx.world.traffic.as_mut() {
+                tr.on_task_completed(j, now);
+            }
+        }
         let desc = ctx.world.tasks.get(task).desc.clone();
         for (i, a) in desc.dep_args() {
             let node = a.node.unwrap();
@@ -1082,7 +1098,14 @@ impl SchedLogic {
                 self.send_routed(ctx, to, Msg::PopEntry { node, task, arg: i });
             }
         }
-        if ctx.world.gstats.tasks_completed == ctx.world.gstats.tasks_spawned {
+        // Quiescence: under traffic, counts matching between jobs (or
+        // while deferred jobs await their retry timers) must not end the
+        // run — the gate additionally requires every arrival fired and
+        // every admitted job drained. `traffic == None` keeps the
+        // original single-job gate bit-for-bit.
+        if ctx.world.gstats.tasks_completed == ctx.world.gstats.tasks_spawned
+            && ctx.world.traffic.as_ref().map_or(true, |t| t.all_done())
+        {
             ctx.world.done = true;
         }
         // The decay may have opened headroom (dispatch a held task) or
@@ -1090,6 +1113,90 @@ impl SchedLogic {
         // is disabled: the queue is empty and maybe_steal returns early.
         self.pump(ctx);
         self.maybe_steal(ctx);
+    }
+
+    // ==================================================== traffic admission
+
+    /// A job's arrival timer fired (pre-pushed at build time from the
+    /// open-loop schedule): first admission attempt, at this entry
+    /// scheduler. The phase/entry guards make a duplicate firing a no-op:
+    /// crash recovery re-arms job timers (the engine drops timers that
+    /// fire inside a down window), and after a *spurious* declaration
+    /// both the original timer and the adopter's re-arm can fire — the
+    /// first one to process wins, deterministically.
+    fn on_job_arrival(&mut self, ctx: &mut Ctx<'_>, j: JobId) {
+        match ctx.world.traffic.as_mut() {
+            Some(tr) if tr.job(j).phase == JobPhase::Scheduled && tr.job(j).entry == self.idx => {
+                tr.note_arrived(j);
+            }
+            _ => return,
+        }
+        self.try_admit(ctx, j);
+    }
+
+    /// A deferred job's backoff timer fired: re-run admission against
+    /// current (drained-since) state. Same duplicate-firing guards as
+    /// [`Scheduler::on_job_arrival`].
+    fn on_job_retry(&mut self, ctx: &mut Ctx<'_>, j: JobId) {
+        match ctx.world.traffic.as_ref() {
+            Some(tr) if tr.job(j).phase == JobPhase::Deferred && tr.job(j).entry == self.idx => {}
+            _ => return,
+        }
+        self.try_admit(ctx, j);
+    }
+
+    /// Decentralized admission. The decision consults only state local to
+    /// this scheduler — its own load books via the [`Placer`] seam and the
+    /// tenant's live-job count — never the hierarchy root, so admission
+    /// scales with the number of top-level subtrees. Admit injects the
+    /// job's root task pre-granted on a fresh per-job region *pinned to
+    /// this scheduler* (ownership discipline: admission mutates nothing
+    /// another scheduler owns); defer re-arms a retry timer with capped
+    /// exponential backoff, so a job is never dropped — load drains as
+    /// running tasks finish and a later retry must eventually pass.
+    fn try_admit(&mut self, ctx: &mut Ctx<'_>, j: JobId) {
+        let (shape, main_fn, live) = match ctx.world.traffic.as_ref() {
+            Some(tr) => {
+                let b = tr.job(j);
+                (b.shape, tr.main_fn, tr.tenant_live(b.tenant))
+            }
+            None => return,
+        };
+        // The decision reads the same books a load report would.
+        ctx.charge(ctx.sim.cost.sc_load_report);
+        if !self.placer.admit_job(&ctx.world.cfg.traffic, live) {
+            let delay = ctx.world.traffic.as_mut().unwrap().note_deferred(j);
+            ctx.after(delay, TimerKind::Custom(traffic::retry_tag(j)));
+            return;
+        }
+        // Inject: mirror the boot main-task path (create + pre-grant on a
+        // fresh region + straight to packing). The region is empty, so the
+        // pre-grant is trivially race-free, and it is owned here, so the
+        // whole admission is one local event.
+        ctx.charge(ctx.sim.cost.sc_ralloc + ctx.sim.cost.sc_spawn_handle + ctx.sim.cost.sc_grant);
+        let now = ctx.now();
+        let region = ctx.world.mem.ralloc_pinned(RegionId::ROOT, self.idx);
+        let desc = TaskDesc::new(
+            main_fn,
+            vec![
+                TaskArg::region_inout(region),
+                TaskArg::val(shape.tasks as u64),
+                TaskArg::val(shape.task_cycles),
+                TaskArg::val(shape.fanout as u64),
+                TaskArg::val(shape.hot_pct as u64),
+            ],
+        );
+        let task = ctx.world.tasks.create(desc, None, self.idx, now);
+        ctx.world.tasks.get_mut(task).job = Some(j);
+        ctx.world.gstats.tasks_spawned += 1;
+        ctx.world.traffic.as_mut().unwrap().note_admitted(j, task, now);
+        {
+            let mem = &ctx.world.mem;
+            let node = ctx.world.dep.node_mut(NodeId::Region(region), mem);
+            node.enqueue_granted(task, 0, Access::Write);
+        }
+        ctx.world.tasks.get_mut(task).deps_pending = 0;
+        self.task_ready(ctx, task);
     }
 
     fn on_pop_entry(&mut self, ctx: &mut Ctx<'_>, node: NodeId, task: TaskId, arg: usize) {
@@ -1389,6 +1496,40 @@ impl SchedLogic {
             ctx.charge(ctx.sim.cost.sc_steal_per_task);
             self.enqueue_ready(ctx, t);
         }
+        // Traffic takeover: timers that fire at a dead core are dropped
+        // by the engine, so the dead child's not-yet-admitted jobs move
+        // here — entry reassigned, arrival/retry timers re-armed at this
+        // scheduler. Already-live jobs need nothing: their tasks drain
+        // through the task-table recovery above. If the declaration was
+        // spurious the original timers may still fire at the (alive)
+        // child, where the entry guard drops them.
+        if let Some(tr) = ctx.world.traffic.as_mut() {
+            let now = ctx.now();
+            let backoff = tr.retry_backoff;
+            let mut rearm: Vec<(Cycles, u64)> = Vec::new();
+            for (i, b) in tr.jobs.iter_mut().enumerate() {
+                if b.entry != child {
+                    continue;
+                }
+                let j = JobId(i as u32);
+                match b.phase {
+                    JobPhase::Scheduled => {
+                        b.entry = self.idx;
+                        let delay = b.submit_at.saturating_sub(now).max(1);
+                        rearm.push((delay, traffic::arrive_tag(j)));
+                    }
+                    JobPhase::Deferred => {
+                        b.entry = self.idx;
+                        rearm.push((backoff, traffic::retry_tag(j)));
+                    }
+                    JobPhase::Live | JobPhase::Done => {}
+                }
+            }
+            for (delay, tag) in rearm {
+                ctx.charge(ctx.sim.cost.sc_load_report);
+                ctx.after(delay, TimerKind::Custom(tag));
+            }
+        }
     }
 
     /// Restart transition, scheduler side: the engine wiped the volatile
@@ -1410,6 +1551,32 @@ impl SchedLogic {
         for t in mine {
             ctx.charge(ctx.sim.cost.sc_steal_per_task);
             self.enqueue_ready(ctx, t);
+        }
+        // Job timers that fired during the down window died with the old
+        // incarnation: re-arm every entry job of ours still waiting. A
+        // surviving original timer (fire time past the restart) makes a
+        // duplicate, which the phase guard drops.
+        if let Some(tr) = ctx.world.traffic.as_ref() {
+            let now = ctx.now();
+            let mut rearm: Vec<(Cycles, u64)> = Vec::new();
+            for (i, b) in tr.jobs.iter().enumerate() {
+                if b.entry != self.idx {
+                    continue;
+                }
+                let j = JobId(i as u32);
+                match b.phase {
+                    JobPhase::Scheduled => {
+                        let delay = b.submit_at.saturating_sub(now).max(1);
+                        rearm.push((delay, traffic::arrive_tag(j)));
+                    }
+                    JobPhase::Deferred => rearm.push((tr.retry_backoff, traffic::retry_tag(j))),
+                    JobPhase::Live | JobPhase::Done => {}
+                }
+            }
+            for (delay, tag) in rearm {
+                ctx.charge(ctx.sim.cost.sc_load_report);
+                ctx.after(delay, TimerKind::Custom(tag));
+            }
         }
         if let Some(p) = ctx.world.hier.parent[self.idx] {
             ctx.charge(ctx.sim.cost.sc_load_report);
@@ -1585,6 +1752,14 @@ impl CoreLogic for SchedLogic {
                 self.maybe_steal(ctx);
             }
             Event::Timer(TimerKind::Custom(HEARTBEAT_TIMER)) => self.on_heartbeat(ctx),
+            // Remaining custom tags: traffic job timers (kind nibble in
+            // the top bits — never collides with the sub-2^32 legacy tags
+            // matched above). Non-traffic runs arm no such timer.
+            Event::Timer(TimerKind::Custom(tag)) => match traffic::decode_tag(tag) {
+                Some(JobTimer::Arrive(j)) => self.on_job_arrival(ctx, j),
+                Some(JobTimer::Retry(j)) => self.on_job_retry(ctx, j),
+                None => {}
+            },
             Event::DmaDone { .. } | Event::Timer(_) | Event::Wake => {}
         }
     }

@@ -3,4 +3,5 @@ pub mod chaos;
 pub mod engine;
 pub mod event;
 pub mod rng;
+pub mod traffic;
 pub mod wheel;

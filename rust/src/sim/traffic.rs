@@ -1,0 +1,470 @@
+//! Multi-tenant traffic layer: open-loop job arrivals + per-tenant books.
+//!
+//! Converts the simulator from one-shot benchmark runs into a
+//! traffic-serving system: many concurrent *jobs* — instances of workload
+//! templates with mixed sizes, tenants and priorities — arrive over
+//! virtual time on an **open-loop, seed-deterministic schedule** computed
+//! entirely at build time from `PlatformConfig::seed`. Each arrival is a
+//! pre-pushed timer event on a deterministically chosen *entry scheduler*
+//! (a top-level subtree root), where a decentralized admission decision is
+//! taken at the `sched::policy` seam: admit (inject the job's root task,
+//! pre-granted on a fresh per-job region owned by the entry scheduler) or
+//! defer (re-arm a retry timer with capped exponential backoff). There is
+//! no front-door dispatcher; the hierarchy root never serializes
+//! admissions (cf. the distributed-manager designs in PAPERS.md).
+//!
+//! Determinism contract: the whole arrival schedule (submit times,
+//! tenants, templates, priorities, entry schedulers) is drawn from one
+//! RNG stream derived from the run seed before the first event executes,
+//! so it is identical across shard counts and replay runs. Retry timers
+//! are armed from deterministic state only (attempt counters). With
+//! `world.traffic == None` (the default) no timer exists, no branch in
+//! the scheduler hot path is taken, and every pre-traffic fingerprint
+//! stays byte-identical.
+//!
+//! The functional books here are world-level state (like `Memory` and
+//! `TaskTable`); ownership discipline still holds because only the entry
+//! scheduler of a job mutates its admission state, and task-level counts
+//! are bumped at the same exactly-once sites as
+//! `GlobalStats::tasks_spawned` / `tasks_completed`.
+
+use crate::ids::{Cycles, JobId, TaskId};
+use crate::sched::hierarchy::HierarchyMap;
+use crate::sim::rng::Rng;
+
+/// Stream-mixer for the traffic RNG: arrivals draw from
+/// `Rng::new(seed ^ TRAFFIC_STREAM)` so the schedule never perturbs the
+/// workload/placement streams derived from the same run seed.
+pub const TRAFFIC_STREAM: u64 = 0x7AFF_1C5E_ED00_0001;
+
+// --- job timer tags -------------------------------------------------------
+//
+// Custom timer tags on scheduler cores. The steal-retry (0x57EA_17) and
+// heartbeat (0xB_EA7) tags are both < 2^32; job tags keep the kind in the
+// top nibble and the job index in the low 32 bits, so the spaces can
+// never collide.
+const TAG_KIND_SHIFT: u32 = 60;
+const ARRIVE_KIND: u64 = 0xA;
+const RETRY_KIND: u64 = 0xB;
+
+/// Timer tag for job `j`'s (single) open-loop arrival.
+pub fn arrive_tag(j: JobId) -> u64 {
+    (ARRIVE_KIND << TAG_KIND_SHIFT) | j.0 as u64
+}
+
+/// Timer tag for a deferred job `j`'s admission retry.
+pub fn retry_tag(j: JobId) -> u64 {
+    (RETRY_KIND << TAG_KIND_SHIFT) | j.0 as u64
+}
+
+/// A decoded job timer.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum JobTimer {
+    Arrive(JobId),
+    Retry(JobId),
+}
+
+/// Decode a custom timer tag; `None` for non-traffic tags (steal retry,
+/// heartbeat), which all live below 2^32.
+pub fn decode_tag(tag: u64) -> Option<JobTimer> {
+    let j = JobId((tag & 0xFFFF_FFFF) as u32);
+    match tag >> TAG_KIND_SHIFT {
+        ARRIVE_KIND => Some(JobTimer::Arrive(j)),
+        RETRY_KIND => Some(JobTimer::Retry(j)),
+        _ => None,
+    }
+}
+
+// --- job templates --------------------------------------------------------
+
+/// Size/shape of one job instance: the generic job body (`apps::jobs`)
+/// turns this into `tasks` independent compute tasks of `task_cycles`
+/// each, allocated over `fanout` subregions of the job's root region,
+/// with `hot_pct` percent of them skewed into subregion 0.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub struct JobShape {
+    pub tasks: u32,
+    pub task_cycles: u64,
+    pub fanout: u32,
+    pub hot_pct: u32,
+}
+
+impl JobShape {
+    /// Tasks a job of this shape contributes, root task included.
+    pub fn total_tasks(&self) -> u64 {
+        1 + self.tasks as u64
+    }
+}
+
+/// A workload's instantiation as a traffic job template (see
+/// `Workload::job_shape`): the template name keyed into reports plus the
+/// shape the generic job body realizes.
+#[derive(Clone, Copy, Debug)]
+pub struct JobTemplate {
+    pub name: &'static str,
+    pub shape: JobShape,
+}
+
+// --- per-job / per-tenant books -------------------------------------------
+
+/// Admission lifecycle of a job.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum JobPhase {
+    /// Arrival timer pre-pushed, not fired yet.
+    Scheduled,
+    /// Arrived but deferred by admission control; a retry timer is armed.
+    Deferred,
+    /// Admitted; tasks in flight.
+    Live,
+    /// All of the job's tasks completed.
+    Done,
+}
+
+/// Everything recorded about one job.
+#[derive(Clone, Debug)]
+pub struct JobBook {
+    pub tenant: u32,
+    pub template: &'static str,
+    pub shape: JobShape,
+    /// Accounting priority class (0 = highest), drawn per job. Recorded
+    /// in reports; admission policies may consume it in the future.
+    pub priority: u8,
+    /// Entry scheduler index (a top-level subtree root) that owns this
+    /// job's admission and root region.
+    pub entry: usize,
+    pub submit_at: Cycles,
+    pub phase: JobPhase,
+    /// Admission attempts so far (0 = not yet arrived; 1 = admitted or
+    /// deferred on first try).
+    pub attempts: u32,
+    pub admit_at: Cycles,
+    pub finish_at: Cycles,
+    /// The injected root task, once admitted.
+    pub root_task: Option<TaskId>,
+    /// Tasks of this job currently alive (spawned, not completed).
+    pub live: u64,
+    pub spawned: u64,
+    pub completed: u64,
+}
+
+impl JobBook {
+    /// Submit-to-finish job latency (valid once `phase == Done`).
+    pub fn latency(&self) -> Cycles {
+        self.finish_at.saturating_sub(self.submit_at)
+    }
+}
+
+/// Per-tenant aggregate books. Drain to zero live jobs at quiescence —
+/// the `check_jobs` oracle pins this.
+#[derive(Clone, Copy, Default, Debug)]
+pub struct TenantBook {
+    pub submitted: u32,
+    pub live_jobs: u32,
+    pub finished: u32,
+    pub deferrals: u64,
+}
+
+/// World-level traffic state: the arrival schedule plus all books.
+/// `None` in `World::traffic` means the traffic layer does not exist —
+/// the byte-identity contract for every single-job fingerprint.
+#[derive(Clone, Debug)]
+pub struct TrafficState {
+    pub jobs: Vec<JobBook>,
+    pub tenants: Vec<TenantBook>,
+    /// Registry index of the generic job root body (`apps::jobs`).
+    pub main_fn: usize,
+    /// Deferred-retry backoff base, cycles (shifted by attempt count,
+    /// capped — see [`TrafficState::note_deferred`]).
+    pub retry_backoff: Cycles,
+    /// Arrival timers not yet fired.
+    pub arrivals_pending: u32,
+    /// Jobs not yet `Done` (scheduled + deferred + live).
+    pub unfinished: u32,
+    pub admitted: u32,
+    pub total_deferrals: u64,
+}
+
+impl TrafficState {
+    /// Build the full seed-deterministic arrival schedule. Inter-arrival
+    /// gaps are uniform-jittered around `mean_gap` (integer arithmetic
+    /// only — no libm calls whose rounding could vary across hosts);
+    /// tenants are drawn weighted by `tenant_weights` (uniform when
+    /// empty); templates round through `templates` by RNG draw.
+    pub fn generate(
+        cfg: &crate::config::TrafficCfg,
+        seed: u64,
+        hier: &HierarchyMap,
+        main_fn: usize,
+        templates: &[JobTemplate],
+    ) -> TrafficState {
+        assert!(cfg.enabled, "generating traffic with traffic disabled");
+        assert!(!templates.is_empty(), "traffic needs at least one job template");
+        assert!(cfg.tenants >= 1 && cfg.jobs >= 1);
+        let mut rng = Rng::new(seed ^ TRAFFIC_STREAM);
+        let entries: Vec<usize> =
+            if hier.children[0].is_empty() { vec![0] } else { hier.children[0].clone() };
+        let weights: Vec<u64> = if cfg.tenant_weights.is_empty() {
+            vec![1; cfg.tenants as usize]
+        } else {
+            assert_eq!(cfg.tenant_weights.len(), cfg.tenants as usize);
+            cfg.tenant_weights.clone()
+        };
+        let wsum: u64 = weights.iter().sum::<u64>().max(1);
+        let mean = cfg.mean_gap.max(2);
+        let mut t: Cycles = 0;
+        let mut jobs = Vec::with_capacity(cfg.jobs as usize);
+        for _ in 0..cfg.jobs {
+            // Open loop: the next submit time never waits on completions.
+            t += rng.range(mean / 2, mean + mean / 2);
+            let mut pick = rng.below(wsum);
+            let mut tenant = 0u32;
+            for (i, &w) in weights.iter().enumerate() {
+                if pick < w {
+                    tenant = i as u32;
+                    break;
+                }
+                pick -= w;
+            }
+            let tpl = templates[rng.below(templates.len() as u64) as usize];
+            let priority = rng.below(3) as u8;
+            let entry = entries[rng.below(entries.len() as u64) as usize];
+            jobs.push(JobBook {
+                tenant,
+                template: tpl.name,
+                shape: tpl.shape,
+                priority,
+                entry,
+                submit_at: t,
+                phase: JobPhase::Scheduled,
+                attempts: 0,
+                admit_at: 0,
+                finish_at: 0,
+                root_task: None,
+                live: 0,
+                spawned: 0,
+                completed: 0,
+            });
+        }
+        let mut tenants = vec![TenantBook::default(); cfg.tenants as usize];
+        for j in &jobs {
+            tenants[j.tenant as usize].submitted += 1;
+        }
+        TrafficState {
+            arrivals_pending: jobs.len() as u32,
+            unfinished: jobs.len() as u32,
+            jobs,
+            tenants,
+            main_fn,
+            retry_backoff: cfg.retry_backoff.max(1),
+            admitted: 0,
+            total_deferrals: 0,
+        }
+    }
+
+    /// Quiescence condition the engine gate consults: every arrival has
+    /// fired and every job has drained. While this is false, completed
+    /// task counts matching spawned counts does *not* end the run.
+    pub fn all_done(&self) -> bool {
+        self.arrivals_pending == 0 && self.unfinished == 0
+    }
+
+    pub fn job(&self, j: JobId) -> &JobBook {
+        &self.jobs[j.idx()]
+    }
+
+    /// Live jobs of a tenant right now — the `TenantCap` admission input.
+    pub fn tenant_live(&self, tenant: u32) -> u32 {
+        self.tenants[tenant as usize].live_jobs
+    }
+
+    /// The arrival timer for `j` fired (first admission attempt).
+    pub fn note_arrived(&mut self, j: JobId) {
+        let b = &mut self.jobs[j.idx()];
+        debug_assert_eq!(b.phase, JobPhase::Scheduled);
+        self.arrivals_pending -= 1;
+    }
+
+    /// Admission deferred `j`; returns the backoff delay for the retry
+    /// timer (base shifted by attempt count, capped so the delay cannot
+    /// overflow or grow unbounded).
+    pub fn note_deferred(&mut self, j: JobId) -> Cycles {
+        let b = &mut self.jobs[j.idx()];
+        b.phase = JobPhase::Deferred;
+        b.attempts += 1;
+        self.tenants[b.tenant as usize].deferrals += 1;
+        self.total_deferrals += 1;
+        self.retry_backoff << (b.attempts - 1).min(6)
+    }
+
+    /// Admission accepted `j`: its root task is injected at the entry
+    /// scheduler. Counts the root task as spawned-and-live.
+    pub fn note_admitted(&mut self, j: JobId, root: TaskId, now: Cycles) {
+        let b = &mut self.jobs[j.idx()];
+        debug_assert!(b.phase == JobPhase::Scheduled || b.phase == JobPhase::Deferred);
+        b.phase = JobPhase::Live;
+        b.attempts += 1;
+        b.admit_at = now;
+        b.root_task = Some(root);
+        b.live = 1;
+        b.spawned = 1;
+        self.tenants[b.tenant as usize].live_jobs += 1;
+        self.admitted += 1;
+    }
+
+    /// A task belonging to `j` was spawned (same exactly-once site as
+    /// `GlobalStats::tasks_spawned`).
+    pub fn on_task_spawned(&mut self, j: JobId) {
+        let b = &mut self.jobs[j.idx()];
+        b.live += 1;
+        b.spawned += 1;
+    }
+
+    /// A task belonging to `j` completed (same exactly-once site as
+    /// `GlobalStats::tasks_completed`). Returns `true` when this drained
+    /// the job — per-channel FIFO ordering guarantees every spawn of the
+    /// job was already counted before its parent's completion is
+    /// processed, so a zero live count really is the job's end.
+    pub fn on_task_completed(&mut self, j: JobId, now: Cycles) -> bool {
+        let b = &mut self.jobs[j.idx()];
+        b.completed += 1;
+        debug_assert!(b.live > 0, "completion underflow on {j}");
+        b.live -= 1;
+        if b.live == 0 && b.phase == JobPhase::Live {
+            b.phase = JobPhase::Done;
+            b.finish_at = now;
+            let tb = &mut self.tenants[b.tenant as usize];
+            tb.live_jobs -= 1;
+            tb.finished += 1;
+            self.unfinished -= 1;
+            return true;
+        }
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{HierarchySpec, TrafficCfg};
+
+    fn hier() -> HierarchyMap {
+        HierarchyMap::build(32, &HierarchySpec::two_level(4))
+    }
+
+    fn templates() -> Vec<JobTemplate> {
+        vec![
+            JobTemplate {
+                name: "a",
+                shape: JobShape { tasks: 4, task_cycles: 1000, fanout: 2, hot_pct: 0 },
+            },
+            JobTemplate {
+                name: "b",
+                shape: JobShape { tasks: 8, task_cycles: 500, fanout: 4, hot_pct: 90 },
+            },
+        ]
+    }
+
+    #[test]
+    fn tag_codec_round_trips_and_avoids_legacy_tags() {
+        let j = JobId(77);
+        assert_eq!(decode_tag(arrive_tag(j)), Some(JobTimer::Arrive(j)));
+        assert_eq!(decode_tag(retry_tag(j)), Some(JobTimer::Retry(j)));
+        // Legacy custom tags (steal retry, heartbeat) are below 2^32 and
+        // must never decode as job timers.
+        assert_eq!(decode_tag(0x57EA_17), None);
+        assert_eq!(decode_tag(0xB_EA7), None);
+        assert_ne!(arrive_tag(j), retry_tag(j));
+    }
+
+    #[test]
+    fn generation_is_seed_deterministic() {
+        let cfg = TrafficCfg::on(12, 3);
+        let h = hier();
+        let a = TrafficState::generate(&cfg, 42, &h, 7, &templates());
+        let b = TrafficState::generate(&cfg, 42, &h, 7, &templates());
+        assert_eq!(a.jobs.len(), 12);
+        for (x, y) in a.jobs.iter().zip(&b.jobs) {
+            assert_eq!(x.submit_at, y.submit_at);
+            assert_eq!(x.tenant, y.tenant);
+            assert_eq!(x.template, y.template);
+            assert_eq!(x.entry, y.entry);
+            assert_eq!(x.priority, y.priority);
+        }
+        let c = TrafficState::generate(&cfg, 43, &h, 7, &templates());
+        assert!(
+            a.jobs.iter().zip(&c.jobs).any(|(x, y)| x.submit_at != y.submit_at),
+            "different seeds must draw different schedules"
+        );
+    }
+
+    #[test]
+    fn arrivals_are_open_loop_and_entries_are_subtree_roots() {
+        let cfg = TrafficCfg::on(32, 2);
+        let h = hier();
+        let t = TrafficState::generate(&cfg, 7, &h, 0, &templates());
+        let mut prev = 0;
+        for j in &t.jobs {
+            assert!(j.submit_at > prev, "submit times strictly increase");
+            assert!(
+                j.submit_at - prev <= cfg.mean_gap + cfg.mean_gap / 2,
+                "gap bounded by the jitter window"
+            );
+            prev = j.submit_at;
+            assert!(h.children[0].contains(&j.entry));
+        }
+        // Tenant books account for every submission.
+        let total: u32 = t.tenants.iter().map(|b| b.submitted).sum();
+        assert_eq!(total, 32);
+    }
+
+    #[test]
+    fn book_lifecycle_drains() {
+        let cfg = TrafficCfg::on(2, 1);
+        let h = hier();
+        let mut t = TrafficState::generate(&cfg, 1, &h, 0, &templates());
+        assert!(!t.all_done());
+        // Job 0: deferred once, then admitted with a 2-task tree.
+        t.note_arrived(JobId(0));
+        let d0 = t.note_deferred(JobId(0));
+        assert_eq!(d0, t.retry_backoff);
+        let d1 = t.note_deferred(JobId(0));
+        assert_eq!(d1, t.retry_backoff << 1);
+        t.note_admitted(JobId(0), TaskId(5), 100);
+        assert_eq!(t.tenant_live(0), 1);
+        t.on_task_spawned(JobId(0));
+        assert!(!t.on_task_completed(JobId(0), 200), "root still live");
+        assert!(t.on_task_completed(JobId(0), 300), "last completion drains the job");
+        assert_eq!(t.job(JobId(0)).latency(), 300 - t.job(JobId(0)).submit_at);
+        assert_eq!(t.tenant_live(0), 0);
+        assert!(!t.all_done(), "job 1 still scheduled");
+        // Job 1: admitted first try, drains immediately.
+        t.note_arrived(JobId(1));
+        t.note_admitted(JobId(1), TaskId(9), 400);
+        assert!(t.on_task_completed(JobId(1), 500));
+        assert!(t.all_done());
+        assert_eq!(t.admitted, 2);
+        assert_eq!(t.total_deferrals, 2);
+        assert_eq!(t.tenants[0].finished, 2);
+    }
+
+    #[test]
+    fn flat_hierarchy_enters_at_the_root() {
+        let cfg = TrafficCfg::on(4, 1);
+        let h = HierarchyMap::build(4, &HierarchySpec::flat());
+        let t = TrafficState::generate(&cfg, 3, &h, 0, &templates());
+        assert!(t.jobs.iter().all(|j| j.entry == 0));
+    }
+
+    #[test]
+    fn weighted_tenants_skew_the_draw() {
+        let mut cfg = TrafficCfg::on(64, 2);
+        cfg.tenant_weights = vec![7, 1];
+        let t = TrafficState::generate(&cfg, 11, &hier(), 0, &templates());
+        assert!(
+            t.tenants[0].submitted > t.tenants[1].submitted,
+            "7:1 weights must skew submissions: {:?}",
+            t.tenants
+        );
+        assert_eq!(t.tenants[0].submitted + t.tenants[1].submitted, 64);
+    }
+}

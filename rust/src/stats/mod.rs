@@ -1,2 +1,3 @@
 //! Metrics and report generation.
 pub mod metrics;
+pub mod tenants;

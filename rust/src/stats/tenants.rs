@@ -1,0 +1,169 @@
+//! Per-tenant traffic accounting: job-latency percentiles and Jain's
+//! fairness index over the finished [`TrafficState`] books.
+//!
+//! Everything here is integer/deterministic except the Jain index, which
+//! is a pure report-side f64 over final counters — it never feeds back
+//! into the simulation, so the engine's bit-identical replay contract is
+//! untouched.
+
+use crate::ids::Cycles;
+use crate::sim::traffic::{JobPhase, TrafficState};
+
+/// The `q`-th percentile (0..=100) of `xs` by the nearest-rank method on
+/// a sorted copy. Deterministic: integer rank arithmetic only. Returns 0
+/// for an empty slice.
+pub fn percentile(xs: &[Cycles], q: u32) -> Cycles {
+    if xs.is_empty() {
+        return 0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_unstable();
+    // Nearest-rank: ceil(q/100 * n), 1-based; q=0 maps to the minimum.
+    let n = v.len() as u64;
+    let rank = (q as u64 * n).div_ceil(100).max(1);
+    v[(rank - 1) as usize]
+}
+
+/// Jain's fairness index over per-tenant allocations:
+/// `(sum x)^2 / (n * sum x^2)`. 1.0 = perfectly fair, 1/n = one tenant
+/// monopolizes. Empty or all-zero input reports 1.0 (nothing was unfairly
+/// shared).
+pub fn jain(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 1.0;
+    }
+    let sum: f64 = xs.iter().sum();
+    let sq: f64 = xs.iter().map(|x| x * x).sum();
+    if sq == 0.0 {
+        return 1.0;
+    }
+    (sum * sum) / (xs.len() as f64 * sq)
+}
+
+/// One tenant's aggregate over a finished traffic run.
+#[derive(Clone, Debug)]
+pub struct TenantSummary {
+    pub tenant: u32,
+    pub jobs: u32,
+    pub finished: u32,
+    pub deferrals: u64,
+    pub p50_latency: Cycles,
+    pub p99_latency: Cycles,
+    /// Total task-cycles of work this tenant's finished jobs carried —
+    /// the "allocation" the fairness index is computed over.
+    pub service_cycles: u64,
+}
+
+/// Whole-run traffic report: per-tenant summaries plus the cross-tenant
+/// fairness index.
+#[derive(Clone, Debug)]
+pub struct TrafficReport {
+    pub tenants: Vec<TenantSummary>,
+    pub p50_latency: Cycles,
+    pub p99_latency: Cycles,
+    /// Jain index over per-tenant service cycles, weighted by submitted
+    /// jobs (each tenant's service normalized by its offered load, so a
+    /// heavy tenant isn't counted as "unfairly favored" for receiving
+    /// the service it asked for).
+    pub jain_index: f64,
+    pub total_deferrals: u64,
+    pub admitted: u32,
+}
+
+/// Summarize a finished run's books. Tolerates unfinished jobs (they are
+/// excluded from latency/service aggregates) so the report is also usable
+/// on truncated runs.
+pub fn tenant_report(tr: &TrafficState) -> TrafficReport {
+    let mut tenants = Vec::with_capacity(tr.tenants.len());
+    let mut all_lat: Vec<Cycles> = Vec::with_capacity(tr.jobs.len());
+    for (i, tb) in tr.tenants.iter().enumerate() {
+        let mut lat: Vec<Cycles> = Vec::new();
+        let mut service = 0u64;
+        for j in &tr.jobs {
+            if j.tenant as usize != i || j.phase != JobPhase::Done {
+                continue;
+            }
+            lat.push(j.latency());
+            service += j.shape.tasks as u64 * j.shape.task_cycles;
+        }
+        all_lat.extend_from_slice(&lat);
+        tenants.push(TenantSummary {
+            tenant: i as u32,
+            jobs: tb.submitted,
+            finished: tb.finished,
+            deferrals: tb.deferrals,
+            p50_latency: percentile(&lat, 50),
+            p99_latency: percentile(&lat, 99),
+            service_cycles: service,
+        });
+    }
+    let shares: Vec<f64> = tenants
+        .iter()
+        .filter(|t| t.jobs > 0)
+        .map(|t| t.service_cycles as f64 / t.jobs as f64)
+        .collect();
+    TrafficReport {
+        p50_latency: percentile(&all_lat, 50),
+        p99_latency: percentile(&all_lat, 99),
+        jain_index: jain(&shares),
+        total_deferrals: tr.total_deferrals,
+        admitted: tr.admitted,
+        tenants,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let xs: Vec<Cycles> = (1..=100).collect();
+        assert_eq!(percentile(&xs, 50), 50);
+        assert_eq!(percentile(&xs, 99), 99);
+        assert_eq!(percentile(&xs, 100), 100);
+        assert_eq!(percentile(&xs, 0), 1);
+        assert_eq!(percentile(&[7], 99), 7);
+        assert_eq!(percentile(&[], 50), 0);
+        // Unsorted input is handled (sorted copy).
+        assert_eq!(percentile(&[30, 10, 20], 50), 20);
+    }
+
+    #[test]
+    fn jain_bounds() {
+        assert_eq!(jain(&[]), 1.0);
+        assert_eq!(jain(&[0.0, 0.0]), 1.0);
+        assert!((jain(&[5.0, 5.0, 5.0, 5.0]) - 1.0).abs() < 1e-12, "equal shares are fair");
+        let mono = jain(&[10.0, 0.0, 0.0, 0.0]);
+        assert!((mono - 0.25).abs() < 1e-12, "monopoly hits 1/n: {mono}");
+        let mid = jain(&[4.0, 1.0]);
+        assert!(mid > 0.5 && mid < 1.0);
+    }
+
+    #[test]
+    fn report_aggregates_only_finished_jobs() {
+        use crate::config::{HierarchySpec, TrafficCfg};
+        use crate::ids::{JobId, TaskId};
+        use crate::sched::hierarchy::HierarchyMap;
+        use crate::sim::traffic::{JobShape, JobTemplate, TrafficState};
+        let h = HierarchyMap::build(16, &HierarchySpec::two_level(4));
+        let tpl = [JobTemplate {
+            name: "t",
+            shape: JobShape { tasks: 4, task_cycles: 1000, fanout: 2, hot_pct: 0 },
+        }];
+        let mut tr = TrafficState::generate(&TrafficCfg::on(3, 2), 9, &h, 0, &tpl);
+        // Finish job 0 only (root task alone).
+        tr.note_arrived(JobId(0));
+        tr.note_admitted(JobId(0), TaskId(1), tr.jobs[0].submit_at + 10);
+        assert!(tr.on_task_completed(JobId(0), tr.jobs[0].submit_at + 500));
+        let rep = tenant_report(&tr);
+        assert_eq!(rep.admitted, 1);
+        assert_eq!(rep.p50_latency, 500);
+        assert_eq!(rep.p99_latency, 500);
+        let finished: u32 = rep.tenants.iter().map(|t| t.finished).sum();
+        assert_eq!(finished, 1);
+        let jobs: u32 = rep.tenants.iter().map(|t| t.jobs).sum();
+        assert_eq!(jobs, 3, "submissions counted even when unfinished");
+        assert!(rep.jain_index > 0.0 && rep.jain_index <= 1.0);
+    }
+}

@@ -9,7 +9,7 @@
 use std::sync::Arc;
 
 use crate::arena::SlotArena;
-use crate::ids::{CoreId, Cycles, TaskId};
+use crate::ids::{CoreId, Cycles, JobId, TaskId};
 use crate::noc::msg::ProducerRange;
 use crate::task::descriptor::TaskDesc;
 
@@ -68,6 +68,11 @@ pub struct TaskEntry {
     /// re-issue exactly-once. 0 for the entire life of a task that never
     /// met a crash.
     pub epoch: u32,
+    /// Traffic job this task belongs to (`None` for single-job runs and
+    /// the boot task). Inherited from the parent at creation, so a whole
+    /// job's task tree carries its job id without any per-spawn lookup
+    /// beyond the parent entry already in hand.
+    pub job: Option<JobId>,
     // --- timeline, for profiling/reports ---
     pub spawned_at: Cycles,
     pub ready_at: Cycles,
@@ -98,6 +103,7 @@ impl TaskTable {
     ) -> TaskId {
         let id = TaskId(self.tasks.capacity_used() as u64);
         let deps_pending = desc.n_dep_args();
+        let job = parent.and_then(|p| self.get(p).job);
         let slot = self.tasks.insert(TaskEntry {
             id,
             desc: Arc::new(desc),
@@ -110,6 +116,7 @@ impl TaskTable {
             worker: None,
             phase: 0,
             epoch: 0,
+            job,
             spawned_at: now,
             ready_at: 0,
             started_at: 0,
@@ -200,6 +207,21 @@ mod tests {
         assert!(!t.is_ancestor(c, a));
         assert!(!t.is_ancestor(b, d));
         assert!(!t.is_ancestor(a, a), "a task is not its own ancestor");
+    }
+
+    #[test]
+    fn job_id_is_inherited_down_the_spawn_tree() {
+        use crate::ids::JobId;
+        let mut t = TaskTable::new();
+        let root = t.create(desc(), None, 0, 0);
+        assert_eq!(t.get(root).job, None, "boot tasks carry no job");
+        t.get_mut(root).job = Some(JobId(3));
+        let child = t.create(desc(), Some(root), 0, 0);
+        let grandchild = t.create(desc(), Some(child), 0, 0);
+        assert_eq!(t.get(child).job, Some(JobId(3)));
+        assert_eq!(t.get(grandchild).job, Some(JobId(3)));
+        let other = t.create(desc(), None, 0, 0);
+        assert_eq!(t.get(other).job, None);
     }
 
     #[test]

@@ -25,6 +25,7 @@
 
 use crate::sched::scheduler::SchedLogic;
 use crate::sim::engine::Engine;
+use crate::sim::traffic::JobPhase;
 use crate::task::table::TaskState;
 
 /// Non-strict bound for per-scheduler load-estimate residue. With load
@@ -48,6 +49,7 @@ pub fn check_all(eng: &Engine, strict_books: bool) -> Vec<String> {
     check_gstats(eng, &mut v);
     check_journal(eng, &mut v);
     check_recovery(eng, &mut v);
+    check_jobs(eng, &mut v);
     v
 }
 
@@ -262,6 +264,61 @@ pub fn check_recovery(eng: &Engine, out: &mut Vec<String>) {
     }
 }
 
+/// Traffic books: every arrival fired, every job — including every
+/// deferred one — was eventually admitted and completed exactly once,
+/// per-job task counts balance, and the tenant books drained to zero live
+/// jobs. A traffic-free run (`world.traffic == None`) passes vacuously.
+pub fn check_jobs(eng: &Engine, out: &mut Vec<String>) {
+    let Some(tr) = eng.world.traffic.as_ref() else { return };
+    if tr.arrivals_pending != 0 {
+        out.push(format!("job oracle: {} arrivals never fired", tr.arrivals_pending));
+    }
+    if tr.unfinished != 0 {
+        out.push(format!("job oracle: {} jobs unfinished at quiescence", tr.unfinished));
+    }
+    if tr.admitted as usize != tr.jobs.len() {
+        out.push(format!(
+            "job oracle: {} of {} jobs admitted — deferred jobs must eventually \
+             be admitted",
+            tr.admitted,
+            tr.jobs.len()
+        ));
+    }
+    for (i, j) in tr.jobs.iter().enumerate() {
+        if j.phase != JobPhase::Done {
+            out.push(format!(
+                "job oracle: job {i} finished the run in phase {:?}",
+                j.phase
+            ));
+            continue;
+        }
+        if j.live != 0 || j.spawned != j.completed {
+            out.push(format!(
+                "job oracle: job {i} books unbalanced (live {}, spawned {}, \
+                 completed {})",
+                j.live, j.spawned, j.completed
+            ));
+        }
+        if j.attempts == 0 || j.root_task.is_none() {
+            out.push(format!("job oracle: done job {i} has no admission record"));
+        }
+    }
+    for (t, tb) in tr.tenants.iter().enumerate() {
+        if tb.live_jobs != 0 {
+            out.push(format!(
+                "job oracle: tenant {t} still holds {} live jobs",
+                tb.live_jobs
+            ));
+        }
+        if tb.finished != tb.submitted {
+            out.push(format!(
+                "job oracle: tenant {t} finished {} of {} submitted jobs",
+                tb.finished, tb.submitted
+            ));
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     //! Oracle self-tests: each oracle must fail loudly on a seeded
@@ -408,5 +465,64 @@ mod tests {
         eng.world.gstats.crashes = 1;
         eng.world.gstats.crash_denies_synth = eng.world.gstats.steal_denies + 1;
         assert_caught(&check_all(&eng, true), "synthesized denies exceed");
+    }
+
+    /// A small finished traffic run, fully drained (reports on, so the
+    /// loose book bound applies).
+    fn healthy_traffic_engine() -> Engine {
+        use crate::apps::jobs::traffic_boot;
+        use crate::config::TrafficCfg;
+        use crate::sim::traffic::{JobShape, JobTemplate, TrafficState};
+        let (reg, refs) = traffic_boot();
+        let main_fn = refs.job_main.index();
+        let mut cfg = PlatformConfig::new(16, HierarchySpec::two_level(4));
+        cfg.traffic = TrafficCfg::on(6, 2);
+        let tcfg = cfg.traffic.clone();
+        let seed = cfg.seed;
+        let mut plat = Platform::build_with(cfg, reg, refs.boot, move |w| {
+            let tpl = [JobTemplate {
+                name: "t",
+                shape: JobShape { tasks: 4, task_cycles: 200_000, fanout: 2, hot_pct: 50 },
+            }];
+            let tr = TrafficState::generate(&tcfg, seed, &w.hier, main_fn, &tpl);
+            w.traffic = Some(tr);
+        });
+        plat.run_to_quiescence(Some(1 << 44));
+        plat.eng
+    }
+
+    #[test]
+    fn traffic_run_passes_all_oracles() {
+        let eng = healthy_traffic_engine();
+        let v = check_all(&eng, false);
+        assert!(v.is_empty(), "healthy quiesced traffic run must pass: {v:?}");
+    }
+
+    #[test]
+    fn job_oracle_catches_unfinished_job() {
+        let mut eng = healthy_traffic_engine();
+        eng.world.traffic.as_mut().unwrap().unfinished += 1;
+        assert_caught(&check_all(&eng, false), "jobs unfinished");
+    }
+
+    #[test]
+    fn job_oracle_catches_missed_admission() {
+        let mut eng = healthy_traffic_engine();
+        eng.world.traffic.as_mut().unwrap().admitted -= 1;
+        assert_caught(&check_all(&eng, false), "eventually");
+    }
+
+    #[test]
+    fn job_oracle_catches_unbalanced_books() {
+        let mut eng = healthy_traffic_engine();
+        eng.world.traffic.as_mut().unwrap().jobs[0].spawned += 1;
+        assert_caught(&check_all(&eng, false), "books unbalanced");
+    }
+
+    #[test]
+    fn job_oracle_catches_stranded_tenant() {
+        let mut eng = healthy_traffic_engine();
+        eng.world.traffic.as_mut().unwrap().tenants[0].live_jobs += 1;
+        assert_caught(&check_all(&eng, false), "live jobs");
     }
 }

@@ -1,0 +1,143 @@
+//! Determinism gate for the multi-tenant traffic subsystem.
+//!
+//! Two contracts, mirroring the steal/chaos/recovery layers before it:
+//!
+//! 1. **Off by default = byte-identical**: with `TrafficCfg::enabled ==
+//!    false` (the default) no `TrafficState` exists, no arrival timer is
+//!    pushed and the scheduler's quiescence gate takes the
+//!    `map_or(true, ..)` fast path — that contract is pinned by the
+//!    untouched replay fingerprints in `tests/determinism.rs` (including
+//!    the sharded lane) plus the sanity check below.
+//! 2. **On = still a pure function of the seed**: the whole arrival
+//!    schedule (submit times, tenants, templates, priorities, entry
+//!    schedulers) is drawn at build time from `seed ^ TRAFFIC_STREAM`,
+//!    retry timers arm from deterministic attempt counters, and admission
+//!    consults deterministic load books — so two runs of the same
+//!    configuration must replay bit-identically, on flat and deep
+//!    hierarchies alike, with every admission policy.
+
+use myrmics::apps::jobs::traffic_boot;
+use myrmics::apps::workload_api::job_templates;
+use myrmics::config::{AdmissionKind, HierarchySpec, PlatformConfig, TrafficCfg};
+use myrmics::platform::Platform;
+use myrmics::sim::traffic::TrafficState;
+
+/// Everything that must replay bit-identically, including the traffic
+/// layer's own books.
+#[derive(PartialEq, Eq, Debug)]
+struct Fingerprint {
+    final_time: u64,
+    events: u64,
+    msgs: u64,
+    tasks_spawned: u64,
+    tasks_completed: u64,
+    admitted: u32,
+    deferrals: u64,
+    admit_times: Vec<u64>,
+    finish_times: Vec<u64>,
+}
+
+fn run_traffic(mut cfg: PlatformConfig, traffic: TrafficCfg) -> Fingerprint {
+    cfg.traffic = traffic.clone();
+    let (reg, refs) = traffic_boot();
+    let main_fn = refs.job_main.index();
+    let seed = cfg.seed;
+    let mut plat = Platform::build_with(cfg, reg, refs.boot, move |w| {
+        let tr = TrafficState::generate(&traffic, seed, &w.hier, main_fn, &job_templates(1));
+        w.traffic = Some(tr);
+    });
+    let t = plat.run(Some(1 << 44));
+    let g = &plat.world().gstats;
+    let tr = plat.world().traffic.as_ref().expect("traffic installed");
+    assert!(tr.all_done(), "every job must drain before fingerprinting");
+    Fingerprint {
+        final_time: t,
+        events: g.events_processed,
+        msgs: g.msgs_total,
+        tasks_spawned: g.tasks_spawned,
+        tasks_completed: g.tasks_completed,
+        admitted: tr.admitted,
+        deferrals: tr.total_deferrals,
+        admit_times: tr.jobs.iter().map(|j| j.admit_at).collect(),
+        finish_times: tr.jobs.iter().map(|j| j.finish_at).collect(),
+    }
+}
+
+/// Flat hierarchy: every job enters at the single root scheduler; the
+/// run must complete and replay.
+#[test]
+fn traffic_flat_replays_bit_identically() {
+    let run = || run_traffic(PlatformConfig::flat(8), TrafficCfg::on(8, 2));
+    let a = run();
+    let b = run();
+    assert_eq!(a, b, "flat traffic run must replay bit-identically");
+    assert_eq!(a.admitted, 8);
+}
+
+/// Three-level hierarchy: arrivals spread over the top-level subtree
+/// roots, jobs delegate down their subtrees; the whole schedule —
+/// including every admission decision — must replay.
+#[test]
+fn traffic_three_level_replays_bit_identically() {
+    let cfg = || PlatformConfig::new(16, HierarchySpec::multi_level(3, 2));
+    let run = || run_traffic(cfg(), TrafficCfg::on(10, 3));
+    let a = run();
+    let b = run();
+    assert_eq!(a, b, "3-level traffic run must replay bit-identically");
+    assert_eq!(a.admitted, 10);
+}
+
+/// Backpressure policies arm retry timers; the deferral chain must be as
+/// deterministic as the arrivals themselves.
+#[test]
+fn deferred_retries_replay_bit_identically() {
+    let run = || {
+        let mut t = TrafficCfg::on(10, 1).with_admission(AdmissionKind::TenantCap);
+        t.tenant_cap = 1;
+        t.mean_gap = 50_000;
+        run_traffic(PlatformConfig::new(16, HierarchySpec::two_level(4)), t)
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a, b, "deferral/retry chains must replay bit-identically");
+    assert!(a.deferrals > 0, "the cap must actually defer: {a:?}");
+}
+
+/// Different seeds draw different schedules (and still drain).
+#[test]
+fn traffic_schedule_is_a_function_of_the_seed() {
+    let mut cfg = PlatformConfig::new(16, HierarchySpec::two_level(4));
+    cfg.seed = 0xFEED;
+    let a = run_traffic(cfg.clone(), TrafficCfg::on(8, 2));
+    cfg.seed = 0xBEEF;
+    let c = run_traffic(cfg, TrafficCfg::on(8, 2));
+    assert_eq!(a.admitted, c.admitted, "both seeds admit everything");
+    assert_ne!(
+        a.finish_times, c.finish_times,
+        "different seeds must draw different schedules"
+    );
+}
+
+/// Traffic off is the do-nothing path: a plain single-job run neither
+/// installs books nor changes its schedule. (The byte-identity of the
+/// full event schedule is pinned by the untouched fingerprints in
+/// `tests/determinism.rs`; this is the structural half of that contract.)
+#[test]
+fn traffic_off_installs_nothing() {
+    use myrmics::apps::skew::{myrmics as skew_myrmics, SkewParams};
+    let (reg, main) = skew_myrmics();
+    let cfg = PlatformConfig::new(16, HierarchySpec::two_level(4));
+    assert!(!cfg.traffic.enabled);
+    let mut plat = Platform::build_with(cfg, reg, main, |w| {
+        w.app = Some(Box::new(SkewParams {
+            tasks: 24,
+            task_cycles: 100_000,
+            hot_pct: 50,
+            groups: 4,
+        }));
+    });
+    plat.run(Some(1 << 44));
+    assert!(plat.world().traffic.is_none());
+    assert!(plat.world().tasks.iter().all(|t| t.job.is_none()));
+    assert_eq!(plat.world().gstats.tasks_completed, 25);
+}
