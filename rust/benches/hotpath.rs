@@ -36,6 +36,8 @@ struct Record {
     case: String,
     /// Engine shard count the case ran with (1 = legacy single queue).
     shards: usize,
+    /// Host threads stepping the shards (1 = the sequential merge).
+    threads: usize,
     ns_per_op: f64,
     events_per_sec: f64,
 }
@@ -63,7 +65,13 @@ fn time(label: &str, budget_ms: u128, out: &mut Vec<Record>, mut f: impl FnMut()
     println!(
         "{label:<44} {ns_per:>10.1} ns/op  ({iters} runs, {work} ops, {elapsed:.2?})"
     );
-    out.push(Record { case: label.to_string(), shards: 1, ns_per_op: ns_per, events_per_sec: 0.0 });
+    out.push(Record {
+        case: label.to_string(),
+        shards: 1,
+        threads: 1,
+        ns_per_op: ns_per,
+        events_per_sec: 0.0,
+    });
 }
 
 /// Whole-simulation throughput case: run the engine-under-test for
@@ -78,15 +86,17 @@ fn sim_case(
     out: &mut Vec<Record>,
     build: impl FnMut() -> Engine,
 ) {
-    sim_case_sharded(label, 1, budget_ms, out, build)
+    sim_case_sharded(label, 1, 1, budget_ms, out, build)
 }
 
-/// [`sim_case`] with an explicit engine shard count recorded in the JSON
-/// row, so `tools/bench_delta.py` can group the scaling ladder per shard
-/// count instead of seeing three same-named cases.
+/// [`sim_case`] with an explicit engine shard and thread count recorded
+/// in the JSON row, so `tools/bench_delta.py` can group the scaling
+/// ladder per `(shards, threads)` rung instead of seeing same-named
+/// cases.
 fn sim_case_sharded(
     label: &'static str,
     shards: usize,
+    threads: usize,
     budget_ms: u128,
     out: &mut Vec<Record>,
     mut build: impl FnMut() -> Engine,
@@ -114,10 +124,14 @@ fn sim_case_sharded(
     let secs = timed.as_secs_f64();
     let eps = if secs > 0.0 { events as f64 / secs } else { 0.0 };
     let ns_per_event = if events > 0 { secs * 1e9 / events as f64 } else { 0.0 };
-    println!("{label:<44} {eps:>12.0} events/s ({runs} runs, {events} events, {shards} shards)");
+    println!(
+        "{label:<44} {eps:>12.0} events/s ({runs} runs, {events} events, \
+         {shards} shards x {threads} threads)"
+    );
     out.push(Record {
         case: label.to_string(),
         shards,
+        threads,
         ns_per_op: ns_per_event,
         events_per_sec: eps,
     });
@@ -128,8 +142,9 @@ fn emit_json(records: &[Record]) {
         .iter()
         .map(|r| {
             format!(
-                "{{\"case\": \"{}\", \"shards\": {}, \"ns_per_op\": {:.3}, \"events_per_sec\": {:.1}}}",
-                r.case, r.shards, r.ns_per_op, r.events_per_sec
+                "{{\"case\": \"{}\", \"shards\": {}, \"threads\": {}, \
+                 \"ns_per_op\": {:.3}, \"events_per_sec\": {:.1}}}",
+                r.case, r.shards, r.threads, r.ns_per_op, r.events_per_sec
             )
         })
         .collect();
@@ -314,23 +329,29 @@ fn main() {
         })
         .eng
     });
-    // Shard-scaling ladder: the same 256-worker fig7 shape at 1/2/4
-    // engine shards. Same label, distinguished by the `shards` JSON
-    // field. The schedule is bit-identical by contract, so event counts
-    // match across rungs and the events/sec column isolates the engine's
-    // merge overhead (today) and the host-thread speedup (once shards
-    // execute on real threads — see docs/sim-engine.md).
-    for shards in [1usize, 2, 4] {
+    // Shard/thread scaling ladder: the same 256-worker fig7 shape across
+    // `(shards, threads)` rungs. Same label, distinguished by the
+    // `shards`/`threads` JSON fields. The schedule is bit-identical by
+    // contract, so event counts match across rungs: the `threads=1` rows
+    // isolate the engine's sequential merge overhead, and the
+    // `threads>1` rows measure the real host-thread speedup of the
+    // windowed executor (see docs/sim-engine.md "Sharded engine").
+    for (shards, threads) in [(1usize, 1usize), (2, 1), (2, 2), (4, 1), (4, 2), (4, 4)] {
         sim_case_sharded(
             "fig7 independent 256w x 1024 tasks (shard scaling)",
             shards,
+            threads,
             sim_ms,
             &mut records,
             move || {
                 let (reg, main) = independent();
                 let mut cfg = PlatformConfig::hierarchical(256);
-                cfg.shard = ShardCfg::with_shards(shards);
+                cfg.shard = ShardCfg::with_threads(shards, threads);
                 Platform::build_with(cfg, reg, main, |w| {
+                    // fig7-independent satisfies the single-spawner
+                    // contract, so the threaded rungs actually take the
+                    // windowed executor instead of silently falling back.
+                    w.par_safe = true;
                     w.app = Some(Box::new(SynthParams {
                         n_tasks: 1024,
                         task_cycles: 1_000_000,

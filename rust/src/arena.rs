@@ -4,11 +4,21 @@
 //! The simulator's per-event path looks up dependency nodes and task
 //! entries millions of times per second; backing them with hash maps puts
 //! a hash + probe on every grant/re-evaluation step. A [`SlotArena`] keeps
-//! entries in one contiguous `Vec` so a lookup is a bounds check and an
-//! array index, freed slots are recycled through a free list (no steady-
+//! entries in fixed-size chunks so a lookup is a bounds check and two
+//! array indexes, freed slots are recycled through a free list (no steady-
 //! state allocation), and each slot carries a *generation* so a stale
 //! handle held across a free/reuse cycle is detected instead of silently
 //! aliasing the new occupant.
+//!
+//! Storage is *address-stable*: entries live in `CHUNK`-sized boxed
+//! blocks that are never moved or reallocated once created, and the
+//! outer chunk table is pre-reserved to its maximum size so growth never
+//! relocates it either. The threaded sharded executor relies on this —
+//! a shard may read a task entry created by another shard in an earlier
+//! lookahead window (the conservative barrier provides the
+//! happens-before edge) while the owning shard keeps appending; with a
+//! single flat `Vec` that append could reallocate the backing store out
+//! from under the reader.
 
 /// Handle into a [`SlotArena`]: slot index + the generation it was
 /// allocated under. `SlotId::NONE` is the canonical "no slot" sentinel
@@ -33,20 +43,35 @@ struct Slot<T> {
     val: Option<T>,
 }
 
+/// Slots per chunk. A power of two so index decomposition is a shift and
+/// a mask on the hot path.
+const CHUNK_BITS: usize = 12;
+const CHUNK: usize = 1 << CHUNK_BITS;
+/// Upper bound on chunks (16.7M slots). The outer table is reserved to
+/// this up front so pushing a new chunk never reallocates it.
+const MAX_CHUNKS: usize = 4096;
+
+fn new_chunk<T>() -> Box<[Slot<T>]> {
+    (0..CHUNK).map(|_| Slot { gen: 0, val: None }).collect::<Vec<_>>().into_boxed_slice()
+}
+
 /// A generational slot arena. Insertion reuses the most recently freed
 /// slot (LIFO, cache-warm); while nothing is ever removed, slot indices
 /// are handed out densely in insertion order (0, 1, 2, ...), which lets
 /// insert-only users (the task table) treat the slot index itself as the
 /// external id.
 pub struct SlotArena<T> {
-    slots: Vec<Slot<T>>,
+    chunks: Vec<Box<[Slot<T>]>>,
+    /// Dense high-water mark: total slots ever allocated (live + free);
+    /// also the next dense index.
+    used: usize,
     free: Vec<u32>,
     live: usize,
 }
 
 impl<T> Default for SlotArena<T> {
     fn default() -> Self {
-        SlotArena { slots: Vec::new(), free: Vec::new(), live: 0 }
+        SlotArena { chunks: Vec::with_capacity(MAX_CHUNKS), used: 0, free: Vec::new(), live: 0 }
     }
 }
 
@@ -56,7 +81,29 @@ impl<T> SlotArena<T> {
     }
 
     pub fn with_capacity(cap: usize) -> Self {
-        SlotArena { slots: Vec::with_capacity(cap), free: Vec::new(), live: 0 }
+        let mut a = Self::default();
+        for _ in 0..cap.div_ceil(CHUNK).min(MAX_CHUNKS) {
+            a.chunks.push(new_chunk());
+        }
+        a
+    }
+
+    #[inline]
+    fn slot(&self, idx: usize) -> Option<&Slot<T>> {
+        if idx < self.used {
+            Some(&self.chunks[idx >> CHUNK_BITS][idx & (CHUNK - 1)])
+        } else {
+            None
+        }
+    }
+
+    #[inline]
+    fn slot_mut(&mut self, idx: usize) -> Option<&mut Slot<T>> {
+        if idx < self.used {
+            Some(&mut self.chunks[idx >> CHUNK_BITS][idx & (CHUNK - 1)])
+        } else {
+            None
+        }
     }
 
     /// Number of live entries.
@@ -74,26 +121,32 @@ impl<T> SlotArena<T> {
     /// this equals `len()` and is the next dense index.
     #[inline]
     pub fn capacity_used(&self) -> usize {
-        self.slots.len()
+        self.used
     }
 
     pub fn insert(&mut self, val: T) -> SlotId {
         self.live += 1;
         if let Some(idx) = self.free.pop() {
-            let slot = &mut self.slots[idx as usize];
+            let slot = self.slot_mut(idx as usize).expect("free-listed slot exists");
             debug_assert!(slot.val.is_none());
             slot.val = Some(val);
             SlotId { idx, gen: slot.gen }
         } else {
-            let idx = self.slots.len() as u32;
-            self.slots.push(Slot { gen: 0, val: Some(val) });
-            SlotId { idx, gen: 0 }
+            if self.used == self.chunks.len() * CHUNK {
+                assert!(self.chunks.len() < MAX_CHUNKS, "SlotArena chunk table exhausted");
+                self.chunks.push(new_chunk());
+            }
+            let idx = self.used;
+            self.used += 1;
+            let slot = &mut self.chunks[idx >> CHUNK_BITS][idx & (CHUNK - 1)];
+            slot.val = Some(val);
+            SlotId { idx: idx as u32, gen: slot.gen }
         }
     }
 
     #[inline]
     pub fn get(&self, id: SlotId) -> Option<&T> {
-        match self.slots.get(id.idx as usize) {
+        match self.slot(id.idx as usize) {
             Some(s) if s.gen == id.gen => s.val.as_ref(),
             _ => None,
         }
@@ -101,7 +154,7 @@ impl<T> SlotArena<T> {
 
     #[inline]
     pub fn get_mut(&mut self, id: SlotId) -> Option<&mut T> {
-        match self.slots.get_mut(id.idx as usize) {
+        match self.slot_mut(id.idx as usize) {
             Some(s) if s.gen == id.gen => s.val.as_mut(),
             _ => None,
         }
@@ -111,18 +164,18 @@ impl<T> SlotArena<T> {
     /// the external id (generations are all zero in that regime).
     #[inline]
     pub fn get_dense(&self, idx: usize) -> Option<&T> {
-        self.slots.get(idx).and_then(|s| s.val.as_ref())
+        self.slot(idx).and_then(|s| s.val.as_ref())
     }
 
     #[inline]
     pub fn get_dense_mut(&mut self, idx: usize) -> Option<&mut T> {
-        self.slots.get_mut(idx).and_then(|s| s.val.as_mut())
+        self.slot_mut(idx).and_then(|s| s.val.as_mut())
     }
 
     /// Free the slot, bumping its generation so outstanding handles go
     /// stale. Returns the value if the handle was live.
     pub fn remove(&mut self, id: SlotId) -> Option<T> {
-        let slot = self.slots.get_mut(id.idx as usize)?;
+        let slot = self.slot_mut(id.idx as usize)?;
         if slot.gen != id.gen || slot.val.is_none() {
             return None;
         }
@@ -135,12 +188,17 @@ impl<T> SlotArena<T> {
 
     /// Iterate live entries in slot order.
     pub fn iter(&self) -> impl Iterator<Item = &T> {
-        self.slots.iter().filter_map(|s| s.val.as_ref())
+        self.chunks.iter().flat_map(|c| c.iter()).take(self.used).filter_map(|s| s.val.as_ref())
     }
 
     /// Mutable iteration over live entries in slot order.
     pub fn iter_mut(&mut self) -> impl Iterator<Item = &mut T> {
-        self.slots.iter_mut().filter_map(|s| s.val.as_mut())
+        let used = self.used;
+        self.chunks
+            .iter_mut()
+            .flat_map(|c| c.iter_mut())
+            .take(used)
+            .filter_map(|s| s.val.as_mut())
     }
 }
 
@@ -197,5 +255,34 @@ mod tests {
         assert_eq!(a.get(SlotId::NONE), None);
         let id = a.insert(1);
         assert!(!id.is_none());
+    }
+
+    #[test]
+    fn growth_crosses_chunk_boundaries() {
+        let mut a = SlotArena::new();
+        let n = CHUNK + 7;
+        let ids: Vec<SlotId> = (0..n).map(|i| a.insert(i)).collect();
+        assert_eq!(a.len(), n);
+        assert_eq!(a.capacity_used(), n);
+        assert_eq!(ids[CHUNK].idx as usize, CHUNK);
+        assert_eq!(a.get_dense(CHUNK - 1), Some(&(CHUNK - 1)));
+        assert_eq!(a.get_dense(CHUNK), Some(&CHUNK));
+        // Remove across the boundary and reuse LIFO.
+        assert_eq!(a.remove(ids[CHUNK + 1]), Some(CHUNK + 1));
+        let z = a.insert(999);
+        assert_eq!(z.idx, ids[CHUNK + 1].idx);
+        assert_eq!(z.gen, 1);
+        assert_eq!(a.iter().count(), n);
+        assert_eq!(a.capacity_used(), n);
+    }
+
+    #[test]
+    fn with_capacity_preallocates_without_affecting_density() {
+        let mut a: SlotArena<usize> = SlotArena::with_capacity(3 * CHUNK);
+        assert_eq!(a.capacity_used(), 0);
+        for i in 0..10 {
+            assert_eq!(a.insert(i).idx as usize, i);
+        }
+        assert_eq!(a.len(), 10);
     }
 }

@@ -281,6 +281,14 @@ pub struct ShardCfg {
     /// top-level scheduler subtrees (a shard must own at least one whole
     /// subtree; flat hierarchies always run with one shard).
     pub shards: usize,
+    /// Host threads stepping the shards. `1` (the default) keeps the
+    /// sequential merge loop — byte-identical to every pre-threading
+    /// run. With `threads > 1` eligible workloads (see
+    /// `World::par_safe`) step shards on real host threads between the
+    /// conservative barriers; the engine clamps `threads` to the
+    /// effective shard count, and every fingerprint stays bit-identical
+    /// across thread counts.
+    pub threads: usize,
     /// Override the derived conservative lookahead (cycles). `None` (the
     /// default) derives it from the cost model: the minimum one-way wire
     /// latency over all cross-shard tree links. Lowering it below the
@@ -291,25 +299,36 @@ pub struct ShardCfg {
 impl ShardCfg {
     /// Single-shard: the legacy engine path, byte-identical to HEAD.
     pub fn off() -> Self {
-        ShardCfg { shards: 1, lookahead_override: None }
+        ShardCfg { shards: 1, threads: 1, lookahead_override: None }
     }
 
     /// Sharded engine with `n` shards and the derived lookahead.
     pub fn with_shards(n: usize) -> Self {
-        ShardCfg { shards: n.max(1), lookahead_override: None }
+        ShardCfg { shards: n.max(1), threads: 1, lookahead_override: None }
     }
 
-    /// Shard count from the `MYRMICS_SHARDS` environment variable (CI
-    /// runs the whole suite under `MYRMICS_SHARDS=4`); unset, empty or
-    /// unparsable values mean 1 (the legacy path).
+    /// Sharded engine with `n` shards stepped by `t` host threads.
+    pub fn with_threads(n: usize, t: usize) -> Self {
+        ShardCfg { shards: n.max(1), threads: t.clamp(1, n.max(1)), lookahead_override: None }
+    }
+
+    /// Shard/thread counts from the `MYRMICS_SHARDS` / `MYRMICS_THREADS`
+    /// environment variables (CI runs the whole suite under
+    /// `MYRMICS_SHARDS=4` and a second lane adds `MYRMICS_THREADS=4`);
+    /// unset, empty or unparsable values mean 1 (the legacy path).
+    /// Threads are clamped to the shard count — a thread can only step
+    /// whole shards.
     pub fn from_env() -> Self {
-        match std::env::var("MYRMICS_SHARDS") {
-            Ok(v) => match v.trim().parse::<usize>() {
-                Ok(n) if n >= 1 => Self::with_shards(n),
-                _ => Self::off(),
-            },
-            Err(_) => Self::off(),
-        }
+        let parse = |var: &str| -> usize {
+            match std::env::var(var) {
+                Ok(v) => match v.trim().parse::<usize>() {
+                    Ok(n) if n >= 1 => n,
+                    _ => 1,
+                },
+                Err(_) => 1,
+            }
+        };
+        Self::with_threads(parse("MYRMICS_SHARDS"), parse("MYRMICS_THREADS"))
     }
 }
 
@@ -836,9 +855,15 @@ mod tests {
         // literal so this test is green in both CI lanes.
         assert_eq!(ShardCfg::default(), ShardCfg::off());
         assert_eq!(ShardCfg::off().shards, 1);
+        assert_eq!(ShardCfg::off().threads, 1);
         assert!(ShardCfg::off().lookahead_override.is_none());
         assert_eq!(ShardCfg::with_shards(0).shards, 1);
         assert_eq!(ShardCfg::with_shards(4).shards, 4);
+        assert_eq!(ShardCfg::with_shards(4).threads, 1);
+        // Threads clamp to the shard count: a thread steps whole shards.
+        assert_eq!(ShardCfg::with_threads(4, 2).threads, 2);
+        assert_eq!(ShardCfg::with_threads(2, 8).threads, 2);
+        assert_eq!(ShardCfg::with_threads(0, 0).threads, 1);
         let want = ShardCfg::from_env();
         assert_eq!(PlatformConfig::new(4, HierarchySpec::flat()).shard, want);
         assert_eq!(PlatformConfig::flat(8).shard, want);

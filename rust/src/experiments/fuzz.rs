@@ -102,6 +102,10 @@ pub struct FuzzRow {
     /// Requested engine shard count (the partition may clamp it lower on
     /// small trees; clamped runs are still bit-identical by contract).
     pub shards: usize,
+    /// Requested executor thread count (clamped to the shard count; runs
+    /// outside the eligibility gate fall back to the sequential merge —
+    /// either way the fingerprint is thread-count invariant by contract).
+    pub threads: usize,
     pub strict: bool,
     /// Traffic mode ("off" | "steady" | "burst") and its parameters —
     /// `jobs`/`tenants` are 0 and `admission` is "-" on non-traffic cases.
@@ -143,6 +147,9 @@ struct CaseParams {
     recovery: u64,
     /// Engine shard count draw: 0 -> 1 shard (legacy), 1 -> 2, 2 -> 4.
     shard: u64,
+    /// Executor thread count draw: 0 -> 1 (sequential merge), 1 -> 2,
+    /// 2 -> 4, clamped to the drawn shard count.
+    threads: u64,
     /// Traffic mode: 0..=1 = off (the single-job shapes above run as
     /// before), 2 = steady open-loop arrivals, 3 = burst (tight gaps +
     /// backpressure-heavy admission knobs).
@@ -178,6 +185,9 @@ impl CaseParams {
             traffic_jobs: r.range(6, 14),
             traffic_tenants: r.range(2, 4),
             traffic_adm: r.below(3),
+            // Trailing again: the thread-parallel executor joins the
+            // sweep without renaming any pre-thread reproducer.
+            threads: r.below(3),
         }
     }
 
@@ -240,6 +250,13 @@ impl CaseParams {
         [1, 2, 4][self.shard as usize]
     }
 
+    /// Requested executor thread count. Clamped to the drawn shard count
+    /// (threads beyond shards would idle); the engine clamps again after
+    /// the partition, so the reproducer line stays environment-free.
+    fn thread_count(&self) -> usize {
+        [1, 2, 4][self.threads as usize].min(self.shard_count())
+    }
+
     fn shape_name(&self) -> &'static str {
         ["chain", "independent", "skew-hot", "skew-90", "hier-empty"][self.shape as usize]
     }
@@ -292,9 +309,9 @@ fn exec(seed: u64, plan: u64) -> (Cycles, Engine) {
     if p.strict {
         cfg.load_report_threshold = u64::MAX;
     }
-    // Shard count comes from the case stream, not the environment, so a
-    // reproducer line means the same thing everywhere.
-    cfg.shard = ShardCfg::with_shards(p.shard_count());
+    // Shard and thread counts come from the case stream, not the
+    // environment, so a reproducer line means the same thing everywhere.
+    cfg.shard = ShardCfg::with_threads(p.shard_count(), p.thread_count());
     // Traffic cases swap the single-job shape for an open-loop multi-job
     // arrival mix: chaos, crashes and steal faults all run under
     // concurrent admissions, checked by the `check_jobs` oracle.
@@ -313,6 +330,11 @@ fn exec(seed: u64, plan: u64) -> (Cycles, Engine) {
         0 => {
             let (reg, main) = empty_chain();
             Platform::build_with(cfg, reg, main, |w| {
+                // Single-spawner contract holds: every spawn comes from
+                // the chain's one live task. Threaded draws engage the
+                // windowed executor (when the gate's other conditions
+                // hold); ineligible combos fall back, bit-identically.
+                w.par_safe = true;
                 w.app = Some(Box::new(SynthParams {
                     n_tasks: 60,
                     task_cycles: 20_000,
@@ -323,6 +345,7 @@ fn exec(seed: u64, plan: u64) -> (Cycles, Engine) {
         1 => {
             let (reg, main) = independent();
             Platform::build_with(cfg, reg, main, |w| {
+                w.par_safe = true;
                 w.app = Some(Box::new(SynthParams {
                     n_tasks: 48,
                     task_cycles: 50_000,
@@ -433,6 +456,7 @@ pub fn run_case_with(
         steal: p.steal_name(),
         recovery: p.recovery_name(),
         shards: p.shard_count(),
+        threads: p.thread_count(),
         strict: p.strict,
         traffic: p.traffic_name(),
         admission: p.admission_name(),
@@ -488,12 +512,12 @@ pub fn run(opts: &FuzzOpts) -> bool {
 pub fn print_rows(rows: &[FuzzRow]) {
     println!("Protocol fuzz — fault plans x adversarial spawns, oracle + replay checked");
     println!(
-        "{:<22} {:<22} {:<12} {:<12} {:<10} {:<8} {:<8} {:>6} {:>6} {:>12} {:>6} {:>7} {:>7} {:>5} {:>8}",
-        "seed", "plan", "shape", "hier", "steal", "recov", "traffic", "shards", "strict", "time", "tasks", "stolen", "crashes", "jobs", "verdict"
+        "{:<22} {:<22} {:<12} {:<12} {:<10} {:<8} {:<8} {:>6} {:>4} {:>6} {:>12} {:>6} {:>7} {:>7} {:>5} {:>8}",
+        "seed", "plan", "shape", "hier", "steal", "recov", "traffic", "shards", "thr", "strict", "time", "tasks", "stolen", "crashes", "jobs", "verdict"
     );
     for r in rows {
         println!(
-            "{:<22} {:<22} {:<12} {:<12} {:<10} {:<8} {:<8} {:>6} {:>6} {:>12} {:>6} {:>7} {:>7} {:>5} {:>8}",
+            "{:<22} {:<22} {:<12} {:<12} {:<10} {:<8} {:<8} {:>6} {:>4} {:>6} {:>12} {:>6} {:>7} {:>7} {:>5} {:>8}",
             r.seed,
             r.plan,
             r.shape,
@@ -502,6 +526,7 @@ pub fn print_rows(rows: &[FuzzRow]) {
             r.recovery,
             r.traffic,
             r.shards,
+            r.threads,
             if r.strict { "yes" } else { "no" },
             r.fp.time,
             r.fp.completed,
@@ -531,7 +556,8 @@ pub fn to_json(rows: &[FuzzRow]) -> String {
             };
             format!(
                 "{{\"seed\": {}, \"plan\": {}, \"shape\": \"{}\", \"hier\": \"{}\", \
-                 \"steal\": \"{}\", \"recovery\": \"{}\", \"shards\": {}, \"strict\": {}, \
+                 \"steal\": \"{}\", \"recovery\": \"{}\", \"shards\": {}, \"threads\": {}, \
+                 \"strict\": {}, \
                  \"traffic\": \"{}\", \"admission\": \"{}\", \"jobs\": {}, \"tenants\": {}, \
                  \"admitted\": {}, \"deferrals\": {}, \"time\": {}, \
                  \"events\": {}, \"tasks\": {}, \"tasks_stolen\": {}, \"steal_denies\": {}, \
@@ -545,6 +571,7 @@ pub fn to_json(rows: &[FuzzRow]) -> String {
                 r.steal,
                 r.recovery,
                 r.shards,
+                r.threads,
                 r.strict,
                 r.traffic,
                 r.admission,
@@ -697,6 +724,7 @@ mod tests {
             "\"plan\"",
             "\"recovery\"",
             "\"shards\"",
+            "\"threads\"",
             "\"traffic\"",
             "\"admission\"",
             "\"jobs\"",

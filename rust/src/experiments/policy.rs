@@ -27,6 +27,12 @@ use super::summarize;
 pub struct PolicyRow {
     pub workload: &'static str,
     pub workers: usize,
+    /// Engine shards / executor threads the row ran under (picked up from
+    /// `MYRMICS_SHARDS`/`MYRMICS_THREADS` or `--threads`; both 1 by
+    /// default). Recorded so sweep JSON from a sharded or threaded run is
+    /// never compared against a sequential baseline unawares.
+    pub shards: usize,
+    pub threads: usize,
     pub policy: &'static str,
     pub p_locality: u32,
     pub time: Cycles,
@@ -94,6 +100,7 @@ pub fn run_one(shape: Shape, workers: usize, tasks: usize, policy: PolicyCfg) ->
         }
     };
     cfg.policy = policy;
+    let shard = cfg.shard;
     let mut plat = Platform::build_with(cfg, reg, main, |w| {
         w.app = Some(Box::new(params));
     });
@@ -103,6 +110,8 @@ pub fn run_one(shape: Shape, workers: usize, tasks: usize, policy: PolicyCfg) ->
     PolicyRow {
         workload: shape.name(),
         workers,
+        shards: shard.shards.max(1),
+        threads: shard.threads.max(1),
         policy: policy.name(),
         p_locality: policy.p_locality,
         time: t,
@@ -181,11 +190,14 @@ pub fn to_json(rows: &[PolicyRow]) -> String {
                 "null".to_string()
             };
             format!(
-                "{{\"workload\": \"{}\", \"workers\": {}, \"policy\": \"{}\", \
+                "{{\"workload\": \"{}\", \"workers\": {}, \"shards\": {}, \
+                 \"threads\": {}, \"policy\": \"{}\", \
                  \"p_locality\": {}, \"time\": {}, \"balance_pct\": {:.2}, \
                  \"dma_bytes\": {}, \"msg_bytes\": {}, \"events\": {}, \"tasks\": {}}}",
                 r.workload,
                 r.workers,
+                r.shards,
+                r.threads,
                 r.policy,
                 p_loc,
                 r.time,
@@ -243,9 +255,15 @@ mod tests {
         let j = to_json(&rows);
         assert!(j.starts_with("[\n"));
         assert!(j.trim_end().ends_with(']'));
-        for key in
-            ["\"workload\"", "\"policy\"", "\"p_locality\"", "\"time\"", "\"balance_pct\""]
-        {
+        for key in [
+            "\"workload\"",
+            "\"shards\"",
+            "\"threads\"",
+            "\"policy\"",
+            "\"p_locality\"",
+            "\"time\"",
+            "\"balance_pct\"",
+        ] {
             assert!(j.contains(key), "missing {key} in {j}");
         }
         // Exactly one row, no trailing comma.

@@ -18,7 +18,7 @@
 
 use crate::apps::skew::{myrmics as skew_myrmics, SkewParams};
 use crate::apps::synthetic::{hier_empty, independent, SynthParams};
-use crate::config::{HierarchySpec, PlatformConfig, StealCfg};
+use crate::config::{HierarchySpec, PlatformConfig, ShardCfg, StealCfg};
 use crate::ids::Cycles;
 use crate::platform::Platform;
 
@@ -29,6 +29,11 @@ use super::summarize;
 pub struct StealRow {
     pub workload: &'static str,
     pub workers: usize,
+    /// Engine shards / executor threads the row ran under (from
+    /// `MYRMICS_SHARDS`/`MYRMICS_THREADS` or `--threads`; both 1 by
+    /// default) — keeps sweep JSON self-describing across engine modes.
+    pub shards: usize,
+    pub threads: usize,
     pub steal: bool,
     pub threshold: u64,
     pub batch: u32,
@@ -118,9 +123,14 @@ pub fn run_one(shape: Shape, workers: usize, tasks: usize, steal: StealCfg) -> S
     let t = plat.run(Some(1 << 44));
     let s = summarize(&plat.eng, t);
     let g = &plat.eng.world.gstats;
+    // Same env seam PlatformConfig::new read when the platform above was
+    // built — the row records the engine mode it actually ran under.
+    let shard = ShardCfg::from_env();
     StealRow {
         workload: shape.name(),
         workers,
+        shards: shard.shards.max(1),
+        threads: shard.threads.max(1),
         steal: steal.enabled,
         threshold: steal.threshold,
         batch: steal.batch,
@@ -194,13 +204,16 @@ pub fn to_json(rows: &[StealRow]) -> String {
         .iter()
         .map(|r| {
             format!(
-                "{{\"workload\": \"{}\", \"workers\": {}, \"steal\": {}, \
+                "{{\"workload\": \"{}\", \"workers\": {}, \"shards\": {}, \
+                 \"threads\": {}, \"steal\": {}, \
                  \"threshold\": {}, \"batch\": {}, \"time\": {}, \"tasks\": {}, \
                  \"balance_pct\": {:.2}, \"steal_reqs\": {}, \"steal_grants\": {}, \
                  \"steal_denies\": {}, \"tasks_stolen\": {}, \"ready_hwm\": {}, \
                  \"events\": {}}}",
                 r.workload,
                 r.workers,
+                r.shards,
+                r.threads,
                 r.steal,
                 r.threshold,
                 r.batch,
@@ -292,9 +305,15 @@ mod tests {
         let j = to_json(&rows);
         assert!(j.starts_with("[\n"));
         assert!(j.trim_end().ends_with(']'));
-        for key in
-            ["\"workload\"", "\"steal\"", "\"time\"", "\"tasks_stolen\"", "\"ready_hwm\""]
-        {
+        for key in [
+            "\"workload\"",
+            "\"shards\"",
+            "\"threads\"",
+            "\"steal\"",
+            "\"time\"",
+            "\"tasks_stolen\"",
+            "\"ready_hwm\"",
+        ] {
             assert!(j.contains(key), "missing {key} in {j}");
         }
         assert_eq!(j.matches("{\"workload\"").count(), 1);

@@ -15,7 +15,7 @@
 
 use crate::apps::jobs::traffic_boot;
 use crate::apps::workload_api::job_templates;
-use crate::config::{AdmissionKind, HierarchySpec, PlatformConfig, TrafficCfg};
+use crate::config::{AdmissionKind, HierarchySpec, PlatformConfig, ShardCfg, TrafficCfg};
 use crate::ids::Cycles;
 use crate::platform::Platform;
 use crate::sim::traffic::TrafficState;
@@ -30,6 +30,12 @@ pub struct TenantRow {
     pub tree: &'static str,
     pub workers: usize,
     pub levels: usize,
+    /// Engine shards / executor threads the row ran under (from
+    /// `MYRMICS_SHARDS`/`MYRMICS_THREADS` or `--threads`; both 1 by
+    /// default). Traffic runs always fall back to the sequential merge
+    /// today, but the row still records the requested engine mode.
+    pub shards: usize,
+    pub threads: usize,
     pub jobs: u32,
     pub tenants: u32,
     pub admitted: u32,
@@ -97,11 +103,14 @@ pub fn run_one(tree: &TreePoint, tcfg: &TrafficCfg, scale: u32) -> TenantRow {
     let tr = plat.world().traffic.as_ref().expect("traffic installed");
     assert!(tr.all_done(), "sweep points must drain: {} {:?}", tree.name, tcfg.admission);
     let rep = tenant_report(tr);
+    let shard = ShardCfg::from_env();
     TenantRow {
         policy: tcfg.admission.name(),
         tree: tree.name,
         workers: tree.workers,
         levels,
+        shards: shard.shards.max(1),
+        threads: shard.threads.max(1),
         jobs: tcfg.jobs,
         tenants: tcfg.tenants,
         admitted: rep.admitted,
@@ -200,7 +209,8 @@ pub fn to_json(rows: &[TenantRow]) -> String {
         .map(|r| {
             format!(
                 "{{\"tree\": \"{}\", \"policy\": \"{}\", \"workers\": {}, \
-                 \"levels\": {}, \"jobs\": {}, \"tenants\": {}, \"admitted\": {}, \
+                 \"levels\": {}, \"shards\": {}, \"threads\": {}, \
+                 \"jobs\": {}, \"tenants\": {}, \"admitted\": {}, \
                  \"deferrals\": {}, \"makespan\": {}, \"p50_latency\": {}, \
                  \"p99_latency\": {}, \"jain\": {:.4}, \"util_pct\": {:.2}, \
                  \"tenant_p50\": {}, \"tenant_p99\": {}, \"events\": {}}}",
@@ -208,6 +218,8 @@ pub fn to_json(rows: &[TenantRow]) -> String {
                 r.policy,
                 r.workers,
                 r.levels,
+                r.shards,
+                r.threads,
                 r.jobs,
                 r.tenants,
                 r.admitted,
@@ -291,6 +303,8 @@ mod tests {
         for key in [
             "\"policy\"",
             "\"levels\"",
+            "\"shards\"",
+            "\"threads\"",
             "\"p99_latency\"",
             "\"jain\"",
             "\"util_pct\"",

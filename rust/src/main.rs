@@ -32,11 +32,38 @@ fn usage() -> ! {
     eprintln!("exp FLAGS: --quick (small sweep)  --smoke (tiny CI configuration)");
     eprintln!("run OPTS:  --workers N (default 64)  --flat  --mpi  --weak");
     eprintln!("fuzz OPTS: --smoke | --seeds N | --soak MINUTES | --seed X [--plan Y]");
+    eprintln!();
+    eprintln!(
+        "GLOBAL:    --threads N  executor threads per sharded engine (requires\n\
+         \x20          MYRMICS_SHARDS >= N; equivalent to MYRMICS_THREADS=N)"
+    );
     std::process::exit(2)
 }
 
 fn main() {
-    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut args: Vec<String> = std::env::args().skip(1).collect();
+    // Global `--threads N`, valid on every subcommand: routed through the
+    // MYRMICS_THREADS environment seam (PlatformConfig::new reads it via
+    // ShardCfg::from_env), exactly like CI's threaded lane. Validated
+    // here against the shard count so a silent engine-side clamp never
+    // masquerades as a threaded measurement.
+    if let Some(i) = args.iter().position(|a| a == "--threads") {
+        let n: usize =
+            args.get(i + 1).and_then(|v| v.parse().ok()).unwrap_or_else(|| usage());
+        let shards: usize = std::env::var("MYRMICS_SHARDS")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(1);
+        if n == 0 || n > shards {
+            eprintln!(
+                "--threads {n} must be between 1 and the engine shard count \
+                 ({shards}; set MYRMICS_SHARDS)"
+            );
+            std::process::exit(2);
+        }
+        std::env::set_var("MYRMICS_THREADS", n.to_string());
+        args.drain(i..=i + 1);
+    }
     match args.first().map(|s| s.as_str()) {
         Some("exp") => cli::run(&args[1..]),
         Some("bench") => {

@@ -25,9 +25,13 @@ pub struct Channel {
     /// yet processed).
     pub in_flight: usize,
     /// Sends blocked waiting for a credit: (enqueue time, final
-    /// destination, message). The destination rides along so tree-routed
-    /// messages resume forwarding when the credit frees up.
-    pub blocked: VecDeque<(Cycles, CoreId, Msg)>,
+    /// destination, message, chaos delay extra). The destination rides
+    /// along so tree-routed messages resume forwarding when the credit
+    /// frees up; the delay extra is the fault-injection jitter/class
+    /// delay drawn *at send time* (uniformly for delivered and parked
+    /// sends, so chaos draw order never depends on credit state or on
+    /// which thread performs the unpark) and applied on delivery.
+    pub blocked: VecDeque<(Cycles, CoreId, Msg, Cycles)>,
     /// Debug-build audit: how often `release` found no in-flight credit.
     /// Legal only on links marked [`Channel::allow_uncredited`]; anywhere
     /// else an idle release is a double credit return being masked.
@@ -76,7 +80,7 @@ impl Channel {
     /// audit the path: the link must have been marked
     /// [`Channel::allow_uncredited`], otherwise the idle release is a
     /// double credit return that the no-op would silently mask.
-    pub fn release(&mut self) -> Option<(Cycles, CoreId, Msg)> {
+    pub fn release(&mut self) -> Option<(Cycles, CoreId, Msg, Cycles)> {
         if self.in_flight == 0 {
             debug_assert!(self.blocked.is_empty(), "blocked sends on an idle channel");
             #[cfg(debug_assertions)]
@@ -301,14 +305,16 @@ mod tests {
         let mut ch = Channel::default();
         assert!(ch.try_acquire(1));
         assert!(!ch.try_acquire(1));
-        ch.blocked.push_back((10, CoreId(1), msg()));
-        ch.blocked.push_back((20, CoreId(1), msg()));
-        let (t, _, _) = ch.release().expect("first blocked send should be released");
+        ch.blocked.push_back((10, CoreId(1), msg(), 0));
+        ch.blocked.push_back((20, CoreId(1), msg(), 3));
+        let (t, _, _, d) = ch.release().expect("first blocked send should be released");
         assert_eq!(t, 10);
+        assert_eq!(d, 0);
         // Credit was immediately re-consumed by the blocked send.
         assert_eq!(ch.in_flight, 1);
-        let (t2, _, _) = ch.release().expect("second blocked send");
+        let (t2, _, _, d2) = ch.release().expect("second blocked send");
         assert_eq!(t2, 20);
+        assert_eq!(d2, 3);
         assert!(ch.release().is_none());
         assert_eq!(ch.in_flight, 0);
     }

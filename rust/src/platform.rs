@@ -27,7 +27,7 @@ use crate::sim::engine::{Engine, SimState};
 use crate::sim::event::{Event, TimerKind};
 use crate::sim::traffic::TrafficState;
 use crate::sim::rng::Rng;
-use crate::stats::metrics::GlobalStats;
+use crate::stats::metrics::GStats;
 use crate::task::descriptor::{TaskArg, TaskDesc};
 use crate::task::registry::{Registry, TaskRef};
 use crate::task::table::{TaskState, TaskTable};
@@ -45,7 +45,12 @@ pub struct World {
     /// so crash recovery can serve a reply that surfaces from a dead
     /// scheduler's re-adopted mailbox — see [`Journal`].
     pub journal: Journal,
-    pub gstats: GlobalStats,
+    /// Run-wide counters behind a sharding facade: plain
+    /// `GlobalStats` field access everywhere (auto-deref), but under the
+    /// threaded executor each worker thread is routed to its own
+    /// `WorldShard` accumulator slot, reduced into the main struct at
+    /// every quiescence point.
+    pub gstats: GStats,
     pub rng: Rng,
     /// Loaded PJRT kernels for `Real` compute mode (`None` = modeled).
     pub kernels: Option<crate::runtime::engine::KernelEngine>,
@@ -58,6 +63,14 @@ pub struct World {
     /// the layer does not exist — single-job runs stay byte-identical.
     /// Installed by the `prime` closure (see `experiments::tenants`).
     pub traffic: Option<TrafficState>,
+    /// The workload's prime closure asserts the *single-spawner
+    /// contract*: all world-level growth (task spawns, region creation)
+    /// is driven from one scheduler subtree per object, so shard-local
+    /// mutation plus the ownership discipline's message seam covers every
+    /// cross-shard effect. Required (with an eligible configuration — see
+    /// `Engine::par_eligible`) before the threaded sharded executor may
+    /// run; `false` (the default) always takes the sequential merge.
+    pub par_safe: bool,
     pub done: bool,
 }
 
@@ -74,11 +87,12 @@ impl World {
             tasks: TaskTable::new(),
             store: DataStore::new(),
             journal: Journal::default(),
-            gstats: GlobalStats::default(),
+            gstats: GStats::default(),
             kernels: None,
             app: None,
             mpi: None,
             traffic: None,
+            par_safe: false,
             done: false,
         }
     }
@@ -155,6 +169,7 @@ impl Platform {
         // single-queue engine untouched.
         let part = world.hier.shard_partition(cfg.shard.shards);
         sim.install_sharding(&part, cfg.shard.lookahead_override);
+        sim.set_shard_threads(cfg.shard.threads);
         // Pre-seed the channel table with the scheduler-tree links
         // (parent <-> child, leaf <-> worker): messages flow strictly
         // along the tree, so these hot edges get contiguous slots at the
@@ -175,6 +190,12 @@ impl Platform {
         // a no-op and keeps the engine byte-identical to the pre-chaos
         // schedule.
         sim.install_chaos(&cfg.chaos, cfg.seed);
+        // Decorrelated per-shard chaos lanes: each shard draws from its
+        // own stream (run seed, plan seed, shard id) so threaded workers
+        // never contend on one RNG. Installed even at `threads=1` — the
+        // sharded sequential merge uses the same lanes, which is what
+        // keeps `threads` out of the RNG schedule entirely.
+        sim.chaos.set_shards(sim.n_shards());
         // Deterministic scheduler crash: derived from (run seed, plan),
         // leaf victims only, and only when both the plan and the recovery
         // protocol are on — a crash without the protocol would simply

@@ -32,6 +32,16 @@ pub const CHAOS_STREAM: u64 = 0xC2B2_AE3D_27D4_EB4F;
 /// jitter/starve/stall/deny draws of the same `(seed, plan)` pair.
 pub const CRASH_STREAM: u64 = 0x9E37_79B9_7F4A_7C15;
 
+/// Per-shard lane mixer: with the engine sharded, shard `k` draws from
+/// `Rng::new(base ^ (k+1) * SHARD_STREAM)` where `base` is the run's
+/// chaos stream. Fault draws then depend only on `(run seed, plan seed,
+/// shard, shard-local event order)` — never on the global pop
+/// interleaving — which is what makes chaos schedules invariant across
+/// *thread* counts at a fixed shard count (each worker replays its
+/// shard's event order exactly, so it replays its lane's draw order
+/// exactly).
+pub const SHARD_STREAM: u64 = 0xD6E8_FEB8_6659_FD93;
+
 /// Message class seen by the class-targeted delay knobs. Classification
 /// happens in the engine (which owns the `Msg`); chaos only draws.
 #[derive(Clone, Copy, PartialEq, Eq, Debug)]
@@ -199,27 +209,62 @@ impl Default for FaultPlan {
     }
 }
 
-/// Per-run fault state: the plan, its RNG stream and the dense per-link
-/// delivery-floor table that preserves per-link FIFO order under jitter.
-/// Sized once at install; no steady-state allocation.
+/// One shard's draw lane: its own RNG stream, deny countdown and
+/// injection counters. Unsharded runs have exactly one lane (index 0)
+/// seeded from the legacy stream, so their draw sequence is
+/// byte-identical to the pre-lane code. Sharded runs get one lane per
+/// shard (see [`SHARD_STREAM`]); in the threaded executor each worker
+/// only ever touches its own shard's lane, so lanes are also the unit of
+/// thread disjointness.
 #[derive(Debug)]
-pub struct ChaosState {
-    plan: FaultPlan,
+struct Lane {
     rng: Rng,
-    n: usize,
-    /// Last delivery time pushed per directed (from, hop) link. Jittered
-    /// deliveries clamp to this floor so same-link messages never
-    /// reorder — per-link FIFO is load-bearing (decay-then-overwrite
-    /// load accounting, dependency-protocol ordering).
-    link_last: Vec<Cycles>,
     denies_left: u32,
-    // Injection counters (observability / harness assertions).
     jitters: u64,
     starves: u64,
     stalls: u64,
     forced_denies: u64,
     report_delays: u64,
     grant_delays: u64,
+}
+
+impl Lane {
+    fn new(rng: Rng, denies_left: u32) -> Self {
+        Lane {
+            rng,
+            denies_left,
+            jitters: 0,
+            starves: 0,
+            stalls: 0,
+            forced_denies: 0,
+            report_delays: 0,
+            grant_delays: 0,
+        }
+    }
+}
+
+/// Per-run fault state: the plan, its RNG lanes and the dense per-link
+/// delivery-floor table that preserves per-link FIFO order under jitter.
+/// Sized once at install; no steady-state allocation.
+///
+/// Every draw method takes the *shard lane* of the core on whose behalf
+/// the draw is made (the sender for send-side draws, the event's core
+/// for stalls/denies); unsharded runs pass 0. The `link_last` floor
+/// table stays global: a directed (from, hop) row is only ever touched
+/// by one shard inline (same-shard link) or by the single-threaded
+/// barrier walk (cross-shard link), so rows are disjoint by discipline.
+#[derive(Debug)]
+pub struct ChaosState {
+    plan: FaultPlan,
+    /// Base RNG stream (run seed x plan seed); lanes derive from it.
+    stream: u64,
+    n: usize,
+    /// Last delivery time pushed per directed (from, hop) link. Jittered
+    /// deliveries clamp to this floor so same-link messages never
+    /// reorder — per-link FIFO is load-bearing (decay-then-overwrite
+    /// load accounting, dependency-protocol ordering).
+    link_last: Vec<Cycles>,
+    lanes: Vec<Lane>,
     msgs_requeued: u64,
 }
 
@@ -228,16 +273,10 @@ impl ChaosState {
     pub fn disabled() -> Self {
         ChaosState {
             plan: FaultPlan::none(),
-            rng: Rng::new(1),
+            stream: 1,
             n: 0,
             link_last: Vec::new(),
-            denies_left: 0,
-            jitters: 0,
-            starves: 0,
-            stalls: 0,
-            forced_denies: 0,
-            report_delays: 0,
-            grant_delays: 0,
+            lanes: vec![Lane::new(Rng::new(1), 0)],
             msgs_requeued: 0,
         }
     }
@@ -250,19 +289,42 @@ impl ChaosState {
             run_seed ^ plan.plan_seed.wrapping_add(1).wrapping_mul(CHAOS_STREAM);
         let denies_left = plan.deny_first;
         ChaosState {
-            rng: Rng::new(stream),
+            stream,
             n: n_cores,
             link_last: vec![0; n_cores * n_cores],
-            denies_left,
-            jitters: 0,
-            starves: 0,
-            stalls: 0,
-            forced_denies: 0,
-            report_delays: 0,
-            grant_delays: 0,
+            lanes: vec![Lane::new(Rng::new(stream), denies_left)],
             msgs_requeued: 0,
             plan,
         }
+    }
+
+    /// Split the single draw stream into one decorrelated lane per shard
+    /// (no-op for `shards <= 1`, keeping unsharded runs on the legacy
+    /// stream). Called at platform build when the engine is sharded, so
+    /// draws depend only on shard-local event order — the chaos half of
+    /// the thread-invariance contract. Note `deny_first` becomes a
+    /// *per-shard* countdown in this regime (each lane denies its first
+    /// `deny_first` requests); the `steal_reqs == grants + denies` books
+    /// are unaffected.
+    pub fn set_shards(&mut self, shards: usize) {
+        if shards <= 1 || !self.plan.enabled {
+            return;
+        }
+        let (stream, denies) = (self.stream, self.plan.deny_first);
+        self.lanes = (0..shards)
+            .map(|k| {
+                Lane::new(
+                    Rng::new(stream ^ (k as u64 + 1).wrapping_mul(SHARD_STREAM)),
+                    denies,
+                )
+            })
+            .collect();
+    }
+
+    #[inline]
+    fn lane(&mut self, shard: usize) -> &mut Lane {
+        let i = shard.min(self.lanes.len() - 1);
+        &mut self.lanes[i]
     }
 
     /// Whether any fault hook should run. The engine gates every chaos
@@ -276,17 +338,26 @@ impl ChaosState {
         &self.plan
     }
 
-    /// Final delivery time for a message on link (from → hop), given the
-    /// undisturbed arrival `at`. Applies jitter, then clamps to the
-    /// link's delivery floor so per-link FIFO order is preserved.
-    /// Must only be called when `active()`.
-    pub fn delivery_time(&mut self, from: CoreId, hop: CoreId, at: Cycles) -> Cycles {
-        let mut t = at;
-        if self.plan.jitter_pct > 0 && self.rng.below(100) < self.plan.jitter_pct as u64 {
-            let extra = 1 + self.rng.below(self.plan.jitter_max.max(1));
-            t += extra;
-            self.jitters += 1;
+    /// Draw-only half of the generic delivery jitter: the extra latency
+    /// for one delivery, 0 when the dice say no jitter. Split from the
+    /// FIFO clamp so the threaded executor can draw at *send* time on
+    /// the sender's lane and apply the (draw-free) floor later, at the
+    /// canonical merge point. Must only be called when `active()`.
+    pub fn jitter_extra(&mut self, shard: usize) -> Cycles {
+        let pct = self.plan.jitter_pct;
+        let max = self.plan.jitter_max.max(1);
+        let lane = self.lane(shard);
+        if pct > 0 && lane.rng.below(100) < pct as u64 {
+            lane.jitters += 1;
+            1 + lane.rng.below(max)
+        } else {
+            0
         }
+    }
+
+    /// Draw-free half: clamp arrival `t` on link (from → hop) to the
+    /// link's delivery floor (per-link FIFO) and advance the floor.
+    pub fn fifo_floor(&mut self, from: CoreId, hop: CoreId, mut t: Cycles) -> Cycles {
         let key = from.idx() * self.n + hop.idx();
         if t < self.link_last[key] {
             t = self.link_last[key];
@@ -295,26 +366,37 @@ impl ChaosState {
         t
     }
 
+    /// Final delivery time for a message on link (from → hop), given the
+    /// undisturbed arrival `at`. Applies jitter, then clamps to the
+    /// link's delivery floor so per-link FIFO order is preserved.
+    /// Must only be called when `active()`.
+    pub fn delivery_time(&mut self, from: CoreId, hop: CoreId, at: Cycles, shard: usize) -> Cycles {
+        let t = at + self.jitter_extra(shard);
+        self.fifo_floor(from, hop, t)
+    }
+
     /// Extra class-targeted delivery delay for a message of `class`,
     /// applied *before* the generic jitter + FIFO clamp in
     /// [`Self::delivery_time`] (so per-link order still holds). Draws
     /// only when the matching knob is armed, keeping plans without these
     /// knobs on their original draw sequence. Must only be called when
     /// `active()`.
-    pub fn class_delay(&mut self, class: MsgClass) -> Cycles {
+    pub fn class_delay(&mut self, class: MsgClass, shard: usize) -> Cycles {
+        let plan = self.plan.clone();
+        let lane = self.lane(shard);
         match class {
-            MsgClass::Report if self.plan.report_delay_pct > 0 => {
-                if self.rng.below(100) < self.plan.report_delay_pct as u64 {
-                    self.report_delays += 1;
-                    1 + self.rng.below(self.plan.report_delay_max.max(1))
+            MsgClass::Report if plan.report_delay_pct > 0 => {
+                if lane.rng.below(100) < plan.report_delay_pct as u64 {
+                    lane.report_delays += 1;
+                    1 + lane.rng.below(plan.report_delay_max.max(1))
                 } else {
                     0
                 }
             }
-            MsgClass::Grant if self.plan.grant_delay_pct > 0 => {
-                if self.rng.below(100) < self.plan.grant_delay_pct as u64 {
-                    self.grant_delays += 1;
-                    1 + self.rng.below(self.plan.grant_delay_max.max(1))
+            MsgClass::Grant if plan.grant_delay_pct > 0 => {
+                if lane.rng.below(100) < plan.grant_delay_pct as u64 {
+                    lane.grant_delays += 1;
+                    1 + lane.rng.below(plan.grant_delay_max.max(1))
                 } else {
                     0
                 }
@@ -332,57 +414,63 @@ impl ChaosState {
     /// Draw the transient-starvation decision for a credited send. The
     /// caller applies it only when the channel has in-flight messages
     /// (so a release is guaranteed to unpark the send later).
-    pub fn draw_starve(&mut self) -> bool {
-        self.plan.starve_pct > 0 && self.rng.below(100) < self.plan.starve_pct as u64
+    pub fn draw_starve(&mut self, shard: usize) -> bool {
+        let pct = self.plan.starve_pct;
+        pct > 0 && self.lane(shard).rng.below(100) < pct as u64
     }
 
     /// Record that a send was actually parked by a starvation fault.
-    pub fn note_starved(&mut self) {
-        self.starves += 1;
+    pub fn note_starved(&mut self, shard: usize) {
+        self.lane(shard).starves += 1;
     }
 
     /// Bounded scheduler stall for the current event: 0 = no stall.
-    pub fn stall(&mut self) -> Cycles {
-        if self.plan.stall_pct == 0 || self.rng.below(100) >= self.plan.stall_pct as u64 {
+    pub fn stall(&mut self, shard: usize) -> Cycles {
+        let pct = self.plan.stall_pct;
+        let max = self.plan.stall_max.max(1);
+        let lane = self.lane(shard);
+        if pct == 0 || lane.rng.below(100) >= pct as u64 {
             return 0;
         }
-        self.stalls += 1;
-        1 + self.rng.below(self.plan.stall_max.max(1))
+        lane.stalls += 1;
+        1 + lane.rng.below(max)
     }
 
     /// Whether the victim must deny this steal request regardless of its
     /// queue depth: the first `deny_first` requests always deny, then
     /// `deny_pct` applies.
-    pub fn force_deny(&mut self) -> bool {
-        if self.denies_left > 0 {
-            self.denies_left -= 1;
-            self.forced_denies += 1;
+    pub fn force_deny(&mut self, shard: usize) -> bool {
+        let pct = self.plan.deny_pct;
+        let lane = self.lane(shard);
+        if lane.denies_left > 0 {
+            lane.denies_left -= 1;
+            lane.forced_denies += 1;
             return true;
         }
-        if self.plan.deny_pct > 0 && self.rng.below(100) < self.plan.deny_pct as u64 {
-            self.forced_denies += 1;
+        if pct > 0 && lane.rng.below(100) < pct as u64 {
+            lane.forced_denies += 1;
             return true;
         }
         false
     }
 
     pub fn jitters(&self) -> u64 {
-        self.jitters
+        self.lanes.iter().map(|l| l.jitters).sum()
     }
     pub fn starves(&self) -> u64 {
-        self.starves
+        self.lanes.iter().map(|l| l.starves).sum()
     }
     pub fn stalls(&self) -> u64 {
-        self.stalls
+        self.lanes.iter().map(|l| l.stalls).sum()
     }
     pub fn forced_denies(&self) -> u64 {
-        self.forced_denies
+        self.lanes.iter().map(|l| l.forced_denies).sum()
     }
     pub fn report_delays(&self) -> u64 {
-        self.report_delays
+        self.lanes.iter().map(|l| l.report_delays).sum()
     }
     pub fn grant_delays(&self) -> u64 {
-        self.grant_delays
+        self.lanes.iter().map(|l| l.grant_delays).sum()
     }
     pub fn msgs_requeued(&self) -> u64 {
         self.msgs_requeued
@@ -438,14 +526,14 @@ mod tests {
         let (a, b) = (CoreId(0), CoreId(1));
         let mut last = 0;
         for t in (0..400).step_by(3) {
-            let d = st.delivery_time(a, b, t);
+            let d = st.delivery_time(a, b, t, 0);
             assert!(d >= t, "jitter only delays");
             assert!(d >= last, "same-link deliveries must never reorder");
             last = d;
         }
         assert!(st.jitters() > 0);
         // An independent link has its own floor.
-        let d = st.delivery_time(b, a, 1);
+        let d = st.delivery_time(b, a, 1, 0);
         assert!(d >= 1);
     }
 
@@ -457,9 +545,9 @@ mod tests {
             ..FaultPlan::from_seed(3)
         };
         let mut st = ChaosState::new(plan, 0xB5EED, 2);
-        assert!(st.force_deny());
-        assert!(st.force_deny());
-        assert!(!st.force_deny(), "deny_pct 0: no denies after the countdown");
+        assert!(st.force_deny(0));
+        assert!(st.force_deny(0));
+        assert!(!st.force_deny(0), "deny_pct 0: no denies after the countdown");
         assert_eq!(st.forced_denies(), 2);
     }
 
@@ -508,14 +596,14 @@ mod tests {
             ..FaultPlan::from_seed(5)
         };
         let mut st = ChaosState::new(plan, 0xB5EED, 4);
-        assert!(st.class_delay(MsgClass::Report) > 0);
-        assert_eq!(st.class_delay(MsgClass::Grant), 0);
-        assert_eq!(st.class_delay(MsgClass::Other), 0);
+        assert!(st.class_delay(MsgClass::Report, 0) > 0);
+        assert_eq!(st.class_delay(MsgClass::Grant, 0), 0);
+        assert_eq!(st.class_delay(MsgClass::Other, 0), 0);
         assert_eq!(st.report_delays(), 1);
         assert_eq!(st.grant_delays(), 0);
         let bound = st.plan().report_delay_max;
         for _ in 0..100 {
-            let d = st.class_delay(MsgClass::Report);
+            let d = st.class_delay(MsgClass::Report, 0);
             assert!(d >= 1 && d <= 1 + bound);
         }
     }
@@ -527,12 +615,53 @@ mod tests {
         for i in 0..200u64 {
             let (f, h) = (CoreId((i % 8) as u32), CoreId(((i + 1) % 8) as u32));
             assert_eq!(
-                x.delivery_time(f, h, i * 10),
-                y.delivery_time(f, h, i * 10)
+                x.delivery_time(f, h, i * 10, 0),
+                y.delivery_time(f, h, i * 10, 0)
             );
-            assert_eq!(x.draw_starve(), y.draw_starve());
-            assert_eq!(x.stall(), y.stall());
-            assert_eq!(x.force_deny(), y.force_deny());
+            assert_eq!(x.draw_starve(0), y.draw_starve(0));
+            assert_eq!(x.stall(0), y.stall(0));
+            assert_eq!(x.force_deny(0), y.force_deny(0));
         }
+    }
+
+    #[test]
+    fn shard_lanes_are_decorrelated_and_independent() {
+        let mk = || {
+            let mut st = ChaosState::new(FaultPlan::from_seed(42), 0xFEED, 8);
+            st.set_shards(4);
+            st
+        };
+        let (mut x, mut y) = (mk(), mk());
+        // Each lane replays its own subsequence regardless of how draws
+        // interleave with other lanes: x draws lanes round-robin, y
+        // drains lane-by-lane, and per-lane sequences must agree.
+        let mut xs: Vec<Vec<Cycles>> = vec![Vec::new(); 4];
+        for i in 0..160usize {
+            let k = i % 4;
+            xs[k].push(x.stall(k));
+        }
+        for (k, want) in xs.iter().enumerate() {
+            for w in want {
+                assert_eq!(y.stall(k), *w, "lane {k} must be order-independent");
+            }
+        }
+        // Lanes are genuinely decorrelated: at least one pair differs in
+        // its first few draws.
+        let mut z = mk();
+        let a: Vec<bool> = (0..32).map(|_| z.draw_starve(0)).collect();
+        let b: Vec<bool> = (0..32).map(|_| z.draw_starve(1)).collect();
+        let c: Vec<Cycles> = (0..32).map(|_| z.stall(2)).collect();
+        let d: Vec<Cycles> = (0..32).map(|_| z.stall(3)).collect();
+        assert!(a != b || c != d, "shard lanes should not mirror each other");
+        // set_shards on a single shard or a disabled plan is a no-op.
+        let mut single = ChaosState::new(FaultPlan::from_seed(42), 0xFEED, 8);
+        single.set_shards(1);
+        let mut legacy = ChaosState::new(FaultPlan::from_seed(42), 0xFEED, 8);
+        for _ in 0..50 {
+            assert_eq!(single.stall(0), legacy.stall(0));
+        }
+        let mut off = ChaosState::disabled();
+        off.set_shards(4);
+        assert!(!off.active());
     }
 }

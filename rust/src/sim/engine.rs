@@ -24,12 +24,16 @@
 //! travel through per-shard mailboxes under a conservative-PDES lookahead
 //! derived from the minimum cross-shard NoC link latency. The shard heads
 //! are merged back into the canonical global `(t, seq)` order at pop
-//! time, so a run is bit-identical regardless of shard count — see
-//! `docs/sim-engine.md` "Sharded engine" for the partition rule, the
-//! window contract and what still blocks host-thread execution.
+//! time, so a run is bit-identical regardless of shard count. With
+//! `ShardCfg::threads > 1` (and an eligible, `World::par_safe`
+//! workload) the shards additionally step on real host threads between
+//! conservative barriers — see [`par`] and `docs/sim-engine.md`
+//! "Sharded engine" for the window contract, the provisional-stamp
+//! residue scheme and the barrier walk that reassigns canonical order.
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
+use std::sync::atomic::{AtomicU64, Ordering};
 
 use crate::config::{CoreKind, CostModel};
 use crate::ids::{CoreId, Cycles};
@@ -44,6 +48,9 @@ use crate::sim::event::{Event, Queued, TimerKind};
 use crate::sim::wheel::{EventQ, Popped};
 use crate::stats::metrics::CoreStats;
 use crate::task::registry::Registry;
+
+#[path = "par.rs"]
+mod par;
 
 /// How long a message sits in a dead scheduler's hardware mailbox before
 /// the engine re-checks whether the core is back (or its mailbox has been
@@ -115,6 +122,10 @@ impl Ord for MailItem {
 /// the single-wheel run.
 struct ShardState {
     n: usize,
+    /// Host threads stepping the shards (`1` = the sequential merge; set
+    /// by [`SimState::set_shard_threads`], clamped to the shard count).
+    /// Only the [`par`] executor reads values above 1.
+    threads: usize,
     /// Core id -> shard id (from [`ShardPartition`]).
     shard_of: Vec<u32>,
     /// Conservative-PDES lookahead: minimum one-way latency over the
@@ -219,7 +230,11 @@ pub struct SimState {
     /// Valid because a core's `busy_until` never moves backwards: handlers
     /// only run once the core is idle, at `t >= busy_until`.
     max_busy: Cycles,
-    dma_seq: u64,
+    /// DMA group id allocator. Atomic (relaxed) because threaded-window
+    /// workers allocate concurrently; the ids are inert labels — each is
+    /// matched per-core against its own `DmaDone`, so allocation order
+    /// never feeds back into the schedule.
+    dma_seq: AtomicU64,
     /// Print an event trace (debugging aid).
     pub trace: bool,
     /// Deterministic fault injection ([`crate::sim::chaos`]). Inert by
@@ -269,7 +284,7 @@ impl SimState {
             channel_capacity,
             channels,
             max_busy: 0,
-            dma_seq: 0,
+            dma_seq: AtomicU64::new(0),
             trace: false,
             chaos: ChaosState::disabled(),
             crash: None,
@@ -305,6 +320,7 @@ impl SimState {
         let n_cores = self.n_cores();
         self.shard = Some(Box::new(ShardState {
             n,
+            threads: 1,
             shard_of: part.shard_of.clone(),
             lookahead,
             wheels: (0..n).map(|_| EventQ::new()).collect(),
@@ -338,6 +354,29 @@ impl SimState {
     /// Events that travelled through a cross-shard mailbox (0 unsharded).
     pub fn shard_mail_events(&self) -> u64 {
         self.shard.as_ref().map_or(0, |sh| sh.mail_events)
+    }
+
+    /// Request host threads for the sharded executor, clamped to
+    /// `1..=n_shards`. A no-op when unsharded; `threads = 1` keeps the
+    /// byte-identical sequential merge. Must run before the first event
+    /// is processed (the choice is per-run, not per-window).
+    pub fn set_shard_threads(&mut self, threads: usize) {
+        if let Some(sh) = &mut self.shard {
+            sh.threads = threads.clamp(1, sh.n);
+        }
+    }
+
+    /// Host threads the sharded executor will use (1 = sequential).
+    pub fn shard_threads(&self) -> usize {
+        self.shard.as_ref().map_or(1, |sh| sh.threads)
+    }
+
+    /// Chaos lane of `core`: its shard id when sharded, lane 0 otherwise.
+    /// Every chaos draw is routed through the drawing core's lane so the
+    /// draw schedule is a function of per-shard execution order alone —
+    /// identical for any thread count (see `sim::chaos`).
+    pub fn shard_ix(&self, core: CoreId) -> usize {
+        self.shard.as_ref().map_or(0, |sh| sh.shard_of[core.idx()] as usize)
     }
 
     /// Install a fault plan for this run. A disabled plan is a no-op so
@@ -384,17 +423,32 @@ impl SimState {
         self.metas.len()
     }
 
-    /// Enqueue an event for `core` at absolute time `t`. The sequence
-    /// stamp comes from the single global counter in both modes: pushes
-    /// are totally ordered by the merge loop, so the stamp order is
-    /// shard-count invariant (see the docs for the per-shard block scheme
-    /// reserved for thread-parallel execution).
+    /// Enqueue an event for `core` at absolute time `t`. Sequentially the
+    /// stamp comes from the single global counter: pushes are totally
+    /// ordered by the merge loop, so the stamp order is shard-count
+    /// invariant. Inside a threaded window (a worker thread has a
+    /// [`par::ShardLog`] bound) the push instead takes a *provisional*
+    /// per-shard residue stamp and is logged; the barrier walk replays
+    /// the log in canonical order and reassigns the exact stamps the
+    /// sequential merge would have drawn.
     pub fn push(&mut self, t: Cycles, core: CoreId, ev: Event) {
-        let seq = self.seq;
-        self.seq += 1;
         match &mut self.shard {
-            None => self.queue.push(t, seq, core, ev),
-            Some(sh) => sh.route(t, seq, core, ev),
+            None => {
+                let seq = self.seq;
+                self.seq += 1;
+                self.queue.push(t, seq, core, ev);
+            }
+            Some(sh) => {
+                if sh.threads > 1 {
+                    if let Some(log) = par::tl_log() {
+                        par::window_push(sh, log, t, core, ev);
+                        return;
+                    }
+                }
+                let seq = self.seq;
+                self.seq += 1;
+                sh.route(t, seq, core, ev);
+            }
         }
     }
 
@@ -402,11 +456,23 @@ impl SimState {
     /// any event so the merged pop order (and hence every downstream
     /// tie-break) is identical to the old single-queue engine.
     fn push_wake(&mut self, t: Cycles, core: CoreId) {
-        let seq = self.seq;
-        self.seq += 1;
         match &mut self.shard {
-            None => self.queue.push_wake(t, seq, core),
-            Some(sh) => sh.route(t, seq, core, Event::Wake),
+            None => {
+                let seq = self.seq;
+                self.seq += 1;
+                self.queue.push_wake(t, seq, core);
+            }
+            Some(sh) => {
+                if sh.threads > 1 {
+                    if let Some(log) = par::tl_log() {
+                        par::window_push(sh, log, t, core, Event::Wake);
+                        return;
+                    }
+                }
+                let seq = self.seq;
+                self.seq += 1;
+                sh.route(t, seq, core, Event::Wake);
+            }
         }
     }
 
@@ -576,22 +642,28 @@ impl SimState {
         }
     }
 
-    fn deliver_msg(&mut self, t_send: Cycles, from: CoreId, hop: CoreId, dst: CoreId, msg: Msg) {
+    /// Schedule delivery of a message whose chaos delay `extra` was
+    /// already drawn at send time (see [`Ctx::send_via`]): wire latency,
+    /// the carried delay, then the per-link FIFO clamp. Draw-free, so a
+    /// parked send delivered later (credit release, crash re-adoption)
+    /// consumes no randomness — the chaos schedule is a pure function of
+    /// the send order, never of when credits freed up.
+    fn deliver_msg(
+        &mut self,
+        t_send: Cycles,
+        from: CoreId,
+        hop: CoreId,
+        dst: CoreId,
+        msg: Msg,
+        extra: Cycles,
+    ) {
         let lat = self.cost.msg_latency(self.topo.hops(from, hop));
-        let mut at = t_send + lat;
+        let mut at = t_send + lat + extra;
         if self.chaos.active() {
-            // Fault injection: class-targeted delay (delayed load/quiesce
-            // reports racing region teardown; steal grants racing fresh
-            // spawns), then bounded generic jitter — both clamped so
-            // same-link deliveries never reorder (per-link FIFO is
-            // load-bearing for load accounting and the dep protocol).
-            let class = match &msg {
-                Msg::LoadReport { .. } | Msg::QuiesceUp { .. } => MsgClass::Report,
-                Msg::StealGrant { .. } => MsgClass::Grant,
-                _ => MsgClass::Other,
-            };
-            at += self.chaos.class_delay(class);
-            at = self.chaos.delivery_time(from, hop, at);
+            // Clamped so same-link deliveries never reorder (per-link
+            // FIFO is load-bearing for load accounting and the dep
+            // protocol).
+            at = self.chaos.fifo_floor(from, hop, at);
         }
         self.push(at, hop, Event::Msg { from, dst, msg });
     }
@@ -658,11 +730,44 @@ impl<'a> Ctx<'a> {
         st.msg_bytes_sent += wires * self.sim.cost.msg_bytes;
         let t_send = self.start + self.charged_rt + self.charged_task;
         let cap = self.sim.channel_capacity;
-        // Fault injection: transiently starve this send of its credit.
-        // Only legal while the channel has messages in flight — the
-        // matching release is what unparks blocked sends, so starving an
-        // idle channel would strand the message forever.
-        let starve = self.sim.chaos.active() && self.sim.chaos.draw_starve();
+        let shard = self.sim.shard_ix(self.core);
+        // Fault injection: every chaos draw happens at *send* time, on
+        // the sender's shard lane — transient credit starvation (only
+        // legal while the channel has messages in flight: the matching
+        // release is what unparks blocked sends, so starving an idle
+        // channel would strand the message forever), then the
+        // class-targeted delay, then bounded generic jitter. A parked
+        // send carries its drawn delay with it (`Channel::blocked`), so
+        // the draw schedule depends only on the per-lane send order —
+        // which is what keeps it identical across thread counts.
+        let starve = self.sim.chaos.active() && self.sim.chaos.draw_starve(shard);
+        let extra = if self.sim.chaos.active() {
+            let class = match &msg {
+                Msg::LoadReport { .. } | Msg::QuiesceUp { .. } => MsgClass::Report,
+                Msg::StealGrant { .. } => MsgClass::Grant,
+                _ => MsgClass::Other,
+            };
+            self.sim.chaos.class_delay(class, shard) + self.sim.chaos.jitter_extra(shard)
+        } else {
+            0
+        };
+        // Threaded window: a cross-shard send must not touch the link's
+        // credit channel mid-window (the canonical interleaving with the
+        // other endpoint's traffic is not known yet). The charge, wire
+        // stats and chaos draws above are all sender-local and already
+        // done; defer the credit decision itself to the barrier walk,
+        // which replays attempts in canonical order.
+        if let Some(sh) = &self.sim.shard {
+            if sh.threads > 1 && sh.shard_of[next.idx()] as usize != shard {
+                if let Some(log) = par::tl_log() {
+                    par::defer_send(
+                        log,
+                        par::SendAttempt { t_send, from: self.core, hop: next, dst, msg, extra, starve },
+                    );
+                    return;
+                }
+            }
+        }
         let (acquired, starved) = {
             let ch = self.sim.chan_entry(self.core, next);
             if !ch.blocked.is_empty() {
@@ -675,15 +780,15 @@ impl<'a> Ctx<'a> {
             }
         };
         if starved {
-            self.sim.chaos.note_starved();
+            self.sim.chaos.note_starved(shard);
         }
         if acquired {
-            self.sim.deliver_msg(t_send, self.core, next, dst, msg);
+            self.sim.deliver_msg(t_send, self.core, next, dst, msg, extra);
         } else {
             // Cold path: out of credits (or starved); re-find the channel
             // (the borrow cannot span `deliver_msg` above) and park the
-            // send.
-            self.sim.chan_entry(self.core, next).blocked.push_back((t_send, dst, msg));
+            // send with its pre-drawn delay.
+            self.sim.chan_entry(self.core, next).blocked.push_back((t_send, dst, msg, extra));
         }
     }
 
@@ -691,13 +796,12 @@ impl<'a> Ctx<'a> {
     /// an [`Event::DmaDone`] fires when the whole group completes. An empty
     /// group completes after just the issue cost.
     pub fn dma_group(&mut self, transfers: Vec<Transfer>) -> u64 {
-        let id = self.sim.dma_seq;
-        self.sim.dma_seq += 1;
+        let id = self.sim.dma_seq.fetch_add(1, Ordering::Relaxed);
         // Issue cost: one DMA start charge per transfer.
         self.charge(self.sim.cost.dma_start * transfers.len() as Cycles);
         for t in &transfers {
-            self.sim.stats[t.src.idx()].dma_bytes_out += t.bytes;
-            self.sim.stats[t.dst.idx()].dma_bytes_in += t.bytes;
+            self.dma_stat(t.src, t.bytes, true);
+            self.dma_stat(t.dst, t.bytes, false);
         }
         self.world.gstats.dma_transfers += transfers.len() as u64;
         let done = group_completion(&self.sim.cost, &transfers);
@@ -705,6 +809,25 @@ impl<'a> Ctx<'a> {
         let core = self.core;
         self.sim.push(at, core, Event::DmaDone { group: id });
         id
+    }
+
+    /// Charge a DMA byte counter on `core`'s [`CoreStats`]. Inside a
+    /// threaded window a transfer endpoint may live on another shard —
+    /// bump it through the shard log instead (applied at the barrier) so
+    /// no two threads ever write the same `CoreStats` slot.
+    fn dma_stat(&mut self, core: CoreId, bytes: u64, out: bool) {
+        if let (Some(sh), Some(log)) = (&self.sim.shard, par::tl_log()) {
+            if sh.threads > 1 && sh.shard_of[core.idx()] as usize != log.shard {
+                log.remote_dma.push((core, bytes, out));
+                return;
+            }
+        }
+        let st = &mut self.sim.stats[core.idx()];
+        if out {
+            st.dma_bytes_out += bytes;
+        } else {
+            st.dma_bytes_in += bytes;
+        }
     }
 
     /// Schedule a timer event for this core `delay` cycles from the cursor.
@@ -732,13 +855,18 @@ impl<'a> Ctx<'a> {
         if !self.sim.chaos.active() {
             return 0;
         }
-        self.sim.chaos.stall()
+        let shard = self.sim.shard_ix(self.core);
+        self.sim.chaos.stall(shard)
     }
 
     /// Fault injection: must this steal request be denied regardless of
     /// queue depth? Always false when no fault plan is active.
     pub fn chaos_force_deny(&mut self) -> bool {
-        self.sim.chaos.active() && self.sim.chaos.force_deny()
+        if !self.sim.chaos.active() {
+            return false;
+        }
+        let shard = self.sim.shard_ix(self.core);
+        self.sim.chaos.force_deny(shard)
     }
 
     /// Recovery: re-adopt a dead scheduler's mailbox — future events for
@@ -830,7 +958,31 @@ impl Engine {
         self.run_inner(limit, false)
     }
 
+    /// The threaded executor may run this configuration: more than one
+    /// shard and thread requested, no event tracing, and none of the
+    /// layers that mutate cross-shard global state outside the message
+    /// seam (crash redirects, recovery heartbeats, traffic books, MPI
+    /// rendezvous, real kernels) — on a workload whose prime closure
+    /// opted in to the single-spawner contract ([`World::par_safe`]).
+    /// Everything else falls back to the sequential merge, which is
+    /// byte-identical by construction.
+    fn par_eligible(&self) -> bool {
+        let Some(sh) = &self.sim.shard else { return false };
+        sh.n > 1
+            && sh.threads > 1
+            && self.world.par_safe
+            && !self.sim.trace
+            && self.sim.crash.is_none()
+            && !self.world.cfg.recovery.enabled
+            && self.world.traffic.is_none()
+            && self.world.mpi.is_none()
+            && self.world.kernels.is_none()
+    }
+
     fn run_inner(&mut self, limit: Option<Cycles>, stop_on_done: bool) -> Cycles {
+        if self.par_eligible() {
+            return par::run_windows(self, limit, stop_on_done);
+        }
         while let Some(popped) = self.sim.pop_next() {
             if stop_on_done && self.world.done {
                 break;
@@ -915,10 +1067,10 @@ impl Engine {
                                         .sim
                                         .chan_get_mut(from, core)
                                         .and_then(|ch| ch.release());
-                                    if let Some((t_blk, b_dst, b_msg)) = released {
+                                    if let Some((t_blk, b_dst, b_msg, b_extra)) = released {
                                         let stall = t.saturating_sub(t_blk);
                                         self.sim.stats[from.idx()].credit_stall += stall;
-                                        self.sim.deliver_msg(t, from, core, b_dst, b_msg);
+                                        self.sim.deliver_msg(t, from, core, b_dst, b_msg, b_extra);
                                     }
                                     // Destination rewrite: traffic for the
                                     // dead core itself goes to the adopter;
@@ -1013,10 +1165,10 @@ impl Engine {
                 // Return the credit; a blocked send may claim it.
                 let released =
                     self.sim.chan_get_mut(*from, core).and_then(|ch| ch.release());
-                if let Some((t_blocked, blocked_dst, blocked_msg)) = released {
+                if let Some((t_blocked, blocked_dst, blocked_msg, blocked_extra)) = released {
                     let stall = t.saturating_sub(t_blocked);
                     self.sim.stats[from.idx()].credit_stall += stall;
-                    self.sim.deliver_msg(t, *from, core, blocked_dst, blocked_msg);
+                    self.sim.deliver_msg(t, *from, core, blocked_dst, blocked_msg, blocked_extra);
                 }
             }
 

@@ -1,0 +1,774 @@
+//! The thread-parallel sharded executor: real host threads stepping
+//! shards between conservative-PDES barriers, bit-identical to the
+//! sequential merge.
+//!
+//! # Window protocol
+//!
+//! Per window the main thread computes `W` (the global minimum event
+//! time over the shard heads) and `wend = W + lookahead`, then releases
+//! one worker per `threads` through a [`Barrier`]. Worker `w` steps
+//! every shard `k ≡ w (mod threads)`: it drains the shard's own wheel up
+//! to `bound = min(wend, limit+1)`, running the exact per-event body of
+//! `Engine::run_inner` (kept in sync by hand — see the comment there).
+//! The conservative lookahead (minimum cross-shard link latency)
+//! guarantees any cross-shard effect of an in-window event lands at or
+//! after `wend`, so shards never need each other mid-window.
+//!
+//! # Provisional stamps (per-shard seq residue blocks)
+//!
+//! The sequential engine stamps every push from one global counter;
+//! threads cannot share it without racing or diverging. Instead, shard
+//! `k`'s `j`-th in-window push takes the *provisional* stamp
+//! `PROV_BIT | (j·n + k)` — a residue-`k` block with the top bit set so
+//! any provisional stamp sorts after every canonical stamp at equal
+//! time, exactly where the sequential engine would have placed it (all
+//! canonical stamps in a wheel predate the window; in-window pushes
+//! would have drawn strictly larger stamps). Within a shard,
+//! provisional order is push order, which is the canonical push order
+//! restricted to that shard. Together these give the key invariant:
+//! *a shard's local execution order equals the canonical global order
+//! restricted to that shard.*
+//!
+//! # The barrier walk
+//!
+//! Each worker logs one [`Rec`] per pop (including deferral and
+//! drain-marker iterations — they push wake markers, which consume
+//! stamps) plus the ordered list of its pushes, staged events, and
+//! deferred cross-shard send attempts. After the window, the main
+//! thread merges all logs by `(t, canonical stamp)` — a provisional
+//! stamp's canonical value is always known by the time it can surface
+//! as a head, because its pushing record precedes it in the same
+//! shard's log — and replays, in canonical order: deferred cross-link
+//! credit releases, stamp assignment for direct pushes, routing of
+//! staged events, and the credit decision of every deferred send. The
+//! result is byte-identical stamp assignment, channel state, chaos
+//! `link_last` floors and delivery times to the sequential merge.
+//!
+//! # Shared-state discipline (why `&mut Engine` per worker is sound)
+//!
+//! Workers formally alias `&mut Engine` but are *disjoint by
+//! discipline*, which `Engine::par_eligible` enforces by construction:
+//!
+//! - Engine slices (`wheels`, `held`, `cursor`, `max_busy`, per-shard
+//!   channel tables, `metas`/`stats` of own-shard cores) are indexed by
+//!   shard — no two workers touch the same index.
+//! - Cross-shard channels, cross-shard credit releases and off-shard
+//!   `CoreStats` (DMA endpoints) are never touched mid-window — they
+//!   are logged and applied by the main thread at the barrier.
+//! - `World.gstats` is a [`GStats`] facade routing each thread to its
+//!   own `WorldShard` slot; slots are reduced at quiescence.
+//! - Chaos draws go through per-shard lanes (`sim::chaos`), so the RNG
+//!   schedule is a function of per-shard execution order alone.
+//! - Functional `World` state follows the ownership discipline (every
+//!   region/node/task has one owning scheduler, cross-owner steps are
+//!   messages) plus the [`World::par_safe`] single-spawner contract;
+//!   cross-shard *reads* (task descriptors at dispatch) are of entries
+//!   created at least one window earlier — the barrier provides the
+//!   happens-before edge, and `SlotArena`'s chunked storage keeps the
+//!   addresses stable under concurrent appends by the owner.
+//! - DMA group ids come from an atomic counter; the ids are inert.
+//!
+//! Known, documented slack: in a `stop_on_done` run the workers of the
+//! final window deterministically process events past the completion
+//! cut; the walk restores every *global* counter and the busy horizon
+//! exactly, but per-core `CoreStats` and channel occupancy keep those
+//! extra (deterministic, thread-count-invariant fingerprints never read
+//! them post-cut) contributions.
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Barrier;
+
+use crate::ids::{CoreId, Cycles};
+use crate::noc::msg::Msg;
+use crate::sim::event::Event;
+use crate::sim::wheel::Popped;
+use crate::stats::metrics::{GStats, GlobalStats};
+
+use super::{Ctx, Engine, ShardState, SimState};
+
+/// Top bit of a provisional stamp: sorts after every canonical stamp at
+/// equal `t`, which is exactly the canonical position of an in-window
+/// push relative to the pre-window wheel contents.
+const PROV_BIT: u64 = 1 << 63;
+
+/// A cross-shard send whose credit decision is deferred to the barrier
+/// walk. Charge, wire stats and every chaos draw already happened at
+/// send time on the sender's thread.
+pub(super) struct SendAttempt {
+    pub(super) t_send: Cycles,
+    pub(super) from: CoreId,
+    pub(super) hop: CoreId,
+    pub(super) dst: CoreId,
+    pub(super) msg: Msg,
+    pub(super) extra: Cycles,
+    pub(super) starve: bool,
+}
+
+/// An in-window push that could not enter a wheel directly: cross-shard,
+/// or at/past the processing bound (it would survive the window with a
+/// provisional stamp otherwise). Restamped and routed at the walk.
+struct StagedEv {
+    t: Cycles,
+    core: CoreId,
+    ev: Event,
+}
+
+/// One intra-handler action, in exact occurrence order. The walk replays
+/// these to reassign canonical stamps: `Direct` consumes one stamp (the
+/// event already sits in the shard's own wheel, provisionally stamped
+/// and consumed in-window), `Staged`/`Send` route their payloads.
+#[derive(Clone, Copy)]
+enum Act {
+    Direct,
+    Staged(u32),
+    Send(u32),
+}
+
+/// One pop-equivalent iteration of a shard's window loop.
+struct Rec {
+    t: Cycles,
+    /// Raw stamp of the popped item: canonical (pre-window) or
+    /// provisional (pushed earlier in this window by this shard).
+    stamp: u64,
+    /// Range into [`ShardLog::acts`].
+    acts: (u32, u32),
+    /// Deferred cross-link credit release `(from, to)`: the popped event
+    /// was a message from another shard, so returning the credit (and
+    /// possibly unparking a blocked send) must happen in canonical order
+    /// at the walk.
+    rel: Option<(CoreId, CoreId)>,
+    d_spawned: u64,
+    d_completed: u64,
+    /// This shard's `WorldShard` stats slot *before* the iteration
+    /// (cloned only in `stop_on_done` runs): the completion cut restores
+    /// the slot to the snapshot of the first unwalked record.
+    snap: GlobalStats,
+    /// `ShardState::max_busy[shard]` before the iteration (same cut).
+    pre_max_busy: Cycles,
+}
+
+/// Everything one shard logs during one window.
+pub(super) struct ShardLog {
+    pub(super) shard: usize,
+    /// Shard count: the provisional-stamp residue modulus.
+    n: u64,
+    /// Process events with `t < bound` (= `min(wend, limit+1)`).
+    bound: Cycles,
+    /// Window end `W + lookahead`: cross-shard staged events must land
+    /// at or after it (the conservative guarantee).
+    wend: Cycles,
+    snap_stats: bool,
+    direct_j: u64,
+    acts: Vec<Act>,
+    staged: Vec<Option<StagedEv>>,
+    sends: Vec<Option<SendAttempt>>,
+    recs: Vec<Rec>,
+    /// `canon_of[j]` = canonical stamp assigned to this shard's `j`-th
+    /// direct push, filled by the walk in replay order.
+    canon_of: Vec<u64>,
+    /// Off-shard DMA endpoint stat bumps `(core, bytes, outbound)`,
+    /// applied by the main thread at the barrier.
+    pub(super) remote_dma: Vec<(CoreId, u64, bool)>,
+    cur_acts0: u32,
+    cur_rel: Option<(CoreId, CoreId)>,
+}
+
+impl ShardLog {
+    fn new(shard: usize, n: usize) -> Self {
+        ShardLog {
+            shard,
+            n: n as u64,
+            bound: 0,
+            wend: 0,
+            snap_stats: false,
+            direct_j: 0,
+            acts: Vec::new(),
+            staged: Vec::new(),
+            sends: Vec::new(),
+            recs: Vec::new(),
+            canon_of: Vec::new(),
+            remote_dma: Vec::new(),
+            cur_acts0: 0,
+            cur_rel: None,
+        }
+    }
+
+    /// Reset for a new window (buffers keep their capacity).
+    fn open(&mut self, bound: Cycles, wend: Cycles, snap_stats: bool) {
+        self.bound = bound;
+        self.wend = wend;
+        self.snap_stats = snap_stats;
+        self.direct_j = 0;
+        self.acts.clear();
+        self.staged.clear();
+        self.sends.clear();
+        self.recs.clear();
+        self.canon_of.clear();
+        self.remote_dma.clear();
+        self.cur_acts0 = 0;
+        self.cur_rel = None;
+    }
+}
+
+thread_local! {
+    /// The stepping thread's active window log (null = not inside a
+    /// threaded window; every sequential path sees null and is
+    /// untouched).
+    static TL: Cell<*mut ShardLog> = const { Cell::new(std::ptr::null_mut()) };
+}
+
+/// The calling thread's window log, if it is stepping a shard.
+pub(super) fn tl_log<'a>() -> Option<&'a mut ShardLog> {
+    let p = TL.with(|c| c.get());
+    if p.is_null() {
+        None
+    } else {
+        // SAFETY: set by the owning worker around `step_shard`; the log
+        // outlives the window and only this thread holds the pointer.
+        Some(unsafe { &mut *p })
+    }
+}
+
+fn set_tl(p: *mut ShardLog) {
+    TL.with(|c| c.set(p));
+}
+
+fn log_of<'a>(p: *mut ShardLog) -> &'a mut ShardLog {
+    // SAFETY: only the owning worker dereferences its log mid-window.
+    unsafe { &mut *p }
+}
+
+/// Record an in-window push (called from `SimState::push`/`push_wake`
+/// when a window log is bound): same-shard pushes inside the bound go
+/// straight into the shard's own wheel under a provisional stamp (they
+/// will be consumed before the window closes); everything else is
+/// staged for canonical restamping at the walk.
+pub(super) fn window_push(
+    sh: &mut ShardState,
+    log: &mut ShardLog,
+    t: Cycles,
+    core: CoreId,
+    ev: Event,
+) {
+    let d = sh.shard_of[core.idx()] as usize;
+    if d == log.shard && t < log.bound {
+        let prov = PROV_BIT | (log.direct_j * log.n + log.shard as u64);
+        log.direct_j += 1;
+        log.acts.push(Act::Direct);
+        match ev {
+            Event::Wake => sh.wheels[d].push_wake(t, prov, core),
+            ev => sh.wheels[d].push(t, prov, core, ev),
+        }
+    } else {
+        let i = log.staged.len() as u32;
+        log.staged.push(Some(StagedEv { t, core, ev }));
+        log.acts.push(Act::Staged(i));
+    }
+}
+
+/// Log a deferred cross-shard send attempt (called from `Ctx::send_via`).
+pub(super) fn defer_send(log: &mut ShardLog, a: SendAttempt) {
+    let i = log.sends.len() as u32;
+    log.sends.push(Some(a));
+    log.acts.push(Act::Send(i));
+}
+
+/// Canonical sort key of a logged record's stamp. A provisional stamp's
+/// canonical value is already assigned: its pushing record precedes it
+/// in the same shard's log, and the walk consumes a shard's records in
+/// order.
+fn canon_key(log: &ShardLog, stamp: u64) -> u64 {
+    if stamp & PROV_BIT != 0 {
+        log.canon_of[((stamp & !PROV_BIT) / log.n) as usize]
+    } else {
+        stamp
+    }
+}
+
+fn pkey(p: &Popped) -> (Cycles, u64) {
+    match p {
+        Popped::Ev(q) => (q.t, q.seq),
+        Popped::Wake { t, seq, .. } => (*t, *seq),
+    }
+}
+
+/// Refill every shard's held head and return the window base `W` (the
+/// global minimum event time), or `None` when everything has drained.
+/// At window boundaries all stamps are canonical, so the keys compare
+/// directly.
+fn refill(sim: &mut SimState) -> Option<Cycles> {
+    let sh = sim.shard.as_mut().expect("threaded executor is sharded");
+    let mut w: Option<(Cycles, u64)> = None;
+    for s in 0..sh.n {
+        if sh.held[s].is_none() {
+            if let Some(p) = sh.wheels[s].pop() {
+                sh.cursor[s] = pkey(&p).0;
+                sh.held[s] = Some(p);
+            }
+        }
+        if let Some(p) = &sh.held[s] {
+            let k = pkey(p);
+            debug_assert_eq!(k.1 & PROV_BIT, 0, "provisional stamp survived a window");
+            if w.is_none_or(|b| k < b) {
+                w = Some(k);
+            }
+        }
+        debug_assert!(sh.inbox[s].is_empty(), "threaded windows never use mailboxes");
+    }
+    w.map(|(t, _)| t)
+}
+
+/// Drop the single globally-earliest held event — the exact shape of the
+/// sequential limit break, which pops one event past the limit and
+/// discards it.
+fn discard_global_min(sim: &mut SimState) {
+    let sh = sim.shard.as_mut().expect("threaded executor is sharded");
+    let mut best: Option<((Cycles, u64), usize)> = None;
+    for s in 0..sh.n {
+        if let Some(p) = &sh.held[s] {
+            let k = pkey(p);
+            if best.is_none_or(|(bk, _)| k < bk) {
+                best = Some((k, s));
+            }
+        }
+    }
+    if let Some((_, s)) = best {
+        sh.held[s] = None;
+    }
+}
+
+/// Raw pointers shared with the worker threads. Access is partitioned
+/// by the barrier protocol: workers touch the engine and their own logs
+/// strictly between the window-open and window-close barriers; the main
+/// thread strictly outside them.
+struct Shared {
+    eng: *mut Engine,
+    logs: *mut ShardLog,
+}
+// SAFETY: see the struct docs and the module-level discipline notes.
+unsafe impl Sync for Shared {}
+
+/// Step shard `k` to the window bound. This is the per-event body of
+/// `Engine::run_inner` minus the paths the eligibility gate excludes
+/// (crash interception, tracing, the done break) — KEEP IN SYNC with it.
+/// The caller bound this thread's stats slot and window log.
+fn step_shard(eng: &mut Engine, k: usize, logp: *mut ShardLog) {
+    let snap_stats = log_of(logp).snap_stats;
+    loop {
+        let bound = log_of(logp).bound;
+        let popped = {
+            let sh = eng.sim.shard.as_mut().expect("sharded");
+            match sh.held[k].take() {
+                Some(p) => {
+                    if pkey(&p).0 >= bound {
+                        sh.held[k] = Some(p);
+                        break;
+                    }
+                    p
+                }
+                None => match sh.wheels[k].pop() {
+                    Some(p) => {
+                        let (t, _) = pkey(&p);
+                        sh.cursor[k] = t;
+                        if t >= bound {
+                            sh.held[k] = Some(p);
+                            break;
+                        }
+                        p
+                    }
+                    None => break,
+                },
+            }
+        };
+        let (p_t, p_seq, core) = match &popped {
+            Popped::Ev(q) => (q.t, q.seq, q.core),
+            Popped::Wake { t, seq, core } => (*t, *seq, *core),
+        };
+        let ci = core.idx();
+        // Open the record: every pop is one walk slot, even deferral and
+        // drain-marker iterations (their wake pushes consume stamps).
+        {
+            let lg = log_of(logp);
+            lg.cur_acts0 = lg.acts.len() as u32;
+            lg.cur_rel = None;
+        }
+        let snap =
+            if snap_stats { eng.world.gstats.slot(k).clone() } else { GlobalStats::default() };
+        let pre_max_busy = eng.sim.shard.as_ref().expect("sharded").max_busy[k];
+        let (pre_sp, pre_co) = {
+            let sl = eng.world.gstats.slot(k);
+            (sl.tasks_spawned, sl.tasks_completed)
+        };
+
+        let processed: Option<(Cycles, Event)> = match popped {
+            Popped::Ev(q) => {
+                let meta = &mut eng.sim.metas[ci];
+                if meta.busy_until > q.t || !meta.pending.is_empty() {
+                    meta.pending.push_back(q.ev);
+                    let arm = if meta.wake_scheduled {
+                        None
+                    } else {
+                        meta.wake_scheduled = true;
+                        Some(meta.busy_until.max(q.t))
+                    };
+                    if let Some(at) = arm {
+                        eng.sim.push_wake(at, core);
+                    }
+                    None
+                } else {
+                    Some((q.t, q.ev))
+                }
+            }
+            Popped::Wake { t, .. } => {
+                let meta = &mut eng.sim.metas[ci];
+                meta.wake_scheduled = false;
+                if meta.busy_until > t {
+                    let arm = if meta.pending.is_empty() {
+                        None
+                    } else {
+                        meta.wake_scheduled = true;
+                        Some(meta.busy_until)
+                    };
+                    if let Some(at) = arm {
+                        eng.sim.push_wake(at, core);
+                    }
+                    None
+                } else {
+                    meta.pending.pop_front().map(|ev| (t, ev))
+                }
+            }
+        };
+        if let Some((t, ev)) = processed {
+            eng.world.gstats.events_processed += 1;
+            let mut init_charge = 0;
+            if let Event::Msg { from, msg, .. } = &ev {
+                let wires = msg.wire_msgs();
+                let st = &mut eng.sim.stats[ci];
+                st.msgs_recv += wires;
+                st.msg_bytes_recv += wires * eng.sim.cost.msg_bytes;
+                eng.world.gstats.msgs_total += wires;
+                let hops = eng.sim.topo.hops(*from, core);
+                let proc = eng.sim.cost.msg_proc(hops, eng.sim.topo.max_hops()) * wires;
+                init_charge = eng.sim.cost.charge_on(eng.sim.metas[ci].kind, proc);
+                let same_shard = eng.sim.shard.as_ref().expect("sharded").shard_of
+                    [from.idx()] as usize
+                    == k;
+                if same_shard {
+                    // Own link: the credit return is shard-local, run it
+                    // inline exactly like the sequential engine.
+                    let released =
+                        eng.sim.chan_get_mut(*from, core).and_then(|ch| ch.release());
+                    if let Some((t_blk, b_dst, b_msg, b_extra)) = released {
+                        eng.sim.stats[from.idx()].credit_stall += t.saturating_sub(t_blk);
+                        eng.sim.deliver_msg(t, *from, core, b_dst, b_msg, b_extra);
+                    }
+                } else {
+                    // Cross link: defer to the walk (canonical order).
+                    log_of(logp).cur_rel = Some((*from, core));
+                }
+            }
+            let mut logic = eng.logic[ci].take().expect("event for core without logic");
+            let mut ctx = Ctx {
+                sim: &mut eng.sim,
+                world: &mut eng.world,
+                registry: &eng.registry,
+                core,
+                start: t,
+                charged_rt: init_charge,
+                charged_task: 0,
+            };
+            logic.on_event(&mut ctx, ev);
+            let (rt, tk) = (ctx.charged_rt, ctx.charged_task);
+            eng.logic[ci] = Some(logic);
+            let busy = t + rt + tk;
+            eng.sim.metas[ci].busy_until = busy;
+            eng.sim.note_busy(core, busy);
+            let rearm = {
+                let meta = &mut eng.sim.metas[ci];
+                if !meta.pending.is_empty() && !meta.wake_scheduled {
+                    meta.wake_scheduled = true;
+                    true
+                } else {
+                    false
+                }
+            };
+            if rearm {
+                eng.sim.push_wake(busy, core);
+            }
+            let st = &mut eng.sim.stats[ci];
+            st.busy_task += tk;
+            st.busy_runtime += rt;
+        }
+        let (post_sp, post_co) = {
+            let sl = eng.world.gstats.slot(k);
+            (sl.tasks_spawned, sl.tasks_completed)
+        };
+        let lg = log_of(logp);
+        let acts1 = lg.acts.len() as u32;
+        lg.recs.push(Rec {
+            t: p_t,
+            stamp: p_seq,
+            acts: (lg.cur_acts0, acts1),
+            rel: lg.cur_rel.take(),
+            d_spawned: post_sp - pre_sp,
+            d_completed: post_co - pre_co,
+            snap,
+            pre_max_busy,
+        });
+    }
+}
+
+/// The barrier walk: merge every shard's window log in canonical
+/// `(t, stamp)` order and replay the stamp assignments, staged routings,
+/// credit releases and deferred sends the sequential engine would have
+/// interleaved. Returns `true` when the completion gate fired (the run
+/// is cut at that record, exactly like the sequential `run` break).
+fn walk(eng: &mut Engine, logs: &mut [ShardLog], stop_on_done: bool) -> bool {
+    let n = logs.len();
+    // Off-shard DMA endpoint stats: plain counters, order-free.
+    for log in logs.iter() {
+        for &(c, bytes, out) in &log.remote_dma {
+            let st = &mut eng.sim.stats[c.idx()];
+            if out {
+                st.dma_bytes_out += bytes;
+            } else {
+                st.dma_bytes_in += bytes;
+            }
+        }
+    }
+    // Running completion totals as of the window start: a shard's first
+    // record snapshot is its slot before the window; a shard without
+    // records left its slot untouched. (Gate evaluation is exact because
+    // spawn bumps and completion bumps never share an event.)
+    let (mut completed, mut spawned) = if stop_on_done {
+        let g = &eng.world.gstats;
+        let mut c = g.tasks_completed; // main-thread deref = the main slot
+        let mut s = g.tasks_spawned;
+        for (k, log) in logs.iter().enumerate() {
+            let (kc, ks) = match log.recs.first() {
+                Some(r0) => (r0.snap.tasks_completed, r0.snap.tasks_spawned),
+                None => {
+                    let sl = g.slot(k);
+                    (sl.tasks_completed, sl.tasks_spawned)
+                }
+            };
+            c += kc;
+            s += ks;
+        }
+        (c, s)
+    } else {
+        (0, 0)
+    };
+    let mut ptr = vec![0usize; n];
+    let mut last_t = eng.sim.now;
+    loop {
+        let mut best: Option<(Cycles, u64, usize)> = None;
+        for (k, log) in logs.iter().enumerate() {
+            if ptr[k] < log.recs.len() {
+                let r = &log.recs[ptr[k]];
+                let key = canon_key(log, r.stamp);
+                if best.is_none_or(|(bt, bs, _)| (r.t, key) < (bt, bs)) {
+                    best = Some((r.t, key, k));
+                }
+            }
+        }
+        let Some((t, _, k)) = best else { break };
+        last_t = t;
+        let (a0, a1, rel, d_sp, d_co) = {
+            let r = &logs[k].recs[ptr[k]];
+            (r.acts.0, r.acts.1, r.rel, r.d_spawned, r.d_completed)
+        };
+        debug_assert!(!(d_sp > 0 && d_co > 0), "spawn and completion share an event");
+        // Credit return for a cross-shard message, before the handler's
+        // own pushes — the sequential bookkeeping order.
+        if let Some((from, to)) = rel {
+            let released = eng.sim.chan_get_mut(from, to).and_then(|ch| ch.release());
+            if let Some((t_blk, b_dst, b_msg, b_extra)) = released {
+                eng.sim.stats[from.idx()].credit_stall += t.saturating_sub(t_blk);
+                eng.sim.deliver_msg(t, from, to, b_dst, b_msg, b_extra);
+                eng.sim.shard.as_mut().expect("sharded").mail_events += 1;
+            }
+        }
+        for a in a0..a1 {
+            match logs[k].acts[a as usize] {
+                Act::Direct => {
+                    let s = eng.sim.seq;
+                    eng.sim.seq += 1;
+                    logs[k].canon_of.push(s);
+                }
+                Act::Staged(i) => {
+                    let sev = logs[k].staged[i as usize].take().expect("staged routed once");
+                    let s = eng.sim.seq;
+                    eng.sim.seq += 1;
+                    let sh = eng.sim.shard.as_mut().expect("sharded");
+                    let d = sh.shard_of[sev.core.idx()] as usize;
+                    if d != k {
+                        debug_assert!(
+                            sev.t >= logs[k].wend,
+                            "cross-shard event inside the conservative window"
+                        );
+                        sh.mail_events += 1;
+                    }
+                    match sev.ev {
+                        Event::Wake => sh.wheels[d].push_wake(sev.t, s, sev.core),
+                        ev => sh.wheels[d].push(sev.t, s, sev.core, ev),
+                    }
+                }
+                Act::Send(i) => {
+                    let at = logs[k].sends[i as usize].take().expect("send replayed once");
+                    let cap = eng.sim.channel_capacity;
+                    let (acquired, starved) = {
+                        let ch = eng.sim.chan_entry(at.from, at.hop);
+                        if !ch.blocked.is_empty() {
+                            (false, false)
+                        } else if at.starve && ch.in_flight > 0 {
+                            (false, true)
+                        } else {
+                            (ch.try_acquire(cap), false)
+                        }
+                    };
+                    if starved {
+                        let lane = eng.sim.shard_ix(at.from);
+                        eng.sim.chaos.note_starved(lane);
+                    }
+                    if acquired {
+                        eng.sim.shard.as_mut().expect("sharded").mail_events += 1;
+                        eng.sim.deliver_msg(at.t_send, at.from, at.hop, at.dst, at.msg, at.extra);
+                    } else {
+                        eng.sim
+                            .chan_entry(at.from, at.hop)
+                            .blocked
+                            .push_back((at.t_send, at.dst, at.msg, at.extra));
+                    }
+                }
+            }
+        }
+        ptr[k] += 1;
+        if stop_on_done {
+            completed += d_co;
+            spawned += d_sp;
+            if d_co > 0 && completed == spawned {
+                // Completion cut: this record is the last one the
+                // sequential engine would process. Its own effects are
+                // fully applied (above); everything canonically after it
+                // is discarded, and each shard's stats slot and busy
+                // horizon roll back to the state before its first
+                // unwalked record.
+                for (j, log) in logs.iter().enumerate() {
+                    if ptr[j] < log.recs.len() {
+                        let r = &log.recs[ptr[j]];
+                        *eng.world.gstats.slot_mut(j) = r.snap.clone();
+                        eng.sim.shard.as_mut().expect("sharded").max_busy[j] = r.pre_max_busy;
+                    }
+                }
+                eng.world.done = true;
+                eng.sim.now = t;
+                return true;
+            }
+        }
+    }
+    eng.sim.now = last_t;
+    if stop_on_done {
+        // Workers may have written a spurious `done` from shard-local
+        // counters; the walk's totals are authoritative.
+        eng.world.done = false;
+    }
+    false
+}
+
+/// The threaded run loop. Entered from `Engine::run_inner` when
+/// `Engine::par_eligible` holds; everything else takes the sequential
+/// merge. Persistent workers park on the barrier between windows.
+pub(super) fn run_windows(eng: &mut Engine, limit: Option<Cycles>, stop_on_done: bool) -> Cycles {
+    let (n, threads, lookahead) = {
+        let sh = eng.sim.shard.as_ref().expect("par_eligible checked");
+        (sh.n, sh.threads.clamp(1, sh.n), sh.lookahead)
+    };
+    eng.world.gstats.install_shards(n);
+    if stop_on_done && eng.world.done {
+        // The sequential loop pops one event, sees `done`, and breaks.
+        let _ = eng.sim.pop_next();
+        if let Some(sh) = &mut eng.sim.shard {
+            sh.exec = None;
+        }
+        return eng.sim.now;
+    }
+    let mut logs: Vec<ShardLog> = (0..n).map(|k| ShardLog::new(k, n)).collect();
+    let shared = Shared { eng: eng as *mut Engine, logs: logs.as_mut_ptr() };
+    let barrier = Barrier::new(threads + 1);
+    let stop = AtomicBool::new(false);
+
+    std::thread::scope(|scope| {
+        for w in 0..threads {
+            let shared = &shared;
+            let barrier = &barrier;
+            let stop = &stop;
+            scope.spawn(move || loop {
+                barrier.wait();
+                if stop.load(Ordering::Acquire) {
+                    break;
+                }
+                for k in (w..n).step_by(threads) {
+                    // SAFETY: disjoint-by-discipline access between the
+                    // two barriers — see the module docs.
+                    let eng = unsafe { &mut *shared.eng };
+                    let logp = unsafe { shared.logs.add(k) };
+                    GStats::set_slot(k);
+                    set_tl(logp);
+                    step_shard(eng, k, logp);
+                    set_tl(std::ptr::null_mut());
+                    GStats::clear_slot();
+                }
+                barrier.wait();
+            });
+        }
+
+        loop {
+            let w = match refill(&mut eng.sim) {
+                Some(w) => w,
+                None => break,
+            };
+            if let Some(lim) = limit {
+                if w > lim {
+                    discard_global_min(&mut eng.sim);
+                    eng.sim.now = lim;
+                    break;
+                }
+            }
+            let wend = w + lookahead;
+            let bound = match limit {
+                Some(lim) => wend.min(lim + 1),
+                None => wend,
+            };
+            {
+                let sh = eng.sim.shard.as_mut().expect("sharded");
+                sh.window_end = wend;
+                sh.windows += 1;
+            }
+            for log in logs.iter_mut() {
+                log.open(bound, wend, stop_on_done);
+            }
+            barrier.wait(); // open: workers step their shards
+            barrier.wait(); // close: logs are ours again
+            if walk(eng, &mut logs, stop_on_done) {
+                break;
+            }
+        }
+        stop.store(true, Ordering::Release);
+        barrier.wait(); // release the parked workers into their exit
+    });
+
+    if !stop_on_done {
+        // True quiescence: every queue drained (or the limit cut us
+        // off). The gate the schedulers evaluate per-completion reduces
+        // to final-count equality — evaluate it once on true totals,
+        // overwriting any spurious shard-local verdict.
+        let tot = eng.world.gstats.totals();
+        eng.world.done = tot.tasks_completed > 0 && tot.tasks_completed == tot.tasks_spawned;
+    }
+    // Fold the per-shard stats slots into the main struct so every
+    // post-run reader sees legacy totals.
+    eng.world.gstats.reduce();
+    eng.sim.now
+}

@@ -5,6 +5,8 @@
 //! of Fig 10 (message and DMA volumes per core).
 
 use crate::ids::Cycles;
+use std::cell::Cell;
+use std::ops::{Deref, DerefMut};
 
 /// What a core was doing while busy. `Idle` is never charged; it is
 /// derived as `total - task - runtime` at reporting time.
@@ -66,7 +68,7 @@ impl CoreStats {
 }
 
 /// Platform-wide counters.
-#[derive(Clone, Default, Debug)]
+#[derive(Clone, Default, Debug, PartialEq, Eq)]
 pub struct GlobalStats {
     pub tasks_spawned: u64,
     pub tasks_completed: u64,
@@ -116,6 +118,144 @@ pub struct GlobalStats {
     pub heartbeats: u64,
 }
 
+impl GlobalStats {
+    /// Fold `other` into `self`. Every counter is a sum except
+    /// `ready_queue_hwm`, whose semantics are "max ever observed".
+    /// Keep this in sync with the field list above — a counter missing
+    /// here silently under-reports in threaded runs (the facade unit
+    /// test below catches drift for every field it exercises).
+    pub fn merge_from(&mut self, o: &GlobalStats) {
+        self.tasks_spawned += o.tasks_spawned;
+        self.tasks_completed += o.tasks_completed;
+        self.events_processed += o.events_processed;
+        self.msgs_total += o.msgs_total;
+        self.dma_transfers += o.dma_transfers;
+        self.regions_created += o.regions_created;
+        self.objects_created += o.objects_created;
+        self.dep_boundary_msgs += o.dep_boundary_msgs;
+        self.steal_reqs += o.steal_reqs;
+        self.steal_grants += o.steal_grants;
+        self.steal_denies += o.steal_denies;
+        self.tasks_stolen += o.tasks_stolen;
+        self.ready_queue_hwm = self.ready_queue_hwm.max(o.ready_queue_hwm);
+        self.crashes += o.crashes;
+        self.restarts += o.restarts;
+        self.re_adoptions += o.re_adoptions;
+        self.tasks_reissued += o.tasks_reissued;
+        self.crash_dups_dropped += o.crash_dups_dropped;
+        self.crash_denies_synth += o.crash_denies_synth;
+        self.heartbeats += o.heartbeats;
+    }
+}
+
+/// Per-shard slice of the `World`'s global state: the accumulator a
+/// shard's worker thread charges while stepping its shard inside a
+/// lookahead window. Truly global state (journal, traffic books, the
+/// data store) stays behind the cross-shard message seam; counters are
+/// the one piece every handler touches, so they get a shard-local slot
+/// reduced at the conservative barrier / at quiescence instead of
+/// threads contending one struct.
+#[derive(Clone, Default, Debug)]
+pub struct WorldShard {
+    pub gstats: GlobalStats,
+}
+
+thread_local! {
+    /// Which `WorldShard` slot this thread's counter traffic routes to.
+    /// `usize::MAX` (every thread's initial state, and the main thread
+    /// always) means the legacy `main` struct — so sequential runs never
+    /// take the slot path and stay byte-identical.
+    static STAT_SLOT: Cell<usize> = const { Cell::new(usize::MAX) };
+}
+
+/// Facade over [`GlobalStats`] that routes counter traffic to a
+/// per-shard [`WorldShard`] slot when (and only when) the calling thread
+/// has bound one. `Deref`/`DerefMut` keep every existing
+/// `world.gstats.field` read/write source-compatible: on the main thread
+/// (and in any sequential run) they resolve to the legacy `main` struct.
+/// A worker thread stepping shard `k` binds slot `k` for the duration of
+/// the window; the threaded executor reduces the slots back into `main`
+/// (sums; max for the high-water mark) at quiescence, so post-run
+/// observers always see the merged totals.
+#[derive(Clone, Default, Debug)]
+pub struct GStats {
+    main: GlobalStats,
+    shards: Vec<WorldShard>,
+}
+
+impl GStats {
+    /// Ensure `n` per-shard slots exist (idempotent; only grows).
+    pub fn install_shards(&mut self, n: usize) {
+        if self.shards.len() < n {
+            self.shards.resize_with(n, WorldShard::default);
+        }
+    }
+
+    /// Bind the calling thread's counter traffic to shard slot `k`.
+    pub fn set_slot(k: usize) {
+        STAT_SLOT.with(|c| c.set(k));
+    }
+
+    /// Unbind the calling thread (back to the legacy `main` struct).
+    pub fn clear_slot() {
+        STAT_SLOT.with(|c| c.set(usize::MAX));
+    }
+
+    /// Direct access to a shard slot (barrier-time snapshot/restore).
+    pub fn slot(&self, k: usize) -> &GlobalStats {
+        &self.shards[k].gstats
+    }
+
+    pub fn slot_mut(&mut self, k: usize) -> &mut GlobalStats {
+        &mut self.shards[k].gstats
+    }
+
+    /// Merged totals without mutating the accumulators.
+    pub fn totals(&self) -> GlobalStats {
+        let mut t = self.main.clone();
+        for s in &self.shards {
+            t.merge_from(&s.gstats);
+        }
+        t
+    }
+
+    /// Fold every shard slot into `main` and reset the slots. Called at
+    /// quiescence by the threaded executor; afterwards plain `Deref`
+    /// reads (main thread) see the merged totals.
+    pub fn reduce(&mut self) {
+        for s in &mut self.shards {
+            let part = std::mem::take(&mut s.gstats);
+            self.main.merge_from(&part);
+        }
+    }
+}
+
+impl Deref for GStats {
+    type Target = GlobalStats;
+
+    #[inline]
+    fn deref(&self) -> &GlobalStats {
+        let s = STAT_SLOT.with(|c| c.get());
+        if s == usize::MAX || s >= self.shards.len() {
+            &self.main
+        } else {
+            &self.shards[s].gstats
+        }
+    }
+}
+
+impl DerefMut for GStats {
+    #[inline]
+    fn deref_mut(&mut self) -> &mut GlobalStats {
+        let s = STAT_SLOT.with(|c| c.get());
+        if s == usize::MAX || s >= self.shards.len() {
+            &mut self.main
+        } else {
+            &mut self.shards[s].gstats
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -141,5 +281,66 @@ mod tests {
         // Overcommitted core (busy > wall) must not report negative idle.
         let s = CoreStats { busy_task: 900, busy_runtime: 400, ..Default::default() };
         assert_eq!(s.idle_frac(1000), 0.0);
+    }
+
+    #[test]
+    fn sharded_reduce_matches_legacy_totals() {
+        // The satellite pin: accumulating the same charges through
+        // per-shard slots and reducing must equal the legacy
+        // single-struct accumulation, field for field (sums everywhere,
+        // max for ready_queue_hwm).
+        let mut legacy = GlobalStats::default();
+        let mut g = GStats::default();
+        g.install_shards(3);
+        for i in 0..300u64 {
+            let k = (i % 3) as usize;
+            GStats::set_slot(k);
+            g.tasks_spawned += 1;
+            g.tasks_completed += 1;
+            g.events_processed += i;
+            g.msgs_total += 2;
+            g.dma_transfers += (i % 2 == 0) as u64;
+            g.dep_boundary_msgs += (i % 5 == 0) as u64;
+            g.steal_reqs += 1;
+            g.steal_grants += (i % 4 == 0) as u64;
+            g.steal_denies += (i % 4 != 0) as u64;
+            g.tasks_stolen += (i % 4 == 0) as u64;
+            g.ready_queue_hwm = g.ready_queue_hwm.max(i % 17);
+            g.heartbeats += 1;
+            GStats::clear_slot();
+            legacy.tasks_spawned += 1;
+            legacy.tasks_completed += 1;
+            legacy.events_processed += i;
+            legacy.msgs_total += 2;
+            legacy.dma_transfers += (i % 2 == 0) as u64;
+            legacy.dep_boundary_msgs += (i % 5 == 0) as u64;
+            legacy.steal_reqs += 1;
+            legacy.steal_grants += (i % 4 == 0) as u64;
+            legacy.steal_denies += (i % 4 != 0) as u64;
+            legacy.tasks_stolen += (i % 4 == 0) as u64;
+            legacy.ready_queue_hwm = legacy.ready_queue_hwm.max(i % 17);
+            legacy.heartbeats += 1;
+        }
+        // Main-thread (unbound) traffic lands in the legacy struct.
+        g.regions_created += 7;
+        legacy.regions_created += 7;
+        assert_eq!(g.totals(), legacy);
+        // Before the reduce, plain reads see only the main-thread part.
+        assert_eq!(g.tasks_spawned, 0);
+        g.reduce();
+        assert_eq!(*g, legacy);
+        // Reduce is idempotent: slots were drained.
+        g.reduce();
+        assert_eq!(*g, legacy);
+    }
+
+    #[test]
+    fn unbound_threads_use_the_main_struct() {
+        let mut g = GStats::default();
+        g.install_shards(2);
+        g.tasks_spawned += 5;
+        assert_eq!(g.tasks_spawned, 5);
+        assert_eq!(g.slot(0).tasks_spawned, 0);
+        assert_eq!(g.slot(1).tasks_spawned, 0);
     }
 }

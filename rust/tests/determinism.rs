@@ -15,11 +15,17 @@
 //! run these, record each Fingerprint as a `const` golden, and assert
 //! against it so later refactors are held to bit-identical schedules.
 
-use myrmics::apps::jacobi;
+use myrmics::apps::jobs::traffic_boot;
 use myrmics::apps::synthetic::{empty_chain, hier_empty, independent, SynthParams};
-use myrmics::config::{HierarchySpec, PlatformConfig, ShardCfg};
+use myrmics::apps::workload_api::job_templates;
+use myrmics::apps::jacobi;
+use myrmics::config::{
+    HierarchySpec, PlatformConfig, RecoveryCfg, ShardCfg, TrafficCfg,
+};
 use myrmics::mpi::runner::run_mpi;
 use myrmics::platform::Platform;
+use myrmics::sim::chaos::FaultPlan;
+use myrmics::sim::traffic::TrafficState;
 
 /// Everything that must replay bit-identically.
 #[derive(PartialEq, Eq, Debug)]
@@ -239,4 +245,192 @@ fn sharded_run_to_quiescence_drains_past_done() {
     assert!(plat.eng.sim.queue_is_empty(), "every wheel, held slot and mailbox drained");
     assert_eq!(t, plat.eng.sim.horizon(), "final time covers the per-shard max-reduce");
     assert!(plat.eng.sim.shard_windows() > 0, "run actually used the sharded engine");
+}
+
+// ---------------------------------------------------------------------------
+// Thread-parallel sharded engine: real host threads stepping the shards
+// between conservative barriers must reproduce the exact sequential-merge
+// schedule — the fingerprint is pinned to be *identical* across thread
+// counts (and, chaos off, across shard counts too). `threads=1` is the
+// sequential merge itself, so `one` below is the already-pinned baseline.
+// ---------------------------------------------------------------------------
+
+fn run_with_shards_threads(
+    cfg_base: PlatformConfig,
+    shards: usize,
+    threads: usize,
+    chaos: FaultPlan,
+) -> Fingerprint {
+    let (reg, main) = independent();
+    let mut cfg = cfg_base;
+    cfg.shard = ShardCfg::with_threads(shards, threads);
+    cfg.chaos = chaos;
+    let mut plat = Platform::build_with(cfg, reg, main, |w| {
+        // Synthetic fig7: all spawns come from the main task's scheduler
+        // subtree — the single-spawner contract holds.
+        w.par_safe = true;
+        w.app = Some(Box::new(SynthParams {
+            n_tasks: 256,
+            task_cycles: 100_000,
+            ..Default::default()
+        }));
+    });
+    let t = plat.run(Some(1 << 44));
+    let g = &plat.world().gstats;
+    Fingerprint {
+        final_time: t,
+        events: g.events_processed,
+        msgs: g.msgs_total,
+        tasks_spawned: g.tasks_spawned,
+        tasks_completed: g.tasks_completed,
+        dep_boundary_msgs: g.dep_boundary_msgs,
+        dma_transfers: g.dma_transfers,
+    }
+}
+
+/// fig7-independent, 4 shards: threads 1/2/4 must produce bit-identical
+/// fingerprints, and (chaos off) all of them must equal the unsharded
+/// legacy schedule.
+#[test]
+fn fig7_independent_fingerprint_is_thread_count_invariant() {
+    let legacy = run_with_shards(PlatformConfig::hierarchical(64), 1);
+    let one = run_with_shards_threads(PlatformConfig::hierarchical(64), 4, 1, FaultPlan::none());
+    let two = run_with_shards_threads(PlatformConfig::hierarchical(64), 4, 2, FaultPlan::none());
+    let four = run_with_shards_threads(PlatformConfig::hierarchical(64), 4, 4, FaultPlan::none());
+    assert_eq!(one, legacy, "threads=1 is the sequential merge");
+    assert_eq!(two, one, "threads=2 must replay the sequential schedule");
+    assert_eq!(four, one, "threads=4 must replay the sequential schedule");
+    assert_eq!(one.tasks_completed, 257);
+}
+
+/// Deeper tree (1-3-9 schedulers, 3 shards): the barrier walk must
+/// reassign canonical order identically with an odd shard count and a
+/// thread count that does not divide it.
+#[test]
+fn three_level_hierarchy_fingerprint_is_thread_count_invariant() {
+    let base = || PlatformConfig::new(64, HierarchySpec::multi_level(3, 3));
+    let legacy = run_with_shards(base(), 1);
+    let one = run_with_shards_threads(base(), 4, 1, FaultPlan::none());
+    let two = run_with_shards_threads(base(), 4, 2, FaultPlan::none());
+    let four = run_with_shards_threads(base(), 4, 4, FaultPlan::none());
+    assert_eq!(one, legacy);
+    assert_eq!(two, one);
+    assert_eq!(four, one);
+    assert_eq!(one.tasks_spawned, one.tasks_completed);
+}
+
+/// Chaos on (jitter + stalls + starvation, no crash): every draw comes
+/// from a per-shard lane keyed by (run seed, plan seed, shard id), so the
+/// RNG schedule is a function of shard-local execution order alone and
+/// the fingerprint must still be thread-count invariant at a fixed shard
+/// count. (Lanes make chaos runs shard-count *dependent* by design —
+/// the pin here is threads, not shards.)
+#[test]
+fn chaos_fingerprint_is_thread_count_invariant() {
+    let plan = FaultPlan {
+        enabled: true,
+        plan_seed: 11,
+        jitter_pct: 30,
+        jitter_max: 5_000,
+        starve_pct: 20,
+        stall_pct: 25,
+        stall_max: 2_000,
+        ..FaultPlan::none()
+    };
+    let one = run_with_shards_threads(PlatformConfig::hierarchical(64), 4, 1, plan.clone());
+    let two = run_with_shards_threads(PlatformConfig::hierarchical(64), 4, 2, plan.clone());
+    let four = run_with_shards_threads(PlatformConfig::hierarchical(64), 4, 4, plan);
+    assert_eq!(two, one, "chaos draws must come off per-shard lanes");
+    assert_eq!(four, one);
+    assert_eq!(one.tasks_completed, 257, "chaos must not lose tasks");
+}
+
+/// A crashing (recovery-enabled) configuration is outside the threaded
+/// executor's eligibility gate: requesting threads must be a no-op — the
+/// run falls back to the sequential merge and replays bit-identically.
+#[test]
+fn crash_runs_fall_back_to_sequential_merge() {
+    let plan = FaultPlan {
+        enabled: true,
+        plan_seed: 7,
+        crash_pct: 100,
+        crash_max: 50_000,
+        crash_down: 600_000,
+        ..FaultPlan::none()
+    };
+    let run = |threads: usize| {
+        let mut cfg = PlatformConfig::hierarchical(64);
+        cfg.recovery = RecoveryCfg::on();
+        cfg.chaos = plan.clone();
+        cfg.shard = ShardCfg::with_threads(4, threads);
+        let (reg, main) = independent();
+        let mut plat = Platform::build_with(cfg, reg, main, |w| {
+            w.par_safe = true; // the *gate*, not the workload, must refuse
+            w.app = Some(Box::new(SynthParams {
+                n_tasks: 64,
+                task_cycles: 100_000,
+                ..Default::default()
+            }));
+        });
+        let t = plat.run_to_quiescence(Some(1 << 44));
+        let g = &plat.world().gstats;
+        (t, g.events_processed, g.msgs_total, g.tasks_completed, g.crashes, g.restarts)
+    };
+    let seq = run(1);
+    let thr = run(4);
+    assert_eq!(thr, seq, "ineligible configs must take the sequential path");
+    assert!(seq.4 > 0, "the crash plan must actually fire");
+}
+
+/// Multi-tenant traffic mutates cross-shard books outside the message
+/// seam, so it is gated out too: threads requested, sequential schedule
+/// delivered.
+#[test]
+fn traffic_runs_fall_back_to_sequential_merge() {
+    let run = |threads: usize| {
+        let traffic = TrafficCfg::on(8, 2);
+        let mut cfg = PlatformConfig::hierarchical(64);
+        cfg.traffic = traffic.clone();
+        cfg.shard = ShardCfg::with_threads(4, threads);
+        let seed = cfg.seed;
+        let (reg, refs) = traffic_boot();
+        let main_fn = refs.job_main.index();
+        let mut plat = Platform::build_with(cfg, reg, refs.boot, move |w| {
+            w.par_safe = true;
+            let tr =
+                TrafficState::generate(&traffic, seed, &w.hier, main_fn, &job_templates(1));
+            w.traffic = Some(tr);
+        });
+        let t = plat.run(Some(1 << 44));
+        let g = &plat.world().gstats;
+        let tr = plat.world().traffic.as_ref().expect("traffic installed");
+        assert!(tr.all_done());
+        (t, g.events_processed, g.msgs_total, g.tasks_completed, tr.admitted)
+    };
+    let seq = run(1);
+    let thr = run(4);
+    assert_eq!(thr, seq);
+}
+
+/// Threaded quiescence: the windowed executor must drain every wheel past
+/// `world.done`, agree with the per-shard busy-horizon max-reduce, and
+/// still conclude completion from the reduced per-thread counters.
+#[test]
+fn threaded_run_to_quiescence_drains_past_done() {
+    let (reg, main) = independent();
+    let mut cfg = PlatformConfig::hierarchical(64);
+    cfg.shard = ShardCfg::with_threads(4, 4);
+    let mut plat = Platform::build_with(cfg, reg, main, |w| {
+        w.par_safe = true;
+        w.app = Some(Box::new(SynthParams {
+            n_tasks: 64,
+            task_cycles: 100_000,
+            ..Default::default()
+        }));
+    });
+    let t = plat.run_to_quiescence(Some(1 << 44));
+    assert!(plat.world().done, "workload must complete");
+    assert!(plat.eng.sim.queue_is_empty(), "every wheel and held slot drained");
+    assert_eq!(t, plat.eng.sim.horizon(), "final time covers the per-shard max-reduce");
+    assert!(plat.eng.sim.shard_windows() > 0, "run actually used the windowed executor");
 }

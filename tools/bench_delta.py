@@ -6,15 +6,16 @@ Non-blocking CI aid (the workflow runs it with continue-on-error): it
 surfaces the per-case throughput trajectory next to every PR without
 gating merges on a noisy shared runner.
 
-Rows are keyed by (case, shards): the sharded-engine scaling ladder
-reuses one case label across shard counts and is distinguished by the
-"shards" field (absent in pre-shard records, which default to 1).
+Rows are keyed by (case, shards, threads): the sharded-engine scaling
+ladder reuses one case label across (shard, thread) rungs and is
+distinguished by the "shards"/"threads" fields (absent in older records,
+which default to 1 — pre-shard and pre-thread baselines keep matching).
 
 Baseline format inside ROADMAP.md — an HTML comment block so the numbers
 live next to the prose that explains them:
 
     <!-- hotpath-baseline
-    [{"case": "...", "shards": 1, "events_per_sec": 123.0}, ...]
+    [{"case": "...", "shards": 1, "threads": 1, "events_per_sec": 123.0}, ...]
     -->
 
 Usage: bench_delta.py BENCH_hotpath.json ROADMAP.md
@@ -26,12 +27,14 @@ import sys
 
 
 def key(r):
-    return (r["case"], int(r.get("shards", 1)))
+    return (r["case"], int(r.get("shards", 1)), int(r.get("threads", 1)))
 
 
 def label(k):
-    case, shards = k
-    return case if shards == 1 else f"{case} [{shards} shards]"
+    case, shards, threads = k
+    if shards == 1 and threads == 1:
+        return case
+    return f"{case} [{shards} shards x {threads} thr]"
 
 
 def main() -> int:
